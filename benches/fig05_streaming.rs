@@ -1,0 +1,96 @@
+//! Figure 5 — Impact of Streaming: streaming improves performance at low
+//! load (paper: >11%) but degrades it at high load (paper: −24%
+//! performance / −36% throughput) when unmanaged.
+//!
+//! Also shows Harmonia's managed granularity recovering the best of both
+//! (the §3.3.1 mechanism Fig. 14 ablates).
+
+use harmonia::coordinator::StreamingMode;
+use harmonia::sim::{SimConfig, SimWorld, SystemKind};
+use harmonia::spec::apps;
+use harmonia::util::table::{f, Table};
+use harmonia::workload::TraceConfig;
+
+fn run(rate: f64, streaming: StreamingMode, managed: bool, seed: u64) -> (f64, f64) {
+    // Generation-heavy V-RAG (the paper's LLM-dominant configuration):
+    // median ~100 output tokens makes the generator the binding stage, so
+    // chunk preemption has something to stall.
+    let trace = TraceConfig {
+        rate,
+        n: (rate as usize * 20).max(2000),
+        slo: None,
+        gen_mu: 4.6,
+        gen_sigma: 0.3,
+        ..TraceConfig::default()
+    };
+    let mut cfg = SimConfig::new(SystemKind::Harmonia, trace, seed);
+    cfg.streaming = streaming;
+    cfg.ablation.stream_mgmt = managed;
+    cfg.ablation.realloc = false; // isolate the streaming effect
+    cfg.profile_bias = 1.0;
+    let r = SimWorld::simulate(apps::vanilla_rag(), cfg);
+    (r.report.throughput, r.report.mean_latency)
+}
+
+fn main() {
+    println!("Figure 5 reproduction: streaming impact on V-RAG vs load\n");
+    let seed = 0xF16_5;
+    // The gen-heavy V-RAG saturates around ~450 req/s on the simulated
+    // testbed; "high" must sit near capacity for the stall to bind
+    // (Fig. 5's high load is near saturation too).
+    let loads = [("low", 32.0), ("medium", 250.0), ("high", 430.0)];
+
+    let mut t = Table::new(
+        "V-RAG: streaming impact",
+        &[
+            "load",
+            "rate",
+            "thr off",
+            "thr stream",
+            "thr managed",
+            "Δstream vs off",
+            "lat off (s)",
+            "lat stream (s)",
+        ],
+    );
+    let mut low_gain = 0.0;
+    let mut high_loss = 0.0;
+    for (label, rate) in loads {
+        let (thr_off, lat_off) = run(rate, StreamingMode::Off, false, seed);
+        let (thr_fix, lat_fix) = run(rate, StreamingMode::FixedChunk(0.15), false, seed);
+        let (thr_mgd, _lat_mgd) = run(rate, StreamingMode::Off, true, seed); // managed supersedes
+        let delta = (thr_fix / thr_off - 1.0) * 100.0;
+        if label == "low" {
+            // At low load throughput is arrival-bound; the latency win is
+            // the "performance" the paper reports.
+            low_gain = (lat_off / lat_fix - 1.0) * 100.0;
+        }
+        if label == "high" {
+            high_loss = (1.0 - thr_fix / thr_off) * 100.0;
+        }
+        t.row(&[
+            label.to_string(),
+            f(rate, 0),
+            f(thr_off, 2),
+            f(thr_fix, 2),
+            f(thr_mgd, 2),
+            format!("{}%", f(delta, 1)),
+            f(lat_off, 3),
+            f(lat_fix, 3),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nlow-load latency improvement from streaming: {}% (paper: >11%)",
+        f(low_gain, 1)
+    );
+    println!(
+        "high-load throughput degradation from unmanaged streaming: {}% (paper: 24–36%)",
+        f(high_loss, 1)
+    );
+    println!(
+        "SHAPE CHECK: streaming helps at low load ({}) and hurts at high load ({})",
+        if low_gain > 3.0 { "yes — REPRODUCED" } else { "no" },
+        if high_loss > 5.0 { "yes — REPRODUCED" } else { "no" },
+    );
+}

@@ -1,0 +1,83 @@
+//! Figure 14 — Contribution of each runtime mechanism at 64 req/s:
+//! disable each of {resource reallocation, load/state-aware routing,
+//! communication-granularity management} in turn; the importance of a
+//! mechanism is the throughput drop relative to full Harmonia,
+//! normalized into proportional contributions.
+//!
+//! Paper: realloc dominates C-RAG/S-RAG/A-RAG (86.8%/78.5%/52.1%);
+//! routing leads V-RAG (~44%) with streaming close (56.2% in V-RAG);
+//! no single optimization suffices.
+
+use harmonia::sim::{AblationFlags, SimConfig, SimWorld, SystemKind};
+use harmonia::spec::apps;
+use harmonia::util::table::{f, Table};
+use harmonia::workload::TraceConfig;
+
+/// The paper runs this at 64 req/s ≈ 80% of its testbed capacity; our
+/// calibrated substrate is ~5x faster, so we use the same *utilization*
+/// (≈0.8 x each app's Harmonia plateau from Fig. 9).
+fn rate_for(app: &str) -> f64 {
+    match app {
+        "v-rag" => 520.0,
+        "c-rag" => 300.0,
+        "s-rag" => 330.0,
+        "a-rag" => 300.0,
+        _ => 64.0,
+    }
+}
+
+fn run(app: &str, flags: AblationFlags, seed: u64) -> f64 {
+    let rate = rate_for(app);
+    let trace = TraceConfig { rate, n: (rate * 60.0) as usize, slo: None, ..TraceConfig::default() };
+    let mut cfg = SimConfig::new(SystemKind::Harmonia, trace, seed);
+    cfg.ablation = flags;
+    // The reallocation mechanism is exercised under workload shift: the
+    // deploy-time profile is biased (the paper's "offline estimates ...
+    // deviate"), and the runtime corrects it from telemetry.
+    cfg.profile_bias = 1.6;
+    let r = SimWorld::simulate(apps::by_name(app).unwrap(), cfg);
+    r.report.throughput
+}
+
+fn main() {
+    println!("Figure 14 reproduction: per-mechanism contribution at ~80% utilization\n(paper: 64 req/s on its testbed; scaled to this substrate\u{2019}s capacity)\n");
+    let seed = 0xF16_14;
+    let mut t = Table::new(
+        "proportional contribution to Harmonia's gain (%)",
+        &["workflow", "realloc", "routing", "stream mgmt"],
+    );
+    let mut per_app = Vec::new();
+    for app in ["v-rag", "c-rag", "s-rag", "a-rag"] {
+        let full = run(app, AblationFlags::default(), seed);
+        let no_realloc = run(app, AblationFlags { realloc: false, ..Default::default() }, seed);
+        let no_routing = run(app, AblationFlags { routing: false, ..Default::default() }, seed);
+        let no_stream = run(app, AblationFlags { stream_mgmt: false, ..Default::default() }, seed);
+        let drops = [
+            (full - no_realloc).max(0.0),
+            (full - no_routing).max(0.0),
+            (full - no_stream).max(0.0),
+        ];
+        let total: f64 = drops.iter().sum::<f64>().max(1e-9);
+        let shares: Vec<f64> = drops.iter().map(|d| 100.0 * d / total).collect();
+        t.row(&[
+            app.to_string(),
+            f(shares[0], 1),
+            f(shares[1], 1),
+            f(shares[2], 1),
+        ]);
+        per_app.push((app, shares));
+    }
+    t.print();
+
+    println!("\npaper: realloc 86.8/78.5/52.1% for C/S/A-RAG; routing ~44% & streaming ~56% for V-RAG");
+    let vrag = &per_app[0].1;
+    let crag = &per_app[1].1;
+    println!(
+        "SHAPE CHECK: realloc dominates conditional pipelines while V-RAG is led by routing+streaming: {}",
+        if crag[0] > crag[1] && crag[0] > crag[2] && (vrag[1] + vrag[2]) > vrag[0] {
+            "REPRODUCED"
+        } else {
+            "NOT reproduced"
+        }
+    );
+}

@@ -1,0 +1,7 @@
+"""Pytest root conftest: make `pytest python/tests/` work from the repo
+root by putting the build-time Python package dir on sys.path."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

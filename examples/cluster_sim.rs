@@ -1,0 +1,57 @@
+//! Paper-scale cluster simulation: run any of the four RAG workflows
+//! under Harmonia / LangChain-like / Haystack-like serving on the
+//! simulated 4×8-GPU testbed and print the run report.
+//!
+//!     cargo run --release --example cluster_sim -- [app] [system] [rate] [n]
+//!     cargo run --release --example cluster_sim -- c-rag harmonia 48 2000
+
+use harmonia::sim::{run_point, SystemKind};
+use harmonia::spec::apps;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let app = args.first().map(|s| s.as_str()).unwrap_or("c-rag");
+    let system = match args.get(1).map(|s| s.as_str()).unwrap_or("harmonia") {
+        "harmonia" => SystemKind::Harmonia,
+        "langchain" => SystemKind::LangChain,
+        "haystack" => SystemKind::Haystack,
+        other => anyhow::bail!("unknown system '{other}' (harmonia|langchain|haystack)"),
+    };
+    let rate: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(48.0);
+    let n: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(2000);
+
+    let graph = apps::by_name(app)
+        .ok_or_else(|| anyhow::anyhow!("unknown app '{app}' (v-rag|c-rag|s-rag|a-rag)"))?;
+    println!(
+        "simulating {} on {} at {rate} req/s ({n} requests, 4 nodes x 8 GPUs)...",
+        graph.name,
+        system.name()
+    );
+    let r = run_point(system, graph, rate, n, Some(2.0), 42);
+
+    println!("\n== report ==");
+    println!("completed:          {}", r.report.completed);
+    println!("throughput:         {:.2} req/s", r.report.throughput);
+    println!(
+        "latency mean/p50/p95/p99: {:.3}/{:.3}/{:.3}/{:.3} s",
+        r.report.mean_latency, r.report.p50, r.report.p95, r.report.p99
+    );
+    println!("SLO violations:     {:.1}%", r.report.slo_violation_rate * 100.0);
+    println!("controller:         {} decisions, {:.1} us each", r.controller_decisions, r.controller_decision_secs * 1e6);
+    println!("reallocations:      {} (LP solves: {})", r.reallocations, r.lp_solve_secs.len());
+    let mut insts: Vec<_> = r.final_instances.iter().collect();
+    insts.sort();
+    println!("final instances:    {insts:?}");
+    println!("\ncomponent breakdown:");
+    let mut comps: Vec<_> = r.report.components.iter().collect();
+    comps.sort_by(|a, b| a.0.cmp(b.0));
+    for (name, c) in comps {
+        println!(
+            "  {name:<16} execs={:<6} service={:>7.1}ms queue={:>7.1}ms",
+            c.executions,
+            c.mean_service() * 1e3,
+            c.mean_queue() * 1e3
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! §Perf harness: measures the live data-plane hot paths —
+//! batched decode steps/s (tokens/s), prefill/s, embedder throughput and
+//! IVF search latency. Used for the EXPERIMENTS.md §Perf before/after log.
+//!
+//!     cargo run --release --example perf_decode
+
+use std::time::Instant;
+
+use harmonia::retrieval::{IvfIndex, IvfParams};
+use harmonia::runtime::generator::{GenRequest, Generator};
+use harmonia::runtime::{artifacts_available, default_artifacts_dir};
+use harmonia::workload::Corpus;
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_available() {
+        anyhow::bail!("run `make artifacts` first");
+    }
+    let dir = default_artifacts_dir();
+
+    // --- generator decode loop -------------------------------------------
+    let g = Generator::new(&dir)?;
+    for batch in [1usize, 4, 8] {
+        let reqs: Vec<GenRequest> = (0..batch)
+            .map(|i| GenRequest::greedy(format!("perf probe {i} quick brown fox").as_bytes(), 32))
+            .collect();
+        // warmup
+        let _ = g.generate_batch(&reqs, |_, _| {})?;
+        let t0 = Instant::now();
+        let mut steps = 0usize;
+        let mut toks = 0usize;
+        let iters = 3;
+        for _ in 0..iters {
+            let (res, timing) = g.generate_batch(&reqs, |_, _| {})?;
+            steps += timing.decode_steps;
+            toks += res.iter().map(|r| r.generated_tokens).sum::<usize>();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "decode b{batch}: {:.1} steps/s, {:.1} tokens/s (steps {steps}, tokens {toks}, {dt:.2}s)",
+            steps as f64 / dt,
+            toks as f64 / dt
+        );
+    }
+
+    // --- prefill ----------------------------------------------------------
+    let reqs: Vec<GenRequest> =
+        (0..8).map(|i| GenRequest::greedy(format!("prefill probe {i}").as_bytes(), 1)).collect();
+    let t0 = Instant::now();
+    let iters = 10;
+    for _ in 0..iters {
+        let _ = g.generate_batch(&reqs, |_, _| {})?;
+    }
+    println!(
+        "prefill b8: {:.1} prefills/s",
+        (iters * 8) as f64 / t0.elapsed().as_secs_f64()
+    );
+
+    // --- embedder ----------------------------------------------------------
+    let e = harmonia::runtime::embedder::Embedder::new(&dir)?;
+    let texts: Vec<Vec<u8>> = (0..64).map(|i| format!("embed probe {i}").into_bytes()).collect();
+    let _ = e.embed_all(&texts)?;
+    let t0 = Instant::now();
+    let iters = 5;
+    for _ in 0..iters {
+        let _ = e.embed_all(&texts)?;
+    }
+    println!(
+        "embedder: {:.1} texts/s",
+        (iters * texts.len()) as f64 / t0.elapsed().as_secs_f64()
+    );
+
+    // --- IVF search ---------------------------------------------------------
+    let dim = 64;
+    let n = 40_000;
+    let corpus = Corpus::generate(n, 64, 64, 0);
+    let mut vectors = Vec::with_capacity(n * dim);
+    for p in &corpus.passages {
+        vectors.extend(Corpus::hash_embed(&p.text, dim));
+    }
+    let index = IvfIndex::build(vectors, dim, IvfParams { n_lists: 256, kmeans_iters: 6, seed: 1 });
+    let queries: Vec<Vec<f32>> =
+        (0..256).map(|i| Corpus::hash_embed(format!("q{i}").as_bytes(), dim)).collect();
+    let t0 = Instant::now();
+    let mut hits = 0usize;
+    for q in &queries {
+        hits += index.search(q, 10, 2048).len();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "ivf search (ef=2048, k=10): {:.0} queries/s ({:.1} us/query, {hits} hits)",
+        queries.len() as f64 / dt,
+        dt / queries.len() as f64 * 1e6
+    );
+    Ok(())
+}

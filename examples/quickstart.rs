@@ -1,0 +1,59 @@
+//! Quickstart: deploy a Vanilla RAG pipeline live (real AOT-compiled XLA
+//! artifacts, worker threads, central controller) and answer a few
+//! queries.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use harmonia::coordinator::controller::{deploy, ControllerConfig};
+use harmonia::runtime::{artifacts_available, default_artifacts_dir};
+use harmonia::spec::apps;
+
+fn main() -> anyhow::Result<()> {
+    if !artifacts_available() {
+        anyhow::bail!("artifacts not built — run `make artifacts` first");
+    }
+    println!("deploying v-rag (retriever → generator) with live XLA workers...");
+    let mut cfg = ControllerConfig::quick(default_artifacts_dir());
+    cfg.corpus_size = 512;
+    cfg.n_topics = 8;
+    let graph = apps::vanilla_rag();
+    println!(
+        "pipeline: {} (conditional: {}, recursive: {})",
+        graph.name,
+        graph.has_conditionals(),
+        graph.has_recursion()
+    );
+    let h = deploy(graph, cfg)?;
+
+    for q in [
+        "what is the latest version of the linux kernel?",
+        "where is hawaii?",
+        "explain retrieval augmented generation",
+    ] {
+        let rx = h.submit(q.as_bytes());
+        let r = rx.recv()?;
+        println!(
+            "\nQ: {q}\n  -> {} bytes generated in {:.3}s over {} stages (docs: {:?})",
+            r.answer.len(),
+            r.latency_secs,
+            r.hops,
+            r.error.as_deref().unwrap_or("ok"),
+        );
+        println!("  A (bytes): {:?}", String::from_utf8_lossy(&r.answer));
+    }
+
+    let report = h.report();
+    println!("\n== run metrics ==");
+    println!("completed: {}", report.completed);
+    println!("mean latency: {:.3}s  p95: {:.3}s", report.mean_latency, report.p95);
+    for (name, c) in &report.components {
+        println!(
+            "  {name:<12} execs={} mean service={:.1}ms mean queue={:.1}ms",
+            c.executions,
+            c.mean_service() * 1e3,
+            c.mean_queue() * 1e3
+        );
+    }
+    h.shutdown();
+    Ok(())
+}

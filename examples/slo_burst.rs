@@ -1,0 +1,30 @@
+//! SLO management under bursts: Adaptive-RAG served with and without
+//! deadline-aware (EDF + predicted slack) scheduling. Execution
+//! heterogeneity (LLM-only vs multi-step paths) creates slack the
+//! scheduler exploits — the paper's §4.1 explanation for A-RAG's 78.4%
+//! SLO-violation reduction.
+//!
+//!     cargo run --release --example slo_burst
+
+use harmonia::sim::{AblationFlags, SimConfig, SimWorld, SystemKind};
+use harmonia::spec::apps;
+use harmonia::workload::TraceConfig;
+
+fn main() {
+    println!("SLO burst study: a-rag at high load, EDF+slack vs FIFO\n");
+    let slo = 2.5;
+    for (label, slo_sched) in [("deadline-aware (harmonia)", true), ("fifo (ablated)", false)] {
+        let trace = TraceConfig { rate: 56.0, n: 3000, slo: Some(slo), ..TraceConfig::default() };
+        let mut cfg = SimConfig::new(SystemKind::Harmonia, trace, 11);
+        cfg.ablation = AblationFlags { slo_sched, ..Default::default() };
+        let r = SimWorld::simulate(apps::adaptive_rag(), cfg);
+        println!(
+            "{label:<28} violations: {:>5.1}%   mean {:.3}s  p95 {:.3}s  p99 {:.3}s",
+            r.report.slo_violation_rate * 100.0,
+            r.report.mean_latency,
+            r.report.p95,
+            r.report.p99
+        );
+    }
+    println!("\n(lower violations with identical resources = pure scheduling win)");
+}

@@ -1,0 +1,173 @@
+"""AOT lowering: JAX entry points → HLO-text artifacts + manifest.
+
+Interchange format is **HLO text**, NOT ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+
+Run via ``make artifacts`` (``python -m compile.aot --out ../artifacts``).
+Emits one ``<name>.hlo.txt`` per entry point plus ``manifest.txt``, a
+line-based description the Rust runtime parses (rust/src/runtime/manifest.rs):
+
+    config vocab 256
+    ...
+    artifact generator_decode_b8
+    path generator_decode_b8.hlo.txt
+    input kv f32 2,2,8,4,128,16
+    input token i32 8
+    input pos i32 8
+    output logits f32 8,256
+    output kv f32 2,2,8,4,128,16
+    end
+
+Weights are baked into the HLO as constants; artifacts are self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Batch sizes compiled for the generator. The Rust batcher pads the running
+# batch up to the nearest compiled size (vLLM-style bucketed batching).
+GEN_BATCH_SIZES = (1, 2, 4, 8)
+EMB_BATCH = 8
+CLS_BATCH = 8
+SCORE_BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: weights are baked into the module; the
+    # default printer elides big literals as `{...}`, which would not
+    # round-trip through the Rust-side text parser.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dtype_name(d):
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(d).name]
+
+
+class Manifest:
+    def __init__(self):
+        self.lines = []
+        c = model.CONFIG
+        for k, v in c.items():
+            self.lines.append(f"config {k} {v}")
+        self.lines.append(f"config gen_batch_sizes {','.join(map(str, GEN_BATCH_SIZES))}")
+
+    def add(self, name, path, inputs, outputs):
+        self.lines.append(f"artifact {name}")
+        self.lines.append(f"path {path}")
+        for nm, s in inputs:
+            self.lines.append(
+                f"input {nm} {_dtype_name(s.dtype)} {','.join(map(str, s.shape))}"
+            )
+        for nm, s in outputs:
+            self.lines.append(
+                f"output {nm} {_dtype_name(s.dtype)} {','.join(map(str, s.shape))}"
+            )
+        self.lines.append("end")
+
+    def write(self, path):
+        with open(path, "w") as f:
+            f.write("\n".join(self.lines) + "\n")
+
+
+def lower_all(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    c = model.CONFIG
+    L, H, S, Dh = c["n_layers"], c["n_heads"], c["max_seq"], c["d_head"]
+    V, E, SE, NC, SN = (
+        c["vocab"], c["embed_dim"], c["embed_seq"], c["n_classes"], c["shard_n"],
+    )
+    lm = model.init_lm_params()
+    emb_p = model.init_embedder_params()
+    cls_p = model.init_classifier_params()
+    man = Manifest()
+
+    def emit(name, fn, inputs):
+        specs = [s for _, s in inputs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_tree = jax.eval_shape(fn, *specs)
+        # fns return tuples; name outputs positionally.
+        outs = []
+        flat, _ = jax.tree_util.tree_flatten(out_tree)
+        names = _output_names(name, len(flat))
+        for nm, s in zip(names, flat):
+            outs.append((nm, s))
+        man.add(name, fname, inputs, outs)
+        print(f"  {name}: {len(text) / 1e6:.2f} MB HLO text")
+
+    def _output_names(name, n):
+        if name.startswith("generator_prefill") or name.startswith("generator_decode"):
+            return ["logits", "kv"][:n]
+        if name.startswith("embedder"):
+            return ["emb"]
+        if name.startswith("classifier"):
+            return ["logits"]
+        if name.startswith("retrieval_score"):
+            return ["scores"]
+        return [f"out{i}" for i in range(n)]
+
+    for B in GEN_BATCH_SIZES:
+        emit(
+            f"generator_prefill_b{B}",
+            functools.partial(lambda t, ln: model.lm_prefill(lm, t, ln)),
+            [("tokens", _spec((B, S), jnp.int32)), ("length", _spec((B,), jnp.int32))],
+        )
+        emit(
+            f"generator_decode_b{B}",
+            lambda kv, t, p: model.lm_decode_step(lm, kv, t, p),
+            [
+                ("kv", _spec((L, 2, B, H, S, Dh), jnp.float32)),
+                ("token", _spec((B,), jnp.int32)),
+                ("pos", _spec((B,), jnp.int32)),
+            ],
+        )
+    emit(
+        "embedder",
+        lambda t, ln: (model.embed(emb_p, t, ln),),
+        [("tokens", _spec((EMB_BATCH, SE), jnp.int32)), ("length", _spec((EMB_BATCH,), jnp.int32))],
+    )
+    emit(
+        "classifier",
+        lambda e: (model.classify(cls_p, e),),
+        [("emb", _spec((CLS_BATCH, E), jnp.float32))],
+    )
+    emit(
+        "retrieval_score",
+        lambda q, d: (model.retrieval_score(q, d),),
+        [("q", _spec((SCORE_BATCH, E), jnp.float32)), ("docs", _spec((SN, E), jnp.float32))],
+    )
+    man.write(os.path.join(out_dir, "manifest.txt"))
+    print(f"wrote manifest with {len(man.lines)} lines to {out_dir}/manifest.txt")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    lower_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""Pallas flash-attention kernels (Layer 1 — the generation hot-spot).
+
+Two kernels, both written as blocked online-softmax loops over KV tiles:
+
+* :func:`decode_attention` — one new query token per sequence against a
+  padded KV cache (the per-step cost of autoregressive decoding). This is
+  the TPU rethink of vLLM's PagedAttention: where PagedAttention walks KV
+  *pages* with a CUDA threadblock per (head, sequence), we tile the KV
+  cache into VMEM-sized blocks with ``BlockSpec`` and accumulate an online
+  softmax across the tiles; the grid dimension (b, h) takes the role of the
+  threadblock index, and the HBM→VMEM block schedule takes the role of the
+  page-table walk.
+
+* :func:`prefill_attention` — causal attention over the whole prompt,
+  tiled over query blocks (grid) × key blocks (inner ``fori_loop``), the
+  classic FlashAttention schedule.
+
+Both MUST be lowered with ``interpret=True`` in this environment: real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+Numerics are validated against :mod:`ref` by ``python/tests``.
+
+VMEM accounting (for DESIGN.md §Perf; S=128, Dh=16, f32):
+  decode:  per (b,h) grid step holds q [Dh] + one KV tile [BLK_S, Dh] × 2
+           + accumulators → ≈ 2·64·16·4 B ≈ 8 KiB, far under the ~16 MiB
+           VMEM budget; the grid is compute-bound on the MXU row-matmul.
+  prefill: q tile [BLK_Q, Dh] + KV tiles [BLK_K, Dh] × 2 + p [BLK_Q, BLK_K]
+           ≈ 64·64·4 B · 4 ≈ 64 KiB per step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# KV-tile length for the decode kernel. 64 keeps the working set tiny while
+# exercising the multi-tile online-softmax path for S >= 128.
+BLK_S = 64
+# Query/key tile lengths for the prefill kernel.
+BLK_Q = 64
+BLK_K = 64
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, s_total: int):
+    """Grid point = (batch b, head h). Online softmax over KV tiles.
+
+    Refs (after BlockSpec squeezing):
+      pos_ref: [1]       int32  position of the new token for this b.
+      q_ref:   [Dh]      query row.
+      k_ref:   [S, Dh]   full key-cache row for (b, h); tiled inside.
+      v_ref:   [S, Dh]   full value-cache row.
+      o_ref:   [Dh]      output.
+    """
+    dh = q_ref.shape[-1]
+    pos = pos_ref[0]
+    q = q_ref[...].astype(jnp.float32) * (1.0 / jnp.sqrt(jnp.float32(dh)))
+
+    n_blk = s_total // BLK_S
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        k_blk = jax.lax.dynamic_slice(
+            k_ref[...], (i * BLK_S, 0), (BLK_S, dh)
+        ).astype(jnp.float32)
+        v_blk = jax.lax.dynamic_slice(
+            v_ref[...], (i * BLK_S, 0), (BLK_S, dh)
+        ).astype(jnp.float32)
+        s = k_blk @ q  # [BLK_S]
+        idx = i * BLK_S + jax.lax.iota(jnp.int32, BLK_S)
+        s = jnp.where(idx <= pos, s, NEG_INF)
+        m_cur = jnp.max(s)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)  # [BLK_S]
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p)
+        acc = acc * alpha + p @ v_blk  # [Dh]
+        return m_new, l_new, acc
+
+    m0 = jnp.float32(NEG_INF)
+    l0 = jnp.float32(0.0)
+    acc0 = jnp.zeros((dh,), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, n_blk, body, (m0, l0, acc0))
+    o_ref[...] = acc / l
+
+
+def decode_attention(q, k, v, pos):
+    """Pallas decode-step attention. Shapes as :func:`ref.ref_decode_attention`.
+
+    q: [B, H, Dh]; k, v: [B, H, S, Dh]; pos: [B] int32 → out [B, H, Dh] f32.
+    S must be a multiple of BLK_S.
+    """
+    B, H, S, Dh = k.shape
+    assert S % BLK_S == 0, f"S={S} must be a multiple of {BLK_S}"
+    kern = functools.partial(_decode_kernel, s_total=S)
+    return pl.pallas_call(
+        kern,
+        grid=(B, H),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h: (b,)),  # pos
+            pl.BlockSpec((None, None, Dh), lambda b, h: (b, h, 0)),  # q
+            pl.BlockSpec((None, None, S, Dh), lambda b, h: (b, h, 0, 0)),  # k
+            pl.BlockSpec((None, None, S, Dh), lambda b, h: (b, h, 0, 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((None, None, Dh), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Dh), jnp.float32),
+        interpret=True,
+    )(pos, q, k, v)
+
+
+def _prefill_kernel(len_ref, q_ref, k_ref, v_ref, o_ref):
+    """Grid point = (b, h, q-tile). Flash loop over k tiles ≤ q tile end.
+
+    Refs (after BlockSpec squeezing):
+      len_ref: [1]            int32 valid length for this b.
+      q_ref:   [BLK_Q, Dh]
+      k_ref:   [S, Dh]
+      v_ref:   [S, Dh]
+      o_ref:   [BLK_Q, Dh]
+    """
+    dh = q_ref.shape[-1]
+    qi_blk = pl.program_id(2)
+    length = len_ref[0]
+    q = q_ref[...].astype(jnp.float32) * (1.0 / jnp.sqrt(jnp.float32(dh)))
+    q_idx = qi_blk * BLK_Q + jax.lax.iota(jnp.int32, BLK_Q)  # [BLK_Q]
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        k_blk = jax.lax.dynamic_slice(
+            k_ref[...], (i * BLK_K, 0), (BLK_K, dh)
+        ).astype(jnp.float32)
+        v_blk = jax.lax.dynamic_slice(
+            v_ref[...], (i * BLK_K, 0), (BLK_K, dh)
+        ).astype(jnp.float32)
+        s = q @ k_blk.T  # [BLK_Q, BLK_K]
+        k_idx = i * BLK_K + jax.lax.iota(jnp.int32, BLK_K)  # [BLK_K]
+        mask = (k_idx[None, :] <= q_idx[:, None]) & (k_idx[None, :] < length)
+        s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)  # [BLK_Q]
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v_blk
+        return m_new, l_new, acc
+
+    m0 = jnp.full((BLK_Q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((BLK_Q,), jnp.float32)
+    acc0 = jnp.zeros((BLK_Q, dh), jnp.float32)
+    # Causality: k tiles strictly after this q tile contribute nothing, so
+    # the loop runs only to qi_blk + 1 — the flash-attention work saving.
+    _, l, acc = jax.lax.fori_loop(0, qi_blk + 1, body, (m0, l0, acc0))
+    # Rows with q_idx >= length are padding; their softmax may be fully
+    # masked (all NEG_INF). exp(NEG_INF - NEG_INF) = 1 keeps l >= 1 in that
+    # case, so the division is safe; guard against pathological zeros.
+    l = jnp.maximum(l, 1e-30)
+    o_ref[...] = acc / l[:, None]
+
+
+def prefill_attention(q, k, v, length):
+    """Pallas causal prefill attention.
+
+    q, k, v: [B, H, S, Dh]; length: [B] int32 → out [B, H, S, Dh] f32.
+    S must be a multiple of BLK_Q (= BLK_K).
+    """
+    B, H, S, Dh = q.shape
+    assert S % BLK_Q == 0 and BLK_Q == BLK_K
+    n_q = S // BLK_Q
+    return pl.pallas_call(
+        _prefill_kernel,
+        grid=(B, H, n_q),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, i: (b,)),  # length
+            pl.BlockSpec((None, None, BLK_Q, Dh), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((None, None, S, Dh), lambda b, h, i: (b, h, 0, 0)),
+            pl.BlockSpec((None, None, S, Dh), lambda b, h, i: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, None, BLK_Q, Dh), lambda b, h, i: (b, h, i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, Dh), jnp.float32),
+        interpret=True,
+    )(length, q, k, v)

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` ops only. ``python/tests/`` asserts
+``assert_allclose(kernel(...), ref(...))`` over hypothesis-driven shape and
+value sweeps — this is the core correctness signal for Layer 1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_decode_attention(q, k, v, pos):
+    """Single-token (decode-step) attention against a KV cache.
+
+    Args:
+      q:   [B, H, Dh]  query for the new token.
+      k:   [B, H, S, Dh] key cache (positions > pos[b] are garbage).
+      v:   [B, H, S, Dh] value cache.
+      pos: [B] int32, index of the new token; positions 0..pos inclusive
+           are attended (the new token's k/v is already written at pos).
+
+    Returns: [B, H, Dh] attention output (f32).
+    """
+    B, H, S, Dh = k.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+    s = jnp.einsum(
+        "bhd,bhsd->bhs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    idx = jnp.arange(S)[None, None, :]
+    mask = idx <= pos[:, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bhsd->bhd", p, v.astype(jnp.float32))
+
+
+def ref_prefill_attention(q, k, v, length):
+    """Causal self-attention over a (padded) prompt.
+
+    Args:
+      q, k, v: [B, H, S, Dh].
+      length:  [B] int32 valid prompt length; keys at >= length are masked.
+
+    Returns: [B, H, S, Dh] (f32). Rows at query positions >= length attend
+    only to valid keys and are numerically well-defined but unused
+    downstream.
+    """
+    B, H, S, Dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    qi = jnp.arange(S)[None, None, :, None]
+    ki = jnp.arange(S)[None, None, None, :]
+    causal = ki <= qi
+    valid = ki < length[:, None, None, None]
+    # Every query row always sees key 0 or itself, so the softmax is never
+    # fully masked for rows < length; rows >= length still see key <= qi.
+    s = jnp.where(causal & valid, s, NEG_INF)
+    # Guard fully-masked rows (q rows beyond length when length == 0).
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.maximum(m, NEG_INF / 2)
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+
+
+def ref_score(q, docs):
+    """Dense retrieval scoring: dot-product similarity.
+
+    Args:
+      q:    [B, D] query embeddings.
+      docs: [N, D] corpus-shard embeddings.
+
+    Returns: [B, N] scores (f32).
+    """
+    return q.astype(jnp.float32) @ docs.astype(jnp.float32).T

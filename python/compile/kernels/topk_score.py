@@ -1,0 +1,61 @@
+"""Pallas retrieval-scoring kernel (Layer 1 — the retrieval hot-spot).
+
+Dense dot-product scoring of a query batch against a corpus shard,
+``scores = q @ docsᵀ``, tiled over the corpus dimension so each grid step
+streams one VMEM-sized block of document embeddings from HBM. This is the
+TPU rethink of ChromaDB's CPU scoring loop: the candidate scan that
+``search_ef`` bounds becomes a sequence of MXU matmul tiles; the Rust-side
+IVF store (rust/src/retrieval) chooses *which* shards/blocks to scan, the
+kernel makes each scanned block MXU-shaped.
+
+Top-k selection itself is done by the caller (``jax.lax.top_k`` at Layer 2
+or the Rust heap-select at Layer 3) — selection is memory-light and control
+heavy, exactly what should NOT live in the systolic array.
+
+VMEM accounting (B=8, D=64, BLK_N=256, f32): q tile 8·64·4 = 2 KiB,
+doc tile 256·64·4 = 64 KiB, out tile 8·256·4 = 8 KiB per grid step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Documents per grid step. 256 rows × D columns keeps each streamed tile
+# 128-aligned on the corpus axis (MXU-friendly) and well under VMEM.
+BLK_N = 256
+
+
+def _score_kernel(q_ref, d_ref, o_ref):
+    """Grid point = one corpus tile.
+
+    Refs: q_ref [B, D] (whole query batch, resident across steps),
+          d_ref [BLK_N, D] (this step's corpus tile),
+          o_ref [B, BLK_N].
+    """
+    q = q_ref[...].astype(jnp.float32)
+    d = d_ref[...].astype(jnp.float32)
+    o_ref[...] = q @ d.T
+
+
+def score(q, docs):
+    """Blocked similarity scoring: q [B, D] × docs [N, D] → [B, N] f32.
+
+    N must be a multiple of BLK_N (the Rust store pads shards).
+    """
+    B, D = q.shape
+    N, D2 = docs.shape
+    assert D == D2, f"dim mismatch {D} vs {D2}"
+    assert N % BLK_N == 0, f"N={N} must be a multiple of {BLK_N}"
+    return pl.pallas_call(
+        _score_kernel,
+        grid=(N // BLK_N,),
+        in_specs=[
+            pl.BlockSpec((B, D), lambda i: (0, 0)),
+            pl.BlockSpec((BLK_N, D), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, BLK_N), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((B, N), jnp.float32),
+        interpret=True,
+    )(q, docs)

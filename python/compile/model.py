@@ -1,0 +1,274 @@
+"""Layer 2 — JAX compute graphs for every model the serving stack needs.
+
+All graphs call the Layer-1 Pallas kernels (``kernels/``) for their
+hot-spots and are lowered ONCE by :mod:`compile.aot` to HLO-text artifacts
+executed from Rust via PJRT. Python never runs on the request path.
+
+Models (weights are generated deterministically from fixed seeds and baked
+into the HLO as constants — the artifacts are self-contained):
+
+* **Generator LM** — a byte-level GPT (V=256, D=64, 2 layers, 4 heads,
+  S=128) with ``prefill`` / ``decode_step`` entry points and an explicit KV
+  cache threaded through the artifact boundary. Serves as the paper's
+  generator, grader, critic and rewriter (same weights, different prompts —
+  matching how the paper reuses "an LLM" for auxiliary roles).
+* **Embedder** — token embedding + masked mean-pool + 2-layer MLP,
+  L2-normalized output. Used to embed both corpus passages (index build)
+  and queries.
+* **Classifier** — 3-way MLP over query embeddings: the Adaptive-RAG
+  query-complexity classifier (classes: simple / standard / complex).
+* **Retrieval scorer** — the Pallas blocked-matmul scoring kernel wrapped
+  for a fixed shard shape.
+
+Shapes are fixed per artifact (PJRT AOT requires static shapes); the Rust
+runtime pads batches and shards to these shapes (see ``artifacts/manifest``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import flash_attention as fa
+from compile.kernels import topk_score as ts
+
+# ----------------------------------------------------------------------------
+# Configuration (mirrored in artifacts/manifest.txt → rust/src/runtime).
+# ----------------------------------------------------------------------------
+
+CONFIG = dict(
+    vocab=256,        # byte-level tokens
+    d_model=64,
+    n_layers=2,
+    n_heads=4,
+    d_head=16,
+    d_ffn=256,
+    max_seq=128,      # generator context length
+    embed_seq=64,     # embedder input length
+    embed_dim=64,     # embedding dimensionality (== d_model)
+    n_classes=3,      # A-RAG complexity classes
+    shard_n=1024,     # corpus shard rows per retrieval_score call
+)
+
+PARAM_SEED = 0
+
+
+def _norm(rng, shape, scale):
+    return jax.random.normal(rng, shape, jnp.float32) * scale
+
+
+def init_lm_params(seed: int = PARAM_SEED):
+    """Deterministic tiny-GPT parameters."""
+    c = CONFIG
+    d, h, dh, f, v, s = (
+        c["d_model"], c["n_heads"], c["d_head"], c["d_ffn"], c["vocab"],
+        c["max_seq"],
+    )
+    rngs = jax.random.split(jax.random.PRNGKey(seed), 4 + 8 * c["n_layers"])
+    it = iter(rngs)
+    p = {
+        "tok_emb": _norm(next(it), (v, d), 0.02),
+        "pos_emb": _norm(next(it), (s, d), 0.02),
+        "ln_f_g": jnp.ones((d,)),
+        "out": _norm(next(it), (d, v), d ** -0.5),
+    }
+    next(it)
+    for l in range(c["n_layers"]):
+        p[f"l{l}"] = {
+            "ln1_g": jnp.ones((d,)),
+            "ln2_g": jnp.ones((d,)),
+            "wq": _norm(next(it), (d, h * dh), d ** -0.5),
+            "wk": _norm(next(it), (d, h * dh), d ** -0.5),
+            "wv": _norm(next(it), (d, h * dh), d ** -0.5),
+            "wo": _norm(next(it), (h * dh, d), (h * dh) ** -0.5),
+            "w1": _norm(next(it), (d, f), d ** -0.5),
+            "b1": jnp.zeros((f,)),
+            "w2": _norm(next(it), (f, d), f ** -0.5),
+            "b2": jnp.zeros((d,)),
+        }
+    return p
+
+
+def init_embedder_params(seed: int = PARAM_SEED + 1):
+    c = CONFIG
+    d, e = c["d_model"], c["embed_dim"]
+    r = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return {
+        "tok_emb": _norm(r[0], (c["vocab"], d), 0.05),
+        "w1": _norm(r[1], (d, 2 * d), d ** -0.5),
+        "b1": jnp.zeros((2 * d,)),
+        "w2": _norm(r[2], (2 * d, e), (2 * d) ** -0.5),
+        "b2": jnp.zeros((e,)),
+    }
+
+
+def init_classifier_params(seed: int = PARAM_SEED + 2):
+    c = CONFIG
+    e, n = c["embed_dim"], c["n_classes"]
+    r = jax.random.split(jax.random.PRNGKey(seed), 2)
+    return {
+        "w1": _norm(r[0], (e, 32), e ** -0.5),
+        "b1": jnp.zeros((32,)),
+        "w2": _norm(r[1], (32, n), 32 ** -0.5),
+        "b2": jnp.zeros((n,)),
+    }
+
+
+# ----------------------------------------------------------------------------
+# Transformer blocks.
+# ----------------------------------------------------------------------------
+
+
+def _layernorm(x, g):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g
+
+
+def _split_heads(x, B, S, H, Dh):
+    # [B, S, H*Dh] -> [B, H, S, Dh]
+    return x.reshape(B, S, H, Dh).transpose(0, 2, 1, 3)
+
+
+def lm_prefill(params, tokens, length):
+    """Prompt prefill.
+
+    Args:
+      tokens: [B, S] int32 (padded with 0 beyond length).
+      length: [B] int32 valid lengths (>= 1).
+
+    Returns:
+      logits: [B, V] next-token logits at position length-1.
+      kv:     [L, 2, B, H, S, Dh] KV cache (positions >= length are pad
+              contributions, masked by downstream decode).
+    """
+    c = CONFIG
+    B, S = tokens.shape
+    H, Dh = c["n_heads"], c["d_head"]
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :S, :]
+    kv_layers = []
+    for l in range(c["n_layers"]):
+        lp = params[f"l{l}"]
+        h_in = _layernorm(x, lp["ln1_g"])
+        q = _split_heads(h_in @ lp["wq"], B, S, H, Dh)
+        k = _split_heads(h_in @ lp["wk"], B, S, H, Dh)
+        v = _split_heads(h_in @ lp["wv"], B, S, H, Dh)
+        attn = fa.prefill_attention(q, k, v, length)  # [B,H,S,Dh] f32
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, S, H * Dh)
+        x = x + attn @ lp["wo"]
+        h2 = _layernorm(x, lp["ln2_g"])
+        x = x + jax.nn.gelu(h2 @ lp["w1"] + lp["b1"]) @ lp["w2"] + lp["b2"]
+        kv_layers.append(jnp.stack([k, v]))  # [2,B,H,S,Dh]
+    kv = jnp.stack(kv_layers)  # [L,2,B,H,S,Dh]
+    x = _layernorm(x, params["ln_f_g"])
+    # Gather the hidden state at the last valid position per sequence.
+    last = jnp.take_along_axis(
+        x, (length - 1)[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0, :]  # [B, D]
+    logits = last @ params["out"]
+    return logits, kv
+
+
+def lm_decode_step(params, kv, token, pos):
+    """One autoregressive decode step.
+
+    Args:
+      kv:    [L, 2, B, H, S, Dh] cache from prefill / previous steps.
+      token: [B] int32 token sampled at the previous step.
+      pos:   [B] int32 position at which `token` sits (== current length-1
+             before this call writes k/v for `token` at pos).
+
+    Returns:
+      logits: [B, V] next-token logits.
+      kv_new: updated cache with this token's k/v written at pos.
+    """
+    c = CONFIG
+    L, _, B, H, S, Dh = kv.shape
+    x = params["tok_emb"][token] + params["pos_emb"][pos]  # [B, D]
+    kv_out = []
+    for l in range(c["n_layers"]):
+        lp = params[f"l{l}"]
+        h_in = _layernorm(x, lp["ln1_g"])
+        q = (h_in @ lp["wq"]).reshape(B, H, Dh)
+        k_new = (h_in @ lp["wk"]).reshape(B, H, Dh)
+        v_new = (h_in @ lp["wv"]).reshape(B, H, Dh)
+
+        def write(cache, new):
+            # cache [B,H,S,Dh], new [B,H,Dh]: write row at pos[b] per batch.
+            def one(cb, nb, pb):
+                return jax.lax.dynamic_update_slice(
+                    cb, nb[:, None, :], (0, pb, 0)
+                )
+            return jax.vmap(one)(cache, new, pos)
+
+        k_cache = write(kv[l, 0], k_new)
+        v_cache = write(kv[l, 1], v_new)
+        attn = fa.decode_attention(q, k_cache, v_cache, pos)  # [B,H,Dh]
+        x = x + attn.reshape(B, H * Dh) @ lp["wo"]
+        h2 = _layernorm(x, lp["ln2_g"])
+        x = x + jax.nn.gelu(h2 @ lp["w1"] + lp["b1"]) @ lp["w2"] + lp["b2"]
+        kv_out.append(jnp.stack([k_cache, v_cache]))
+    kv_new = jnp.stack(kv_out)
+    x = _layernorm(x, params["ln_f_g"])
+    logits = x @ params["out"]
+    return logits, kv_new
+
+
+# ----------------------------------------------------------------------------
+# Embedder / classifier / retrieval scorer.
+# ----------------------------------------------------------------------------
+
+
+def embed(params, tokens, length):
+    """tokens [B, S_E] int32, length [B] int32 → L2-normalized [B, E] f32."""
+    B, S = tokens.shape
+    x = params["tok_emb"][tokens]  # [B, S, D]
+    mask = (jnp.arange(S)[None, :] < length[:, None]).astype(jnp.float32)
+    pooled = jnp.sum(x * mask[:, :, None], axis=1) / jnp.maximum(
+        jnp.sum(mask, axis=1, keepdims=True), 1.0
+    )
+    h = jax.nn.gelu(pooled @ params["w1"] + params["b1"])
+    e = h @ params["w2"] + params["b2"]
+    return e / jnp.maximum(jnp.linalg.norm(e, axis=-1, keepdims=True), 1e-6)
+
+
+def classify(params, emb):
+    """emb [B, E] → class logits [B, n_classes]."""
+    h = jax.nn.gelu(emb @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def retrieval_score(q, docs):
+    """q [B, E] × docs [N, E] → scores [B, N] via the Pallas kernel."""
+    return ts.score(q, docs)
+
+
+# ----------------------------------------------------------------------------
+# Reference (pure-jnp) model paths for L2 testing: identical math with
+# ref-kernel attention, used by python/tests/test_model.py.
+# ----------------------------------------------------------------------------
+
+
+def lm_prefill_ref(params, tokens, length):
+    from compile.kernels import ref as R
+
+    c = CONFIG
+    B, S = tokens.shape
+    H, Dh = c["n_heads"], c["d_head"]
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :S, :]
+    for l in range(c["n_layers"]):
+        lp = params[f"l{l}"]
+        h_in = _layernorm(x, lp["ln1_g"])
+        q = _split_heads(h_in @ lp["wq"], B, S, H, Dh)
+        k = _split_heads(h_in @ lp["wk"], B, S, H, Dh)
+        v = _split_heads(h_in @ lp["wv"], B, S, H, Dh)
+        attn = R.ref_prefill_attention(q, k, v, length)
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, S, H * Dh)
+        x = x + attn @ lp["wo"]
+        h2 = _layernorm(x, lp["ln2_g"])
+        x = x + jax.nn.gelu(h2 @ lp["w1"] + lp["b1"]) @ lp["w2"] + lp["b2"]
+    x = _layernorm(x, params["ln_f_g"])
+    last = jnp.take_along_axis(
+        x, (length - 1)[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0, :]
+    return last @ params["out"]

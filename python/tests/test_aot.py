@@ -1,0 +1,89 @@
+"""AOT artifact sanity: manifest structure and HLO-text integrity.
+
+These tests run against a freshly lowered (small) artifact set in a temp
+dir so they don't depend on `make artifacts` having run, plus quick
+integrity checks on the real artifacts/ dir when it exists.
+"""
+
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def arts(tmp_path_factory):
+    """Lower the cheap entry points once into a temp dir."""
+    out = tmp_path_factory.mktemp("arts")
+    import jax
+    import jax.numpy as jnp
+
+    man = aot.Manifest()
+    emb_p = model.init_embedder_params()
+    lowered = jax.jit(lambda t, ln: (model.embed(emb_p, t, ln),)).lower(
+        jax.ShapeDtypeStruct((8, model.CONFIG["embed_seq"]), jnp.int32),
+        jax.ShapeDtypeStruct((8,), jnp.int32),
+    )
+    text = aot.to_hlo_text(lowered)
+    p = out / "embedder.hlo.txt"
+    p.write_text(text)
+    man.add(
+        "embedder",
+        "embedder.hlo.txt",
+        [
+            ("tokens", jax.ShapeDtypeStruct((8, 64), jnp.int32)),
+            ("length", jax.ShapeDtypeStruct((8,), jnp.int32)),
+        ],
+        [("emb", jax.ShapeDtypeStruct((8, 64), jnp.float32))],
+    )
+    man.write(out / "manifest.txt")
+    return out
+
+
+def test_hlo_text_has_entry_and_no_elided_constants(arts):
+    text = (arts / "embedder.hlo.txt").read_text()
+    assert "ENTRY" in text
+    assert "constant({...})" not in text, "large constants must be printed"
+
+
+def test_manifest_roundtrip_structure(arts):
+    lines = (arts / "manifest.txt").read_text().strip().splitlines()
+    assert lines[0].startswith("config vocab")
+    assert "artifact embedder" in lines
+    i = lines.index("artifact embedder")
+    block = lines[i : lines.index("end", i) + 1]
+    kinds = [l.split()[0] for l in block]
+    assert kinds == ["artifact", "path", "input", "input", "output", "end"]
+    # shape encoding: comma-separated dims, dtype tag f32/i32
+    tok = [l for l in block if l.startswith("input tokens")][0]
+    assert tok == "input tokens i32 8,64"
+
+
+def test_dtype_names():
+    import jax.numpy as jnp
+
+    assert aot._dtype_name(jnp.float32) == "f32"
+    assert aot._dtype_name(jnp.int32) == "i32"
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.txt")),
+    reason="real artifacts not built",
+)
+def test_real_artifacts_integrity():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    man = open(os.path.join(root, "manifest.txt")).read()
+    names = [l.split()[1] for l in man.splitlines() if l.startswith("artifact ")]
+    # every generator batch size + the three auxiliaries
+    for b in aot.GEN_BATCH_SIZES:
+        assert f"generator_prefill_b{b}" in names
+        assert f"generator_decode_b{b}" in names
+    for aux in ("embedder", "classifier", "retrieval_score"):
+        assert aux in names
+    for l in man.splitlines():
+        if l.startswith("path "):
+            p = os.path.join(root, l.split()[1])
+            assert os.path.exists(p), p
+            head = open(p).read(200000)
+            assert "ENTRY" in head

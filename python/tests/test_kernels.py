@@ -1,0 +1,184 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, dtypes, and mask positions; every property
+asserts allclose against ``kernels/ref.py``. This is the core correctness
+signal for the compute hot-spots that end up inside the AOT artifacts.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention as fa
+from compile.kernels import topk_score as ts
+from compile.kernels import ref
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def _rand(rng, shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape).astype(dtype) * scale)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    h=st.sampled_from([1, 2, 4]),
+    s_blocks=st.integers(1, 3),
+    dh=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_matches_ref(b, h, s_blocks, dh, seed):
+    s = s_blocks * fa.BLK_S
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (b, h, dh))
+    k = _rand(rng, (b, h, s, dh))
+    v = _rand(rng, (b, h, s, dh))
+    pos = jnp.asarray(rng.integers(0, s, size=(b,)), jnp.int32)
+    out = fa.decode_attention(q, k, v, pos)
+    exp = ref.ref_decode_attention(q, k, v, pos)
+    np.testing.assert_allclose(out, exp, rtol=RTOL, atol=ATOL)
+
+
+def test_decode_attention_pos_zero_attends_only_first_key():
+    rng = np.random.default_rng(0)
+    b, h, s, dh = 2, 2, fa.BLK_S * 2, 16
+    q = _rand(rng, (b, h, dh))
+    k = _rand(rng, (b, h, s, dh))
+    v = _rand(rng, (b, h, s, dh))
+    pos = jnp.zeros((b,), jnp.int32)
+    out = fa.decode_attention(q, k, v, pos)
+    # With only one unmasked key the output must equal v[:, :, 0, :].
+    np.testing.assert_allclose(out, v[:, :, 0, :], rtol=RTOL, atol=ATOL)
+
+
+def test_decode_attention_ignores_garbage_beyond_pos():
+    rng = np.random.default_rng(1)
+    b, h, s, dh = 1, 2, fa.BLK_S * 2, 16
+    q = _rand(rng, (b, h, dh))
+    k = _rand(rng, (b, h, s, dh))
+    v = _rand(rng, (b, h, s, dh))
+    pos = jnp.asarray([17], jnp.int32)
+    out1 = fa.decode_attention(q, k, v, pos)
+    # Poison everything beyond pos: result must not change.
+    k2 = k.at[:, :, 18:, :].set(1e9)
+    v2 = v.at[:, :, 18:, :].set(-1e9)
+    out2 = fa.decode_attention(q, k2, v2, pos)
+    np.testing.assert_allclose(out1, out2, rtol=RTOL, atol=ATOL)
+
+
+def test_decode_attention_large_scores_numerically_stable():
+    rng = np.random.default_rng(2)
+    b, h, s, dh = 2, 1, fa.BLK_S, 8
+    q = _rand(rng, (b, h, dh), scale=50.0)
+    k = _rand(rng, (b, h, s, dh), scale=50.0)
+    v = _rand(rng, (b, h, s, dh))
+    pos = jnp.asarray([s - 1] * b, jnp.int32)
+    out = fa.decode_attention(q, k, v, pos)
+    assert np.isfinite(np.asarray(out)).all()
+    exp = ref.ref_decode_attention(q, k, v, pos)
+    np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# prefill_attention
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.sampled_from([1, 2, 4]),
+    s_blocks=st.integers(1, 2),
+    dh=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prefill_attention_matches_ref(b, h, s_blocks, dh, seed):
+    s = s_blocks * fa.BLK_Q
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (b, h, s, dh))
+    k = _rand(rng, (b, h, s, dh))
+    v = _rand(rng, (b, h, s, dh))
+    length = jnp.asarray(rng.integers(1, s + 1, size=(b,)), jnp.int32)
+    out = fa.prefill_attention(q, k, v, length)
+    exp = ref.ref_prefill_attention(q, k, v, length)
+    # Only compare rows < length; padding rows are unused downstream.
+    out_np, exp_np = np.asarray(out), np.asarray(exp)
+    for i, ln in enumerate(np.asarray(length)):
+        np.testing.assert_allclose(
+            out_np[i, :, :ln], exp_np[i, :, :ln], rtol=RTOL, atol=ATOL
+        )
+
+
+def test_prefill_first_row_is_v0():
+    rng = np.random.default_rng(3)
+    b, h, s, dh = 2, 2, fa.BLK_Q, 16
+    q = _rand(rng, (b, h, s, dh))
+    k = _rand(rng, (b, h, s, dh))
+    v = _rand(rng, (b, h, s, dh))
+    length = jnp.asarray([s] * b, jnp.int32)
+    out = fa.prefill_attention(q, k, v, length)
+    # Query row 0 can only attend to key 0.
+    np.testing.assert_allclose(out[:, :, 0, :], v[:, :, 0, :], rtol=RTOL, atol=ATOL)
+
+
+def test_prefill_causality():
+    """Changing k/v at position j must not affect outputs at rows < j."""
+    rng = np.random.default_rng(4)
+    b, h, s, dh = 1, 2, fa.BLK_Q * 2, 8
+    q = _rand(rng, (b, h, s, dh))
+    k = _rand(rng, (b, h, s, dh))
+    v = _rand(rng, (b, h, s, dh))
+    length = jnp.asarray([s], jnp.int32)
+    out1 = fa.prefill_attention(q, k, v, length)
+    j = 70
+    k2 = k.at[:, :, j:, :].add(3.0)
+    v2 = v.at[:, :, j:, :].add(-2.0)
+    out2 = fa.prefill_attention(q, k2, v2, length)
+    np.testing.assert_allclose(out1[:, :, :j], out2[:, :, :j], rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# topk_score
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.sampled_from([1, 4, 8]),
+    d=st.sampled_from([16, 64]),
+    n_blocks=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_score_matches_ref(b, d, n_blocks, seed):
+    n = n_blocks * ts.BLK_N
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (b, d))
+    docs = _rand(rng, (n, d))
+    out = ts.score(q, docs)
+    exp = ref.ref_score(q, docs)
+    np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+
+
+def test_score_identity_rows():
+    """A query equal to a corpus row scores highest on that row (unit vectors)."""
+    d, n = 64, 2 * ts.BLK_N
+    rng = np.random.default_rng(5)
+    docs = rng.normal(size=(n, d)).astype(np.float32)
+    docs /= np.linalg.norm(docs, axis=1, keepdims=True)
+    rows = [3, 77, 200, n - 1]
+    q = jnp.asarray(docs[rows])
+    out = np.asarray(ts.score(q, jnp.asarray(docs)))
+    assert list(out.argmax(axis=1)) == rows
+
+
+def test_score_rejects_bad_shard():
+    with pytest.raises(AssertionError):
+        ts.score(jnp.zeros((2, 8)), jnp.zeros((ts.BLK_N + 1, 8)))

@@ -1,0 +1,13 @@
+//! The deployment layer's resource allocator (§3.2, Fig. 8).
+//!
+//! Models the pipeline as a generalized network-flow problem where node
+//! capacities are *endogenous*: the solver assigns resource units r_{i,k}
+//! to maximize sink flow subject to per-resource budgets, with branch
+//! conservation f_{i,j} = p_{i,j} γ_i Σ f_{u,i} capturing conditionals,
+//! amplification, and (folded) recursion.
+
+pub mod flow;
+pub mod plan;
+
+pub use flow::FlowProblem;
+pub use plan::AllocationPlan;

@@ -1,0 +1,156 @@
+//! Allocation plans: the solver's continuous r_{i,k} rounded into concrete
+//! per-component instance counts (respecting per-instance demands and
+//! `base_instances` floors), plus the flow solution for diagnostics.
+
+use std::collections::HashMap;
+
+use crate::profile::Profile;
+use crate::spec::graph::{NodeId, PipelineGraph, ResourceKind};
+
+/// A deployable allocation.
+#[derive(Clone, Debug)]
+pub struct AllocationPlan {
+    /// Continuous resource assignment r_{i,k} from the LP.
+    pub resources: HashMap<(NodeId, ResourceKind), f64>,
+    /// Rounded instances per component.
+    pub instance_counts: HashMap<NodeId, usize>,
+    /// Optimal edge flows f_{i,j} (requests/sec).
+    pub edge_flows: Vec<f64>,
+    /// Optimal end-to-end throughput (flow into sink, requests/sec).
+    pub throughput: f64,
+    /// Simplex pivots (Fig. 12 diagnostics).
+    pub pivots: usize,
+}
+
+impl AllocationPlan {
+    pub(crate) fn from_lp(
+        graph: &PipelineGraph,
+        _profile: &Profile,
+        resources: HashMap<(NodeId, ResourceKind), f64>,
+        edge_flows: Vec<f64>,
+        throughput: f64,
+        pivots: usize,
+    ) -> AllocationPlan {
+        // Instances = max over resources of ceil(r_{i,k} / demand_{i,k}),
+        // floored at base_instances.
+        let mut instance_counts = HashMap::new();
+        for node in graph.work_nodes() {
+            let mut n_inst = 0usize;
+            for &(k, demand) in &node.resources {
+                if demand <= 0.0 {
+                    continue;
+                }
+                let r = resources.get(&(node.id, k)).copied().unwrap_or(0.0);
+                let implied = (r / demand).ceil() as usize;
+                n_inst = n_inst.max(implied);
+            }
+            instance_counts.insert(node.id, n_inst.max(node.base_instances).max(1));
+        }
+        AllocationPlan { resources, instance_counts, edge_flows, throughput, pivots }
+    }
+
+    /// Continuous resource units assigned to a node.
+    pub fn resource(&self, node: NodeId, k: ResourceKind) -> f64 {
+        self.resources.get(&(node, k)).copied().unwrap_or(0.0)
+    }
+
+    /// Concrete instance count for a node.
+    pub fn instances(&self, node: NodeId) -> usize {
+        self.instance_counts.get(&node).copied().unwrap_or(0)
+    }
+
+    /// A uniform baseline plan (the Haystack/Ray substitute): divide each
+    /// resource budget evenly across the components demanding it.
+    pub fn uniform(graph: &PipelineGraph, budgets: &[(ResourceKind, f64)]) -> AllocationPlan {
+        let mut resources = HashMap::new();
+        for &(k, cap) in budgets {
+            let takers: Vec<_> = graph
+                .work_nodes()
+                .filter(|n| n.demand_for(k) > 0.0)
+                .map(|n| n.id)
+                .collect();
+            if takers.is_empty() {
+                continue;
+            }
+            let share = cap / takers.len() as f64;
+            for id in takers {
+                resources.insert((id, k), share);
+            }
+        }
+        let mut instance_counts = HashMap::new();
+        for node in graph.work_nodes() {
+            let mut n_inst = usize::MAX;
+            let mut any = false;
+            for &(k, demand) in &node.resources {
+                if demand <= 0.0 {
+                    continue;
+                }
+                any = true;
+                let r = resources.get(&(node.id, k)).copied().unwrap_or(0.0);
+                // Uniform split must respect *all* demands simultaneously
+                // → min over resources (an instance needs its full bundle).
+                n_inst = n_inst.min((r / demand).floor() as usize);
+            }
+            let n_inst = if any { n_inst } else { 1 };
+            instance_counts.insert(node.id, n_inst.max(node.base_instances).max(1));
+        }
+        AllocationPlan {
+            resources,
+            instance_counts,
+            edge_flows: vec![0.0; graph.edges.len()],
+            throughput: 0.0,
+            pivots: 0,
+        }
+    }
+
+    /// Pretty print for the §4.3 "Allocation Plans" discussion.
+    pub fn describe(&self, graph: &PipelineGraph) -> String {
+        let mut out = format!("plan for '{}': max throughput {:.2} req/s\n", graph.name, self.throughput);
+        for node in graph.work_nodes() {
+            let inst = self.instances(node.id);
+            let mut res = String::new();
+            for &(k, _) in &node.resources {
+                res.push_str(&format!(" {}={:.1}", k.name(), self.resource(node.id, k)));
+            }
+            out.push_str(&format!("  {:<16} instances={inst}{res}\n", node.name));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::flow::{paper_cluster_budgets, plan_for};
+    use crate::spec::apps;
+
+    #[test]
+    fn instances_respect_base_floor() {
+        let g = apps::corrective_rag();
+        let plan = plan_for(&g, 1000, 0);
+        let grader = g.node_by_name("grader").unwrap();
+        assert!(plan.instances(grader.id) >= grader.base_instances);
+        for n in g.work_nodes() {
+            assert!(plan.instances(n.id) >= 1, "{} has 0 instances", n.name);
+        }
+    }
+
+    #[test]
+    fn uniform_plan_covers_all_components() {
+        let g = apps::adaptive_rag();
+        let plan = AllocationPlan::uniform(&g, &paper_cluster_budgets());
+        for n in g.work_nodes() {
+            assert!(plan.instances(n.id) >= 1, "{}", n.name);
+        }
+    }
+
+    #[test]
+    fn describe_mentions_every_component() {
+        let g = apps::self_rag();
+        let plan = plan_for(&g, 1000, 1);
+        let desc = plan.describe(&g);
+        for n in g.work_nodes() {
+            assert!(desc.contains(&n.name), "missing {} in:\n{desc}", n.name);
+        }
+    }
+}

@@ -1,0 +1,1 @@
+//! Baselines live in sim::simrun (SystemKind::{LangChain, Haystack}).

@@ -1,0 +1,182 @@
+//! Telemetry-driven resource reallocation (§3.3.1).
+//!
+//! Every `interval` seconds the controller re-estimates (α, γ, p) from
+//! [`Telemetry`] and re-solves the Fig. 8 LP in the background; a new
+//! allocation is committed only when **two consecutive solutions agree**
+//! (the paper's damping rule), avoiding thrash on noisy estimates.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::alloc::FlowProblem;
+use crate::profile::models::instance_concurrency;
+use crate::profile::Profile;
+use crate::spec::graph::{NodeId, PipelineGraph, ResourceKind};
+
+use super::telemetry::Telemetry;
+
+/// The periodic re-solver.
+pub struct Autoscaler {
+    pub interval: f64,
+    last_solve: f64,
+    pending: Option<HashMap<NodeId, usize>>,
+    /// Wall-clock seconds of each LP solve (Fig. 12 / §3.3.1 overhead).
+    pub solve_times: Vec<f64>,
+    /// Committed reallocations (time, plan).
+    pub commits: Vec<(f64, HashMap<NodeId, usize>)>,
+}
+
+impl Autoscaler {
+    pub fn new(interval: f64) -> Self {
+        Autoscaler {
+            interval,
+            last_solve: f64::NEG_INFINITY,
+            pending: None,
+            solve_times: Vec::new(),
+            commits: Vec::new(),
+        }
+    }
+
+    /// Build a Profile from live telemetry (α from observed service
+    /// rates; p from observed branch frequencies; γ from the spec),
+    /// falling back to `prior` where telemetry is still cold.
+    pub fn telemetry_profile(
+        graph: &PipelineGraph,
+        telemetry: &Telemetry,
+        prior: &Profile,
+    ) -> Profile {
+        let mut mean_service = HashMap::new();
+        let mut alpha = HashMap::new();
+        for node in &graph.nodes {
+            let prior_mean = prior.mean_service.get(&node.id).copied().unwrap_or(0.0);
+            let mean = telemetry.mean_service(node.id, prior_mean);
+            mean_service.insert(node.id, mean);
+            if mean > 0.0 {
+                let conc = instance_concurrency(&node.kind) as f64;
+                for &(k, units) in &node.resources {
+                    if units > 0.0 {
+                        alpha.insert((node.id, k), conc / mean / units);
+                    }
+                }
+            }
+        }
+        Profile {
+            mean_service,
+            alpha,
+            edge_probs: telemetry.edge_probs(graph),
+            gamma: prior.gamma.clone(),
+            samples: prior.samples,
+        }
+    }
+
+    /// Called on the control tick. Returns a newly *committed* instance
+    /// plan if two consecutive solves agreed; otherwise None.
+    pub fn maybe_rescale(
+        &mut self,
+        now: f64,
+        graph: &PipelineGraph,
+        telemetry: &Telemetry,
+        prior: &Profile,
+        budgets: &[(ResourceKind, f64)],
+    ) -> Option<HashMap<NodeId, usize>> {
+        if now - self.last_solve < self.interval {
+            return None;
+        }
+        self.last_solve = now;
+        let profile = Self::telemetry_profile(graph, telemetry, prior);
+        let t0 = Instant::now();
+        let plan = FlowProblem::new(graph, &profile, budgets.to_vec()).solve().ok()?;
+        self.solve_times.push(t0.elapsed().as_secs_f64());
+        let counts = plan.instance_counts.clone();
+        match &self.pending {
+            Some(prev) if plans_agree(prev, &counts) => {
+                self.pending = None;
+                self.commits.push((now, counts.clone()));
+                Some(counts)
+            }
+            _ => {
+                self.pending = Some(counts);
+                None
+            }
+        }
+    }
+}
+
+/// Two consecutive solutions "agree" when every component's instance
+/// count differs by at most 1 (telemetry keeps moving, so exact equality
+/// would never commit; ±1 keeps the paper's damping intent).
+fn plans_agree(a: &HashMap<NodeId, usize>, b: &HashMap<NodeId, usize>) -> bool {
+    let keys: std::collections::HashSet<_> = a.keys().chain(b.keys()).collect();
+    keys.into_iter().all(|k| {
+        let x = a.get(k).copied().unwrap_or(0) as i64;
+        let y = b.get(k).copied().unwrap_or(0) as i64;
+        (x - y).abs() <= 1
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::flow::paper_cluster_budgets;
+    use crate::profile::profile_graph;
+    use crate::spec::apps;
+
+    #[test]
+    fn requires_two_agreeing_solutions() {
+        let g = apps::vanilla_rag();
+        let prior = profile_graph(&g, 1000, 0);
+        let telemetry = Telemetry::new(&g);
+        let budgets = paper_cluster_budgets();
+        let mut a = Autoscaler::new(10.0);
+        // First solve: pending, no commit.
+        assert!(a.maybe_rescale(0.0, &g, &telemetry, &prior, &budgets).is_none());
+        // Within the interval: no solve at all.
+        assert!(a.maybe_rescale(5.0, &g, &telemetry, &prior, &budgets).is_none());
+        assert_eq!(a.solve_times.len(), 1);
+        // Second solve agrees (same telemetry): commit.
+        let plan = a.maybe_rescale(10.0, &g, &telemetry, &prior, &budgets);
+        assert!(plan.is_some());
+        assert_eq!(a.commits.len(), 1);
+    }
+
+    #[test]
+    fn telemetry_shifts_the_allocation() {
+        // Make the generator look 4× slower than the prior believed; the
+        // re-solved plan should shift GPU instances toward it.
+        let g = apps::corrective_rag();
+        let prior = profile_graph(&g, 2000, 1);
+        let budgets = paper_cluster_budgets();
+        let mut telemetry = Telemetry::new(&g);
+        let gen = g.node_by_name("generator").unwrap().id;
+        let grader = g.node_by_name("grader").unwrap().id;
+        for _ in 0..500 {
+            telemetry.on_enqueue(gen);
+            telemetry.on_complete(gen, prior.mean_service[&gen] * 4.0);
+            telemetry.on_enqueue(grader);
+            telemetry.on_complete(grader, prior.mean_service[&grader]);
+        }
+        let mut a = Autoscaler::new(0.0);
+        a.maybe_rescale(0.0, &g, &telemetry, &prior, &budgets);
+        let plan = a.maybe_rescale(1.0, &g, &telemetry, &prior, &budgets).unwrap();
+
+        // Compare with the prior-only plan.
+        let base = FlowProblem::new(&g, &prior, budgets.clone()).solve().unwrap();
+        assert!(
+            plan[&gen] > base.instance_counts[&gen],
+            "reallocation should add generators: {} vs {}",
+            plan[&gen],
+            base.instance_counts[&gen]
+        );
+    }
+
+    #[test]
+    fn solve_time_recorded() {
+        let g = apps::self_rag();
+        let prior = profile_graph(&g, 500, 2);
+        let telemetry = Telemetry::new(&g);
+        let mut a = Autoscaler::new(0.0);
+        a.maybe_rescale(0.0, &g, &telemetry, &prior, &paper_cluster_budgets());
+        assert_eq!(a.solve_times.len(), 1);
+        assert!(a.solve_times[0] > 0.0 && a.solve_times[0] < 1.0);
+    }
+}

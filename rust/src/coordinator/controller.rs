@@ -1,0 +1,422 @@
+//! The live control plane: deploys a pipeline graph onto worker threads
+//! and drives requests through it (the runnable counterpart of the DES).
+//!
+//! Mirrors §3.3's control/data separation at process scale: the
+//! controller thread makes routing decisions and control-flow choices;
+//! stage payloads travel inside [`WorkItem`]s directly between workers
+//! and the controller's completion channel — the controller inspects
+//! state only where the program's control flow requires it (verdicts,
+//! classes).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::exec::components::{build_live_shared, spawn_for_kind};
+use crate::exec::messages::{Done, RagState, WorkItem};
+use crate::exec::worker::WorkerHandle;
+use crate::metrics::{Recorder, RunReport};
+use crate::spec::graph::{ComponentKind, NodeId, PipelineGraph};
+
+use super::router::{InstanceState, Router, RoutingPolicy};
+
+/// Live deployment configuration.
+#[derive(Clone, Debug)]
+pub struct ControllerConfig {
+    pub artifacts: PathBuf,
+    pub corpus_size: usize,
+    pub n_topics: usize,
+    pub seed: u64,
+    /// Instances per component (None → the spec's base_instances).
+    pub instances: Option<HashMap<String, usize>>,
+    /// SLO deadline applied to every request (seconds).
+    pub slo: Option<f64>,
+}
+
+impl ControllerConfig {
+    pub fn quick(artifacts: PathBuf) -> Self {
+        ControllerConfig {
+            artifacts,
+            corpus_size: 512,
+            n_topics: 8,
+            seed: 0,
+            instances: None,
+            slo: None,
+        }
+    }
+}
+
+/// A completed request.
+#[derive(Clone, Debug)]
+pub struct LiveResponse {
+    pub req: u64,
+    pub answer: Vec<u8>,
+    pub latency_secs: f64,
+    pub hops: usize,
+    pub error: Option<String>,
+}
+
+enum Msg {
+    Submit { query: Vec<u8>, resp: Sender<LiveResponse> },
+    Done(Done),
+    Report(Sender<RunReport>),
+    Shutdown,
+}
+
+/// Client handle to a deployed pipeline.
+pub struct ServingHandle {
+    tx: Sender<Msg>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServingHandle {
+    /// Submit a query; the response arrives on the returned channel.
+    pub fn submit(&self, query: &[u8]) -> Receiver<LiveResponse> {
+        let (resp_tx, resp_rx) = channel();
+        let _ = self.tx.send(Msg::Submit { query: query.to_vec(), resp: resp_tx });
+        resp_rx
+    }
+
+    /// Fetch the run metrics so far.
+    pub fn report(&self) -> RunReport {
+        let (tx, rx) = channel();
+        let _ = self.tx.send(Msg::Report(tx));
+        rx.recv().expect("controller alive")
+    }
+
+    /// Graceful shutdown (waits for the controller thread).
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+struct InflightReq {
+    resp: Sender<LiveResponse>,
+    started: Instant,
+    deadline: Option<f64>,
+    hops: usize,
+    current: NodeId,
+}
+
+/// Deploy a pipeline graph as live workers + a controller thread.
+pub fn deploy(graph: PipelineGraph, cfg: ControllerConfig) -> Result<ServingHandle> {
+    let shared = Arc::new(
+        build_live_shared(cfg.artifacts.clone(), cfg.corpus_size, cfg.n_topics, cfg.seed)
+            .context("building live shared state (corpus/index)")?,
+    );
+
+    // Spawn workers per component.
+    let mut workers: HashMap<NodeId, Vec<WorkerHandle>> = HashMap::new();
+    for node in graph.work_nodes() {
+        let n = cfg
+            .instances
+            .as_ref()
+            .and_then(|m| m.get(&node.name).copied())
+            .unwrap_or_else(|| node.base_instances.max(1));
+        let v: Vec<WorkerHandle> = (0..n)
+            .map(|i| {
+                spawn_for_kind(format!("{}-{i}", node.name), &node.kind, shared.clone())
+            })
+            .collect();
+        workers.insert(node.id, v);
+    }
+
+    let (tx, rx) = channel::<Msg>();
+    // Bridge worker completions into the controller's single channel.
+    let (done_tx, done_rx) = channel::<Done>();
+    {
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            for d in done_rx {
+                if tx.send(Msg::Done(d)).is_err() {
+                    break;
+                }
+            }
+        });
+    }
+
+    let slo = cfg.slo;
+    let join = std::thread::Builder::new()
+        .name("harmonia-controller".into())
+        .spawn(move || controller_loop(graph, workers, rx, done_tx, slo))
+        .expect("spawn controller");
+
+    Ok(ServingHandle { tx, join: Some(join) })
+}
+
+fn controller_loop(
+    graph: PipelineGraph,
+    workers: HashMap<NodeId, Vec<WorkerHandle>>,
+    rx: Receiver<Msg>,
+    done_tx: Sender<Done>,
+    slo: Option<f64>,
+) {
+    let mut router = Router::new(RoutingPolicy::LoadStateAware);
+    let mut recorder = Recorder::new();
+    let mut inflight: HashMap<u64, InflightReq> = HashMap::new();
+    let mut next_req: u64 = 0;
+    let epoch = Instant::now();
+    let mut rng = crate::util::rng::Rng::new(0x11FE);
+
+    let stateful_map: HashMap<NodeId, bool> =
+        graph.nodes.iter().map(|n| (n.id, n.stateful)).collect();
+    let dispatch = |req: u64,
+                    node: NodeId,
+                    state: RagState,
+                    router: &mut Router,
+                    workers: &HashMap<NodeId, Vec<WorkerHandle>>,
+                    done_tx: &Sender<Done>| {
+        let pool = &workers[&node];
+        let states: Vec<InstanceState> = pool
+            .iter()
+            .map(|w| InstanceState {
+                active: w.pending().min(8),
+                queued: w.pending().saturating_sub(8),
+                slots: 8,
+                expected_reentries: 0.0,
+                up: w.is_up(),
+            })
+            .collect();
+        let stateful = stateful_map.get(&node).copied().unwrap_or(false);
+        let pick = router.route(req, node, stateful, &states);
+        let item = WorkItem {
+            req,
+            node,
+            state,
+            enqueued_at: Instant::now(),
+            done: done_tx.clone(),
+        };
+        let _ = pool[pick].submit(item);
+    };
+
+    for msg in rx {
+        match msg {
+            Msg::Submit { query, resp } => {
+                let req = next_req;
+                next_req += 1;
+                recorder.on_arrival(epoch.elapsed().as_secs_f64());
+                let entry = graph
+                    .successors(graph.source)
+                    .next()
+                    .expect("source successor")
+                    .to;
+                let state = RagState::new(&query);
+                inflight.insert(
+                    req,
+                    InflightReq {
+                        resp,
+                        started: Instant::now(),
+                        deadline: slo,
+                        hops: 0,
+                        current: entry,
+                    },
+                );
+                dispatch(req, entry, state, &mut router, &workers, &done_tx);
+            }
+            Msg::Done(d) => {
+                let Some(fl) = inflight.get_mut(&d.req) else { continue };
+                fl.hops += 1;
+                let node_name = graph.node(d.node).name.clone();
+                recorder.on_execution(&node_name, d.service_secs, d.queue_secs);
+                if let Some(err) = d.error {
+                    let fl = inflight.remove(&d.req).unwrap();
+                    let _ = fl.resp.send(LiveResponse {
+                        req: d.req,
+                        answer: Vec::new(),
+                        latency_secs: fl.started.elapsed().as_secs_f64(),
+                        hops: fl.hops,
+                        error: Some(err),
+                    });
+                    router.release(d.req);
+                    continue;
+                }
+                let next = decide_next(&graph, d.node, &d.state, &mut rng);
+                if next == graph.sink {
+                    let fl = inflight.remove(&d.req).unwrap();
+                    let latency = fl.started.elapsed().as_secs_f64();
+                    let now = epoch.elapsed().as_secs_f64();
+                    recorder.on_completion(now - latency, now, fl.deadline.map(|s| now - latency + s));
+                    let _ = fl.resp.send(LiveResponse {
+                        req: d.req,
+                        answer: d.state.answer,
+                        latency_secs: latency,
+                        hops: fl.hops,
+                        error: None,
+                    });
+                    router.release(d.req);
+                } else {
+                    fl.current = next;
+                    dispatch(d.req, next, d.state, &mut router, &workers, &done_tx);
+                }
+            }
+            Msg::Report(tx) => {
+                let _ = tx.send(recorder.report());
+            }
+            Msg::Shutdown => break,
+        }
+    }
+    for (_, pool) in workers {
+        for w in pool {
+            w.shutdown();
+        }
+    }
+}
+
+/// Control-flow decision: maps (node kind, request state) to the next
+/// node — the live counterpart of the program's `if`/`while` structure
+/// (Fig. 7). Falls back to probability-weighted choice for custom nodes.
+pub fn decide_next(
+    graph: &PipelineGraph,
+    node: NodeId,
+    state: &RagState,
+    rng: &mut crate::util::rng::Rng,
+) -> NodeId {
+    let succ: Vec<_> = graph.successors(node).collect();
+    debug_assert!(!succ.is_empty());
+    if succ.len() == 1 {
+        return succ[0].to;
+    }
+    let kind = &graph.node(node).kind;
+    match kind {
+        ComponentKind::Grader => {
+            // Relevant context → straight to a generator; else rewrite.
+            let want_generator = state.verdict.unwrap_or(true);
+            pick_by(graph, &succ, |k| {
+                if want_generator {
+                    matches!(k, ComponentKind::Generator)
+                } else {
+                    !matches!(k, ComponentKind::Generator)
+                }
+            })
+        }
+        ComponentKind::Critic => {
+            // Accept (or iteration budget exhausted) → sink; else loop.
+            let accept = state.verdict.unwrap_or(true) || state.iteration >= 2;
+            if accept {
+                succ.iter()
+                    .find(|e| e.to == graph.sink)
+                    .map(|e| e.to)
+                    .unwrap_or(succ[0].to)
+            } else {
+                succ.iter()
+                    .find(|e| e.to != graph.sink)
+                    .map(|e| e.to)
+                    .unwrap_or(succ[0].to)
+            }
+        }
+        ComponentKind::Classifier => {
+            let class = state.class.unwrap_or(1);
+            match class {
+                0 => pick_by(graph, &succ, |k| matches!(k, ComponentKind::Generator)),
+                2 => succ
+                    .iter()
+                    .find(|e| graph.node(e.to).name.starts_with("iter"))
+                    .map(|e| e.to)
+                    .unwrap_or_else(|| {
+                        pick_by(graph, &succ, |k| matches!(k, ComponentKind::Retriever))
+                    }),
+                _ => succ
+                    .iter()
+                    .find(|e| {
+                        matches!(graph.node(e.to).kind, ComponentKind::Retriever)
+                            && !graph.node(e.to).name.starts_with("iter")
+                    })
+                    .map(|e| e.to)
+                    .unwrap_or(succ[0].to),
+            }
+        }
+        _ => {
+            // Probability-weighted (spec priors).
+            let weights: Vec<f64> = succ.iter().map(|e| e.prob).collect();
+            succ[rng.weighted(&weights)].to
+        }
+    }
+}
+
+fn pick_by(
+    graph: &PipelineGraph,
+    succ: &[&crate::spec::graph::EdgeSpec],
+    pred: impl Fn(&ComponentKind) -> bool,
+) -> NodeId {
+    succ.iter()
+        .find(|e| pred(&graph.node(e.to).kind))
+        .map(|e| e.to)
+        .unwrap_or(succ[0].to)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::apps;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn decide_next_linear_pipeline() {
+        let g = apps::vanilla_rag();
+        let mut rng = Rng::new(0);
+        let retr = g.node_by_name("retriever").unwrap().id;
+        let gen = g.node_by_name("generator").unwrap().id;
+        let s = RagState::new(b"q");
+        assert_eq!(decide_next(&g, retr, &s, &mut rng), gen);
+        assert_eq!(decide_next(&g, gen, &s, &mut rng), g.sink);
+    }
+
+    #[test]
+    fn decide_next_crag_branches_on_verdict() {
+        let g = apps::corrective_rag();
+        let mut rng = Rng::new(0);
+        let grader = g.node_by_name("grader").unwrap().id;
+        let gen = g.node_by_name("generator").unwrap().id;
+        let rewriter = g.node_by_name("rewriter").unwrap().id;
+        let mut s = RagState::new(b"q");
+        s.verdict = Some(true);
+        assert_eq!(decide_next(&g, grader, &s, &mut rng), gen);
+        s.verdict = Some(false);
+        assert_eq!(decide_next(&g, grader, &s, &mut rng), rewriter);
+    }
+
+    #[test]
+    fn decide_next_srag_loop_bounded() {
+        let g = apps::self_rag();
+        let mut rng = Rng::new(0);
+        let critic = g.node_by_name("critic").unwrap().id;
+        let rewriter = g.node_by_name("rewriter").unwrap().id;
+        let mut s = RagState::new(b"q");
+        s.verdict = Some(false);
+        s.iteration = 0;
+        assert_eq!(decide_next(&g, critic, &s, &mut rng), rewriter);
+        // Budget exhausted: must exit even on reject.
+        s.iteration = 2;
+        assert_eq!(decide_next(&g, critic, &s, &mut rng), g.sink);
+    }
+
+    #[test]
+    fn decide_next_arag_routes_by_class() {
+        let g = apps::adaptive_rag();
+        let mut rng = Rng::new(0);
+        let cls = g.node_by_name("classifier").unwrap().id;
+        let mut s = RagState::new(b"q");
+        s.class = Some(0);
+        assert_eq!(
+            decide_next(&g, cls, &s, &mut rng),
+            g.node_by_name("generator").unwrap().id
+        );
+        s.class = Some(1);
+        assert_eq!(
+            decide_next(&g, cls, &s, &mut rng),
+            g.node_by_name("retriever").unwrap().id
+        );
+        s.class = Some(2);
+        assert_eq!(
+            decide_next(&g, cls, &s, &mut rng),
+            g.node_by_name("iter_retriever").unwrap().id
+        );
+    }
+}

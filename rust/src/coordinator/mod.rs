@@ -1,0 +1,34 @@
+//! The **runtime layer** (§3.3): a centralized, SDN-style control plane.
+//!
+//! All policy logic is written against plain state structs so the *same
+//! code* runs under the live controller ([`controller`]) and inside the
+//! discrete-event simulator (`sim`) — the paper-scale experiments exercise
+//! exactly the policies a live deployment uses.
+//!
+//! * [`telemetry`] — global view: per-component load, service rates,
+//!   observed branch frequencies (re-estimates α, γ, p online).
+//! * [`router`] — load- **and state-aware** routing (§3.3.1): stateful
+//!   re-entries are pinned; predicted near-future load (outstanding
+//!   stateful iterations) is part of the routing score.
+//! * [`scheduler`] — deadline-aware EDF with *predicted slack* (§3.3.2):
+//!   online linear-regression models map upstream features to downstream
+//!   latencies; least-slack requests get priority.
+//! * [`autoscaler`] — periodic LP re-solve from telemetry (§3.3.1
+//!   "Resource Reallocation"), committed after two agreeing solutions.
+//! * [`streaming`] — the managed Streaming Object: chunk granularity is
+//!   load-dependent and runtime-controlled (§3.3.1 "Communication
+//!   Granularity Management").
+//! * [`controller`] — the live-mode control plane driving `exec` workers.
+
+pub mod autoscaler;
+pub mod controller;
+pub mod router;
+pub mod scheduler;
+pub mod streaming;
+pub mod telemetry;
+
+pub use autoscaler::Autoscaler;
+pub use router::{InstanceState, Router, RoutingPolicy};
+pub use scheduler::{QueueDiscipline, SlackPredictor};
+pub use streaming::{StreamPolicy, StreamingMode};
+pub use telemetry::Telemetry;

@@ -1,0 +1,221 @@
+//! Load- and state-aware routing (§3.3.1).
+//!
+//! The Harmonia policy scores every candidate instance by *predicted*
+//! near-future load: current active slots + queue, **plus** outstanding
+//! stateful iterations expected to re-enter that instance (capacity that
+//! looks idle but is spoken for). Ray-like dispatch ("idle-worker") is the
+//! baseline policy the paper contrasts (§5 "Comparison with Ray").
+
+use std::collections::HashMap;
+
+use crate::spec::graph::NodeId;
+
+/// Router-visible state of one component instance.
+#[derive(Clone, Debug, Default)]
+pub struct InstanceState {
+    /// Requests currently executing.
+    pub active: usize,
+    /// Requests waiting in the instance queue.
+    pub queued: usize,
+    /// Concurrency limit (slots).
+    pub slots: usize,
+    /// Outstanding stateful requests bound here that are expected to
+    /// return (the "reserved capacity" signal).
+    pub expected_reentries: f64,
+    /// Is the instance up (autoscaler may be draining it)?
+    pub up: bool,
+}
+
+impl InstanceState {
+    pub fn idle_slots(&self) -> usize {
+        self.slots.saturating_sub(self.active)
+    }
+}
+
+/// Routing policies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    /// Harmonia: minimize active + queued + expected stateful re-entries.
+    LoadStateAware,
+    /// Ray/Haystack-like: first idle instance, else shortest queue;
+    /// ignores reserved stateful capacity.
+    IdleFirst,
+    /// Round-robin (LangChain-style top-level replica selection).
+    RoundRobin,
+}
+
+/// Stateful-binding table + routing logic.
+#[derive(Clone, Debug)]
+pub struct Router {
+    policy: RoutingPolicy,
+    /// (request, node) → instance index, for stateful components.
+    bindings: HashMap<(u64, NodeId), usize>,
+    rr_counters: HashMap<NodeId, usize>,
+}
+
+impl Router {
+    pub fn new(policy: RoutingPolicy) -> Self {
+        Router { policy, bindings: HashMap::new(), rr_counters: HashMap::new() }
+    }
+
+    pub fn policy(&self) -> RoutingPolicy {
+        self.policy
+    }
+
+    /// Choose an instance for `request` at `node`. `stateful` components
+    /// honor existing bindings (correctness, all policies); new bindings
+    /// are recorded. Returns the instance index.
+    pub fn route(
+        &mut self,
+        request: u64,
+        node: NodeId,
+        stateful: bool,
+        instances: &[InstanceState],
+    ) -> usize {
+        debug_assert!(!instances.is_empty());
+        if stateful {
+            if let Some(&inst) = self.bindings.get(&(request, node)) {
+                if inst < instances.len() && instances[inst].up {
+                    return inst;
+                }
+            }
+        }
+        let pick = match self.policy {
+            RoutingPolicy::LoadStateAware => self.pick_load_state_aware(instances),
+            RoutingPolicy::IdleFirst => self.pick_idle_first(instances),
+            RoutingPolicy::RoundRobin => self.pick_round_robin(node, instances),
+        };
+        if stateful {
+            self.bindings.insert((request, node), pick);
+        }
+        pick
+    }
+
+    /// Drop a request's bindings once it completes.
+    pub fn release(&mut self, request: u64) {
+        self.bindings.retain(|(r, _), _| *r != request);
+    }
+
+    pub fn bindings_for(&self, node: NodeId) -> usize {
+        self.bindings.keys().filter(|(_, n)| *n == node).count()
+    }
+
+    fn pick_load_state_aware(&self, instances: &[InstanceState]) -> usize {
+        let mut best = 0usize;
+        let mut best_score = f64::INFINITY;
+        for (i, s) in instances.iter().enumerate() {
+            if !s.up {
+                continue;
+            }
+            // Normalized predicted occupancy: lower is better. Queued work
+            // and expected re-entries count toward future load.
+            let slots = s.slots.max(1) as f64;
+            let score = (s.active as f64 + s.queued as f64 + s.expected_reentries) / slots;
+            if score < best_score {
+                best_score = score;
+                best = i;
+            }
+        }
+        best
+    }
+
+    fn pick_idle_first(&self, instances: &[InstanceState]) -> usize {
+        // First instance with a free slot (instantaneous view only).
+        for (i, s) in instances.iter().enumerate() {
+            if s.up && s.idle_slots() > 0 && s.queued == 0 {
+                return i;
+            }
+        }
+        // Else: shortest queue.
+        let mut best = 0;
+        let mut best_q = usize::MAX;
+        for (i, s) in instances.iter().enumerate() {
+            if s.up && s.queued + s.active < best_q {
+                best_q = s.queued + s.active;
+                best = i;
+            }
+        }
+        best
+    }
+
+    fn pick_round_robin(&mut self, node: NodeId, instances: &[InstanceState]) -> usize {
+        let c = self.rr_counters.entry(node).or_insert(0);
+        for _ in 0..instances.len() {
+            let i = *c % instances.len();
+            *c += 1;
+            if instances[i].up {
+                return i;
+            }
+        }
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inst(active: usize, queued: usize, slots: usize, reent: f64) -> InstanceState {
+        InstanceState { active, queued, slots, expected_reentries: reent, up: true }
+    }
+
+    #[test]
+    fn load_aware_picks_least_loaded() {
+        let mut r = Router::new(RoutingPolicy::LoadStateAware);
+        let instances = vec![inst(3, 2, 4, 0.0), inst(1, 0, 4, 0.0), inst(2, 1, 4, 0.0)];
+        assert_eq!(r.route(1, NodeId(2), false, &instances), 1);
+    }
+
+    #[test]
+    fn state_aware_avoids_reserved_capacity() {
+        // Instance 0 looks idle but expects stateful re-entries; Harmonia
+        // avoids it, idle-first does not.
+        let instances = vec![inst(0, 0, 4, 3.5), inst(1, 0, 4, 0.0)];
+        let mut h = Router::new(RoutingPolicy::LoadStateAware);
+        assert_eq!(h.route(1, NodeId(2), false, &instances), 1);
+        let mut ray = Router::new(RoutingPolicy::IdleFirst);
+        assert_eq!(ray.route(1, NodeId(2), false, &instances), 0);
+    }
+
+    #[test]
+    fn stateful_binding_is_sticky() {
+        let mut r = Router::new(RoutingPolicy::LoadStateAware);
+        let instances = vec![inst(0, 0, 4, 0.0), inst(0, 0, 4, 0.0)];
+        let first = r.route(7, NodeId(3), true, &instances);
+        // Overload the bound instance; routing must stick anyway.
+        let mut loaded = instances.clone();
+        loaded[first] = inst(4, 9, 4, 0.0);
+        let second = r.route(7, NodeId(3), true, &loaded);
+        assert_eq!(first, second);
+        // A different request is free to go elsewhere.
+        let other = r.route(8, NodeId(3), true, &loaded);
+        assert_ne!(other, first);
+    }
+
+    #[test]
+    fn release_clears_bindings() {
+        let mut r = Router::new(RoutingPolicy::LoadStateAware);
+        let instances = vec![inst(0, 0, 1, 0.0), inst(0, 0, 1, 0.0)];
+        r.route(7, NodeId(3), true, &instances);
+        assert_eq!(r.bindings_for(NodeId(3)), 1);
+        r.release(7);
+        assert_eq!(r.bindings_for(NodeId(3)), 0);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RoutingPolicy::RoundRobin);
+        let instances = vec![inst(0, 0, 1, 0.0); 3];
+        let picks: Vec<usize> =
+            (0..6).map(|i| r.route(i, NodeId(1), false, &instances)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn down_instances_skipped() {
+        let mut r = Router::new(RoutingPolicy::LoadStateAware);
+        let mut instances = vec![inst(0, 0, 4, 0.0), inst(2, 2, 4, 0.0)];
+        instances[0].up = false;
+        assert_eq!(r.route(1, NodeId(2), false, &instances), 1);
+    }
+}

@@ -1,0 +1,174 @@
+//! The managed Streaming Object (§3.1) and its load-dependent chunk
+//! policy (§3.3.1 "Communication Granularity Management").
+//!
+//! Streaming overlaps upstream compute with downstream prefill, but under
+//! load it holds downstream slots while waiting for later chunks,
+//! stalling the pipeline (Fig. 5: +11% at low load, −24% at high load
+//! when unmanaged). Harmonia modulates the chunk *fraction* (chunk size /
+//! total output) from real-time load against a pre-profiled table.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// How streaming is decided per hop.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StreamingMode {
+    /// Never stream (downstream starts at upstream finish).
+    Off,
+    /// Always stream with a fixed chunk fraction (the unmanaged baseline
+    /// of Fig. 5).
+    FixedChunk(f64),
+    /// Harmonia: chunk fraction chosen from current utilization.
+    Managed,
+}
+
+/// Load-dependent chunk policy. Utilization is the downstream component's
+/// occupancy in [0, 1+] (active+queued over capacity).
+#[derive(Clone, Debug)]
+pub struct StreamPolicy {
+    /// Profiled (utilization, chunk_fraction) knots, ascending by
+    /// utilization; interpolated at decision time.
+    knots: Vec<(f64, f64)>,
+}
+
+impl Default for StreamPolicy {
+    fn default() -> Self {
+        // Offline-profiled shape: fine chunks while the pipeline is cold,
+        // coarsen as the downstream saturates, stop streaming near
+        // saturation (fraction 1.0 == no overlap, no stall).
+        StreamPolicy {
+            knots: vec![(0.0, 0.15), (0.5, 0.25), (0.75, 0.5), (0.9, 1.0)],
+        }
+    }
+}
+
+impl StreamPolicy {
+    pub fn new(knots: Vec<(f64, f64)>) -> Self {
+        assert!(knots.windows(2).all(|w| w[0].0 <= w[1].0));
+        StreamPolicy { knots }
+    }
+
+    /// Chunk fraction for the current downstream utilization.
+    pub fn chunk_fraction(&self, utilization: f64) -> f64 {
+        let u = utilization.max(0.0);
+        if self.knots.is_empty() {
+            return 1.0;
+        }
+        if u <= self.knots[0].0 {
+            return self.knots[0].1;
+        }
+        for w in self.knots.windows(2) {
+            let (u0, f0) = w[0];
+            let (u1, f1) = w[1];
+            if u <= u1 {
+                let t = (u - u0) / (u1 - u0).max(1e-9);
+                return f0 + t * (f1 - f0);
+            }
+        }
+        self.knots.last().unwrap().1
+    }
+
+    /// Resolve a mode + utilization into an effective chunk fraction
+    /// (1.0 = no streaming).
+    pub fn effective_fraction(&self, mode: StreamingMode, utilization: f64) -> f64 {
+        match mode {
+            StreamingMode::Off => 1.0,
+            StreamingMode::FixedChunk(f) => f.clamp(0.01, 1.0),
+            StreamingMode::Managed => self.chunk_fraction(utilization).clamp(0.01, 1.0),
+        }
+    }
+}
+
+/// Per-chunk fixed wire overhead (serialization + notify), seconds.
+/// Matches the sub-millisecond gRPC/shared-memory costs the paper reports.
+pub const CHUNK_OVERHEAD: f64 = 0.8e-3;
+
+/// Per-chunk *busy* overhead on the consumer: each arriving chunk
+/// preempts active decoding on the downstream instance (the paper's §2.2
+/// finding that unmanaged streaming "can preempt active decoding and
+/// introduce pipeline stalls"). Fine chunking at high load inflates the
+/// consumer's occupancy by n_chunks × this value — the source of Fig. 5's
+/// 24–36% high-load degradation.
+pub const CHUNK_PREEMPT: f64 = 8.0e-3;
+
+/// A managed streaming channel for the live path: producer writes chunks
+/// at any granularity; the runtime re-chunks to the policy's granularity.
+/// (The developer-facing API of Fig. 7 line 11.)
+pub struct StreamObject<T> {
+    tx: Sender<Vec<T>>,
+    buffer: Vec<T>,
+    chunk_len: usize,
+}
+
+impl<T> StreamObject<T> {
+    /// Create with the runtime-chosen chunk length (items per chunk).
+    pub fn new(chunk_len: usize) -> (Self, Receiver<Vec<T>>) {
+        let (tx, rx) = channel();
+        (StreamObject { tx, buffer: Vec::new(), chunk_len: chunk_len.max(1) }, rx)
+    }
+
+    /// Producer-side write; flushes whole chunks to the consumer.
+    pub fn write(&mut self, item: T) {
+        self.buffer.push(item);
+        if self.buffer.len() >= self.chunk_len {
+            let chunk = std::mem::take(&mut self.buffer);
+            let _ = self.tx.send(chunk);
+        }
+    }
+
+    /// Flush the tail and close the stream.
+    pub fn finish(mut self) {
+        if !self.buffer.is_empty() {
+            let chunk = std::mem::take(&mut self.buffer);
+            let _ = self.tx.send(chunk);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn managed_policy_monotone_in_load() {
+        let p = StreamPolicy::default();
+        let f_low = p.chunk_fraction(0.1);
+        let f_mid = p.chunk_fraction(0.6);
+        let f_high = p.chunk_fraction(0.95);
+        assert!(f_low < f_mid && f_mid < f_high, "{f_low} {f_mid} {f_high}");
+        assert_eq!(f_high, 1.0);
+    }
+
+    #[test]
+    fn effective_fraction_modes() {
+        let p = StreamPolicy::default();
+        assert_eq!(p.effective_fraction(StreamingMode::Off, 0.2), 1.0);
+        assert_eq!(p.effective_fraction(StreamingMode::FixedChunk(0.2), 0.9), 0.2);
+        assert!(p.effective_fraction(StreamingMode::Managed, 0.0) < 0.2);
+        assert_eq!(p.effective_fraction(StreamingMode::Managed, 2.0), 1.0);
+    }
+
+    #[test]
+    fn interpolation_between_knots() {
+        let p = StreamPolicy::new(vec![(0.0, 0.0), (1.0, 1.0)]);
+        assert!((p.chunk_fraction(0.25) - 0.25).abs() < 1e-12);
+        assert!((p.chunk_fraction(0.75) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stream_object_rechunks() {
+        let (mut s, rx) = StreamObject::new(3);
+        for i in 0..7 {
+            s.write(i);
+        }
+        s.finish();
+        let chunks: Vec<Vec<i32>> = rx.iter().collect();
+        assert_eq!(chunks, vec![vec![0, 1, 2], vec![3, 4, 5], vec![6]]);
+    }
+
+    #[test]
+    fn stream_object_empty_finish() {
+        let (s, rx) = StreamObject::<u8>::new(4);
+        s.finish();
+        assert!(rx.iter().next().is_none());
+    }
+}

@@ -1,0 +1,147 @@
+//! Global telemetry: the controller's single source of truth for
+//! per-component execution rates, observed service times, branch
+//! traversal frequencies, and in-flight load — the signals that drive
+//! routing, scheduling, and reallocation.
+
+use std::collections::HashMap;
+
+use crate::spec::graph::{NodeId, PipelineGraph};
+use crate::stats::Ewma;
+
+/// Telemetry aggregated per pipeline node and per edge.
+#[derive(Clone, Debug)]
+pub struct Telemetry {
+    /// Smoothed observed service time per node (seconds).
+    service: HashMap<NodeId, Ewma>,
+    /// Edge traversal counts (indexed like graph.edges).
+    edge_counts: Vec<u64>,
+    /// Node exit counts (denominator for branch frequencies).
+    exit_counts: HashMap<NodeId, u64>,
+    /// Total executions per node.
+    executions: HashMap<NodeId, u64>,
+    /// Current in-flight requests per node (queued + executing).
+    inflight: HashMap<NodeId, i64>,
+}
+
+impl Telemetry {
+    pub fn new(graph: &PipelineGraph) -> Self {
+        Telemetry {
+            service: graph.nodes.iter().map(|n| (n.id, Ewma::new(0.08))).collect(),
+            edge_counts: vec![0; graph.edges.len()],
+            exit_counts: HashMap::new(),
+            executions: HashMap::new(),
+            inflight: HashMap::new(),
+        }
+    }
+
+    pub fn on_enqueue(&mut self, node: NodeId) {
+        *self.inflight.entry(node).or_insert(0) += 1;
+    }
+
+    pub fn on_complete(&mut self, node: NodeId, service_secs: f64) {
+        *self.inflight.entry(node).or_insert(0) -= 1;
+        *self.executions.entry(node).or_insert(0) += 1;
+        self.service.get_mut(&node).map(|e| e.observe(service_secs));
+    }
+
+    pub fn on_edge(&mut self, edge_idx: usize, from: NodeId) {
+        self.edge_counts[edge_idx] += 1;
+        *self.exit_counts.entry(from).or_insert(0) += 1;
+    }
+
+    pub fn inflight(&self, node: NodeId) -> i64 {
+        self.inflight.get(&node).copied().unwrap_or(0)
+    }
+
+    pub fn executions(&self, node: NodeId) -> u64 {
+        self.executions.get(&node).copied().unwrap_or(0)
+    }
+
+    /// Smoothed mean service time; falls back to `prior`.
+    pub fn mean_service(&self, node: NodeId, prior: f64) -> f64 {
+        self.service.get(&node).map_or(prior, |e| e.get_or(prior))
+    }
+
+    /// Observed branch probability for an edge; falls back to the spec
+    /// prior until enough exits were seen.
+    pub fn edge_prob(&self, graph: &PipelineGraph, edge_idx: usize) -> f64 {
+        let e = &graph.edges[edge_idx];
+        let exits = self.exit_counts.get(&e.from).copied().unwrap_or(0);
+        if exits < 20 {
+            e.prob
+        } else {
+            self.edge_counts[edge_idx] as f64 / exits as f64
+        }
+    }
+
+    /// All observed edge probabilities (for re-solving the LP).
+    pub fn edge_probs(&self, graph: &PipelineGraph) -> Vec<f64> {
+        (0..graph.edges.len()).map(|i| self.edge_prob(graph, i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::apps;
+
+    #[test]
+    fn inflight_tracks_enqueue_complete() {
+        let g = apps::vanilla_rag();
+        let mut t = Telemetry::new(&g);
+        let retr = g.node_by_name("retriever").unwrap().id;
+        t.on_enqueue(retr);
+        t.on_enqueue(retr);
+        assert_eq!(t.inflight(retr), 2);
+        t.on_complete(retr, 0.1);
+        assert_eq!(t.inflight(retr), 1);
+        assert_eq!(t.executions(retr), 1);
+    }
+
+    #[test]
+    fn service_ewma_converges() {
+        let g = apps::vanilla_rag();
+        let mut t = Telemetry::new(&g);
+        let retr = g.node_by_name("retriever").unwrap().id;
+        for _ in 0..200 {
+            t.on_enqueue(retr);
+            t.on_complete(retr, 0.25);
+        }
+        assert!((t.mean_service(retr, 0.0) - 0.25).abs() < 1e-6);
+        // Unobserved node falls back to prior.
+        let gen = g.node_by_name("generator").unwrap().id;
+        assert_eq!(t.mean_service(gen, 0.5), 0.5);
+    }
+
+    #[test]
+    fn edge_probs_need_warmup_then_track() {
+        let g = apps::corrective_rag();
+        let mut t = Telemetry::new(&g);
+        let grader = g.node_by_name("grader").unwrap().id;
+        let gen = g.node_by_name("generator").unwrap().id;
+        let (gen_edge, _) = g
+            .edges
+            .iter()
+            .enumerate()
+            .find(|(_, e)| e.from == grader && e.to == gen)
+            .unwrap();
+        // Before warmup: prior.
+        assert_eq!(t.edge_prob(&g, gen_edge), apps::CRAG_P_RELEVANT);
+        // Observe a drifted workload: 90% relevant.
+        let (rw_edge, _) = g
+            .edges
+            .iter()
+            .enumerate()
+            .find(|(_, e)| e.from == grader && e.to != gen)
+            .unwrap();
+        for i in 0..100 {
+            if i % 10 == 0 {
+                t.on_edge(rw_edge, grader);
+            } else {
+                t.on_edge(gen_edge, grader);
+            }
+        }
+        let p = t.edge_prob(&g, gen_edge);
+        assert!((p - 0.9).abs() < 0.01, "p {p}");
+    }
+}

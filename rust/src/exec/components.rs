@@ -1,0 +1,309 @@
+//! Live stage implementations: the paper's serving-ready component
+//! classes (Retriever / Generator / Grader / Critic / Rewriter /
+//! WebSearch / Classifier), backed by real XLA artifacts and the IVF
+//! store. Each is a [`StageLogic`] built inside its worker thread.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::retrieval::IvfIndex;
+use crate::runtime::classifier::Classifier;
+use crate::runtime::embedder::Embedder;
+use crate::runtime::generator::{GenRequest, Generator};
+use crate::spec::graph::ComponentKind;
+use crate::workload::Corpus;
+
+use super::messages::WorkItem;
+use super::worker::{spawn_worker, StageLogic, WorkerHandle};
+
+/// Shared read-only deployment state handed to every worker.
+pub struct LiveShared {
+    pub corpus: Arc<Corpus>,
+    pub index: Arc<IvfIndex>,
+    pub artifacts: PathBuf,
+    /// Top-k passages to retrieve per query (live scale).
+    pub k_docs: usize,
+    /// IVF candidate bound (the Fig. 4 knob).
+    pub search_ef: usize,
+    /// Generation budget per request.
+    pub max_new_tokens: usize,
+    /// Bytes of each passage included in the context.
+    pub ctx_bytes_per_doc: usize,
+    /// Max rewrite iterations before forcing exit (termination bound).
+    pub max_iterations: u32,
+}
+
+impl StageLogic for Box<dyn StageLogic> {
+    fn process_batch(&mut self, items: &mut [WorkItem]) -> Result<()> {
+        (**self).process_batch(items)
+    }
+    fn max_batch(&self) -> usize {
+        (**self).max_batch()
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+struct RetrieverLogic {
+    embedder: Embedder,
+    shared: Arc<LiveShared>,
+}
+
+impl StageLogic for RetrieverLogic {
+    fn process_batch(&mut self, items: &mut [WorkItem]) -> Result<()> {
+        // Embed all queries in one artifact call (batch 8).
+        for chunk in items.chunks_mut(self.embedder.batch()) {
+            let texts: Vec<&[u8]> = chunk.iter().map(|i| i.state.query.as_slice()).collect();
+            let embs = self.embedder.embed_batch(&texts)?;
+            for (it, emb) in chunk.iter_mut().zip(embs) {
+                let hits = self.shared.index.search(&emb, self.shared.k_docs, self.shared.search_ef);
+                let mut ctx = Vec::new();
+                let mut ids = Vec::new();
+                for h in hits {
+                    ids.push(h.id);
+                    let p = &self.shared.corpus.passages[h.id];
+                    let take = p.text.len().min(self.shared.ctx_bytes_per_doc);
+                    ctx.extend_from_slice(&p.text[..take]);
+                    ctx.push(b' ');
+                }
+                it.state.context = ctx;
+                it.state.doc_ids = ids;
+            }
+        }
+        Ok(())
+    }
+
+    fn max_batch(&self) -> usize {
+        8
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+struct GeneratorLogic {
+    generator: Generator,
+    shared: Arc<LiveShared>,
+}
+
+fn build_prompt(state: &crate::exec::messages::RagState, max_len: usize) -> Vec<u8> {
+    let mut p = Vec::with_capacity(max_len);
+    p.extend_from_slice(b"C:");
+    p.extend_from_slice(&state.context);
+    p.extend_from_slice(b" Q:");
+    p.extend_from_slice(&state.query);
+    p.extend_from_slice(b" A:");
+    p.truncate(max_len);
+    p
+}
+
+impl StageLogic for GeneratorLogic {
+    fn process_batch(&mut self, items: &mut [WorkItem]) -> Result<()> {
+        let budget = self.generator.max_seq() / 2;
+        for chunk in items.chunks_mut(self.generator.max_batch()) {
+            let reqs: Vec<GenRequest> = chunk
+                .iter()
+                .map(|i| GenRequest::greedy(&build_prompt(&i.state, budget), self.shared.max_new_tokens))
+                .collect();
+            let (results, _timing) = self.generator.generate_batch(&reqs, |_, _| {})?;
+            for (it, r) in chunk.iter_mut().zip(results) {
+                it.state.answer = r.output;
+            }
+        }
+        Ok(())
+    }
+
+    fn max_batch(&self) -> usize {
+        8
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Grader (judges retrieved context) and Critic (judges the answer).
+struct VerdictLogic {
+    generator: Generator,
+    judge_answer: bool,
+}
+
+impl StageLogic for VerdictLogic {
+    fn process_batch(&mut self, items: &mut [WorkItem]) -> Result<()> {
+        for it in items.iter_mut() {
+            let mut text = Vec::new();
+            text.extend_from_slice(if self.judge_answer {
+                b"Is this answer good? ".as_slice()
+            } else {
+                b"Is this context relevant? ".as_slice()
+            });
+            text.extend_from_slice(&it.state.query);
+            text.push(b' ');
+            text.extend_from_slice(if self.judge_answer {
+                &it.state.answer
+            } else {
+                &it.state.context
+            });
+            it.state.verdict = Some(self.generator.verdict(&text)?);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+struct RewriterLogic {
+    generator: Generator,
+}
+
+impl StageLogic for RewriterLogic {
+    fn process_batch(&mut self, items: &mut [WorkItem]) -> Result<()> {
+        for it in items.iter_mut() {
+            let mut prompt = b"Rewrite: ".to_vec();
+            prompt.extend_from_slice(&it.state.query);
+            let (res, _) = self
+                .generator
+                .generate_batch(&[GenRequest::greedy(&prompt, 8)], |_, _| {})?;
+            // Rewritten query = original + refinement suffix.
+            it.state.query.push(b' ');
+            it.state.query.extend_from_slice(&res[0].output);
+            it.state.iteration += 1;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+struct WebSearchLogic {
+    shared: Arc<LiveShared>,
+}
+
+impl StageLogic for WebSearchLogic {
+    fn process_batch(&mut self, items: &mut [WorkItem]) -> Result<()> {
+        // Simulated external latency (the only non-local dependency).
+        std::thread::sleep(std::time::Duration::from_millis(15));
+        for it in items.iter_mut() {
+            // Deterministic "web results": passages keyed by query hash.
+            let h: usize = it.state.query.iter().map(|&b| b as usize).sum();
+            let n = self.shared.corpus.len();
+            let mut ctx = Vec::new();
+            for j in 0..self.shared.k_docs {
+                let p = &self.shared.corpus.passages[(h + j * 7919) % n];
+                let take = p.text.len().min(self.shared.ctx_bytes_per_doc);
+                ctx.extend_from_slice(&p.text[..take]);
+                ctx.push(b' ');
+            }
+            it.state.context = ctx;
+        }
+        Ok(())
+    }
+
+    fn max_batch(&self) -> usize {
+        16
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+struct ClassifierLogic {
+    classifier: Classifier,
+}
+
+impl StageLogic for ClassifierLogic {
+    fn process_batch(&mut self, items: &mut [WorkItem]) -> Result<()> {
+        for chunk in items.chunks_mut(8) {
+            let texts: Vec<&[u8]> = chunk.iter().map(|i| i.state.query.as_slice()).collect();
+            let classes = self.classifier.classify_batch(&texts)?;
+            for (it, c) in chunk.iter_mut().zip(classes) {
+                it.state.class = Some(c);
+            }
+        }
+        Ok(())
+    }
+
+    fn max_batch(&self) -> usize {
+        8
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Spawn a worker instance for a component kind. Engines are constructed
+/// inside the worker thread (cold start), mirroring §3.1's stateful
+/// actors.
+pub fn spawn_for_kind(
+    name: String,
+    kind: &ComponentKind,
+    shared: Arc<LiveShared>,
+) -> WorkerHandle {
+    let dir = shared.artifacts.clone();
+    match kind {
+        ComponentKind::Retriever => spawn_worker(name, move || {
+            Ok(Box::new(RetrieverLogic { embedder: Embedder::new(&dir)?, shared })
+                as Box<dyn StageLogic>)
+        }),
+        ComponentKind::Generator => spawn_worker(name, move || {
+            Ok(Box::new(GeneratorLogic { generator: Generator::new(&dir)?, shared })
+                as Box<dyn StageLogic>)
+        }),
+        ComponentKind::Grader => spawn_worker(name, move || {
+            Ok(Box::new(VerdictLogic { generator: Generator::new(&dir)?, judge_answer: false })
+                as Box<dyn StageLogic>)
+        }),
+        ComponentKind::Critic => spawn_worker(name, move || {
+            Ok(Box::new(VerdictLogic { generator: Generator::new(&dir)?, judge_answer: true })
+                as Box<dyn StageLogic>)
+        }),
+        ComponentKind::Rewriter => spawn_worker(name, move || {
+            Ok(Box::new(RewriterLogic { generator: Generator::new(&dir)? }) as Box<dyn StageLogic>)
+        }),
+        ComponentKind::WebSearch => spawn_worker(name, move || {
+            Ok(Box::new(WebSearchLogic { shared }) as Box<dyn StageLogic>)
+        }),
+        ComponentKind::Classifier => spawn_worker(name, move || {
+            Ok(Box::new(ClassifierLogic { classifier: Classifier::new(&dir)? })
+                as Box<dyn StageLogic>)
+        }),
+        other => {
+            let kind_name = other.name().to_string();
+            spawn_worker(name, move || -> Result<Box<dyn StageLogic>> {
+                let _keep = shared; // kinds without executors fail at init
+                anyhow::bail!("no live executor for component kind '{kind_name}'")
+            })
+        }
+    }
+}
+
+/// Build the shared deployment state: generate the corpus, embed it with
+/// the real embedder, and build the IVF index.
+pub fn build_live_shared(
+    artifacts: PathBuf,
+    corpus_size: usize,
+    n_topics: usize,
+    seed: u64,
+) -> Result<LiveShared> {
+    let corpus = Arc::new(Corpus::generate(corpus_size, n_topics, 64, seed));
+    let embedder = Embedder::new(&artifacts)?;
+    let texts: Vec<Vec<u8>> = corpus.passages.iter().map(|p| p.text.clone()).collect();
+    let embs = embedder.embed_all(&texts)?;
+    let dim = embedder.dim();
+    let mut flat = Vec::with_capacity(embs.len() * dim);
+    for e in &embs {
+        flat.extend_from_slice(e);
+    }
+    let index = Arc::new(IvfIndex::build(
+        flat,
+        dim,
+        crate::retrieval::IvfParams { n_lists: (corpus_size / 64).max(4), kmeans_iters: 6, seed },
+    ));
+    Ok(LiveShared {
+        corpus,
+        index,
+        artifacts,
+        k_docs: 4,
+        search_ef: 256,
+        max_new_tokens: 24,
+        ctx_bytes_per_doc: 48,
+        max_iterations: 2,
+    })
+}

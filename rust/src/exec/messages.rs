@@ -1,0 +1,57 @@
+//! Messages between the controller and live workers.
+
+use std::sync::mpsc::Sender;
+
+use crate::spec::graph::NodeId;
+
+/// Request-scoped pipeline state threaded through the stages — the live
+/// equivalent of the intermediate values that flow producer→consumer in
+/// the paper's data plane (the controller re-ingests it only to make
+/// control-flow decisions, mirroring §3.3's control/data separation).
+#[derive(Clone, Debug, Default)]
+pub struct RagState {
+    pub query: Vec<u8>,
+    /// Retrieved context (concatenated passages).
+    pub context: Vec<u8>,
+    /// Generated answer so far.
+    pub answer: Vec<u8>,
+    /// Last grader/critic verdict.
+    pub verdict: Option<bool>,
+    /// Query-complexity class (A-RAG).
+    pub class: Option<u8>,
+    /// Recursion depth (rewrite loops).
+    pub iteration: u32,
+    /// Retrieved passage ids (diagnostics).
+    pub doc_ids: Vec<usize>,
+}
+
+impl RagState {
+    pub fn new(query: &[u8]) -> Self {
+        RagState { query: query.to_vec(), ..Default::default() }
+    }
+}
+
+/// A unit of work dispatched to a worker instance.
+pub struct WorkItem {
+    pub req: u64,
+    pub node: NodeId,
+    pub state: RagState,
+    /// Controller timestamp at enqueue (for queue-wait accounting).
+    pub enqueued_at: std::time::Instant,
+    /// Reply channel.
+    pub done: Sender<Done>,
+}
+
+/// Completion notification back to the controller.
+pub struct Done {
+    pub req: u64,
+    pub node: NodeId,
+    pub instance: usize,
+    pub state: RagState,
+    /// Seconds of actual stage execution.
+    pub service_secs: f64,
+    /// Seconds spent queued at the worker.
+    pub queue_secs: f64,
+    /// Worker-reported error, if any (the controller fails the request).
+    pub error: Option<String>,
+}

@@ -1,0 +1,14 @@
+//! Live execution layer: component instances as worker threads running
+//! real XLA artifacts, coordinated by `coordinator::controller`.
+//!
+//! PJRT handles are not `Send`, so each worker thread *builds its own*
+//! engine (generator / embedder / classifier) at startup — matching the
+//! paper's long-running stateful actors with significant cold-start cost
+//! (§3.1), which is exactly why `base_instances` exists.
+
+pub mod components;
+pub mod messages;
+pub mod worker;
+
+pub use messages::{Done, RagState, WorkItem};
+pub use worker::{spawn_worker, StageLogic, WorkerHandle};

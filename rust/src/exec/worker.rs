@@ -1,0 +1,250 @@
+//! Worker threads: long-running component instances with micro-batching.
+//!
+//! A worker drains its queue up to the stage's batch capacity before
+//! processing (continuous batching for the GPU-style stages), then sends
+//! one [`Done`] per item. Load counters are shared atomics the router
+//! reads without locking.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::messages::{Done, WorkItem};
+
+/// Stage behavior, constructed *inside* the worker thread (PJRT engines
+/// are thread-local).
+pub trait StageLogic {
+    /// Process a batch in place; items carry request state.
+    fn process_batch(&mut self, items: &mut [WorkItem]) -> anyhow::Result<()>;
+    /// Max items per batch (1 = no batching).
+    fn max_batch(&self) -> usize {
+        1
+    }
+}
+
+/// Controller-side handle to one worker instance.
+pub struct WorkerHandle {
+    pub name: String,
+    tx: Option<Sender<WorkItem>>,
+    /// Items accepted but not yet completed (queue + in-flight).
+    pending: Arc<AtomicUsize>,
+    /// Worker failed to initialize or crashed.
+    failed: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    /// Current queued+active count (router load signal).
+    pub fn pending(&self) -> usize {
+        self.pending.load(Ordering::Relaxed)
+    }
+
+    pub fn is_up(&self) -> bool {
+        !self.failed.load(Ordering::Relaxed)
+    }
+
+    /// Enqueue work. Returns Err if the worker is gone.
+    pub fn submit(&self, item: WorkItem) -> anyhow::Result<()> {
+        self.pending.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("worker not shut down")
+            .send(item)
+            .map_err(|_| anyhow::anyhow!("worker '{}' is gone", self.name))
+    }
+
+    /// Stop accepting work and join the thread.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Spawn a worker whose logic is built in-thread by `build`.
+pub fn spawn_worker<L, F>(name: String, build: F) -> WorkerHandle
+where
+    L: StageLogic,
+    F: FnOnce() -> anyhow::Result<L> + Send + 'static,
+{
+    let (tx, rx): (Sender<WorkItem>, Receiver<WorkItem>) = channel();
+    let pending = Arc::new(AtomicUsize::new(0));
+    let failed = Arc::new(AtomicBool::new(false));
+    let pending2 = pending.clone();
+    let failed2 = failed.clone();
+    let name2 = name.clone();
+    let join = std::thread::Builder::new()
+        .name(name.clone())
+        .spawn(move || {
+            let mut logic = match build() {
+                Ok(l) => l,
+                Err(e) => {
+                    eprintln!("worker '{name2}' failed to initialize: {e:#}");
+                    failed2.store(true, Ordering::Relaxed);
+                    // Drain and error-out items so requests don't hang.
+                    while let Ok(item) = rx.recv() {
+                        pending2.fetch_sub(1, Ordering::Relaxed);
+                        fail_item(item, "worker init failed");
+                    }
+                    return;
+                }
+            };
+            let max_batch = logic.max_batch().max(1);
+            loop {
+                // Block for the first item.
+                let first = match rx.recv() {
+                    Ok(i) => i,
+                    Err(_) => break, // channel closed: shutdown
+                };
+                let mut batch = vec![first];
+                // Opportunistically drain more (tiny wait to let a burst
+                // coalesce — continuous batching).
+                while batch.len() < max_batch {
+                    match rx.recv_timeout(Duration::from_micros(200)) {
+                        Ok(i) => batch.push(i),
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                let t0 = Instant::now();
+                let result = logic.process_batch(&mut batch);
+                let service = t0.elapsed().as_secs_f64() / batch.len() as f64;
+                for item in batch {
+                    pending2.fetch_sub(1, Ordering::Relaxed);
+                    let queue_secs = (t0 - item.enqueued_at).as_secs_f64().max(0.0);
+                    let done = Done {
+                        req: item.req,
+                        node: item.node,
+                        instance: usize::MAX, // controller fills in
+                        state: item.state,
+                        service_secs: service,
+                        queue_secs,
+                        error: result.as_ref().err().map(|e| format!("{e:#}")),
+                    };
+                    let _ = item.done.send(done);
+                }
+            }
+        })
+        .expect("spawn worker thread");
+    WorkerHandle { name, tx: Some(tx), pending, failed, join: Some(join) }
+}
+
+fn fail_item(item: WorkItem, msg: &str) {
+    let _ = item.done.send(Done {
+        req: item.req,
+        node: item.node,
+        instance: usize::MAX,
+        state: item.state,
+        service_secs: 0.0,
+        queue_secs: 0.0,
+        error: Some(msg.to_string()),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::messages::RagState;
+    use crate::spec::graph::NodeId;
+
+    struct Upper;
+    impl StageLogic for Upper {
+        fn process_batch(&mut self, items: &mut [WorkItem]) -> anyhow::Result<()> {
+            for it in items.iter_mut() {
+                it.state.answer = it.state.query.to_ascii_uppercase();
+            }
+            Ok(())
+        }
+        fn max_batch(&self) -> usize {
+            4
+        }
+    }
+
+    fn item(req: u64, q: &str, done: &Sender<Done>) -> WorkItem {
+        WorkItem {
+            req,
+            node: NodeId(2),
+            state: RagState::new(q.as_bytes()),
+            enqueued_at: Instant::now(),
+            done: done.clone(),
+        }
+    }
+
+    #[test]
+    fn worker_processes_and_reports() {
+        let w = spawn_worker("t".into(), || Ok(Upper));
+        let (done_tx, done_rx) = channel();
+        w.submit(item(1, "hello", &done_tx)).unwrap();
+        let d = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(d.req, 1);
+        assert_eq!(d.state.answer, b"HELLO");
+        assert!(d.error.is_none());
+        assert!(d.service_secs >= 0.0);
+        w.shutdown();
+    }
+
+    #[test]
+    fn worker_batches_bursts() {
+        let w = spawn_worker("t".into(), || Ok(Upper));
+        let (done_tx, done_rx) = channel();
+        for i in 0..8 {
+            w.submit(item(i, "x", &done_tx)).unwrap();
+        }
+        let mut got = 0;
+        while got < 8 {
+            let d = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert!(d.error.is_none());
+            got += 1;
+        }
+        assert_eq!(w.pending(), 0);
+        w.shutdown();
+    }
+
+    #[test]
+    fn failed_init_errors_items_instead_of_hanging() {
+        let w = spawn_worker("bad".into(), || {
+            Err::<Upper, _>(anyhow::anyhow!("no artifacts"))
+        });
+        // Give the thread a moment to fail.
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!w.is_up());
+        let (done_tx, done_rx) = channel();
+        w.submit(item(1, "q", &done_tx)).unwrap();
+        let d = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(d.error.is_some());
+        w.shutdown();
+    }
+
+    #[test]
+    fn pending_counts_load() {
+        struct Slow;
+        impl StageLogic for Slow {
+            fn process_batch(&mut self, _items: &mut [WorkItem]) -> anyhow::Result<()> {
+                std::thread::sleep(Duration::from_millis(100));
+                Ok(())
+            }
+        }
+        let w = spawn_worker("slow".into(), || Ok(Slow));
+        let (done_tx, done_rx) = channel();
+        for i in 0..3 {
+            w.submit(item(i, "q", &done_tx)).unwrap();
+        }
+        assert!(w.pending() >= 1);
+        for _ in 0..3 {
+            done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        w.shutdown();
+    }
+}

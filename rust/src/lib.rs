@@ -1,0 +1,51 @@
+//! # Harmonia — an end-to-end RAG serving framework
+//!
+//! Rust reproduction of *"Harmonia: End-to-End RAG Serving Optimization"*
+//! (a.k.a. *Patchwork: A Unified Framework for RAG Serving*): a three-layer
+//! serving stack for Retrieval-Augmented-Generation pipelines.
+//!
+//! * [`spec`] — the **specification layer**: pipelines as component graphs
+//!   with conditional branches, recursion, amplification and constraints
+//!   (stateful, resources, base instances), plus the four reference RAG
+//!   apps (Vanilla / Corrective / Self / Adaptive RAG).
+//! * [`alloc`] + [`lp`] — the **deployment layer**: the paper's
+//!   generalized-network-flow resource-allocation LP (Fig. 8) solved with
+//!   an in-crate two-phase simplex (Gurobi substitute).
+//! * [`coordinator`] — the **runtime layer**: a centralized control plane
+//!   with load/state-aware routing, deadline-aware (EDF + predicted slack)
+//!   scheduling, telemetry-driven re-solving, and managed streaming with
+//!   load-dependent chunk granularity.
+//! * [`runtime`] + [`exec`] — the **live data plane**: AOT-compiled XLA
+//!   artifacts (JAX/Pallas, lowered at build time) executed via PJRT from
+//!   worker threads; Python never runs on the request path.
+//! * [`sim`] — a discrete-event **cluster simulator** that runs the same
+//!   policy code against calibrated latency models to reproduce the
+//!   paper-scale experiments (32 GPUs, 1024 req/s) on one machine.
+//! * [`baselines`] — LangChain-like (monolithic) and Haystack/Ray-like
+//!   (task-centric) serving baselines.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod alloc;
+pub mod baselines;
+pub mod coordinator;
+pub mod exec;
+pub mod lp;
+pub mod metrics;
+pub mod profile;
+pub mod retrieval;
+pub mod runtime;
+pub mod sim;
+pub mod spec;
+pub mod stats;
+pub mod util;
+pub mod workload;
+
+/// Convenient re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::alloc::{AllocationPlan, FlowProblem};
+    pub use crate::spec::{apps, ComponentKind, PipelineGraph, ResourceKind};
+    pub use crate::util::rng::Rng;
+    pub use crate::workload::TraceConfig;
+}

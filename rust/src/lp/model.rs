@@ -1,0 +1,120 @@
+//! Small LP modeling layer over the simplex core: named variables,
+//! incremental constraint building — the shape of API the allocator uses
+//! (mirrors how the paper would call Gurobi).
+
+use super::simplex::{self, LpSolution, RowSense};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sense {
+    Le,
+    Eq,
+    Ge,
+}
+
+impl From<Sense> for RowSense {
+    fn from(s: Sense) -> RowSense {
+        match s {
+            Sense::Le => RowSense::Le,
+            Sense::Eq => RowSense::Eq,
+            Sense::Ge => RowSense::Ge,
+        }
+    }
+}
+
+/// Variable handle returned by [`LpModel::var`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Var(pub usize);
+
+#[derive(Clone, Debug)]
+pub struct Constraint {
+    pub terms: Vec<(Var, f64)>,
+    pub sense: Sense,
+    pub rhs: f64,
+}
+
+/// Incrementally-built LP: max Σ obj·x subject to constraints, x ≥ 0.
+#[derive(Clone, Debug, Default)]
+pub struct LpModel {
+    names: Vec<String>,
+    obj: Vec<f64>,
+    constraints: Vec<Constraint>,
+}
+
+impl LpModel {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a variable with objective coefficient `obj` (x ≥ 0 implicit).
+    pub fn var(&mut self, name: impl Into<String>, obj: f64) -> Var {
+        self.names.push(name.into());
+        self.obj.push(obj);
+        Var(self.names.len() - 1)
+    }
+
+    pub fn n_vars(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn n_constraints(&self) -> usize {
+        self.constraints.len()
+    }
+
+    pub fn name(&self, v: Var) -> &str {
+        &self.names[v.0]
+    }
+
+    /// Add Σ coeff·var  sense  rhs.
+    pub fn constrain(&mut self, terms: Vec<(Var, f64)>, sense: Sense, rhs: f64) {
+        debug_assert!(terms.iter().all(|(v, _)| v.0 < self.names.len()));
+        self.constraints.push(Constraint { terms, sense, rhs });
+    }
+
+    /// Solve with the in-crate simplex.
+    pub fn solve(&self) -> Result<LpSolution, simplex::LpError> {
+        let n = self.obj.len();
+        let m = self.constraints.len();
+        let mut a = vec![0.0f64; m * n];
+        let mut senses = Vec::with_capacity(m);
+        let mut b = Vec::with_capacity(m);
+        for (i, cst) in self.constraints.iter().enumerate() {
+            for &(v, coef) in &cst.terms {
+                a[i * n + v.0] += coef;
+            }
+            senses.push(cst.sense.into());
+            b.push(cst.rhs);
+        }
+        simplex::solve(&self.obj, &a, &senses, &b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::simplex::Status;
+
+    #[test]
+    fn model_roundtrip() {
+        let mut m = LpModel::new();
+        let x = m.var("x", 3.0);
+        let y = m.var("y", 2.0);
+        m.constrain(vec![(x, 1.0), (y, 1.0)], Sense::Le, 4.0);
+        m.constrain(vec![(x, 1.0), (y, 3.0)], Sense::Le, 6.0);
+        let sol = m.solve().unwrap();
+        assert_eq!(sol.status, Status::Optimal);
+        assert!((sol.objective - 12.0).abs() < 1e-6);
+        assert_eq!(m.name(x), "x");
+        assert_eq!(m.n_vars(), 2);
+        assert_eq!(m.n_constraints(), 2);
+    }
+
+    #[test]
+    fn duplicate_terms_accumulate() {
+        let mut m = LpModel::new();
+        let x = m.var("x", 1.0);
+        // x + x <= 4  →  2x <= 4  →  x <= 2.
+        m.constrain(vec![(x, 1.0), (x, 1.0)], Sense::Le, 4.0);
+        let sol = m.solve().unwrap();
+        assert!((sol.x[0] - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,462 @@
+//! Dense two-phase primal simplex.
+//!
+//! Solves  max cᵀx  s.t.  A x {<=,=,>=} b,  x >= 0.
+//!
+//! Phase 1 drives artificial variables out of the basis; phase 2 optimizes
+//! the real objective. Bland's rule is used as an anti-cycling fallback
+//! after a pivot-count threshold; otherwise Dantzig's rule (most negative
+//! reduced cost) for speed.
+
+/// Inequality sense of one constraint row.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowSense {
+    Le,
+    Eq,
+    Ge,
+}
+
+/// Solver status.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Status {
+    Optimal,
+    Infeasible,
+    Unbounded,
+}
+
+#[derive(Clone, Debug)]
+pub struct LpSolution {
+    pub status: Status,
+    /// Optimal primal values (length = number of structural variables).
+    pub x: Vec<f64>,
+    pub objective: f64,
+    /// Simplex pivots performed (for the Fig. 12 scalability study).
+    pub pivots: usize,
+}
+
+#[derive(Debug)]
+pub enum LpError {
+    Dimension(String),
+}
+
+impl std::fmt::Display for LpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LpError::Dimension(s) => write!(f, "dimension error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for LpError {}
+
+const EPS: f64 = 1e-9;
+
+/// Solve max cᵀx s.t. rows; x >= 0.
+///
+/// `a` is row-major with `cols = c.len()` columns.
+pub fn solve(
+    c: &[f64],
+    a: &[f64],
+    senses: &[RowSense],
+    b: &[f64],
+) -> Result<LpSolution, LpError> {
+    let n = c.len();
+    let m = senses.len();
+    if a.len() != n * m || b.len() != m {
+        return Err(LpError::Dimension(format!(
+            "a={} expected {} (m={m} n={n}), b={}",
+            a.len(),
+            n * m,
+            b.len()
+        )));
+    }
+
+    // Normalize to b >= 0 by flipping rows.
+    let mut rows: Vec<Vec<f64>> = (0..m).map(|i| a[i * n..(i + 1) * n].to_vec()).collect();
+    let mut senses = senses.to_vec();
+    let mut b = b.to_vec();
+    for i in 0..m {
+        if b[i] < 0.0 {
+            for v in rows[i].iter_mut() {
+                *v = -*v;
+            }
+            b[i] = -b[i];
+            senses[i] = match senses[i] {
+                RowSense::Le => RowSense::Ge,
+                RowSense::Ge => RowSense::Le,
+                RowSense::Eq => RowSense::Eq,
+            };
+        }
+    }
+
+    // Column layout: [structural n][slack/surplus s][artificial t].
+    let n_slack = senses
+        .iter()
+        .filter(|s| matches!(s, RowSense::Le | RowSense::Ge))
+        .count();
+    let n_art = senses
+        .iter()
+        .filter(|s| matches!(s, RowSense::Eq | RowSense::Ge))
+        .count();
+    let total = n + n_slack + n_art;
+
+    // Tableau: m rows × total cols, plus rhs.
+    let mut t = vec![0.0f64; m * total];
+    let mut rhs = b.clone();
+    let mut basis = vec![0usize; m];
+    let mut s_idx = n;
+    let mut a_idx = n + n_slack;
+    for i in 0..m {
+        for j in 0..n {
+            t[i * total + j] = rows[i][j];
+        }
+        match senses[i] {
+            RowSense::Le => {
+                t[i * total + s_idx] = 1.0;
+                basis[i] = s_idx;
+                s_idx += 1;
+            }
+            RowSense::Ge => {
+                t[i * total + s_idx] = -1.0;
+                s_idx += 1;
+                t[i * total + a_idx] = 1.0;
+                basis[i] = a_idx;
+                a_idx += 1;
+            }
+            RowSense::Eq => {
+                t[i * total + a_idx] = 1.0;
+                basis[i] = a_idx;
+                a_idx += 1;
+            }
+        }
+    }
+
+    let mut pivots = 0usize;
+
+    // Phase 1: minimize sum of artificials == max(-sum).
+    if n_art > 0 {
+        let mut obj = vec![0.0f64; total];
+        for j in (n + n_slack)..total {
+            obj[j] = -1.0;
+        }
+        let (status, z) = simplex_core(&mut t, &mut rhs, &mut basis, &obj, total, m, &mut pivots);
+        if status == Status::Unbounded {
+            // Phase-1 objective is bounded by 0; unbounded means a bug.
+            return Ok(LpSolution { status: Status::Infeasible, x: vec![0.0; n], objective: 0.0, pivots });
+        }
+        if z < -1e-7 {
+            return Ok(LpSolution { status: Status::Infeasible, x: vec![0.0; n], objective: 0.0, pivots });
+        }
+        // Drive any remaining artificial basics out (degenerate rows).
+        for i in 0..m {
+            if basis[i] >= n + n_slack {
+                // Find a non-artificial column with nonzero coefficient.
+                if let Some(j) = (0..n + n_slack).find(|&j| t[i * total + j].abs() > EPS) {
+                    pivot(&mut t, &mut rhs, &mut basis, total, m, i, j);
+                    pivots += 1;
+                }
+                // Otherwise the row is all-zero (redundant) — harmless.
+            }
+        }
+    }
+
+    // Phase 2: maximize cᵀx, artificial columns frozen at zero.
+    let mut obj = vec![0.0f64; total];
+    obj[..n].copy_from_slice(c);
+    // Zero out artificial columns so they never re-enter.
+    for i in 0..m {
+        for j in (n + n_slack)..total {
+            if basis[i] != j {
+                t[i * total + j] = 0.0;
+            }
+        }
+    }
+    let (status, z) = simplex_core(&mut t, &mut rhs, &mut basis, &obj, n + n_slack, m, &mut pivots);
+
+    let mut x = vec![0.0f64; n];
+    for i in 0..m {
+        if basis[i] < n {
+            x[basis[i]] = rhs[i];
+        }
+    }
+    Ok(LpSolution { status, x, objective: z, pivots })
+}
+
+/// Run simplex on the tableau with entering columns restricted to
+/// `0..allowed_cols`. Returns (status, objective value).
+fn simplex_core(
+    t: &mut [f64],
+    rhs: &mut [f64],
+    basis: &mut [usize],
+    obj: &[f64],
+    allowed_cols: usize,
+    m: usize,
+    pivots: &mut usize,
+) -> (Status, f64) {
+    let total = obj.len();
+    // Reduced costs maintained implicitly: z_j - c_j = c_B B^-1 A_j - c_j.
+    let max_pivots_dantzig = 20_000;
+    loop {
+        // Compute reduced costs for allowed columns.
+        let mut entering: Option<usize> = None;
+        let mut best = 1e-7; // strictly-improving tolerance
+        let bland = *pivots > max_pivots_dantzig;
+        for j in 0..allowed_cols {
+            if basis.contains(&j) {
+                continue;
+            }
+            let mut zj = 0.0;
+            for i in 0..m {
+                zj += obj[basis[i]] * t[i * total + j];
+            }
+            let rc = obj[j] - zj; // improvement if > 0 (maximization)
+            if bland {
+                if rc > 1e-7 {
+                    entering = Some(j);
+                    break;
+                }
+            } else if rc > best {
+                best = rc;
+                entering = Some(j);
+            }
+        }
+        let Some(e) = entering else {
+            // Optimal.
+            let z: f64 = (0..m).map(|i| obj[basis[i]] * rhs[i]).sum();
+            return (Status::Optimal, z);
+        };
+        // Ratio test.
+        let mut leave: Option<usize> = None;
+        let mut best_ratio = f64::INFINITY;
+        for i in 0..m {
+            let aie = t[i * total + e];
+            if aie > EPS {
+                let ratio = rhs[i] / aie;
+                if ratio < best_ratio - EPS
+                    || (ratio < best_ratio + EPS
+                        && leave.map_or(true, |l| basis[i] < basis[l]))
+                {
+                    best_ratio = ratio;
+                    leave = Some(i);
+                }
+            }
+        }
+        let Some(l) = leave else {
+            return (Status::Unbounded, f64::INFINITY);
+        };
+        pivot(t, rhs, basis, total, m, l, e);
+        *pivots += 1;
+        if *pivots > 200_000 {
+            // Safety valve; should never trigger on our problem sizes.
+            let z: f64 = (0..m).map(|i| obj[basis[i]] * rhs[i]).sum();
+            return (Status::Optimal, z);
+        }
+    }
+}
+
+fn pivot(t: &mut [f64], rhs: &mut [f64], basis: &mut [usize], total: usize, m: usize, l: usize, e: usize) {
+    let piv = t[l * total + e];
+    debug_assert!(piv.abs() > EPS);
+    let inv = 1.0 / piv;
+    for j in 0..total {
+        t[l * total + j] *= inv;
+    }
+    rhs[l] *= inv;
+    for i in 0..m {
+        if i == l {
+            continue;
+        }
+        let f = t[i * total + e];
+        if f.abs() > EPS {
+            for j in 0..total {
+                t[i * total + j] -= f * t[l * total + j];
+            }
+            rhs[i] -= f * rhs[l];
+            // Clamp tiny negatives from roundoff.
+            if rhs[i] < 0.0 && rhs[i] > -1e-9 {
+                rhs[i] = 0.0;
+            }
+        }
+    }
+    basis[l] = e;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+
+    fn assert_close(a: f64, b: f64) {
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    }
+
+    #[test]
+    fn simple_2d_max() {
+        // max 3x + 2y s.t. x + y <= 4; x + 3y <= 6 → x=4, y=0, z=12.
+        let sol = solve(
+            &[3.0, 2.0],
+            &[1.0, 1.0, 1.0, 3.0],
+            &[RowSense::Le, RowSense::Le],
+            &[4.0, 6.0],
+        )
+        .unwrap();
+        assert_eq!(sol.status, Status::Optimal);
+        assert_close(sol.objective, 12.0);
+        assert_close(sol.x[0], 4.0);
+        assert_close(sol.x[1], 0.0);
+    }
+
+    #[test]
+    fn classic_production_problem() {
+        // max 5x + 4y s.t. 6x + 4y <= 24; x + 2y <= 6 → x=3, y=1.5, z=21.
+        let sol = solve(
+            &[5.0, 4.0],
+            &[6.0, 4.0, 1.0, 2.0],
+            &[RowSense::Le, RowSense::Le],
+            &[24.0, 6.0],
+        )
+        .unwrap();
+        assert_close(sol.objective, 21.0);
+        assert_close(sol.x[0], 3.0);
+        assert_close(sol.x[1], 1.5);
+    }
+
+    #[test]
+    fn equality_constraints() {
+        // max x + y s.t. x + y = 5; x <= 3 → z=5 (e.g. x=3,y=2).
+        let sol = solve(
+            &[1.0, 1.0],
+            &[1.0, 1.0, 1.0, 0.0],
+            &[RowSense::Eq, RowSense::Le],
+            &[5.0, 3.0],
+        )
+        .unwrap();
+        assert_eq!(sol.status, Status::Optimal);
+        assert_close(sol.objective, 5.0);
+        assert!(sol.x[0] <= 3.0 + 1e-9);
+    }
+
+    #[test]
+    fn ge_constraints_phase1() {
+        // max -x s.t. x >= 2 → x=2, z=-2.
+        let sol = solve(&[-1.0], &[1.0], &[RowSense::Ge], &[2.0]).unwrap();
+        assert_eq!(sol.status, Status::Optimal);
+        assert_close(sol.x[0], 2.0);
+        assert_close(sol.objective, -2.0);
+    }
+
+    #[test]
+    fn detects_infeasible() {
+        // x <= 1 and x >= 2.
+        let sol = solve(
+            &[1.0],
+            &[1.0, 1.0],
+            &[RowSense::Le, RowSense::Ge],
+            &[1.0, 2.0],
+        )
+        .unwrap();
+        assert_eq!(sol.status, Status::Infeasible);
+    }
+
+    #[test]
+    fn detects_unbounded() {
+        // max x with no constraint binding x.
+        let sol = solve(&[1.0, 0.0], &[0.0, 1.0], &[RowSense::Le], &[1.0]).unwrap();
+        assert_eq!(sol.status, Status::Unbounded);
+    }
+
+    #[test]
+    fn negative_rhs_normalization() {
+        // max x s.t. -x <= -2 (i.e. x >= 2), x <= 5 → x = 5.
+        let sol = solve(
+            &[1.0],
+            &[-1.0, 1.0],
+            &[RowSense::Le, RowSense::Le],
+            &[-2.0, 5.0],
+        )
+        .unwrap();
+        assert_eq!(sol.status, Status::Optimal);
+        assert_close(sol.x[0], 5.0);
+    }
+
+    #[test]
+    fn degenerate_problem_terminates() {
+        // Multiple constraints intersecting at the same vertex.
+        let sol = solve(
+            &[1.0, 1.0],
+            &[1.0, 0.0, 0.0, 1.0, 1.0, 1.0],
+            &[RowSense::Le, RowSense::Le, RowSense::Le],
+            &[1.0, 1.0, 2.0],
+        )
+        .unwrap();
+        assert_eq!(sol.status, Status::Optimal);
+        assert_close(sol.objective, 2.0);
+    }
+
+    #[test]
+    fn solution_satisfies_constraints_property() {
+        // Random feasible-by-construction LPs: verify feasibility and that
+        // the reported objective matches cᵀx.
+        property("lp feasibility", 60, |g| {
+            let n = g.usize(1, 6);
+            let m = g.usize(1, 6);
+            let c: Vec<f64> = (0..n).map(|_| g.f64(-5.0, 5.0)).collect();
+            let mut a = vec![0.0; m * n];
+            for v in a.iter_mut() {
+                *v = g.f64(0.0, 3.0); // nonnegative A with Le rows => bounded
+            }
+            let b: Vec<f64> = (0..m).map(|_| g.f64(0.5, 10.0)).collect();
+            let senses = vec![RowSense::Le; m];
+            let sol = solve(&c, &a, &senses, &b).unwrap();
+            // x = 0 is feasible => never infeasible. Could be unbounded if a
+            // column is all-zero with positive c.
+            if sol.status != Status::Optimal {
+                return;
+            }
+            for i in 0..m {
+                let lhs: f64 = (0..n).map(|j| a[i * n + j] * sol.x[j]).sum();
+                assert!(lhs <= b[i] + 1e-6, "row {i}: {lhs} > {}", b[i]);
+            }
+            for &xj in &sol.x {
+                assert!(xj >= -1e-9);
+            }
+            let z: f64 = c.iter().zip(&sol.x).map(|(ci, xi)| ci * xi).sum();
+            assert!((z - sol.objective).abs() < 1e-6);
+        });
+    }
+
+    #[test]
+    fn optimality_vs_exhaustive_vertices_2d() {
+        // For 2-var LPs, check against a grid search upper bound.
+        property("lp 2d optimality", 40, |g| {
+            let c = [g.f64(0.1, 4.0), g.f64(0.1, 4.0)];
+            let a = [
+                g.f64(0.2, 2.0),
+                g.f64(0.2, 2.0),
+                g.f64(0.2, 2.0),
+                g.f64(0.2, 2.0),
+            ];
+            let b = [g.f64(1.0, 8.0), g.f64(1.0, 8.0)];
+            let sol = solve(&c, &a, &[RowSense::Le, RowSense::Le], &b).unwrap();
+            assert_eq!(sol.status, Status::Optimal);
+            // Grid-search feasible region; LP optimum must dominate.
+            let mut best = 0.0f64;
+            let steps = 60;
+            let xmax = (b[0] / a[0]).min(b[1] / a[2]);
+            let ymax = (b[0] / a[1]).min(b[1] / a[3]);
+            for i in 0..=steps {
+                for j in 0..=steps {
+                    let x = xmax * i as f64 / steps as f64;
+                    let y = ymax * j as f64 / steps as f64;
+                    if a[0] * x + a[1] * y <= b[0] && a[2] * x + a[3] * y <= b[1] {
+                        best = best.max(c[0] * x + c[1] * y);
+                    }
+                }
+            }
+            assert!(
+                sol.objective >= best - 1e-6,
+                "simplex {} < grid {best}",
+                sol.objective
+            );
+        });
+    }
+}

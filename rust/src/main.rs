@@ -1,0 +1,97 @@
+//! `harmonia` — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   serve <app>              deploy live workers (real XLA artifacts) and
+//!                            answer queries from stdin
+//!   sim <app> <system> ...   paper-scale cluster simulation
+//!   plan <app>               print the LP allocation plan (§3.2)
+//!   apps                     list the reference RAG applications
+
+use std::io::BufRead;
+
+use harmonia::alloc::flow::{paper_cluster_budgets, plan_for};
+use harmonia::coordinator::controller::{deploy, ControllerConfig};
+use harmonia::runtime::{artifacts_available, default_artifacts_dir};
+use harmonia::sim::{run_point, SystemKind};
+use harmonia::spec::apps;
+
+const USAGE: &str = "usage:
+  harmonia apps
+  harmonia plan  <v-rag|c-rag|s-rag|a-rag>
+  harmonia sim   <app> <harmonia|langchain|haystack> [rate] [n]
+  harmonia serve <app>            (requires `make artifacts`)";
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("apps") => {
+            println!("{:<8} {:<12} {:<10} components", "name", "conditional", "recursive");
+            for g in apps::all() {
+                println!(
+                    "{:<8} {:<12} {:<10} {}",
+                    g.name,
+                    g.has_conditionals(),
+                    g.has_recursion(),
+                    g.work_nodes().map(|n| n.name.clone()).collect::<Vec<_>>().join(", ")
+                );
+            }
+        }
+        Some("plan") => {
+            let app = args.get(1).map(|s| s.as_str()).unwrap_or("c-rag");
+            let g = apps::by_name(app).ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?;
+            let plan = plan_for(&g, 2000, 0);
+            print!("{}", plan.describe(&g));
+            let _ = paper_cluster_budgets();
+        }
+        Some("sim") => {
+            let app = args.get(1).map(|s| s.as_str()).unwrap_or("c-rag");
+            let system = match args.get(2).map(|s| s.as_str()).unwrap_or("harmonia") {
+                "harmonia" => SystemKind::Harmonia,
+                "langchain" => SystemKind::LangChain,
+                "haystack" => SystemKind::Haystack,
+                o => anyhow::bail!("unknown system {o}"),
+            };
+            let rate: f64 = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(64.0);
+            let n: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(2000);
+            let g = apps::by_name(app).ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?;
+            let r = run_point(system, g, rate, n, Some(2.0), 42);
+            println!(
+                "{} on {}: throughput {:.2} req/s, mean latency {:.3}s, p95 {:.3}s, SLO violations {:.1}%",
+                app,
+                system.name(),
+                r.report.throughput,
+                r.report.mean_latency,
+                r.report.p95,
+                r.report.slo_violation_rate * 100.0
+            );
+        }
+        Some("serve") => {
+            anyhow::ensure!(artifacts_available(), "run `make artifacts` first");
+            let app = args.get(1).map(|s| s.as_str()).unwrap_or("v-rag");
+            let g = apps::by_name(app).ok_or_else(|| anyhow::anyhow!("unknown app {app}"))?;
+            println!("deploying {app} (live XLA workers)... type queries, ctrl-d to exit");
+            let h = deploy(g, ControllerConfig::quick(default_artifacts_dir()))?;
+            let stdin = std::io::stdin();
+            for line in stdin.lock().lines() {
+                let line = line?;
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let rx = h.submit(line.trim().as_bytes());
+                let r = rx.recv()?;
+                match r.error {
+                    None => println!(
+                        "[{:.3}s, {} stages] {}",
+                        r.latency_secs,
+                        r.hops,
+                        String::from_utf8_lossy(&r.answer)
+                    ),
+                    Some(e) => println!("error: {e}"),
+                }
+            }
+            h.shutdown();
+        }
+        _ => println!("{USAGE}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,6 @@
+//! Metrics: per-request and per-component recording, SLO accounting, and
+//! the report types the bench harnesses print.
+
+pub mod recorder;
+
+pub use recorder::{ComponentStats, Recorder, RunReport};

@@ -1,0 +1,170 @@
+//! Run-level metrics recorder shared by the DES, the live coordinator and
+//! the baselines, so every system is measured identically.
+
+use std::collections::HashMap;
+
+use crate::stats::percentile::percentile;
+
+/// Aggregated per-component execution statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ComponentStats {
+    /// Total busy time across instances (seconds).
+    pub busy_time: f64,
+    /// Number of executions.
+    pub executions: u64,
+    /// Total time requests spent queued at this component.
+    pub queue_time: f64,
+}
+
+impl ComponentStats {
+    pub fn mean_service(&self) -> f64 {
+        if self.executions == 0 {
+            0.0
+        } else {
+            self.busy_time / self.executions as f64
+        }
+    }
+
+    pub fn mean_queue(&self) -> f64 {
+        if self.executions == 0 {
+            0.0
+        } else {
+            self.queue_time / self.executions as f64
+        }
+    }
+}
+
+/// Collects per-request completions and per-component stats during a run.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    latencies: Vec<f64>,
+    violations: u64,
+    completed: u64,
+    first_arrival: Option<f64>,
+    last_completion: f64,
+    pub components: HashMap<String, ComponentStats>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_arrival(&mut self, t: f64) {
+        if self.first_arrival.is_none() {
+            self.first_arrival = Some(t);
+        }
+    }
+
+    /// Record a completed request.
+    pub fn on_completion(&mut self, arrival: f64, completion: f64, deadline: Option<f64>) {
+        let latency = completion - arrival;
+        debug_assert!(latency >= 0.0);
+        self.latencies.push(latency);
+        self.completed += 1;
+        self.last_completion = self.last_completion.max(completion);
+        if let Some(d) = deadline {
+            if completion > d {
+                self.violations += 1;
+            }
+        }
+    }
+
+    /// Record one component execution.
+    pub fn on_execution(&mut self, component: &str, service: f64, queued: f64) {
+        let e = self.components.entry(component.to_string()).or_default();
+        e.busy_time += service;
+        e.executions += 1;
+        e.queue_time += queued;
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    /// Finalize into a report.
+    pub fn report(&self) -> RunReport {
+        let mut lats = self.latencies.clone();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let horizon = self.last_completion - self.first_arrival.unwrap_or(0.0);
+        RunReport {
+            completed: self.completed,
+            throughput: if horizon > 0.0 { self.completed as f64 / horizon } else { 0.0 },
+            mean_latency: if lats.is_empty() { 0.0 } else { lats.iter().sum::<f64>() / lats.len() as f64 },
+            p50: if lats.is_empty() { 0.0 } else { percentile(&lats, 50.0) },
+            p95: if lats.is_empty() { 0.0 } else { percentile(&lats, 95.0) },
+            p99: if lats.is_empty() { 0.0 } else { percentile(&lats, 99.0) },
+            slo_violation_rate: if self.completed == 0 {
+                0.0
+            } else {
+                self.violations as f64 / self.completed as f64
+            },
+            components: self.components.clone(),
+        }
+    }
+}
+
+/// Final metrics of one serving run — the row format of Figs. 9/11.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub completed: u64,
+    /// Completions per second over the active horizon.
+    pub throughput: f64,
+    pub mean_latency: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    /// Fraction of completed requests that missed their deadline.
+    pub slo_violation_rate: f64,
+    pub components: HashMap<String, ComponentStats>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_accounting() {
+        let mut r = Recorder::new();
+        r.on_arrival(0.0);
+        r.on_completion(0.0, 1.0, Some(2.0)); // within SLO
+        r.on_completion(1.0, 4.0, Some(2.0)); // violation
+        r.on_completion(2.0, 3.0, None); // no deadline
+        let rep = r.report();
+        assert_eq!(rep.completed, 3);
+        assert!((rep.slo_violation_rate - 1.0 / 3.0).abs() < 1e-12);
+        assert!((rep.mean_latency - (1.0 + 3.0 + 1.0) / 3.0).abs() < 1e-12);
+        // horizon = 4.0 - 0.0
+        assert!((rep.throughput - 3.0 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn component_stats() {
+        let mut r = Recorder::new();
+        r.on_execution("grader", 0.2, 0.1);
+        r.on_execution("grader", 0.4, 0.3);
+        let rep = r.report();
+        let g = &rep.components["grader"];
+        assert_eq!(g.executions, 2);
+        assert!((g.mean_service() - 0.3).abs() < 1e-12);
+        assert!((g.mean_queue() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut r = Recorder::new();
+        r.on_arrival(0.0);
+        for i in 0..100 {
+            r.on_completion(0.0, (i + 1) as f64 * 0.01, None);
+        }
+        let rep = r.report();
+        assert!(rep.p50 <= rep.p95 && rep.p95 <= rep.p99);
+    }
+
+    #[test]
+    fn empty_recorder_safe() {
+        let rep = Recorder::new().report();
+        assert_eq!(rep.completed, 0);
+        assert_eq!(rep.throughput, 0.0);
+    }
+}

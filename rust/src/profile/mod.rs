@@ -1,0 +1,16 @@
+//! Profiling layer (§3.2 "Profiling"): estimates the allocation-model
+//! parameters — throughput coefficients α_{i,k}, amplification factors
+//! γ_i, and routing proportions p_{i,j} — by executing the pipeline over a
+//! sample workload.
+//!
+//! [`models`] holds the calibrated component latency models (the
+//! simulator's ground truth, standing in for the authors' A100 testbed);
+//! [`profiler`] runs sample requests through those models (or through live
+//! components) and produces a [`profiler::Profile`] consumed by the
+//! allocator and the runtime controller.
+
+pub mod models;
+pub mod profiler;
+
+pub use models::{LatencyModel, RequestFeatures};
+pub use profiler::{profile_graph, Profile};

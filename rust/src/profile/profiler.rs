@@ -1,0 +1,173 @@
+//! The profiling phase: estimate α_{i,k}, γ_i and p_{i,j} from sample
+//! executions (the paper uses ~100 ShareGPT samples at startup; the
+//! runtime re-estimates the same quantities online from telemetry).
+
+use std::collections::HashMap;
+
+use crate::profile::models::{instance_concurrency, LatencyModel};
+use crate::spec::graph::{NodeId, PipelineGraph, ResourceKind};
+use crate::util::rng::Rng;
+use crate::workload::TraceConfig;
+
+/// Estimated parameters for the allocation model.
+#[derive(Clone, Debug)]
+pub struct Profile {
+    /// Mean service time per node (seconds, single request).
+    pub mean_service: HashMap<NodeId, f64>,
+    /// Throughput coefficient α_{i,k}: req/s contributed per unit of k.
+    pub alpha: HashMap<(NodeId, ResourceKind), f64>,
+    /// Empirical routing probabilities p_{i,j} keyed by edge index.
+    pub edge_probs: Vec<f64>,
+    /// Empirical amplification γ_i.
+    pub gamma: HashMap<NodeId, f64>,
+    /// Number of samples profiled.
+    pub samples: usize,
+}
+
+impl Profile {
+    pub fn alpha_for(&self, node: NodeId, k: ResourceKind) -> f64 {
+        *self.alpha.get(&(node, k)).unwrap_or(&0.0)
+    }
+}
+
+/// Profile a pipeline against the calibrated latency models by sampling
+/// `n` requests' features and walking the graph (branch decisions sampled
+/// from the spec priors — at deploy time those are the best estimates;
+/// the runtime controller replaces them with observed frequencies).
+pub fn profile_graph(graph: &PipelineGraph, n: usize, seed: u64) -> Profile {
+    let mut rng = Rng::new(seed);
+    let trace_cfg = TraceConfig::default();
+    let mut service_sums: HashMap<NodeId, (f64, usize)> = HashMap::new();
+    let mut edge_counts = vec![0usize; graph.edges.len()];
+    let mut node_exits: HashMap<NodeId, usize> = HashMap::new();
+
+    for _ in 0..n {
+        let feats = trace_cfg.sample_features(&mut rng);
+        // Walk the graph from source, sampling branches.
+        let mut cur = graph.source;
+        let mut hops = 0;
+        while cur != graph.sink && hops < 1000 {
+            hops += 1;
+            let node = graph.node(cur);
+            let model = LatencyModel::for_kind(&node.kind);
+            let t = model.sample(&feats, &mut rng);
+            let e = service_sums.entry(cur).or_insert((0.0, 0));
+            e.0 += t;
+            e.1 += 1;
+            // Sample next edge.
+            let edges: Vec<usize> = graph
+                .edges
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| e.from == cur)
+                .map(|(i, _)| i)
+                .collect();
+            if edges.is_empty() {
+                break;
+            }
+            let weights: Vec<f64> = edges.iter().map(|&i| graph.edges[i].prob).collect();
+            let pick = edges[rng.weighted(&weights)];
+            edge_counts[pick] += 1;
+            *node_exits.entry(cur).or_insert(0) += 1;
+            cur = graph.edges[pick].to;
+        }
+    }
+
+    let mut mean_service = HashMap::new();
+    let mut alpha = HashMap::new();
+    for node in &graph.nodes {
+        let (sum, cnt) = service_sums.get(&node.id).copied().unwrap_or((0.0, 0));
+        let mean = if cnt > 0 { sum / cnt as f64 } else { 0.0 };
+        mean_service.insert(node.id, mean);
+        if mean > 0.0 {
+            let conc = instance_concurrency(&node.kind) as f64;
+            // Per-instance throughput = concurrency / mean service time.
+            // α_{i,k} divides that rate by the units of k one instance uses,
+            // attributed to the node's primary resource(s).
+            for &(k, units) in &node.resources {
+                if units > 0.0 {
+                    alpha.insert((node.id, k), conc / mean / units);
+                }
+            }
+        }
+    }
+
+    let edge_probs: Vec<f64> = graph
+        .edges
+        .iter()
+        .enumerate()
+        .map(|(i, e)| {
+            let exits = node_exits.get(&e.from).copied().unwrap_or(0);
+            if exits == 0 {
+                e.prob // unvisited: keep prior
+            } else {
+                edge_counts[i] as f64 / exits as f64
+            }
+        })
+        .collect();
+
+    // γ is structural for our apps (no fan-out components); keep spec value
+    // but expose the hook for amplifying components.
+    let gamma = graph.nodes.iter().map(|n| (n.id, n.gamma)).collect();
+
+    Profile { mean_service, alpha, edge_probs, gamma, samples: n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::apps;
+
+    #[test]
+    fn profile_estimates_service_means() {
+        let g = apps::vanilla_rag();
+        let p = profile_graph(&g, 500, 42);
+        let retr = g.node_by_name("retriever").unwrap().id;
+        let gen = g.node_by_name("generator").unwrap().id;
+        // k_docs ~ U[100,300] → retriever mean ≈ 0.02 + 4e-4*200 = 0.10.
+        let mr = p.mean_service[&retr];
+        assert!((0.07..0.14).contains(&mr), "retriever mean {mr}");
+        let mg = p.mean_service[&gen];
+        assert!(mg > 0.0);
+        assert_eq!(p.samples, 500);
+    }
+
+    #[test]
+    fn profile_edge_probs_match_priors() {
+        let g = apps::corrective_rag();
+        let p = profile_graph(&g, 4000, 7);
+        // Find grader→generator edge; empirical prob ≈ 0.7.
+        let grader = g.node_by_name("grader").unwrap().id;
+        let gen = g.node_by_name("generator").unwrap().id;
+        let (i, _) = g
+            .edges
+            .iter()
+            .enumerate()
+            .find(|(_, e)| e.from == grader && e.to == gen)
+            .unwrap();
+        let prob = p.edge_probs[i];
+        assert!((prob - apps::CRAG_P_RELEVANT).abs() < 0.05, "prob {prob}");
+    }
+
+    #[test]
+    fn profile_alpha_positive_for_primary_resource() {
+        let g = apps::self_rag();
+        let p = profile_graph(&g, 300, 3);
+        for node in g.work_nodes() {
+            let has_alpha = ResourceKind::ALL
+                .iter()
+                .any(|&k| p.alpha_for(node.id, k) > 0.0);
+            assert!(has_alpha, "{} missing alpha", node.name);
+        }
+    }
+
+    #[test]
+    fn profile_deterministic_for_seed() {
+        let g = apps::adaptive_rag();
+        let a = profile_graph(&g, 200, 9);
+        let b = profile_graph(&g, 200, 9);
+        for n in &g.nodes {
+            assert_eq!(a.mean_service[&n.id], b.mean_service[&n.id]);
+        }
+    }
+}

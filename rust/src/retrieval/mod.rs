@@ -1,0 +1,14 @@
+//! Retrieval substrate — the ChromaDB substitute.
+//!
+//! An IVF (inverted-file) dense vector index: passages are clustered into
+//! lists by k-means; a query probes the nearest lists and exact-scores the
+//! candidates. The `search_ef` knob bounds the number of candidates
+//! scanned — the same latency/recall tradeoff the paper tunes in ChromaDB
+//! (Fig. 4: for small K, low `search_ef` is up to ~20× faster).
+//!
+//! Scoring runs either in pure Rust (`score_block`) or through the Pallas
+//! `retrieval_score` artifact (live mode; see `runtime::scorer`).
+
+pub mod store;
+
+pub use store::{IvfIndex, IvfParams, SearchResult};

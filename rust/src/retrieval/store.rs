@@ -1,0 +1,324 @@
+//! IVF dense-vector index with a `search_ef` candidate bound.
+
+use crate::util::rng::Rng;
+
+/// Index construction parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct IvfParams {
+    /// Number of inverted lists (clusters).
+    pub n_lists: usize,
+    /// Lloyd iterations for k-means.
+    pub kmeans_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for IvfParams {
+    fn default() -> Self {
+        IvfParams { n_lists: 32, kmeans_iters: 8, seed: 0 }
+    }
+}
+
+/// One search hit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SearchResult {
+    pub id: usize,
+    pub score: f32,
+}
+
+/// Inverted-file index over unit-norm embeddings.
+pub struct IvfIndex {
+    dim: usize,
+    /// Flattened embeddings, row-major [n, dim].
+    vectors: Vec<f32>,
+    /// Cluster centroids [n_lists, dim].
+    centroids: Vec<f32>,
+    /// Member vector ids per list.
+    lists: Vec<Vec<usize>>,
+}
+
+impl IvfIndex {
+    /// Build from row-major `vectors` ([n, dim]).
+    pub fn build(vectors: Vec<f32>, dim: usize, params: IvfParams) -> IvfIndex {
+        assert!(dim > 0 && vectors.len() % dim == 0);
+        let n = vectors.len() / dim;
+        assert!(n > 0);
+        let n_lists = params.n_lists.min(n);
+        let mut rng = Rng::new(params.seed);
+
+        // k-means++ -lite init: random distinct rows.
+        let mut idxs: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idxs);
+        let mut centroids: Vec<f32> = Vec::with_capacity(n_lists * dim);
+        for &i in idxs.iter().take(n_lists) {
+            centroids.extend_from_slice(&vectors[i * dim..(i + 1) * dim]);
+        }
+
+        let mut assign = vec![0usize; n];
+        for _ in 0..params.kmeans_iters {
+            // Assign.
+            for i in 0..n {
+                let v = &vectors[i * dim..(i + 1) * dim];
+                let mut best = (f32::NEG_INFINITY, 0usize);
+                for c in 0..n_lists {
+                    let s = dot(v, &centroids[c * dim..(c + 1) * dim]);
+                    if s > best.0 {
+                        best = (s, c);
+                    }
+                }
+                assign[i] = best.1;
+            }
+            // Update (mean, renormalized — cosine k-means).
+            let mut sums = vec![0f32; n_lists * dim];
+            let mut counts = vec![0usize; n_lists];
+            for i in 0..n {
+                let c = assign[i];
+                counts[c] += 1;
+                for d in 0..dim {
+                    sums[c * dim + d] += vectors[i * dim + d];
+                }
+            }
+            for c in 0..n_lists {
+                if counts[c] == 0 {
+                    // Re-seed empty cluster with a random row.
+                    let i = rng.index(n);
+                    sums[c * dim..(c + 1) * dim]
+                        .copy_from_slice(&vectors[i * dim..(i + 1) * dim]);
+                    counts[c] = 1;
+                }
+                let norm = sums[c * dim..(c + 1) * dim]
+                    .iter()
+                    .map(|x| x * x)
+                    .sum::<f32>()
+                    .sqrt()
+                    .max(1e-9);
+                for d in 0..dim {
+                    centroids[c * dim + d] = sums[c * dim + d] / norm;
+                }
+            }
+        }
+        // Final assignment into lists.
+        let mut lists = vec![Vec::new(); n_lists];
+        for i in 0..n {
+            let v = &vectors[i * dim..(i + 1) * dim];
+            let mut best = (f32::NEG_INFINITY, 0usize);
+            for c in 0..n_lists {
+                let s = dot(v, &centroids[c * dim..(c + 1) * dim]);
+                if s > best.0 {
+                    best = (s, c);
+                }
+            }
+            lists[best.1].push(i);
+        }
+        IvfIndex { dim, vectors, centroids, lists }
+    }
+
+    pub fn len(&self) -> usize {
+        self.vectors.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vectors.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn n_lists(&self) -> usize {
+        self.lists.len()
+    }
+
+    /// Candidate ids scanned for a query at a given `search_ef`: nearest
+    /// lists are probed (by centroid similarity) until at least
+    /// `search_ef` candidates have been gathered.
+    pub fn candidates(&self, query: &[f32], search_ef: usize) -> Vec<usize> {
+        assert_eq!(query.len(), self.dim);
+        let mut order: Vec<(f32, usize)> = (0..self.lists.len())
+            .map(|c| (dot(query, &self.centroids[c * self.dim..(c + 1) * self.dim]), c))
+            .collect();
+        order.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut cand = Vec::with_capacity(search_ef + 64);
+        for (_, c) in order {
+            cand.extend_from_slice(&self.lists[c]);
+            if cand.len() >= search_ef {
+                break;
+            }
+        }
+        cand
+    }
+
+    /// Exact-score a candidate set and return the top-k.
+    pub fn score_candidates(&self, query: &[f32], cand: &[usize], k: usize) -> Vec<SearchResult> {
+        let mut scored: Vec<SearchResult> = cand
+            .iter()
+            .map(|&i| SearchResult {
+                id: i,
+                score: dot(query, &self.vectors[i * self.dim..(i + 1) * self.dim]),
+            })
+            .collect();
+        // Partial select: top-k by score.
+        let k = k.min(scored.len());
+        scored.select_nth_unstable_by(k.saturating_sub(1), |a, b| {
+            b.score.partial_cmp(&a.score).unwrap()
+        });
+        scored.truncate(k);
+        scored.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+        scored
+    }
+
+    /// Search: probe lists up to `search_ef` candidates, return top-k.
+    pub fn search(&self, query: &[f32], k: usize, search_ef: usize) -> Vec<SearchResult> {
+        let cand = self.candidates(query, search_ef.max(k));
+        self.score_candidates(query, &cand, k)
+    }
+
+    /// Brute-force exact top-k (ground truth for recall).
+    pub fn search_exact(&self, query: &[f32], k: usize) -> Vec<SearchResult> {
+        let all: Vec<usize> = (0..self.len()).collect();
+        self.score_candidates(query, &all, k)
+    }
+
+    /// Recall@k of `got` against ground-truth `exact`.
+    pub fn recall(got: &[SearchResult], exact: &[SearchResult]) -> f64 {
+        if exact.is_empty() {
+            return 1.0;
+        }
+        let truth: std::collections::HashSet<usize> = exact.iter().map(|r| r.id).collect();
+        let hit = got.iter().filter(|r| truth.contains(&r.id)).count();
+        hit as f64 / exact.len() as f64
+    }
+
+    /// Raw vector row (used by the XLA scorer path to build shards).
+    pub fn vector(&self, i: usize) -> &[f32] {
+        &self.vectors[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0f32;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+    use crate::workload::corpus::Corpus;
+
+    fn build_test_index(n: usize, dim: usize, seed: u64) -> (IvfIndex, Corpus) {
+        let corpus = Corpus::generate(n, 8, 64, seed);
+        let mut vectors = Vec::with_capacity(n * dim);
+        for p in &corpus.passages {
+            vectors.extend(Corpus::hash_embed(&p.text, dim));
+        }
+        (IvfIndex::build(vectors, dim, IvfParams::default()), corpus)
+    }
+
+    #[test]
+    fn exact_search_finds_self() {
+        let (idx, _) = build_test_index(500, 32, 0);
+        for i in [0usize, 100, 499] {
+            let q: Vec<f32> = idx.vector(i).to_vec();
+            let top = idx.search_exact(&q, 1);
+            assert_eq!(top[0].id, i);
+        }
+    }
+
+    #[test]
+    fn higher_ef_higher_recall() {
+        let (idx, corpus) = build_test_index(2000, 32, 1);
+        let mut qg = crate::workload::queries::QueryGen::new(&corpus, 3);
+        let k = 10;
+        let mut recalls = Vec::new();
+        for ef in [20usize, 200, 2000] {
+            let mut total = 0.0;
+            let trials = 20;
+            for _ in 0..trials {
+                let q = qg.next();
+                let qe = Corpus::hash_embed(&q.text, 32);
+                let got = idx.search(&qe, k, ef);
+                let exact = idx.search_exact(&qe, k);
+                total += IvfIndex::recall(&got, &exact);
+            }
+            recalls.push(total / trials as f64);
+        }
+        assert!(recalls[0] <= recalls[1] + 0.05, "{recalls:?}");
+        assert!(recalls[1] <= recalls[2] + 0.05, "{recalls:?}");
+        // Full-ef scan must be exact.
+        assert!(recalls[2] > 0.999, "{recalls:?}");
+    }
+
+    #[test]
+    fn candidates_bounded_by_ef_granularity() {
+        let (idx, _) = build_test_index(1000, 32, 2);
+        let q = idx.vector(0).to_vec();
+        let c_small = idx.candidates(&q, 10);
+        let c_large = idx.candidates(&q, 1000);
+        assert!(c_small.len() < c_large.len());
+        assert_eq!(c_large.len(), 1000, "full probe covers corpus");
+    }
+
+    #[test]
+    fn search_results_sorted_and_k_bounded() {
+        let (idx, _) = build_test_index(300, 16, 3);
+        let q = idx.vector(5).to_vec();
+        let res = idx.search(&q, 7, 100);
+        assert_eq!(res.len(), 7);
+        for w in res.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+
+    #[test]
+    fn lists_partition_the_corpus() {
+        let (idx, _) = build_test_index(400, 16, 4);
+        let mut seen = vec![false; idx.len()];
+        for l in &idx.lists {
+            for &i in l {
+                assert!(!seen[i], "duplicate membership {i}");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn recall_metric_sane() {
+        let a = [SearchResult { id: 1, score: 1.0 }, SearchResult { id: 2, score: 0.9 }];
+        let b = [SearchResult { id: 1, score: 1.0 }, SearchResult { id: 3, score: 0.8 }];
+        assert_eq!(IvfIndex::recall(&a, &b), 0.5);
+        assert_eq!(IvfIndex::recall(&a, &a), 1.0);
+        assert_eq!(IvfIndex::recall(&[], &[]), 1.0);
+    }
+
+    #[test]
+    fn search_property_topk_dominates_rest() {
+        property("ivf top-k dominance", 10, |g| {
+            let n = g.usize(100, 400);
+            let (idx, _) = build_test_index(n, 16, g.i64(0, 1 << 20) as u64);
+            let qi = g.usize(0, n - 1);
+            let q = idx.vector(qi).to_vec();
+            let k = g.usize(1, 10);
+            let res = idx.search_exact(&q, k);
+            // every returned score >= any non-returned score
+            let min_ret = res.last().unwrap().score;
+            let ids: std::collections::HashSet<usize> = res.iter().map(|r| r.id).collect();
+            for i in 0..n {
+                if !ids.contains(&i) {
+                    let s: f32 = idx
+                        .vector(i)
+                        .iter()
+                        .zip(&q)
+                        .map(|(a, b)| a * b)
+                        .sum();
+                    assert!(s <= min_ret + 1e-5);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,81 @@
+//! Live query-complexity classifier (A-RAG): embedder → 3-way MLP
+//! artifact. Classes: 0 simple (LLM-only), 1 standard (single-pass RAG),
+//! 2 complex (iterative RAG).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::embedder::Embedder;
+use super::engine::{Engine, Tensor};
+
+pub struct Classifier {
+    embedder: Embedder,
+    engine: Engine,
+    batch: usize,
+    dim: usize,
+    n_classes: usize,
+}
+
+impl Classifier {
+    pub fn new(dir: &Path) -> Result<Classifier> {
+        let embedder = Embedder::new(dir)?;
+        let engine = Engine::load(dir, Some(&["classifier"]))?;
+        let spec = engine
+            .manifest()
+            .artifact("classifier")
+            .context("classifier artifact missing")?;
+        let batch = spec.inputs[0].shape[0];
+        let dim = spec.inputs[0].shape[1];
+        let n_classes = spec.outputs[0].shape[1];
+        Ok(Classifier { embedder, engine, batch, dim, n_classes })
+    }
+
+    /// Classify a batch of query texts into complexity classes.
+    pub fn classify_batch(&self, texts: &[&[u8]]) -> Result<Vec<u8>> {
+        anyhow::ensure!(!texts.is_empty() && texts.len() <= self.batch);
+        let embs = self.embedder.embed_batch(texts)?;
+        let mut flat = Vec::with_capacity(self.batch * self.dim);
+        for i in 0..self.batch {
+            if i < embs.len() {
+                flat.extend_from_slice(&embs[i]);
+            } else {
+                flat.extend(std::iter::repeat(0.0).take(self.dim));
+            }
+        }
+        let out = self.engine.execute("classifier", &[Tensor::F32(flat)])?;
+        let logits = out[0].as_f32()?;
+        Ok((0..texts.len())
+            .map(|i| {
+                let row = &logits[i * self.n_classes..(i + 1) * self.n_classes];
+                let mut best = 0;
+                for (c, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = c;
+                    }
+                }
+                best as u8
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, default_artifacts_dir};
+
+    #[test]
+    fn classifies_deterministically_into_valid_classes() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let c = Classifier::new(&default_artifacts_dir()).unwrap();
+        let texts: Vec<&[u8]> = vec![b"what is rust", b"explain quantum chromodynamics in detail"];
+        let a = c.classify_batch(&texts).unwrap();
+        let b = c.classify_batch(&texts).unwrap();
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&cls| cls < 3));
+    }
+}

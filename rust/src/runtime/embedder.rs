@@ -1,0 +1,112 @@
+//! Live embedder: byte text → unit-norm embedding via the AOT artifact.
+//! Used for corpus indexing (offline) and query embedding (request path).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::engine::{Engine, Tensor};
+use super::generator::tokenize;
+
+pub struct Embedder {
+    engine: Engine,
+    batch: usize,
+    seq: usize,
+    dim: usize,
+}
+
+impl Embedder {
+    pub fn new(dir: &Path) -> Result<Embedder> {
+        let engine = Engine::load(dir, Some(&["embedder"]))?;
+        let spec = engine
+            .manifest()
+            .artifact("embedder")
+            .context("embedder artifact missing")?;
+        let batch = spec.inputs[0].shape[0];
+        let seq = spec.inputs[0].shape[1];
+        let dim = spec.outputs[0].shape[1];
+        Ok(Embedder { engine, batch, seq, dim })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Embed up to `batch` texts (padded internally). Returns one vector
+    /// per input text.
+    pub fn embed_batch(&self, texts: &[&[u8]]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(!texts.is_empty() && texts.len() <= self.batch);
+        let mut tokens = Vec::with_capacity(self.batch * self.seq);
+        let mut lengths = Vec::with_capacity(self.batch);
+        for i in 0..self.batch {
+            let text: &[u8] = if i < texts.len() { texts[i] } else { b"." };
+            let (t, l) = tokenize(text, self.seq);
+            tokens.extend_from_slice(&t);
+            lengths.push(l);
+        }
+        let out = self
+            .engine
+            .execute("embedder", &[Tensor::I32(tokens), Tensor::I32(lengths)])?;
+        let emb = out[0].as_f32()?;
+        Ok(texts
+            .iter()
+            .enumerate()
+            .map(|(i, _)| emb[i * self.dim..(i + 1) * self.dim].to_vec())
+            .collect())
+    }
+
+    /// Embed an arbitrary number of texts in batches.
+    pub fn embed_all(&self, texts: &[Vec<u8>]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(texts.len());
+        for chunk in texts.chunks(self.batch) {
+            let refs: Vec<&[u8]> = chunk.iter().map(|t| t.as_slice()).collect();
+            out.extend(self.embed_batch(&refs)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, default_artifacts_dir};
+
+    #[test]
+    fn embeddings_unit_norm_and_padding_independent() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let e = Embedder::new(&default_artifacts_dir()).unwrap();
+        let texts: Vec<&[u8]> = vec![b"alpha bravo", b"charlie delta"];
+        let full = e.embed_batch(&texts).unwrap();
+        for v in &full {
+            let n: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-3);
+        }
+        // A text's embedding must not depend on its batch-mates.
+        let solo = e.embed_batch(&[b"alpha bravo"]).unwrap();
+        for (a, b) in solo[0].iter().zip(&full[0]) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn embed_all_chunks() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let e = Embedder::new(&default_artifacts_dir()).unwrap();
+        let texts: Vec<Vec<u8>> = (0..19)
+            .map(|i| format!("passage number {i}").into_bytes())
+            .collect();
+        let embs = e.embed_all(&texts).unwrap();
+        assert_eq!(embs.len(), 19);
+        assert_eq!(embs[0].len(), e.dim());
+    }
+}

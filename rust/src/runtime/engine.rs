@@ -1,0 +1,305 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once,
+//! and executes them with shape/dtype checking against the manifest.
+//!
+//! HLO *text* (not serialized protos) is the interchange format — see
+//! /opt/xla-example/README.md: jax ≥ 0.5 emits 64-bit instruction ids the
+//! crate's xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Dtype, Manifest};
+
+/// A host tensor crossing the artifact boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Tensor::F32(_) => Dtype::F32,
+            Tensor::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            Tensor::I32(_) => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v) => Ok(v),
+            Tensor::F32(_) => bail!("expected i32 tensor"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            Tensor::I32(_) => bail!("expected f32 tensor"),
+        }
+    }
+}
+
+/// One compiled artifact.
+struct Compiled {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The engine owns a PJRT client and the compiled executables.
+///
+/// PJRT handles are not `Send`; each worker thread constructs its own
+/// `Engine` (compilation of these small modules takes tens of ms).
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, Compiled>,
+    dir: PathBuf,
+}
+
+impl Engine {
+    /// Load the manifest and compile the named artifacts (None = all).
+    pub fn load(dir: &Path, names: Option<&[&str]>) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut compiled = HashMap::new();
+        for spec in &manifest.artifacts {
+            if let Some(ns) = names {
+                if !ns.contains(&spec.name.as_str()) {
+                    continue;
+                }
+            }
+            let path = dir.join(&spec.path);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", spec.name))?;
+            compiled.insert(spec.name.clone(), Compiled { spec: spec.clone(), exe });
+        }
+        Ok(Engine { client, manifest, compiled, dir: dir.to_path_buf() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Lazily compile one more artifact (used when a batcher needs a new
+    /// bucket size at runtime).
+    pub fn ensure(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self
+            .manifest
+            .artifact(name)
+            .with_context(|| format!("unknown artifact '{name}'"))?
+            .clone();
+        let path = self.dir.join(&spec.path);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8")?)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.compiled.insert(name.to_string(), Compiled { spec, exe });
+        Ok(())
+    }
+
+    /// Execute with raw literals (hot-path variant: no host-vector
+    /// round-trips — callers keep large state like the KV cache as
+    /// `xla::Literal` across steps). Outputs in manifest order.
+    pub fn execute_literals(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let c = self
+            .compiled
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))?;
+        if inputs.len() != c.spec.inputs.len() {
+            bail!("'{name}' expects {} inputs, got {}", c.spec.inputs.len(), inputs.len());
+        }
+        let result = c.exe.execute::<xla::Literal>(inputs)?;
+        let first = result
+            .first()
+            .and_then(|r| r.first())
+            .context("empty execution result")?
+            .to_literal_sync()?;
+        let parts = first.to_tuple()?;
+        if parts.len() != c.spec.outputs.len() {
+            bail!("'{name}' returned {} outputs, manifest says {}", parts.len(), c.spec.outputs.len());
+        }
+        Ok(parts)
+    }
+
+    /// Build a shape-checked input literal for an artifact parameter.
+    pub fn input_literal(&self, name: &str, index: usize, t: &Tensor) -> Result<xla::Literal> {
+        let c = self
+            .compiled
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))?;
+        let spec = c.spec.inputs.get(index).context("input index out of range")?;
+        anyhow::ensure!(t.dtype() == spec.dtype, "'{name}' input {index}: dtype mismatch");
+        anyhow::ensure!(
+            t.len() == spec.elements(),
+            "'{name}' input {index}: {} elements, expected {}",
+            t.len(),
+            spec.elements()
+        );
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match t {
+            Tensor::F32(v) => xla::Literal::vec1(v),
+            Tensor::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(if dims.len() == 1 { lit } else { lit.reshape(&dims)? })
+    }
+
+    /// Execute an artifact with host tensors; validates shapes/dtypes
+    /// against the manifest and returns outputs in manifest order.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let c = self
+            .compiled
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not loaded"))?;
+        if inputs.len() != c.spec.inputs.len() {
+            bail!(
+                "'{name}' expects {} inputs, got {}",
+                c.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&c.spec.inputs) {
+            if t.dtype() != spec.dtype {
+                bail!("'{name}' input '{}': dtype mismatch", spec.name);
+            }
+            if t.len() != spec.elements() {
+                bail!(
+                    "'{name}' input '{}': {} elements, expected {:?}={}",
+                    spec.name,
+                    t.len(),
+                    spec.shape,
+                    spec.elements()
+                );
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match t {
+                Tensor::F32(v) => xla::Literal::vec1(v),
+                Tensor::I32(v) => xla::Literal::vec1(v),
+            };
+            // 0-d and 1-d shapes can skip the reshape.
+            let lit = if dims.len() == 1 { lit } else { lit.reshape(&dims)? };
+            literals.push(lit);
+        }
+        let result = c.exe.execute::<xla::Literal>(&literals)?;
+        // jax lowering uses return_tuple=True: one buffer holding a tuple.
+        let first = result
+            .first()
+            .and_then(|r| r.first())
+            .context("empty execution result")?
+            .to_literal_sync()?;
+        let parts = first.to_tuple()?;
+        if parts.len() != c.spec.outputs.len() {
+            bail!(
+                "'{name}' returned {} outputs, manifest says {}",
+                parts.len(),
+                c.spec.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&c.spec.outputs) {
+            let t = match spec.dtype {
+                Dtype::F32 => Tensor::F32(lit.to_vec::<f32>()?),
+                Dtype::I32 => Tensor::I32(lit.to_vec::<i32>()?),
+            };
+            if t.len() != spec.elements() {
+                bail!("'{name}' output '{}': unexpected element count", spec.name);
+            }
+            out.push(t);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, default_artifacts_dir};
+
+    fn engine(names: &[&str]) -> Option<Engine> {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Engine::load(&default_artifacts_dir(), Some(names)).unwrap())
+    }
+
+    #[test]
+    fn embedder_roundtrip() {
+        let Some(e) = engine(&["embedder"]) else { return };
+        let spec = e.manifest().artifact("embedder").unwrap().clone();
+        let (b, s) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+        let tokens: Vec<i32> = (0..b * s).map(|i| (i % 200 + 1) as i32).collect();
+        let lengths: Vec<i32> = (0..b).map(|i| (8 + i) as i32).collect();
+        let out = e
+            .execute("embedder", &[Tensor::I32(tokens), Tensor::I32(lengths)])
+            .unwrap();
+        let emb = out[0].as_f32().unwrap();
+        assert_eq!(emb.len(), b * 64);
+        // Rows are unit-norm (model invariant).
+        for r in 0..b {
+            let norm: f32 = emb[r * 64..(r + 1) * 64].iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-3, "row {r} norm {norm}");
+        }
+    }
+
+    #[test]
+    fn execute_validates_shapes() {
+        let Some(e) = engine(&["classifier"]) else { return };
+        // Wrong element count must error, not crash.
+        let r = e.execute("classifier", &[Tensor::F32(vec![0.0; 7])]);
+        assert!(r.is_err());
+        // Wrong dtype must error.
+        let r = e.execute("classifier", &[Tensor::I32(vec![0; 8 * 64])]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn classifier_runs() {
+        let Some(e) = engine(&["classifier"]) else { return };
+        let emb = vec![0.1f32; 8 * 64];
+        let out = e.execute("classifier", &[Tensor::F32(emb)]).unwrap();
+        let logits = out[0].as_f32().unwrap();
+        assert_eq!(logits.len(), 8 * 3);
+        assert!(logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let Some(e) = engine(&["classifier"]) else { return };
+        assert!(e.execute("nope", &[]).is_err());
+    }
+}

@@ -1,0 +1,363 @@
+//! Batched LLM serving loop over the AOT generator artifacts.
+//!
+//! vLLM-style bucketed batching: the generator is compiled for batch sizes
+//! {1,2,4,8}; a request batch is padded up to the nearest bucket. The KV
+//! cache is threaded explicitly through the artifact boundary
+//! (`prefill → (logits, kv)`, `decode(kv, token, pos) → (logits, kv)`), so
+//! the Rust side owns scheduling while XLA owns math.
+//!
+//! Tokens are bytes (vocab 256); token 0 is PAD/EOS.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::{Engine, Tensor};
+
+/// EOS/PAD token id.
+pub const EOS: i32 = 0;
+
+/// One generation request.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub prompt: Vec<u8>,
+    pub max_new_tokens: usize,
+    /// Greedy if None, else softmax temperature sampling with this seed.
+    pub temperature: Option<(f64, u64)>,
+}
+
+impl GenRequest {
+    pub fn greedy(prompt: &[u8], max_new_tokens: usize) -> Self {
+        GenRequest { prompt: prompt.to_vec(), max_new_tokens, temperature: None }
+    }
+}
+
+/// Result of one request.
+#[derive(Clone, Debug)]
+pub struct GenResult {
+    pub output: Vec<u8>,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+}
+
+/// Timing of one batch execution (for telemetry / EXPERIMENTS.md).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchTiming {
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+    pub decode_steps: usize,
+    pub batch_size: usize,
+}
+
+/// Byte-level tokenizer: text bytes are tokens; 0 is reserved.
+pub fn tokenize(text: &[u8], max_len: usize) -> (Vec<i32>, i32) {
+    let n = text.len().min(max_len).max(1);
+    let mut toks: Vec<i32> = text[..text.len().min(max_len)]
+        .iter()
+        .map(|&b| if b == 0 { 1 } else { b as i32 })
+        .collect();
+    if toks.is_empty() {
+        toks.push(1); // empty prompt: single dummy token
+    }
+    toks.resize(max_len, 0);
+    (toks, n as i32)
+}
+
+/// The batched generator.
+pub struct Generator {
+    engine: Engine,
+    batch_sizes: Vec<usize>,
+    max_seq: usize,
+    vocab: usize,
+    kv_elems_per_b: usize,
+}
+
+impl Generator {
+    pub fn new(dir: &Path) -> Result<Generator> {
+        // Compile every prefill/decode bucket.
+        let manifest = super::manifest::Manifest::load(dir)?;
+        let batch_sizes = manifest.gen_batch_sizes()?;
+        let names: Vec<String> = batch_sizes
+            .iter()
+            .flat_map(|b| {
+                vec![format!("generator_prefill_b{b}"), format!("generator_decode_b{b}")]
+            })
+            .collect();
+        let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let engine = Engine::load(dir, Some(&name_refs))?;
+        let max_seq = manifest.config_usize("max_seq")?;
+        let vocab = manifest.config_usize("vocab")?;
+        let l = manifest.config_usize("n_layers")?;
+        let h = manifest.config_usize("n_heads")?;
+        let dh = manifest.config_usize("d_head")?;
+        Ok(Generator {
+            engine,
+            batch_sizes,
+            max_seq,
+            vocab,
+            kv_elems_per_b: l * 2 * h * max_seq * dh,
+        })
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Smallest compiled bucket that fits `n` requests.
+    pub fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.batch_sizes
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .with_context(|| format!("no batch bucket fits {n} requests (max {:?})", self.batch_sizes.last()))
+    }
+
+    pub fn max_batch(&self) -> usize {
+        *self.batch_sizes.last().unwrap()
+    }
+
+    /// Generate for a batch of requests (≤ max bucket). `on_token` is the
+    /// streaming hook: called with (request index, byte) as tokens decode.
+    pub fn generate_batch(
+        &self,
+        reqs: &[GenRequest],
+        mut on_token: impl FnMut(usize, u8),
+    ) -> Result<(Vec<GenResult>, BatchTiming)> {
+        if reqs.is_empty() {
+            bail!("empty batch");
+        }
+        let b = self.bucket_for(reqs.len())?;
+        let prefill = format!("generator_prefill_b{b}");
+        let decode = format!("generator_decode_b{b}");
+
+        // Build padded token matrix.
+        let mut tokens = Vec::with_capacity(b * self.max_seq);
+        let mut lengths = Vec::with_capacity(b);
+        for i in 0..b {
+            let prompt: &[u8] = if i < reqs.len() { &reqs[i].prompt } else { b"." };
+            // Leave room for generation.
+            let budget = self.max_seq.saturating_sub(
+                reqs.get(i).map_or(1, |r| r.max_new_tokens).min(self.max_seq / 2),
+            );
+            let (t, l) = tokenize(prompt, self.max_seq);
+            let l = (l as usize).min(budget.max(1)) as i32;
+            tokens.extend_from_slice(&t);
+            lengths.push(l);
+        }
+
+        let t0 = Instant::now();
+        // Hot path (§Perf): keep the KV cache as an xla::Literal across
+        // steps — the Tensor round-trip copied the (multi-MB) cache three
+        // times per decoded token.
+        let toks_lit = self.engine.input_literal(&prefill, 0, &Tensor::I32(tokens))?;
+        let len_lit = self.engine.input_literal(&prefill, 1, &Tensor::I32(lengths.clone()))?;
+        let mut out = self.engine.execute_literals(&prefill, &[toks_lit, len_lit])?;
+        let prefill_secs = t0.elapsed().as_secs_f64();
+        let mut kv = out.pop().context("missing kv output")?;
+        let mut logits: Vec<f32> = out.pop().context("missing logits")?.to_vec()?;
+        debug_assert_eq!(kv.size_bytes(), self.kv_elems_per_b * b * 4);
+
+        let mut outputs: Vec<Vec<u8>> = vec![Vec::new(); reqs.len()];
+        let mut done: Vec<bool> = (0..reqs.len()).map(|_| false).collect();
+        let mut pos: Vec<i32> = lengths.clone();
+        let max_new = reqs.iter().map(|r| r.max_new_tokens).max().unwrap_or(0);
+        let mut steps = 0usize;
+        let t1 = Instant::now();
+        for step in 0..max_new {
+            // Sample next token per live slot.
+            let mut next: Vec<i32> = Vec::with_capacity(b);
+            for slot in 0..b {
+                let row = &logits[slot * self.vocab..(slot + 1) * self.vocab];
+                let tok = if slot >= reqs.len() || done[slot] {
+                    EOS
+                } else {
+                    sample(row, reqs[slot].temperature, step)
+                };
+                if slot < reqs.len() && !done[slot] {
+                    if tok == EOS || outputs[slot].len() + 1 >= reqs[slot].max_new_tokens {
+                        done[slot] = true;
+                    }
+                    if tok != EOS {
+                        outputs[slot].push(tok as u8);
+                        on_token(slot, tok as u8);
+                    }
+                }
+                next.push(tok);
+            }
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            // Positions: the sampled token is written at current pos.
+            let write_pos: Vec<i32> = pos
+                .iter()
+                .map(|&p| p.min(self.max_seq as i32 - 1))
+                .collect();
+            let next_lit = self.engine.input_literal(&decode, 1, &Tensor::I32(next))?;
+            let pos_lit = self.engine.input_literal(&decode, 2, &Tensor::I32(write_pos))?;
+            let mut out = self.engine.execute_literals(&decode, &[kv, next_lit, pos_lit])?;
+            kv = out.pop().context("missing kv output")?;
+            logits = out.pop().context("missing logits")?.to_vec()?;
+            for p in pos.iter_mut() {
+                *p = (*p + 1).min(self.max_seq as i32 - 1);
+            }
+            steps += 1;
+        }
+        let decode_secs = t1.elapsed().as_secs_f64();
+
+        let results = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| GenResult {
+                output: outputs[i].clone(),
+                prompt_tokens: r.prompt.len().min(self.max_seq),
+                generated_tokens: outputs[i].len(),
+            })
+            .collect();
+        Ok((results, BatchTiming { prefill_secs, decode_secs, decode_steps: steps, batch_size: b }))
+    }
+
+    /// Single-token verdict (grader / critic): prefill and reduce the
+    /// next-token distribution to a boolean. With the synthetic (randomly
+    /// initialized) LM the absolute 'Y'/'N' logit margin is dominated by
+    /// output-projection bias, so the verdict is derived from the argmax
+    /// token's parity — deterministic per input, varies across inputs,
+    /// which is what downstream control flow needs.
+    pub fn verdict(&self, text: &[u8]) -> Result<bool> {
+        let b = self.bucket_for(1)?;
+        let prefill = format!("generator_prefill_b{b}");
+        let mut tokens = Vec::with_capacity(b * self.max_seq);
+        let mut lengths = Vec::with_capacity(b);
+        for i in 0..b {
+            let prompt: &[u8] = if i == 0 { text } else { b"." };
+            let (t, l) = tokenize(prompt, self.max_seq);
+            tokens.extend_from_slice(&t);
+            lengths.push(l);
+        }
+        let out = self
+            .engine
+            .execute(&prefill, &[Tensor::I32(tokens), Tensor::I32(lengths)])?;
+        let logits = out[0].as_f32()?;
+        Ok(argmax(&logits[..self.vocab]) % 2 == 0)
+    }
+}
+
+/// Greedy argmax or temperature sampling over a logit row.
+fn sample(row: &[f32], temperature: Option<(f64, u64)>, step: usize) -> i32 {
+    match temperature {
+        None => argmax(row) as i32,
+        Some((temp, seed)) => {
+            let mut rng = crate::util::rng::Rng::new(seed ^ (step as u64).wrapping_mul(0x9E37));
+            let inv = 1.0 / temp.max(1e-3);
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let weights: Vec<f64> =
+                row.iter().map(|&l| (((l - m) as f64) * inv).exp()).collect();
+            rng.weighted(&weights) as i32
+        }
+    }
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, default_artifacts_dir};
+
+    fn generator() -> Option<Generator> {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Generator::new(&default_artifacts_dir()).unwrap())
+    }
+
+    #[test]
+    fn tokenize_pads_and_counts() {
+        let (t, l) = tokenize(b"hi", 8);
+        assert_eq!(l, 2);
+        assert_eq!(t, vec![104, 105, 0, 0, 0, 0, 0, 0]);
+        let (t, l) = tokenize(b"", 4);
+        assert_eq!(l, 1);
+        assert_eq!(t[0], 1);
+    }
+
+    #[test]
+    fn tokenize_truncates() {
+        let long = vec![65u8; 300];
+        let (t, l) = tokenize(&long, 128);
+        assert_eq!(t.len(), 128);
+        assert_eq!(l, 128);
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(g) = generator() else { return };
+        assert_eq!(g.bucket_for(1).unwrap(), 1);
+        assert_eq!(g.bucket_for(3).unwrap(), 4);
+        assert_eq!(g.bucket_for(8).unwrap(), 8);
+        assert!(g.bucket_for(9).is_err());
+    }
+
+    #[test]
+    fn generates_deterministic_greedy_output() {
+        let Some(g) = generator() else { return };
+        let req = GenRequest::greedy(b"What is the capital of France?", 8);
+        let (r1, t1) = g.generate_batch(std::slice::from_ref(&req), |_, _| {}).unwrap();
+        let (r2, _) = g.generate_batch(&[req], |_, _| {}).unwrap();
+        assert_eq!(r1[0].output, r2[0].output, "greedy must be deterministic");
+        assert!(r1[0].generated_tokens <= 8);
+        assert!(t1.prefill_secs > 0.0);
+        assert_eq!(t1.batch_size, 1);
+    }
+
+    #[test]
+    fn batch_matches_single_request() {
+        // Batching must not change a request's greedy output (prefill pads
+        // other slots; attention is masked per-row).
+        let Some(g) = generator() else { return };
+        let a = GenRequest::greedy(b"hello world", 6);
+        let bq = GenRequest::greedy(b"completely different prompt!", 6);
+        let (solo, _) = g.generate_batch(std::slice::from_ref(&a), |_, _| {}).unwrap();
+        let (duo, timing) = g.generate_batch(&[a, bq], |_, _| {}).unwrap();
+        assert_eq!(solo[0].output, duo[0].output);
+        assert_eq!(timing.batch_size, 2);
+    }
+
+    #[test]
+    fn streaming_callback_sees_every_token() {
+        let Some(g) = generator() else { return };
+        let req = GenRequest::greedy(b"stream me", 6);
+        let mut streamed = Vec::new();
+        let (res, _) = g
+            .generate_batch(&[req], |slot, byte| {
+                assert_eq!(slot, 0);
+                streamed.push(byte);
+            })
+            .unwrap();
+        assert_eq!(streamed, res[0].output);
+    }
+
+    #[test]
+    fn verdict_is_deterministic_and_input_sensitive() {
+        let Some(g) = generator() else { return };
+        let a = g.verdict(b"Does retrieved doc have relevant info? doc: Paris is in France").unwrap();
+        let a2 = g.verdict(b"Does retrieved doc have relevant info? doc: Paris is in France").unwrap();
+        assert_eq!(a, a2);
+        // Across many inputs both verdicts occur (not a constant function).
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..8 {
+            let text = format!("judge this doc number {i} with content xyz{i}");
+            seen.insert(g.verdict(text.as_bytes()).unwrap());
+        }
+        assert_eq!(seen.len(), 2, "verdict should vary with input");
+    }
+}

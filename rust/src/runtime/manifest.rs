@@ -1,0 +1,245 @@
+//! Parser for `artifacts/manifest.txt` — the line-based artifact
+//! description emitted by `python/compile/aot.py`. Shapes and model
+//! config cross the Python↔Rust boundary exactly once, here.
+//!
+//! Format:
+//! ```text
+//! config vocab 256
+//! artifact generator_decode_b8
+//! path generator_decode_b8.hlo.txt
+//! input kv f32 2,2,8,4,128,16
+//! output logits f32 8,256
+//! end
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of a tensor at the artifact boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype '{other}'"),
+        }
+    }
+}
+
+/// Named, shaped tensor.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO-text filename, relative to the artifacts dir.
+    pub path: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest: model config + artifact list.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub config: HashMap<String, String>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        let mut cur: Option<ArtifactSpec> = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let tag = parts.next().unwrap();
+            let rest: Vec<&str> = parts.collect();
+            let ctx = || format!("manifest line {}: '{line}'", lineno + 1);
+            match tag {
+                "config" => {
+                    if rest.len() != 2 {
+                        bail!("{}: config needs key value", ctx());
+                    }
+                    m.config.insert(rest[0].into(), rest[1].into());
+                }
+                "artifact" => {
+                    if cur.is_some() {
+                        bail!("{}: nested artifact", ctx());
+                    }
+                    cur = Some(ArtifactSpec {
+                        name: rest.first().context("artifact needs name")?.to_string(),
+                        path: String::new(),
+                        inputs: vec![],
+                        outputs: vec![],
+                    });
+                }
+                "path" => {
+                    cur.as_mut().with_context(ctx)?.path =
+                        rest.first().context("path needs value")?.to_string();
+                }
+                "input" | "output" => {
+                    if rest.len() != 3 {
+                        bail!("{}: need name dtype shape", ctx());
+                    }
+                    let spec = TensorSpec {
+                        name: rest[0].into(),
+                        dtype: Dtype::parse(rest[1])?,
+                        shape: rest[2]
+                            .split(',')
+                            .filter(|s| !s.is_empty())
+                            .map(|s| s.parse::<usize>().with_context(ctx))
+                            .collect::<Result<Vec<_>>>()?,
+                    };
+                    let a = cur.as_mut().with_context(ctx)?;
+                    if tag == "input" {
+                        a.inputs.push(spec);
+                    } else {
+                        a.outputs.push(spec);
+                    }
+                }
+                "end" => {
+                    let a = cur.take().with_context(ctx)?;
+                    if a.path.is_empty() {
+                        bail!("{}: artifact '{}' missing path", ctx(), a.name);
+                    }
+                    m.artifacts.push(a);
+                }
+                other => bail!("{}: unknown tag '{other}'", ctx()),
+            }
+        }
+        if cur.is_some() {
+            bail!("manifest ended inside an artifact block");
+        }
+        Ok(m)
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let p = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&p)
+            .with_context(|| format!("reading {}", p.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Integer config value (vocab, d_model, …).
+    pub fn config_usize(&self, key: &str) -> Result<usize> {
+        self.config
+            .get(key)
+            .with_context(|| format!("missing config '{key}'"))?
+            .parse()
+            .with_context(|| format!("config '{key}' not an integer"))
+    }
+
+    /// The compiled generator batch sizes, ascending.
+    pub fn gen_batch_sizes(&self) -> Result<Vec<usize>> {
+        let s = self
+            .config
+            .get("gen_batch_sizes")
+            .context("missing gen_batch_sizes")?;
+        let mut v = s
+            .split(',')
+            .map(|x| x.parse::<usize>().context("bad batch size"))
+            .collect::<Result<Vec<_>>>()?;
+        v.sort_unstable();
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+config vocab 256
+config gen_batch_sizes 4,1,8,2
+artifact embedder
+path embedder.hlo.txt
+input tokens i32 8,64
+input length i32 8
+output emb f32 8,64
+end
+artifact classifier
+path classifier.hlo.txt
+input emb f32 8,64
+output logits f32 8,3
+end
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.config_usize("vocab").unwrap(), 256);
+        assert_eq!(m.artifacts.len(), 2);
+        let e = m.artifact("embedder").unwrap();
+        assert_eq!(e.path, "embedder.hlo.txt");
+        assert_eq!(e.inputs[0].shape, vec![8, 64]);
+        assert_eq!(e.inputs[0].dtype, Dtype::I32);
+        assert_eq!(e.outputs[0].dtype, Dtype::F32);
+        assert_eq!(e.inputs[0].elements(), 512);
+    }
+
+    #[test]
+    fn batch_sizes_sorted() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.gen_batch_sizes().unwrap(), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn rejects_unknown_tag() {
+        assert!(Manifest::parse("bogus x y\n").is_err());
+    }
+
+    #[test]
+    fn rejects_unterminated_artifact() {
+        assert!(Manifest::parse("artifact a\npath p\n").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = "artifact a\npath p\ninput x f64 2\nend\n";
+        assert!(Manifest::parse(bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_path() {
+        assert!(Manifest::parse("artifact a\nend\n").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let dir = crate::runtime::default_artifacts_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifact("generator_decode_b8").is_some());
+        assert_eq!(m.config_usize("vocab").unwrap(), 256);
+    }
+}

@@ -1,0 +1,35 @@
+//! The live data plane: AOT-compiled XLA artifacts executed via PJRT.
+//!
+//! Build-time Python (`python/compile/aot.py`) lowers the JAX/Pallas
+//! models to HLO **text**; [`engine::Engine`] loads that text, compiles it
+//! on the PJRT CPU client, and executes it — Python never runs on the
+//! request path (the xla-crate pattern from /opt/xla-example/load_hlo).
+//!
+//! * [`manifest`] — parses `artifacts/manifest.txt` (shapes/dtypes/config).
+//! * [`engine`] — artifact loading + execution.
+//! * [`generator`] — batched LLM serving loop (prefill + decode with an
+//!   explicit KV cache threaded through the artifact boundary).
+//! * [`embedder`] / [`classifier`] / [`scorer`] — auxiliary models.
+
+pub mod classifier;
+pub mod embedder;
+pub mod engine;
+pub mod generator;
+pub mod manifest;
+pub mod scorer;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactSpec, Dtype, Manifest, TensorSpec};
+
+/// Default artifacts directory (relative to the repo root).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(d) = std::env::var("HARMONIA_ARTIFACTS") {
+        return d.into();
+    }
+    "artifacts".into()
+}
+
+/// True if AOT artifacts have been built (`make artifacts`).
+pub fn artifacts_available() -> bool {
+    default_artifacts_dir().join("manifest.txt").exists()
+}

@@ -1,0 +1,146 @@
+//! Live retrieval scorer: the Pallas blocked-matmul artifact
+//! (`retrieval_score`) scoring query embeddings against corpus shards.
+//! The Rust IVF store picks candidates; this scores them MXU-style.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::engine::{Engine, Tensor};
+
+pub struct XlaScorer {
+    engine: Engine,
+    batch: usize,
+    shard_n: usize,
+    dim: usize,
+}
+
+impl XlaScorer {
+    pub fn new(dir: &Path) -> Result<XlaScorer> {
+        let engine = Engine::load(dir, Some(&["retrieval_score"]))?;
+        let spec = engine
+            .manifest()
+            .artifact("retrieval_score")
+            .context("retrieval_score artifact missing")?;
+        let batch = spec.inputs[0].shape[0];
+        let dim = spec.inputs[0].shape[1];
+        let shard_n = spec.inputs[1].shape[0];
+        Ok(XlaScorer { engine, batch, shard_n, dim })
+    }
+
+    pub fn shard_n(&self) -> usize {
+        self.shard_n
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Score `queries` (≤ batch, each dim-long) against one shard
+    /// (`shard_n × dim`, padded with zero rows if needed). Returns
+    /// [n_queries][shard_n] scores.
+    pub fn score_shard(&self, queries: &[&[f32]], shard: &[f32]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(!queries.is_empty() && queries.len() <= self.batch);
+        anyhow::ensure!(shard.len() == self.shard_n * self.dim, "shard must be padded");
+        let mut q = Vec::with_capacity(self.batch * self.dim);
+        for i in 0..self.batch {
+            if i < queries.len() {
+                anyhow::ensure!(queries[i].len() == self.dim);
+                q.extend_from_slice(queries[i]);
+            } else {
+                q.extend(std::iter::repeat(0.0).take(self.dim));
+            }
+        }
+        let out = self
+            .engine
+            .execute("retrieval_score", &[Tensor::F32(q), Tensor::F32(shard.to_vec())])?;
+        let scores = out[0].as_f32()?;
+        Ok((0..queries.len())
+            .map(|i| scores[i * self.shard_n..(i + 1) * self.shard_n].to_vec())
+            .collect())
+    }
+
+    /// Top-k over a candidate set using shard-batched XLA scoring.
+    /// `vectors(i)` returns the embedding of candidate i.
+    pub fn topk_candidates(
+        &self,
+        query: &[f32],
+        candidates: &[usize],
+        vectors: impl Fn(usize) -> Vec<f32>,
+        k: usize,
+    ) -> Result<Vec<(usize, f32)>> {
+        let mut results: Vec<(usize, f32)> = Vec::with_capacity(candidates.len());
+        for chunk in candidates.chunks(self.shard_n) {
+            let mut shard = Vec::with_capacity(self.shard_n * self.dim);
+            for &c in chunk {
+                shard.extend(vectors(c));
+            }
+            shard.resize(self.shard_n * self.dim, 0.0);
+            let scores = self.score_shard(&[query], &shard)?;
+            for (j, &c) in chunk.iter().enumerate() {
+                results.push((c, scores[0][j]));
+            }
+        }
+        results.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        results.truncate(k);
+        Ok(results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, default_artifacts_dir};
+
+    #[test]
+    fn scores_match_cpu_dot_product() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let s = XlaScorer::new(&default_artifacts_dir()).unwrap();
+        let dim = s.dim();
+        let mut rng = crate::util::rng::Rng::new(0);
+        let q: Vec<f32> = (0..dim).map(|_| rng.f32() - 0.5).collect();
+        let shard: Vec<f32> = (0..s.shard_n() * dim).map(|_| rng.f32() - 0.5).collect();
+        let got = s.score_shard(&[&q], &shard).unwrap();
+        for row in 0..8 {
+            let expect: f32 = (0..dim).map(|d| q[d] * shard[row * dim + d]).sum();
+            assert!(
+                (got[0][row] - expect).abs() < 1e-3,
+                "row {row}: {} vs {expect}",
+                got[0][row]
+            );
+        }
+    }
+
+    #[test]
+    fn topk_orders_by_score() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let s = XlaScorer::new(&default_artifacts_dir()).unwrap();
+        let dim = s.dim();
+        // Candidate i has embedding e_i = i/n in first coordinate.
+        let n = 50;
+        let q = {
+            let mut v = vec![0.0f32; dim];
+            v[0] = 1.0;
+            v
+        };
+        let cands: Vec<usize> = (0..n).collect();
+        let top = s
+            .topk_candidates(&q, &cands, |i| {
+                let mut v = vec![0.0f32; dim];
+                v[0] = i as f32 / n as f32;
+                v
+            }, 5)
+            .unwrap();
+        assert_eq!(top.len(), 5);
+        assert_eq!(top[0].0, n - 1);
+        for w in top.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Simulated cluster: machines with CPU/GPU/RAM capacity, first-fit
+//! placement, and co-location accounting (Table 3: heterogeneous
+//! components co-locate with <1.1% interference).
+
+use crate::spec::graph::ResourceKind;
+
+/// One machine's remaining capacity.
+#[derive(Clone, Debug)]
+pub struct Machine {
+    pub cpu: f64,
+    pub gpu: f64,
+    pub ram: f64,
+    /// Does this machine currently host CPU-bound work / GPU-bound work?
+    pub hosts_cpu_comp: bool,
+    pub hosts_gpu_comp: bool,
+}
+
+impl Machine {
+    pub fn new(cpu: f64, gpu: f64, ram: f64) -> Self {
+        Machine { cpu, gpu, ram, hosts_cpu_comp: false, hosts_gpu_comp: false }
+    }
+
+    fn remaining(&self, k: ResourceKind) -> f64 {
+        match k {
+            ResourceKind::Cpu => self.cpu,
+            ResourceKind::Gpu => self.gpu,
+            ResourceKind::Ram => self.ram,
+        }
+    }
+
+    fn take(&mut self, k: ResourceKind, amt: f64) {
+        match k {
+            ResourceKind::Cpu => self.cpu -= amt,
+            ResourceKind::Gpu => self.gpu -= amt,
+            ResourceKind::Ram => self.ram -= amt,
+        }
+    }
+
+    fn give(&mut self, k: ResourceKind, amt: f64) {
+        self.take(k, -amt);
+    }
+}
+
+/// Measured co-location slowdown (Table 3 reports < 1.1% variance; we
+/// model 0.5%).
+pub const COLOCATION_SLOWDOWN: f64 = 1.005;
+
+/// The cluster: a bag of machines plus placement bookkeeping.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub machines: Vec<Machine>,
+}
+
+/// A successful placement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub machine: usize,
+    /// Whether this instance shares its machine with a different
+    /// resource-class component (co-location).
+    pub colocated: bool,
+}
+
+impl Cluster {
+    /// The paper's testbed: 4 machines × (32 CPU cores, 8 GPUs, 256 GiB).
+    pub fn paper_testbed() -> Cluster {
+        Cluster {
+            machines: (0..4).map(|_| Machine::new(32.0, 8.0, 256.0)).collect(),
+        }
+    }
+
+    pub fn uniform(n: usize, cpu: f64, gpu: f64, ram: f64) -> Cluster {
+        Cluster { machines: (0..n).map(|_| Machine::new(cpu, gpu, ram)).collect() }
+    }
+
+    /// Total capacity per resource (budget vector for the LP).
+    pub fn budgets(&self) -> Vec<(ResourceKind, f64)> {
+        let mut cpu = 0.0;
+        let mut gpu = 0.0;
+        let mut ram = 0.0;
+        for m in &self.machines {
+            cpu += m.cpu;
+            gpu += m.gpu;
+            ram += m.ram;
+        }
+        vec![(ResourceKind::Cpu, cpu), (ResourceKind::Gpu, gpu), (ResourceKind::Ram, ram)]
+    }
+
+    /// First-fit placement of an instance demanding `demands`.
+    /// `gpu_bound` tags the co-location class.
+    pub fn place(&mut self, demands: &[(ResourceKind, f64)], gpu_bound: bool) -> Option<Placement> {
+        'outer: for (mi, m) in self.machines.iter_mut().enumerate() {
+            for &(k, amt) in demands {
+                if m.remaining(k) + 1e-9 < amt {
+                    continue 'outer;
+                }
+            }
+            for &(k, amt) in demands {
+                m.take(k, amt);
+            }
+            let colocated = if gpu_bound { m.hosts_cpu_comp } else { m.hosts_gpu_comp };
+            if gpu_bound {
+                m.hosts_gpu_comp = true;
+            } else {
+                m.hosts_cpu_comp = true;
+            }
+            return Some(Placement { machine: mi, colocated });
+        }
+        None
+    }
+
+    /// Release an instance's resources.
+    pub fn release(&mut self, placement: Placement, demands: &[(ResourceKind, f64)]) {
+        let m = &mut self.machines[placement.machine];
+        for &(k, amt) in demands {
+            m.give(k, amt);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_budgets() {
+        let c = Cluster::paper_testbed();
+        let b = c.budgets();
+        assert!(b.contains(&(ResourceKind::Cpu, 128.0)));
+        assert!(b.contains(&(ResourceKind::Gpu, 32.0)));
+        assert!(b.contains(&(ResourceKind::Ram, 1024.0)));
+    }
+
+    #[test]
+    fn first_fit_places_and_exhausts() {
+        let mut c = Cluster::uniform(1, 16.0, 2.0, 64.0);
+        let gpu_demand = [(ResourceKind::Gpu, 1.0)];
+        assert!(c.place(&gpu_demand, true).is_some());
+        assert!(c.place(&gpu_demand, true).is_some());
+        assert!(c.place(&gpu_demand, true).is_none(), "only 2 GPUs");
+    }
+
+    #[test]
+    fn colocation_detected() {
+        let mut c = Cluster::uniform(1, 16.0, 2.0, 256.0);
+        let cpu_demand = [(ResourceKind::Cpu, 8.0), (ResourceKind::Ram, 112.0)];
+        let gpu_demand = [(ResourceKind::Gpu, 1.0)];
+        let p1 = c.place(&cpu_demand, false).unwrap();
+        assert!(!p1.colocated);
+        let p2 = c.place(&gpu_demand, true).unwrap();
+        assert!(p2.colocated, "GPU instance shares machine with retriever");
+    }
+
+    #[test]
+    fn release_restores_capacity() {
+        let mut c = Cluster::uniform(1, 8.0, 1.0, 64.0);
+        let d = [(ResourceKind::Gpu, 1.0)];
+        let p = c.place(&d, true).unwrap();
+        assert!(c.place(&d, true).is_none());
+        c.release(p, &d);
+        assert!(c.place(&d, true).is_some());
+    }
+
+    #[test]
+    fn multi_resource_demand_must_fit_entirely() {
+        let mut c = Cluster::uniform(2, 8.0, 1.0, 100.0);
+        // Fits CPU but not RAM on machine 0 after first placement.
+        let d = [(ResourceKind::Cpu, 4.0), (ResourceKind::Ram, 80.0)];
+        let p1 = c.place(&d, false).unwrap();
+        let p2 = c.place(&d, false).unwrap();
+        assert_ne!(p1.machine, p2.machine, "second must spill to machine 1");
+        assert!(c.place(&d, false).is_none());
+    }
+}

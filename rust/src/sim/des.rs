@@ -1,0 +1,144 @@
+//! Discrete-event core: a time-ordered event queue with stable FIFO
+//! tie-breaking (deterministic runs for fixed seeds).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// A scheduled event.
+struct Scheduled<E> {
+    time: f64,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Event queue with a virtual clock.
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    now: f64,
+    seq: u64,
+    processed: u64,
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `event` at absolute time `t` (clamped to now).
+    pub fn schedule(&mut self, t: f64, event: E) {
+        let t = t.max(self.now);
+        self.seq += 1;
+        self.heap.push(Scheduled { time: t, seq: self.seq, event });
+    }
+
+    /// Schedule after a delay.
+    pub fn schedule_in(&mut self, dt: f64, event: E) {
+        debug_assert!(dt >= 0.0);
+        self.schedule(self.now + dt, event);
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn next(&mut self) -> Option<(f64, E)> {
+        let s = self.heap.pop()?;
+        debug_assert!(s.time >= self.now);
+        self.now = s.time;
+        self.processed += 1;
+        Some((s.time, s.event))
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_pop_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, "c");
+        q.schedule(1.0, "a");
+        q.schedule(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.next().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, "first");
+        q.schedule(1.0, "second");
+        q.schedule(1.0, "third");
+        let order: Vec<&str> = std::iter::from_fn(|| q.next().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["first", "second", "third"]);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.schedule(5.0, 1u8);
+        q.schedule(2.0, 2u8);
+        let (t1, _) = q.next().unwrap();
+        assert_eq!(t1, 2.0);
+        assert_eq!(q.now(), 2.0);
+        // Scheduling in the past clamps to now.
+        q.schedule(1.0, 3u8);
+        let (t2, e) = q.next().unwrap();
+        assert_eq!((t2, e), (2.0, 3u8));
+        let (t3, _) = q.next().unwrap();
+        assert_eq!(t3, 5.0);
+        assert_eq!(q.processed(), 3);
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut q = EventQueue::new();
+        q.schedule(2.0, "x");
+        q.next();
+        q.schedule_in(0.5, "y");
+        let (t, _) = q.next().unwrap();
+        assert!((t - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,13 @@
+//! Discrete-event cluster simulator — the testbed substitute.
+//!
+//! Reproduces the paper's 4×8-A100 experiments on one machine by driving
+//! the real coordinator policy code over calibrated latency models:
+//! [`des`] provides the event core, [`cluster`] the machines/placement,
+//! [`simrun`] the serving world (Harmonia + both baselines).
+
+pub mod cluster;
+pub mod des;
+pub mod simrun;
+
+pub use cluster::Cluster;
+pub use simrun::{run_point, AblationFlags, SimConfig, SimResult, SimWorld, SystemKind};

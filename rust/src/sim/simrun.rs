@@ -1,0 +1,913 @@
+//! The serving simulation: one pipeline + one system (Harmonia or a
+//! baseline) + one trace → a [`SimResult`].
+//!
+//! The simulator drives the *actual* coordinator policy code (`Router`,
+//! `SlackPredictor`, `PrioQueue`, `Autoscaler`, `StreamPolicy`) against a
+//! virtual cluster whose component service times come from the calibrated
+//! latency models — so the paper-scale experiments measure the same
+//! policies a live deployment runs, at 32-GPU/1000-req scale on one box.
+
+use std::collections::{HashMap, HashSet};
+use std::time::Instant;
+
+use crate::alloc::{AllocationPlan, FlowProblem};
+use crate::coordinator::router::{InstanceState, Router, RoutingPolicy};
+use crate::coordinator::scheduler::{PrioQueue, QueueDiscipline, SlackPredictor};
+use crate::coordinator::streaming::{StreamPolicy, StreamingMode, CHUNK_OVERHEAD};
+use crate::coordinator::telemetry::Telemetry;
+use crate::coordinator::Autoscaler;
+use crate::metrics::{Recorder, RunReport};
+use crate::profile::models::{concurrency_slowdown, instance_concurrency, LatencyModel};
+use crate::profile::{profile_graph, Profile};
+use crate::spec::graph::{NodeId, PipelineGraph};
+use crate::util::rng::Rng;
+use crate::workload::TraceConfig;
+
+use super::cluster::{Cluster, COLOCATION_SLOWDOWN};
+use super::des::EventQueue;
+
+/// Which serving system to simulate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SystemKind {
+    /// Full Harmonia: LP allocation, load/state-aware routing, EDF+slack
+    /// scheduling, managed streaming, periodic reallocation.
+    Harmonia,
+    /// LangChain-like: the whole pipeline replicated as monolithic
+    /// processes; coarse-grained replication is the only scaling knob.
+    LangChain,
+    /// Haystack/Ray-like: per-component tasks, uniform static allocation,
+    /// idle-first dispatch, FIFO, unmanaged streaming.
+    Haystack,
+}
+
+impl SystemKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SystemKind::Harmonia => "harmonia",
+            SystemKind::LangChain => "langchain",
+            SystemKind::Haystack => "haystack",
+        }
+    }
+}
+
+/// Feature toggles for the Fig. 14 ablation (all true = full Harmonia).
+#[derive(Clone, Copy, Debug)]
+pub struct AblationFlags {
+    /// Periodic telemetry-driven re-solving (Resource Reallocation).
+    pub realloc: bool,
+    /// Load & state-aware routing (off → idle-first).
+    pub routing: bool,
+    /// Managed streaming granularity (off → the fixed-chunk baseline).
+    pub stream_mgmt: bool,
+    /// Deadline-aware scheduling (off → FIFO).
+    pub slo_sched: bool,
+}
+
+impl Default for AblationFlags {
+    fn default() -> Self {
+        AblationFlags { realloc: true, routing: true, stream_mgmt: true, slo_sched: true }
+    }
+}
+
+/// Simulation configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub system: SystemKind,
+    pub ablation: AblationFlags,
+    pub trace: TraceConfig,
+    pub seed: u64,
+    /// Base streaming mode on streamable edges (Harmonia with
+    /// `stream_mgmt` upgrades this to Managed).
+    pub streaming: StreamingMode,
+    /// Multiplicative error applied to deploy-time profiling priors (the
+    /// paper: offline estimates deviate when the workload shifts);
+    /// runtime reallocation corrects it.
+    pub profile_bias: f64,
+    /// Per-dispatch controller decision overhead (≈2 ms, §3.3).
+    pub controller_overhead: f64,
+    /// Cold-start delay for newly launched instances (s).
+    pub cold_start: f64,
+    /// Hard stop (simulated seconds).
+    pub max_sim_time: f64,
+}
+
+impl SimConfig {
+    pub fn new(system: SystemKind, trace: TraceConfig, seed: u64) -> Self {
+        SimConfig {
+            system,
+            ablation: AblationFlags::default(),
+            trace,
+            seed,
+            streaming: StreamingMode::FixedChunk(0.15),
+            // Deploy-time profiling is representative by default (the
+            // paper profiles at startup); Fig. 14 sets a bias explicitly
+            // to study the reallocation mechanism under workload shift.
+            profile_bias: 1.0,
+            controller_overhead: 2.0e-3,
+            cold_start: 2.0,
+            max_sim_time: 3600.0,
+        }
+    }
+}
+
+/// Simulation output.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub report: RunReport,
+    /// Mean wall-clock seconds of controller decision code per dispatch
+    /// (the Fig. 13 measurement — real time of the real policy code).
+    pub controller_decision_secs: f64,
+    pub controller_decisions: u64,
+    /// LP solve wall-times (Fig. 12 / §4.3).
+    pub lp_solve_secs: Vec<f64>,
+    /// Committed reallocation count.
+    pub reallocations: usize,
+    /// Final up-instance counts per component name.
+    pub final_instances: HashMap<String, usize>,
+}
+
+#[derive(Clone, Debug)]
+enum Ev {
+    Arrival(usize),
+    /// Request runnable at a node. `earliest_finish` > 0 carries the
+    /// streaming floor (cannot finish before upstream's last chunk);
+    /// `stream_chunks` > 0 adds per-chunk preemption busy-time downstream.
+    Dispatch { req: usize, node: NodeId, earliest_finish: f64, stream_chunks: f64 },
+    Finish { req: usize, node: NodeId, inst: usize, service: f64 },
+    ControlTick,
+    InstanceUp { node: NodeId, inst: usize },
+}
+
+struct SimInstance {
+    slots: usize,
+    active: usize,
+    queue: PrioQueue<QueuedItem>,
+    up: bool,
+    colocated: bool,
+    /// Outstanding stateful requests expected to return here.
+    expected_reentries: f64,
+}
+
+#[derive(Clone, Debug)]
+struct QueuedItem {
+    req: usize,
+    enqueued_at: f64,
+    earliest_finish: f64,
+    /// Number of streamed chunks feeding this stage (0 = not streamed).
+    stream_chunks: f64,
+}
+
+struct SimReq {
+    arrival: f64,
+    deadline: Option<f64>,
+    features: crate::profile::models::RequestFeatures,
+    rng: Rng,
+    done: bool,
+}
+
+/// The simulation world.
+pub struct SimWorld {
+    cfg: SimConfig,
+    graph: PipelineGraph,
+    q: EventQueue<Ev>,
+    reqs: Vec<SimReq>,
+    instances: HashMap<NodeId, Vec<SimInstance>>,
+    router: Router,
+    discipline: QueueDiscipline,
+    slack: SlackPredictor,
+    telemetry: Telemetry,
+    autoscaler: Autoscaler,
+    prior: Profile,
+    recorder: Recorder,
+    cluster: Cluster,
+    stream_policy: StreamPolicy,
+    /// Central per-component queues (the controller holds queued work;
+    /// instances pull — EDF reorders across the whole component, like the
+    /// paper's centralized scheduler). Stateful-bound items still use the
+    /// bound instance's local queue.
+    node_queues: HashMap<NodeId, PrioQueue<QueuedItem>>,
+    /// Hops already dispatched downstream via streaming.
+    pending_stream: HashSet<(usize, NodeId)>,
+    /// Branches pre-sampled at service start (streamable node, hop not
+    /// streamed): Finish must honor the already-decided control flow.
+    pre_sampled: HashMap<(usize, NodeId), NodeId>,
+    decision_time: f64,
+    decisions: u64,
+    monolithic: bool,
+    completed: usize,
+}
+
+impl SimWorld {
+    pub fn new(graph: PipelineGraph, cfg: SimConfig) -> SimWorld {
+        let trace = cfg.trace.generate(cfg.seed);
+        let mut rng = Rng::new(cfg.seed ^ 0xDEAD);
+        let reqs: Vec<SimReq> = trace
+            .requests
+            .iter()
+            .map(|r| SimReq {
+                arrival: r.arrival,
+                deadline: r.deadline,
+                features: r.features,
+                rng: rng.fork(),
+                done: false,
+            })
+            .collect();
+
+        let cluster = Cluster::paper_testbed();
+        let budgets = cluster.budgets();
+
+        // Deploy-time profile. `profile_bias` models the paper's workload
+        // drift: what the profiling sample gets wrong in conditional
+        // pipelines is the *branch mix* (p_{i,j}) — e.g. the fraction of
+        // low-relevance queries, or Self-RAG's loop re-entry rate. We skew
+        // every branching node's secondary-edge priors down by bias² and
+        // renormalize; linear pipelines (V-RAG) have no branches and stay
+        // unbiased, matching the paper's "online resource management
+        // provides negligible contribution for V-RAG".
+        let mut prior = profile_graph(&graph, 400, cfg.seed ^ 0xBEEF);
+        if cfg.profile_bias != 1.0 {
+            let b2 = cfg.profile_bias * cfg.profile_bias;
+            for node in &graph.nodes {
+                let out: Vec<usize> = graph
+                    .edges
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, e)| e.from == node.id)
+                    .map(|(i, _)| i)
+                    .collect();
+                if out.len() < 2 {
+                    continue;
+                }
+                let primary = *out
+                    .iter()
+                    .max_by(|&&a, &&b| {
+                        prior.edge_probs[a].partial_cmp(&prior.edge_probs[b]).unwrap()
+                    })
+                    .unwrap();
+                for &i in &out {
+                    if i != primary {
+                        prior.edge_probs[i] /= b2;
+                    }
+                }
+                let sum: f64 = out.iter().map(|&i| prior.edge_probs[i]).sum();
+                for &i in &out {
+                    prior.edge_probs[i] /= sum;
+                }
+            }
+        }
+
+        let monolithic = cfg.system == SystemKind::LangChain;
+        let plan = match cfg.system {
+            SystemKind::Harmonia => FlowProblem::new(&graph, &prior, budgets)
+                .solve()
+                .expect("allocation feasible"),
+            _ => AllocationPlan::uniform(&graph, &cluster.budgets()),
+        };
+
+        let routing = match (cfg.system, cfg.ablation.routing) {
+            (SystemKind::Harmonia, true) => RoutingPolicy::LoadStateAware,
+            (SystemKind::Harmonia, false) => RoutingPolicy::IdleFirst,
+            (SystemKind::Haystack, _) => RoutingPolicy::IdleFirst,
+            (SystemKind::LangChain, _) => RoutingPolicy::RoundRobin,
+        };
+        let discipline = if cfg.system == SystemKind::Harmonia && cfg.ablation.slo_sched {
+            QueueDiscipline::LeastSlack
+        } else {
+            QueueDiscipline::Fifo
+        };
+
+        let mut world = SimWorld {
+            slack: SlackPredictor::new(&graph, &prior.mean_service),
+            telemetry: Telemetry::new(&graph),
+            autoscaler: Autoscaler::new(10.0),
+            router: Router::new(routing),
+            discipline,
+            instances: HashMap::new(),
+            q: EventQueue::new(),
+            reqs,
+            recorder: Recorder::new(),
+            cluster,
+            stream_policy: StreamPolicy::default(),
+            node_queues: HashMap::new(),
+            pending_stream: HashSet::new(),
+            pre_sampled: HashMap::new(),
+            decision_time: 0.0,
+            decisions: 0,
+            monolithic,
+            completed: 0,
+            prior,
+            graph,
+            cfg,
+        };
+        world.provision_initial(&plan);
+        world
+    }
+
+    fn provision_initial(&mut self, plan: &AllocationPlan) {
+        if self.monolithic {
+            // LangChain: the unit of deployment is the whole pipeline;
+            // replicas = how many full bundles fit in the cluster.
+            let mut demands: HashMap<crate::spec::graph::ResourceKind, f64> = HashMap::new();
+            for n in self.graph.work_nodes() {
+                for &(k, d) in &n.resources {
+                    *demands.entry(k).or_insert(0.0) += d;
+                }
+            }
+            let bundle: Vec<_> = demands.into_iter().collect();
+            let mut replicas = Vec::new();
+            while self.cluster.place(&bundle, true).is_some() {
+                replicas.push(SimInstance {
+                    slots: 4, // concurrent requests inside one process
+                    active: 0,
+                    queue: PrioQueue::new(self.discipline),
+                    up: true,
+                    colocated: false,
+                    expected_reentries: 0.0,
+                });
+                if replicas.len() >= 64 {
+                    break;
+                }
+            }
+            assert!(!replicas.is_empty(), "cluster hosts at least one replica");
+            self.instances.insert(self.graph.source, replicas);
+            return;
+        }
+        let node_ids: Vec<NodeId> = self.graph.work_nodes().map(|n| n.id).collect();
+        for id in node_ids {
+            let count = plan.instances(id).max(1);
+            let v = (0..count).map(|_| self.make_instance(id)).collect();
+            self.instances.insert(id, v);
+        }
+    }
+
+    fn make_instance(&mut self, node: NodeId) -> SimInstance {
+        let spec = self.graph.node(node);
+        let placement = self.cluster.place(&spec.resources, spec.kind.gpu_bound());
+        SimInstance {
+            slots: instance_concurrency(&spec.kind),
+            active: 0,
+            queue: PrioQueue::new(self.discipline),
+            up: true,
+            colocated: placement.map(|p| p.colocated).unwrap_or(false),
+            expected_reentries: 0.0,
+        }
+    }
+
+    /// Run to completion.
+    pub fn run(mut self) -> SimResult {
+        for i in 0..self.reqs.len() {
+            let t = self.reqs[i].arrival;
+            self.q.schedule(t, Ev::Arrival(i));
+        }
+        self.q.schedule(1.0, Ev::ControlTick);
+        while let Some((now, ev)) = self.q.next() {
+            if now > self.cfg.max_sim_time {
+                break;
+            }
+            match ev {
+                Ev::Arrival(i) => {
+                    self.recorder.on_arrival(now);
+                    let entry =
+                        if self.monolithic { self.graph.source } else { self.first_node() };
+                    self.q.schedule_in(
+                        self.cfg.controller_overhead,
+                        Ev::Dispatch { req: i, node: entry, earliest_finish: 0.0, stream_chunks: 0.0 },
+                    );
+                }
+                Ev::Dispatch { req, node, earliest_finish, stream_chunks } => {
+                    self.on_dispatch(req, node, earliest_finish, stream_chunks)
+                }
+                Ev::Finish { req, node, inst, service } => {
+                    self.on_finish(req, node, inst, service)
+                }
+                Ev::ControlTick => {
+                    self.on_control_tick();
+                    if self.completed < self.reqs.len() {
+                        self.q.schedule_in(1.0, Ev::ControlTick);
+                    }
+                }
+                Ev::InstanceUp { node, inst } => {
+                    self.on_instance_up(node, inst);
+                }
+            }
+            if self.completed == self.reqs.len() {
+                break;
+            }
+        }
+        let final_instances = self
+            .instances
+            .iter()
+            .map(|(id, v)| {
+                (self.graph.node(*id).name.clone(), v.iter().filter(|i| i.up).count())
+            })
+            .collect();
+        SimResult {
+            report: self.recorder.report(),
+            controller_decision_secs: if self.decisions > 0 {
+                self.decision_time / self.decisions as f64
+            } else {
+                0.0
+            },
+            controller_decisions: self.decisions,
+            lp_solve_secs: self.autoscaler.solve_times.clone(),
+            reallocations: self.autoscaler.commits.len(),
+            final_instances,
+        }
+    }
+
+    fn first_node(&self) -> NodeId {
+        self.graph
+            .successors(self.graph.source)
+            .next()
+            .expect("source has a successor")
+            .to
+    }
+
+    // ---- event handlers --------------------------------------------------
+
+    fn on_dispatch(&mut self, req: usize, node: NodeId, earliest_finish: f64, stream_chunks: f64) {
+        let now = self.q.now();
+        if node == self.graph.sink {
+            return self.complete(req);
+        }
+        if self.monolithic {
+            return self.monolith_dispatch(req);
+        }
+
+        // Controller decision (routing + priority) — timed for Fig. 13.
+        let t0 = Instant::now();
+        let spec_stateful = self.graph.node(node).stateful;
+        let states: Vec<InstanceState> = self.instances[&node]
+            .iter()
+            .map(|i| InstanceState {
+                active: i.active,
+                queued: i.queue.len(),
+                slots: i.slots,
+                expected_reentries: i.expected_reentries,
+                up: i.up,
+            })
+            .collect();
+        let pick = self.router.route(req as u64, node, spec_stateful, &states);
+        let slack_key = match self.reqs[req].deadline {
+            Some(d) if self.discipline == QueueDiscipline::LeastSlack => {
+                self.slack.slack(node, &self.reqs[req].features, now, d)
+            }
+            _ => 0.0,
+        };
+        self.decision_time += t0.elapsed().as_secs_f64();
+        self.decisions += 1;
+
+        self.telemetry.on_enqueue(node);
+        let item = QueuedItem { req, enqueued_at: now, earliest_finish, stream_chunks };
+        let inst = &mut self.instances.get_mut(&node).unwrap()[pick];
+        if inst.up && inst.active < inst.slots {
+            inst.active += 1;
+            self.start_service(req, node, pick, item);
+        } else if spec_stateful {
+            // Must run on the bound instance: wait in its local queue.
+            inst.queue.push(slack_key, item);
+        } else {
+            // Central component queue: any instance of `node` may pull it.
+            let d = self.discipline;
+            self.node_queues
+                .entry(node)
+                .or_insert_with(|| PrioQueue::new(d))
+                .push(slack_key, item);
+        }
+    }
+
+    fn start_service(&mut self, req: usize, node: NodeId, pick: usize, item: QueuedItem) {
+        let now = self.q.now();
+        let spec = self.graph.node(node).clone();
+        let (colocated, active) = {
+            let i = &self.instances[&node][pick];
+            (i.colocated, i.active)
+        };
+        let model = LatencyModel::for_kind(&spec.kind);
+        let features = self.reqs[req].features;
+        let mut t = model.sample(&features, &mut self.reqs[req].rng);
+        t *= concurrency_slowdown(active);
+        if colocated {
+            t *= COLOCATION_SLOWDOWN;
+        }
+        // Streamed input: each chunk arrival preempts this instance
+        // (§2.2 / Fig. 5) — fine granularity inflates busy time.
+        t += item.stream_chunks * crate::coordinator::streaming::CHUNK_PREEMPT;
+        let queue_wait = now - item.enqueued_at;
+        self.recorder.on_execution(&spec.name, t, queue_wait);
+        self.slack.observe(node, &features, t);
+
+        let finish = (now + t).max(item.earliest_finish);
+        self.q.schedule(finish, Ev::Finish { req, node, inst: pick, service: t });
+
+        // Streaming: pre-route the downstream hop at first-chunk time.
+        if spec.streamable {
+            let (next_node, _) = self.sample_next(req, node);
+            if next_node != self.graph.sink {
+                let util = self.utilization(next_node);
+                let frac = self
+                    .stream_policy
+                    .effective_fraction(self.effective_stream_mode(), util);
+                if frac < 1.0 {
+                    let n_chunks = (1.0 / frac).ceil();
+                    let floor = finish + CHUNK_OVERHEAD * n_chunks;
+                    self.q.schedule(
+                        now + frac * t + self.cfg.controller_overhead,
+                        Ev::Dispatch {
+                            req,
+                            node: next_node,
+                            earliest_finish: floor,
+                            stream_chunks: n_chunks,
+                        },
+                    );
+                    self.pending_stream.insert((req, node));
+                    return;
+                }
+            }
+            self.pre_sampled.insert((req, node), next_node);
+        }
+    }
+
+    fn on_finish(&mut self, req: usize, node: NodeId, inst: usize, service: f64) {
+        if self.monolithic {
+            return self.monolith_finish(req, inst);
+        }
+        self.telemetry.on_complete(node, service);
+        // Free the slot; pull next queued item: bound (stateful) work
+        // first, then the central component queue.
+        let next_item = {
+            let v = self.instances.get_mut(&node).unwrap();
+            let i = &mut v[inst];
+            i.active = i.active.saturating_sub(1);
+            if i.up && i.active < i.slots {
+                i.queue
+                    .pop()
+                    .or_else(|| self.node_queues.get_mut(&node).and_then(|q| q.pop()))
+            } else {
+                None
+            }
+        };
+        if let Some(item) = next_item {
+            self.instances.get_mut(&node).unwrap()[inst].active += 1;
+            let r = item.req;
+            self.start_service(r, node, inst, item);
+        }
+        // If streaming already dispatched this hop, we're done here.
+        if self.pending_stream.remove(&(req, node)) {
+            return;
+        }
+        let next = match self.pre_sampled.remove(&(req, node)) {
+            Some(n) => n,
+            None => self.sample_next(req, node).0,
+        };
+        self.q.schedule_in(
+            self.cfg.controller_overhead,
+            Ev::Dispatch { req, node: next, earliest_finish: 0.0, stream_chunks: 0.0 },
+        );
+    }
+
+    /// Sample the actual outgoing branch from the spec probabilities (the
+    /// ground-truth workload), recording edge telemetry.
+    fn sample_next(&mut self, req: usize, node: NodeId) -> (NodeId, bool) {
+        let edges: Vec<(usize, f64, NodeId, bool)> = self
+            .graph
+            .edges
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.from == node)
+            .map(|(i, e)| (i, e.prob, e.to, e.back_edge))
+            .collect();
+        debug_assert!(!edges.is_empty(), "work node must have successors");
+        let weights: Vec<f64> = edges.iter().map(|e| e.1).collect();
+        let pick = self.reqs[req].rng.weighted(&weights);
+        let (idx, _, to, back) = edges[pick];
+        self.telemetry.on_edge(idx, node);
+        (to, back)
+    }
+
+    fn complete(&mut self, req: usize) {
+        let now = self.q.now();
+        let r = &mut self.reqs[req];
+        if r.done {
+            return;
+        }
+        r.done = true;
+        self.completed += 1;
+        self.recorder.on_completion(r.arrival, now, r.deadline);
+        self.router.release(req as u64);
+    }
+
+    fn utilization(&self, node: NodeId) -> f64 {
+        let Some(v) = self.instances.get(&node) else { return 0.0 };
+        let cap: usize = v.iter().filter(|i| i.up).map(|i| i.slots).sum();
+        if cap == 0 {
+            return 1.0;
+        }
+        let queued_central = self.node_queues.get(&node).map_or(0, |q| q.len());
+        let load: usize =
+            v.iter().map(|i| i.active + i.queue.len()).sum::<usize>() + queued_central;
+        load as f64 / cap as f64
+    }
+
+    fn effective_stream_mode(&self) -> StreamingMode {
+        match self.cfg.system {
+            SystemKind::Harmonia if self.cfg.ablation.stream_mgmt => StreamingMode::Managed,
+            _ => self.cfg.streaming,
+        }
+    }
+
+    // ---- monolithic (LangChain) execution ---------------------------------
+
+    fn monolith_dispatch(&mut self, req: usize) {
+        let now = self.q.now();
+        let t0 = Instant::now();
+        let states: Vec<InstanceState> = self.instances[&self.graph.source]
+            .iter()
+            .map(|i| InstanceState {
+                active: i.active,
+                queued: i.queue.len(),
+                slots: i.slots,
+                expected_reentries: 0.0,
+                up: i.up,
+            })
+            .collect();
+        let pick = self.router.route(req as u64, self.graph.source, false, &states);
+        self.decision_time += t0.elapsed().as_secs_f64();
+        self.decisions += 1;
+        let item = QueuedItem { req, enqueued_at: now, earliest_finish: 0.0, stream_chunks: 0.0 };
+        let inst = &mut self.instances.get_mut(&self.graph.source).unwrap()[pick];
+        if inst.active < inst.slots {
+            inst.active += 1;
+            self.monolith_start(req, pick, item);
+        } else {
+            inst.queue.push(0.0, item);
+        }
+    }
+
+    fn monolith_start(&mut self, req: usize, pick: usize, item: QueuedItem) {
+        let now = self.q.now();
+        let features = self.reqs[req].features;
+        let active = self.instances[&self.graph.source][pick].active;
+        // Walk the whole pipeline inside the replica, summing stage times
+        // (function calls: no cross-component overhead, no overlap).
+        let mut total = 0.0;
+        let mut cur = self.first_node();
+        let mut hops = 0;
+        while cur != self.graph.sink && hops < 1000 {
+            hops += 1;
+            let spec = self.graph.node(cur).clone();
+            let model = LatencyModel::for_kind(&spec.kind);
+            let mut t = model.sample(&features, &mut self.reqs[req].rng);
+            t *= concurrency_slowdown(active);
+            total += t;
+            self.recorder.on_execution(
+                &spec.name,
+                t,
+                if hops == 1 { now - item.enqueued_at } else { 0.0 },
+            );
+            cur = self.sample_next(req, cur).0;
+        }
+        self.q.schedule(
+            now + total,
+            Ev::Finish { req, node: self.graph.source, inst: pick, service: total },
+        );
+    }
+
+    fn monolith_finish(&mut self, req: usize, inst: usize) {
+        self.complete(req);
+        let next_item = {
+            let v = self.instances.get_mut(&self.graph.source).unwrap();
+            let i = &mut v[inst];
+            i.active = i.active.saturating_sub(1);
+            i.queue.pop()
+        };
+        if let Some(item) = next_item {
+            self.instances.get_mut(&self.graph.source).unwrap()[inst].active += 1;
+            let r = item.req;
+            self.monolith_start(r, inst, item);
+        }
+    }
+
+    // ---- control loop ------------------------------------------------------
+
+    fn on_control_tick(&mut self) {
+        let now = self.q.now();
+        if self.monolithic || self.cfg.system != SystemKind::Harmonia {
+            return;
+        }
+        // Refresh expected re-entries for state-aware routing.
+        let node_ids: Vec<NodeId> = self.instances.keys().copied().collect();
+        for id in &node_ids {
+            let bound = self.router.bindings_for(*id) as f64;
+            let v = self.instances.get_mut(id).unwrap();
+            let n = v.len().max(1) as f64;
+            for i in v.iter_mut() {
+                i.expected_reentries = bound / n;
+            }
+        }
+        if !self.cfg.ablation.realloc {
+            return;
+        }
+        let budgets = Cluster::paper_testbed().budgets();
+        if let Some(plan) =
+            self.autoscaler
+                .maybe_rescale(now, &self.graph, &self.telemetry, &self.prior, &budgets)
+        {
+            self.apply_plan(plan);
+        }
+    }
+
+    fn apply_plan(&mut self, plan: HashMap<NodeId, usize>) {
+        let now = self.q.now();
+        let cold = self.cfg.cold_start;
+        for (node, target) in plan {
+            let have: usize = self.instances.get(&node).map(|v| v.len()).unwrap_or(0);
+            if target > have {
+                for _ in have..target {
+                    let mut inst = self.make_instance(node);
+                    inst.up = false; // cold start
+                    let v = self.instances.get_mut(&node).unwrap();
+                    v.push(inst);
+                    let idx = v.len() - 1;
+                    self.q.schedule(now + cold, Ev::InstanceUp { node, inst: idx });
+                }
+            } else if target < have {
+                let floor = self.graph.node(node).base_instances.max(1);
+                let keep = target.max(floor);
+                let v = self.instances.get_mut(&node).unwrap();
+                for i in v.iter_mut().skip(keep) {
+                    i.up = false;
+                }
+            }
+        }
+    }
+
+    fn on_instance_up(&mut self, node: NodeId, inst: usize) {
+        let popped = {
+            let Some(v) = self.instances.get_mut(&node) else { return };
+            if inst >= v.len() {
+                return;
+            }
+            v[inst].up = true;
+            let i = &mut v[inst];
+            let mut items = Vec::new();
+            while i.active + items.len() < i.slots {
+                match i
+                    .queue
+                    .pop()
+                    .or_else(|| self.node_queues.get_mut(&node).and_then(|q| q.pop()))
+                {
+                    Some(it) => items.push(it),
+                    None => break,
+                }
+            }
+            i.active += items.len();
+            items
+        };
+        for item in popped {
+            let r = item.req;
+            self.start_service(r, node, inst, item);
+        }
+    }
+}
+
+impl SimWorld {
+    /// Convenience runner.
+    pub fn simulate(graph: PipelineGraph, cfg: SimConfig) -> SimResult {
+        SimWorld::new(graph, cfg).run()
+    }
+}
+
+/// Sweep helper: run one (system, rate) point with a standard trace.
+pub fn run_point(
+    system: SystemKind,
+    graph: PipelineGraph,
+    rate: f64,
+    n: usize,
+    slo: Option<f64>,
+    seed: u64,
+) -> SimResult {
+    let trace = TraceConfig { rate, n, slo, ..TraceConfig::default() };
+    SimWorld::simulate(graph, SimConfig::new(system, trace, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::apps;
+
+    fn quick(system: SystemKind, app: &str, rate: f64, n: usize) -> SimResult {
+        run_point(system, apps::by_name(app).unwrap(), rate, n, Some(2.0), 42)
+    }
+
+    #[test]
+    fn all_systems_complete_all_requests() {
+        for system in [SystemKind::Harmonia, SystemKind::LangChain, SystemKind::Haystack] {
+            let r = quick(system, "v-rag", 8.0, 200);
+            assert_eq!(r.report.completed, 200, "{}", system.name());
+            assert!(r.report.throughput > 0.0);
+            assert!(r.report.mean_latency > 0.0);
+        }
+    }
+
+    #[test]
+    fn recursive_apps_terminate() {
+        for app in ["c-rag", "s-rag", "a-rag"] {
+            let r = quick(SystemKind::Harmonia, app, 8.0, 150);
+            assert_eq!(r.report.completed, 150, "{app}");
+        }
+    }
+
+    #[test]
+    fn latency_grows_with_load() {
+        let lo = quick(SystemKind::Harmonia, "c-rag", 4.0, 300);
+        let hi = quick(SystemKind::Harmonia, "c-rag", 320.0, 2000);
+        assert!(
+            hi.report.mean_latency > lo.report.mean_latency,
+            "lo {} hi {}",
+            lo.report.mean_latency,
+            hi.report.mean_latency
+        );
+    }
+
+    #[test]
+    fn harmonia_beats_baselines_on_complex_pipeline_at_load() {
+        // The headline claim (Fig. 9) at one operating point.
+        let rate = 48.0;
+        let n = 600;
+        let h = run_point(SystemKind::Harmonia, apps::corrective_rag(), rate, n, None, 7);
+        let l = run_point(SystemKind::LangChain, apps::corrective_rag(), rate, n, None, 7);
+        let y = run_point(SystemKind::Haystack, apps::corrective_rag(), rate, n, None, 7);
+        assert!(
+            h.report.throughput > l.report.throughput,
+            "harmonia {} vs langchain {}",
+            h.report.throughput,
+            l.report.throughput
+        );
+        assert!(
+            h.report.throughput > y.report.throughput,
+            "harmonia {} vs haystack {}",
+            h.report.throughput,
+            y.report.throughput
+        );
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = quick(SystemKind::Harmonia, "s-rag", 16.0, 100);
+        let b = quick(SystemKind::Harmonia, "s-rag", 16.0, 100);
+        assert_eq!(a.report.completed, b.report.completed);
+        assert!((a.report.mean_latency - b.report.mean_latency).abs() < 1e-12);
+        assert!((a.report.throughput - b.report.throughput).abs() < 1e-12);
+    }
+
+    #[test]
+    fn controller_decision_stays_fast() {
+        // Fig. 13: decision code must stay well under 2.3 ms/request.
+        let r = quick(SystemKind::Harmonia, "a-rag", 32.0, 400);
+        assert!(r.controller_decisions > 0);
+        assert!(
+            r.controller_decision_secs < 2.3e-3,
+            "decision {}s",
+            r.controller_decision_secs
+        );
+    }
+
+    #[test]
+    fn harmonia_reallocates_under_biased_priors() {
+        let trace = TraceConfig { rate: 24.0, n: 2000, slo: None, ..TraceConfig::default() };
+        let mut cfg = SimConfig::new(SystemKind::Harmonia, trace, 3);
+        cfg.profile_bias = 2.0;
+        let r = SimWorld::simulate(apps::corrective_rag(), cfg);
+        assert!(r.reallocations > 0, "autoscaler should commit at least once");
+        assert!(!r.lp_solve_secs.is_empty());
+    }
+
+    #[test]
+    fn slo_violations_bounded() {
+        let r = quick(SystemKind::Harmonia, "v-rag", 4.0, 200);
+        assert!(r.report.slo_violation_rate <= 1.0);
+        // At this light load with SLO=2 s the violation rate must be low.
+        assert!(
+            r.report.slo_violation_rate < 0.2,
+            "rate {}",
+            r.report.slo_violation_rate
+        );
+    }
+
+    #[test]
+    fn component_breakdown_recorded() {
+        let r = quick(SystemKind::Harmonia, "c-rag", 8.0, 200);
+        for comp in ["retriever", "grader", "generator"] {
+            assert!(
+                r.report.components.contains_key(comp),
+                "missing {comp} in breakdown"
+            );
+        }
+        // Grader must be the costliest per-visit GPU stage (C-RAG's
+        // bottleneck, Fig. 10).
+        let g = r.report.components["grader"].mean_service();
+        let gen = r.report.components["generator"].mean_service();
+        assert!(g > gen, "grader {g} vs generator {gen}");
+    }
+}

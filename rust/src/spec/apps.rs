@@ -1,0 +1,252 @@
+//! The four representative RAG applications of the paper (Table 1).
+//!
+//! | App   | Conditional | Recursive |
+//! |-------|-------------|-----------|
+//! | V-RAG | no          | no        |
+//! | C-RAG | yes         | no        |
+//! | S-RAG | yes         | yes       |
+//! | A-RAG | yes         | yes       |
+//!
+//! Branch probabilities are the *deploy-time priors* (the paper estimates
+//! them by profiling ~100 ShareGPT samples; the runtime layer re-estimates
+//! them online). Resource demands follow §4.3's allocation-plan discussion
+//! (retrievers: 8 CPU + 112 GiB RAM; LLM components: 1 GPU).
+
+use super::builder::PipelineBuilder;
+use super::graph::{ComponentKind, PipelineGraph, ResourceKind};
+
+const RETRIEVER_RES: [(ResourceKind, f64); 2] =
+    [(ResourceKind::Cpu, 8.0), (ResourceKind::Ram, 112.0)];
+const GPU_RES: [(ResourceKind, f64); 1] = [(ResourceKind::Gpu, 1.0)];
+const WEB_RES: [(ResourceKind, f64); 1] = [(ResourceKind::Cpu, 1.0)];
+
+/// C-RAG prior: fraction of queries whose retrieved documents are graded
+/// relevant (skip web search).
+pub const CRAG_P_RELEVANT: f64 = 0.7;
+/// S-RAG prior: probability the critic accepts the generation (exit loop).
+pub const SRAG_P_ACCEPT: f64 = 0.65;
+/// A-RAG priors: query-complexity class mix (simple / standard / complex).
+pub const ARAG_P_SIMPLE: f64 = 0.2;
+pub const ARAG_P_STANDARD: f64 = 0.5;
+pub const ARAG_P_COMPLEX: f64 = 0.3;
+/// A-RAG prior: probability the iterative loop continues another round.
+pub const ARAG_P_LOOP: f64 = 0.5;
+
+/// Vanilla RAG: retrieve → generate. No conditionals, no recursion.
+pub fn vanilla_rag() -> PipelineGraph {
+    let mut b = PipelineBuilder::new("v-rag");
+    let retr = b
+        .component("retriever", ComponentKind::Retriever)
+        .resources(&RETRIEVER_RES)
+        .streamable(true)
+        .add();
+    let gen = b
+        .component("generator", ComponentKind::Generator)
+        .resources(&GPU_RES)
+        .streamable(true)
+        .add();
+    b.edge_from_source(retr, 1.0);
+    b.edge(retr, gen, 1.0);
+    b.edge_to_sink(gen, 1.0);
+    b.build().expect("v-rag is valid")
+}
+
+/// Corrective RAG [Yan et al.]: retrieve → grade → {generate | rewrite →
+/// web search → generate}. Purely conditional control flow.
+pub fn corrective_rag() -> PipelineGraph {
+    let mut b = PipelineBuilder::new("c-rag");
+    let retr = b
+        .component("retriever", ComponentKind::Retriever)
+        .resources(&RETRIEVER_RES)
+        .streamable(true)
+        .add();
+    let grader = b
+        .component("grader", ComponentKind::Grader)
+        .resources(&GPU_RES)
+        .base_instances(2) // Fig. 7: @harmonia.make(base_instances=2)
+        .stateful(true)
+        .add();
+    let rewriter = b
+        .component("rewriter", ComponentKind::Rewriter)
+        .resources(&GPU_RES)
+        .add();
+    let web = b
+        .component("websearch", ComponentKind::WebSearch)
+        .resources(&WEB_RES)
+        .add();
+    let gen = b
+        .component("generator", ComponentKind::Generator)
+        .resources(&GPU_RES)
+        .streamable(true)
+        .add();
+    b.edge_from_source(retr, 1.0);
+    b.edge(retr, grader, 1.0);
+    b.branch(grader, &[(gen, CRAG_P_RELEVANT), (rewriter, 1.0 - CRAG_P_RELEVANT)]);
+    b.edge(rewriter, web, 1.0);
+    b.edge(web, gen, 1.0);
+    b.edge_to_sink(gen, 1.0);
+    b.build().expect("c-rag is valid")
+}
+
+/// Self-RAG [Asai et al.]: retrieve → generate → critic → {done | rewrite
+/// and re-retrieve}. Conditional + recursive.
+pub fn self_rag() -> PipelineGraph {
+    let mut b = PipelineBuilder::new("s-rag");
+    let retr = b
+        .component("retriever", ComponentKind::Retriever)
+        .resources(&RETRIEVER_RES)
+        .streamable(true)
+        .add();
+    let gen = b
+        .component("generator", ComponentKind::Generator)
+        .resources(&GPU_RES)
+        .streamable(true)
+        .stateful(true) // per-request generation state across iterations
+        .add();
+    let critic = b
+        .component("critic", ComponentKind::Critic)
+        .resources(&GPU_RES)
+        .add();
+    let rewriter = b
+        .component("rewriter", ComponentKind::Rewriter)
+        .resources(&GPU_RES)
+        .add();
+    b.edge_from_source(retr, 1.0);
+    b.edge(retr, gen, 1.0);
+    b.edge(gen, critic, 1.0);
+    b.branch(critic, &[(b.sink(), SRAG_P_ACCEPT), (rewriter, 1.0 - SRAG_P_ACCEPT)]);
+    b.recurse(rewriter, retr, 1.0);
+    b.build().expect("s-rag is valid")
+}
+
+/// Adaptive RAG [Jeong et al.]: classify → {LLM-only | single-pass RAG |
+/// iterative multi-step RAG}. Conditional + recursive subgraph.
+pub fn adaptive_rag() -> PipelineGraph {
+    let mut b = PipelineBuilder::new("a-rag");
+    let cls = b
+        .component("classifier", ComponentKind::Classifier)
+        .resources(&GPU_RES)
+        .add();
+    let retr = b
+        .component("retriever", ComponentKind::Retriever)
+        .resources(&RETRIEVER_RES)
+        .streamable(true)
+        .add();
+    let gen = b
+        .component("generator", ComponentKind::Generator)
+        .resources(&GPU_RES)
+        .streamable(true)
+        .add();
+    // Iterative branch: its own retrieve→generate→critic loop over a
+    // subgraph (multi-step RAG for complex queries).
+    let iretr = b
+        .component("iter_retriever", ComponentKind::Retriever)
+        .resources(&RETRIEVER_RES)
+        .add();
+    let igen = b
+        .component("iter_generator", ComponentKind::Generator)
+        .resources(&GPU_RES)
+        .stateful(true) // iteration state must return to the same instance
+        .add();
+    let icritic = b
+        .component("iter_critic", ComponentKind::Critic)
+        .resources(&GPU_RES)
+        .add();
+
+    b.edge_from_source(cls, 1.0);
+    b.branch(
+        cls,
+        &[(gen, ARAG_P_SIMPLE), (retr, ARAG_P_STANDARD), (iretr, ARAG_P_COMPLEX)],
+    );
+    // Standard path.
+    b.edge(retr, gen, 1.0);
+    b.edge_to_sink(gen, 1.0);
+    // Iterative path.
+    b.edge(iretr, igen, 1.0);
+    b.edge(igen, icritic, 1.0);
+    b.branch(icritic, &[(b.sink(), 1.0 - ARAG_P_LOOP)]);
+    b.recurse(icritic, iretr, ARAG_P_LOOP);
+    b.build().expect("a-rag is valid")
+}
+
+/// All four apps, in the paper's presentation order.
+pub fn all() -> Vec<PipelineGraph> {
+    vec![vanilla_rag(), corrective_rag(), self_rag(), adaptive_rag()]
+}
+
+/// Look up an app by its short name (v-rag, c-rag, s-rag, a-rag).
+pub fn by_name(name: &str) -> Option<PipelineGraph> {
+    match name {
+        "v-rag" => Some(vanilla_rag()),
+        "c-rag" => Some(corrective_rag()),
+        "s-rag" => Some(self_rag()),
+        "a-rag" => Some(adaptive_rag()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_structure_matrix() {
+        let cases = [
+            ("v-rag", false, false),
+            ("c-rag", true, false),
+            ("s-rag", true, true),
+            ("a-rag", true, true),
+        ];
+        for (name, cond, rec) in cases {
+            let g = by_name(name).unwrap();
+            assert_eq!(g.has_conditionals(), cond, "{name} conditional");
+            assert_eq!(g.has_recursion(), rec, "{name} recursive");
+        }
+    }
+
+    #[test]
+    fn all_apps_validate() {
+        for g in all() {
+            g.validate().unwrap_or_else(|e| panic!("{}: {e}", g.name));
+        }
+    }
+
+    #[test]
+    fn srag_expected_iterations() {
+        // Geometric loop: expected pipeline iterations = 1 / p_accept.
+        let g = self_rag();
+        let v = g.visit_rates();
+        let gen = g.node_by_name("generator").unwrap();
+        let expected = 1.0 / SRAG_P_ACCEPT;
+        assert!(
+            (v[gen.id.0] - expected).abs() < 1e-6,
+            "generator visits {} vs {}",
+            v[gen.id.0],
+            expected
+        );
+    }
+
+    #[test]
+    fn arag_classifier_sees_every_request() {
+        let g = adaptive_rag();
+        let v = g.visit_rates();
+        let cls = g.node_by_name("classifier").unwrap();
+        assert!((v[cls.id.0] - 1.0).abs() < 1e-9);
+        // Main generator serves simple + standard paths only.
+        let gen = g.node_by_name("generator").unwrap();
+        assert!((v[gen.id.0] - (ARAG_P_SIMPLE + ARAG_P_STANDARD)).abs() < 1e-9);
+        // Iterative retriever: p_complex / (1 - p_loop).
+        let iretr = g.node_by_name("iter_retriever").unwrap();
+        let expected = ARAG_P_COMPLEX / (1.0 - ARAG_P_LOOP);
+        assert!((v[iretr.id.0] - expected).abs() < 1e-6, "{}", v[iretr.id.0]);
+    }
+
+    #[test]
+    fn stateful_constraints_present() {
+        let g = self_rag();
+        assert!(g.node_by_name("generator").unwrap().stateful);
+        let g = corrective_rag();
+        assert!(g.node_by_name("grader").unwrap().stateful);
+        assert_eq!(g.node_by_name("grader").unwrap().base_instances, 2);
+    }
+}

@@ -1,0 +1,241 @@
+//! Imperative pipeline builder — the capture substitute for the paper's
+//! `with harmonia.capture():` AST analysis. Developers compose components
+//! and control flow in plain Rust; the builder emits the same
+//! machine-readable [`PipelineGraph`] the Python capture would.
+//!
+//! ```no_run
+//! use harmonia::spec::{PipelineBuilder, ComponentKind, ResourceKind};
+//! let mut b = PipelineBuilder::new("my-rag");
+//! let retr = b.component("retriever", ComponentKind::Retriever)
+//!     .resources(&[(ResourceKind::Cpu, 8.0), (ResourceKind::Ram, 112.0)])
+//!     .base_instances(1)
+//!     .add();
+//! let gen = b.component("generator", ComponentKind::Generator)
+//!     .resources(&[(ResourceKind::Gpu, 1.0)])
+//!     .stateful(true)
+//!     .add();
+//! b.edge_from_source(retr, 1.0);
+//! b.edge(retr, gen, 1.0);
+//! b.edge_to_sink(gen, 1.0);
+//! let graph = b.build().unwrap();
+//! ```
+
+use super::graph::{
+    ComponentKind, EdgeSpec, NodeId, NodeSpec, PipelineGraph, ResourceKind, ValidationError,
+};
+
+/// Fluent per-component configuration (the `@harmonia.make(...)` decorator
+/// arguments of Fig. 7).
+pub struct ComponentBuilder<'a> {
+    b: &'a mut PipelineBuilder,
+    spec: NodeSpec,
+}
+
+impl<'a> ComponentBuilder<'a> {
+    /// Mark as stateful: recursive invocations route to the same instance.
+    pub fn stateful(mut self, yes: bool) -> Self {
+        self.spec.stateful = yes;
+        self
+    }
+
+    /// Minimum warm instances (cold-start protection).
+    pub fn base_instances(mut self, n: usize) -> Self {
+        self.spec.base_instances = n;
+        self
+    }
+
+    /// Per-instance resource demand.
+    pub fn resources(mut self, r: &[(ResourceKind, f64)]) -> Self {
+        self.spec.resources = r.to_vec();
+        self
+    }
+
+    /// Override throughput coefficients α_{i,k} (otherwise profiled).
+    pub fn alpha(mut self, a: &[(ResourceKind, f64)]) -> Self {
+        self.spec.alpha = a.to_vec();
+        self
+    }
+
+    /// Request amplification factor γ_i.
+    pub fn gamma(mut self, g: f64) -> Self {
+        self.spec.gamma = g;
+        self
+    }
+
+    /// Whether output may stream to the successor (managed Streaming
+    /// Object, §3.1).
+    pub fn streamable(mut self, yes: bool) -> Self {
+        self.spec.streamable = yes;
+        self
+    }
+
+    /// Finish and register the component.
+    pub fn add(self) -> NodeId {
+        let id = self.spec.id;
+        self.b.nodes.push(self.spec);
+        id
+    }
+}
+
+/// Builder for a [`PipelineGraph`]. Source and sink nodes are implicit.
+pub struct PipelineBuilder {
+    name: String,
+    pub(crate) nodes: Vec<NodeSpec>,
+    edges: Vec<EdgeSpec>,
+    source: NodeId,
+    sink: NodeId,
+}
+
+impl PipelineBuilder {
+    pub fn new(name: &str) -> Self {
+        let mk = |id: usize, name: &str, kind: ComponentKind| NodeSpec {
+            id: NodeId(id),
+            name: name.into(),
+            kind,
+            stateful: false,
+            base_instances: 0,
+            resources: vec![],
+            alpha: vec![],
+            gamma: 1.0,
+            streamable: false,
+        };
+        PipelineBuilder {
+            name: name.into(),
+            nodes: vec![mk(0, "source", ComponentKind::Source), mk(1, "sink", ComponentKind::Sink)],
+            edges: Vec::new(),
+            source: NodeId(0),
+            sink: NodeId(1),
+        }
+    }
+
+    pub fn source(&self) -> NodeId {
+        self.source
+    }
+
+    pub fn sink(&self) -> NodeId {
+        self.sink
+    }
+
+    /// Begin a component definition (defaults: 1 base instance, γ=1,
+    /// resource demand 1 GPU for GPU-bound kinds / 1 CPU otherwise,
+    /// α left empty for the profiler to fill).
+    pub fn component(&mut self, name: &str, kind: ComponentKind) -> ComponentBuilder<'_> {
+        let id = NodeId(self.nodes.len());
+        let default_res = if kind.gpu_bound() {
+            vec![(ResourceKind::Gpu, 1.0)]
+        } else {
+            vec![(ResourceKind::Cpu, 1.0)]
+        };
+        let spec = NodeSpec {
+            id,
+            name: name.into(),
+            kind,
+            stateful: false,
+            base_instances: 1,
+            resources: default_res,
+            alpha: vec![],
+            gamma: 1.0,
+            streamable: false,
+        };
+        ComponentBuilder { b: self, spec }
+    }
+
+    /// Add a forward edge with routing probability `p`.
+    pub fn edge(&mut self, from: NodeId, to: NodeId, p: f64) -> &mut Self {
+        self.edges.push(EdgeSpec { from, to, prob: p, back_edge: false });
+        self
+    }
+
+    pub fn edge_from_source(&mut self, to: NodeId, p: f64) -> &mut Self {
+        self.edge(self.source, to, p)
+    }
+
+    pub fn edge_to_sink(&mut self, from: NodeId, p: f64) -> &mut Self {
+        self.edge(from, self.sink, p)
+    }
+
+    /// Conditional fan-out from `from`: each (target, probability).
+    pub fn branch(&mut self, from: NodeId, arms: &[(NodeId, f64)]) -> &mut Self {
+        for &(to, p) in arms {
+            self.edge(from, to, p);
+        }
+        self
+    }
+
+    /// Recursion: a back edge re-entering an upstream component with
+    /// probability `p` (e.g. Self-RAG's rewrite→retrieve loop).
+    pub fn recurse(&mut self, from: NodeId, to: NodeId, p: f64) -> &mut Self {
+        self.edges.push(EdgeSpec { from, to, prob: p, back_edge: true });
+        self
+    }
+
+    /// Validate and produce the graph.
+    pub fn build(self) -> Result<PipelineGraph, ValidationError> {
+        let g = self.build_unvalidated();
+        g.validate()?;
+        Ok(g)
+    }
+
+    /// Produce the graph without validation (tests construct broken graphs).
+    pub fn build_unvalidated(self) -> PipelineGraph {
+        PipelineGraph {
+            name: self.name,
+            nodes: self.nodes,
+            edges: self.edges,
+            source: self.source,
+            sink: self.sink,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_produces_valid_linear_pipeline() {
+        let mut b = PipelineBuilder::new("t");
+        let r = b.component("r", ComponentKind::Retriever).add();
+        let g = b.component("g", ComponentKind::Generator).add();
+        b.edge_from_source(r, 1.0);
+        b.edge(r, g, 1.0);
+        b.edge_to_sink(g, 1.0);
+        let graph = b.build().unwrap();
+        assert_eq!(graph.work_nodes().count(), 2);
+        assert_eq!(graph.name, "t");
+    }
+
+    #[test]
+    fn defaults_follow_component_kind() {
+        let mut b = PipelineBuilder::new("t");
+        let r = b.component("r", ComponentKind::Retriever).add();
+        let g = b.component("g", ComponentKind::Generator).add();
+        b.edge_from_source(r, 1.0);
+        b.edge(r, g, 1.0);
+        b.edge_to_sink(g, 1.0);
+        let graph = b.build().unwrap();
+        assert!(graph.node(r).demand_for(ResourceKind::Cpu) > 0.0);
+        assert_eq!(graph.node(r).demand_for(ResourceKind::Gpu), 0.0);
+        assert!(graph.node(g).demand_for(ResourceKind::Gpu) > 0.0);
+    }
+
+    #[test]
+    fn constraints_are_recorded() {
+        let mut b = PipelineBuilder::new("t");
+        let g = b
+            .component("g", ComponentKind::Generator)
+            .stateful(true)
+            .base_instances(3)
+            .gamma(1.5)
+            .streamable(true)
+            .add();
+        b.edge_from_source(g, 1.0);
+        b.edge_to_sink(g, 1.0);
+        let graph = b.build().unwrap();
+        let n = graph.node(g);
+        assert!(n.stateful);
+        assert_eq!(n.base_instances, 3);
+        assert_eq!(n.gamma, 1.5);
+        assert!(n.streamable);
+    }
+}

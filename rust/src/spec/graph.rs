@@ -1,0 +1,441 @@
+//! Pipeline graph representation: the machine-readable control-flow
+//! structure the deployment and runtime layers reason over.
+//!
+//! Mirrors the paper's model (§3.2): nodes are components with
+//! per-resource throughput coefficients α_{i,k} and amplification factors
+//! γ_i; edges carry routing probabilities p_{i,j}. Back edges (recursion)
+//! are first-class and folded into effective visit rates for the
+//! allocation LP.
+
+use std::collections::HashMap;
+
+/// Resource types K in the allocation model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ResourceKind {
+    /// CPU cores.
+    Cpu,
+    /// Whole GPUs.
+    Gpu,
+    /// RAM in GiB.
+    Ram,
+}
+
+impl ResourceKind {
+    pub const ALL: [ResourceKind; 3] = [ResourceKind::Cpu, ResourceKind::Gpu, ResourceKind::Ram];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ResourceKind::Cpu => "CPU",
+            ResourceKind::Gpu => "GPU",
+            ResourceKind::Ram => "RAM",
+        }
+    }
+}
+
+/// What a component *is* — used to pick live executors and default latency
+/// models. New kinds integrate without framework changes via `Custom`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ComponentKind {
+    /// Pipeline entry (admission); zero-cost.
+    Source,
+    /// Pipeline exit (response); zero-cost.
+    Sink,
+    /// Vector retrieval (CPU/memory-bound).
+    Retriever,
+    /// LLM generation (GPU-bound, prefill+decode).
+    Generator,
+    /// LLM-based relevance grader (GPU, single output token).
+    Grader,
+    /// LLM-based output critic (GPU, single output token).
+    Critic,
+    /// LLM-based query rewriter (GPU, short generation).
+    Rewriter,
+    /// External web search (I/O bound).
+    WebSearch,
+    /// Query complexity classifier (small model).
+    Classifier,
+    /// User-defined component with a latency profile supplied at
+    /// registration — the "library-agnostic integration" hook.
+    Custom(String),
+}
+
+impl ComponentKind {
+    pub fn name(&self) -> &str {
+        match self {
+            ComponentKind::Source => "source",
+            ComponentKind::Sink => "sink",
+            ComponentKind::Retriever => "retriever",
+            ComponentKind::Generator => "generator",
+            ComponentKind::Grader => "grader",
+            ComponentKind::Critic => "critic",
+            ComponentKind::Rewriter => "rewriter",
+            ComponentKind::WebSearch => "websearch",
+            ComponentKind::Classifier => "classifier",
+            ComponentKind::Custom(s) => s,
+        }
+    }
+
+    /// Does this component run on the GPU-style resource?
+    pub fn gpu_bound(&self) -> bool {
+        matches!(
+            self,
+            ComponentKind::Generator
+                | ComponentKind::Grader
+                | ComponentKind::Critic
+                | ComponentKind::Rewriter
+                | ComponentKind::Classifier
+        )
+    }
+}
+
+/// Node handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub usize);
+
+/// One pipeline component plus its declarative constraints (§3.1
+/// "Specifying workflow constraints").
+#[derive(Clone, Debug)]
+pub struct NodeSpec {
+    pub id: NodeId,
+    pub name: String,
+    pub kind: ComponentKind,
+    /// Recursive invocations must return to the same instance.
+    pub stateful: bool,
+    /// Minimum instances kept warm (cold-start protection).
+    pub base_instances: usize,
+    /// Per-instance resource demand (r constraint granularity).
+    pub resources: Vec<(ResourceKind, f64)>,
+    /// Throughput coefficient α_{i,k}: requests/sec per unit of resource k
+    /// (profiled; these are the deploy-time priors).
+    pub alpha: Vec<(ResourceKind, f64)>,
+    /// Request amplification γ_i (>1 fan-out, <1 abridgement).
+    pub gamma: f64,
+    /// Whether the component can stream output to its successor.
+    pub streamable: bool,
+}
+
+impl NodeSpec {
+    pub fn alpha_for(&self, k: ResourceKind) -> f64 {
+        self.alpha
+            .iter()
+            .find(|(rk, _)| *rk == k)
+            .map(|(_, a)| *a)
+            .unwrap_or(0.0)
+    }
+
+    pub fn demand_for(&self, k: ResourceKind) -> f64 {
+        self.resources
+            .iter()
+            .find(|(rk, _)| *rk == k)
+            .map(|(_, d)| *d)
+            .unwrap_or(0.0)
+    }
+}
+
+/// Directed edge with routing probability p_{i,j}; `back_edge` marks
+/// recursion (loops back toward an ancestor in the DAG backbone).
+#[derive(Clone, Debug)]
+pub struct EdgeSpec {
+    pub from: NodeId,
+    pub to: NodeId,
+    pub prob: f64,
+    pub back_edge: bool,
+}
+
+/// The captured pipeline graph.
+#[derive(Clone, Debug)]
+pub struct PipelineGraph {
+    pub name: String,
+    pub nodes: Vec<NodeSpec>,
+    pub edges: Vec<EdgeSpec>,
+    pub source: NodeId,
+    pub sink: NodeId,
+}
+
+#[derive(Debug, PartialEq)]
+pub enum ValidationError {
+    BadProbabilitySum { node: String, sum: f64 },
+    Unreachable { node: String },
+    NoPathToSink { node: String },
+    BadGamma { node: String, gamma: f64 },
+    SelfLoopWithoutBackEdge { node: String },
+    DuplicateName(String),
+}
+
+impl std::fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ValidationError::BadProbabilitySum { node, sum } => {
+                write!(f, "outgoing probabilities of '{node}' sum to {sum}, expected 1")
+            }
+            ValidationError::Unreachable { node } => write!(f, "'{node}' unreachable from source"),
+            ValidationError::NoPathToSink { node } => write!(f, "'{node}' has no path to sink"),
+            ValidationError::BadGamma { node, gamma } => {
+                write!(f, "'{node}' has non-positive gamma {gamma}")
+            }
+            ValidationError::SelfLoopWithoutBackEdge { node } => {
+                write!(f, "'{node}' has a self loop not marked as back edge")
+            }
+            ValidationError::DuplicateName(n) => write!(f, "duplicate component name '{n}'"),
+        }
+    }
+}
+
+impl PipelineGraph {
+    pub fn node(&self, id: NodeId) -> &NodeSpec {
+        &self.nodes[id.0]
+    }
+
+    pub fn node_by_name(&self, name: &str) -> Option<&NodeSpec> {
+        self.nodes.iter().find(|n| n.name == name)
+    }
+
+    pub fn successors(&self, id: NodeId) -> impl Iterator<Item = &EdgeSpec> {
+        self.edges.iter().filter(move |e| e.from == id)
+    }
+
+    pub fn predecessors(&self, id: NodeId) -> impl Iterator<Item = &EdgeSpec> {
+        self.edges.iter().filter(move |e| e.to == id)
+    }
+
+    /// Components that do real work (not source/sink).
+    pub fn work_nodes(&self) -> impl Iterator<Item = &NodeSpec> {
+        self.nodes
+            .iter()
+            .filter(|n| !matches!(n.kind, ComponentKind::Source | ComponentKind::Sink))
+    }
+
+    /// Does the workflow contain conditional branching (Table 1)?
+    pub fn has_conditionals(&self) -> bool {
+        let mut out: HashMap<NodeId, usize> = HashMap::new();
+        for e in &self.edges {
+            *out.entry(e.from).or_insert(0) += 1;
+        }
+        out.values().any(|&c| c > 1)
+    }
+
+    /// Does the workflow contain recursion (Table 1)?
+    pub fn has_recursion(&self) -> bool {
+        self.edges.iter().any(|e| e.back_edge)
+    }
+
+    /// Structural validation; run by the builder and unit tests.
+    pub fn validate(&self) -> Result<(), ValidationError> {
+        // Unique names.
+        let mut seen = std::collections::HashSet::new();
+        for n in &self.nodes {
+            if !seen.insert(n.name.clone()) {
+                return Err(ValidationError::DuplicateName(n.name.clone()));
+            }
+            if n.gamma <= 0.0 {
+                return Err(ValidationError::BadGamma { node: n.name.clone(), gamma: n.gamma });
+            }
+        }
+        // Probability sums.
+        for n in &self.nodes {
+            let succ: Vec<_> = self.successors(n.id).collect();
+            if n.id == self.sink {
+                continue;
+            }
+            if !succ.is_empty() {
+                let sum: f64 = succ.iter().map(|e| e.prob).sum();
+                if (sum - 1.0).abs() > 1e-6 {
+                    return Err(ValidationError::BadProbabilitySum { node: n.name.clone(), sum });
+                }
+            }
+        }
+        for e in &self.edges {
+            if e.from == e.to && !e.back_edge {
+                return Err(ValidationError::SelfLoopWithoutBackEdge {
+                    node: self.node(e.from).name.clone(),
+                });
+            }
+        }
+        // Reachability from source (forward edges and back edges both count).
+        let mut reach = vec![false; self.nodes.len()];
+        let mut stack = vec![self.source];
+        reach[self.source.0] = true;
+        while let Some(u) = stack.pop() {
+            for e in self.successors(u) {
+                if !reach[e.to.0] {
+                    reach[e.to.0] = true;
+                    stack.push(e.to);
+                }
+            }
+        }
+        for n in &self.nodes {
+            if !reach[n.id.0] {
+                return Err(ValidationError::Unreachable { node: n.name.clone() });
+            }
+        }
+        // Path to sink.
+        let mut to_sink = vec![false; self.nodes.len()];
+        to_sink[self.sink.0] = true;
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for e in &self.edges {
+                if to_sink[e.to.0] && !to_sink[e.from.0] {
+                    to_sink[e.from.0] = true;
+                    changed = true;
+                }
+            }
+        }
+        for n in &self.nodes {
+            if !to_sink[n.id.0] {
+                return Err(ValidationError::NoPathToSink { node: n.name.clone() });
+            }
+        }
+        Ok(())
+    }
+
+    /// Expected visits per admitted request for every node, accounting for
+    /// branch probabilities, amplification γ, and recursion. Solved by
+    /// fixed-point iteration of v_j = [j==source] + Σ_i v_i γ_i p_{i,j}
+    /// (converges for sub-stochastic loops, i.e. loop gain < 1).
+    pub fn visit_rates(&self) -> Vec<f64> {
+        let n = self.nodes.len();
+        let mut v = vec![0.0f64; n];
+        v[self.source.0] = 1.0;
+        for _ in 0..10_000 {
+            let mut nv = vec![0.0f64; n];
+            nv[self.source.0] = 1.0;
+            for e in &self.edges {
+                nv[e.to.0] += v[e.from.0] * self.node(e.from).gamma * e.prob;
+            }
+            let diff: f64 = nv.iter().zip(&v).map(|(a, b)| (a - b).abs()).sum();
+            v = nv;
+            if diff < 1e-12 {
+                break;
+            }
+        }
+        v
+    }
+
+    /// Edge flow fractions per admitted request (visit rate of `from` ×
+    /// γ × p). Used by the allocator and the DES.
+    pub fn edge_flows(&self) -> Vec<f64> {
+        let v = self.visit_rates();
+        self.edges
+            .iter()
+            .map(|e| v[e.from.0] * self.node(e.from).gamma * e.prob)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::apps;
+
+    #[test]
+    fn vanilla_rag_structure() {
+        let g = apps::vanilla_rag();
+        g.validate().unwrap();
+        assert!(!g.has_conditionals());
+        assert!(!g.has_recursion());
+        // Table 1 row: V-RAG has neither.
+        let v = g.visit_rates();
+        // Every node visited exactly once.
+        for n in g.work_nodes() {
+            assert!((v[n.id.0] - 1.0).abs() < 1e-9, "{}: {}", n.name, v[n.id.0]);
+        }
+    }
+
+    #[test]
+    fn corrective_rag_structure() {
+        let g = apps::corrective_rag();
+        g.validate().unwrap();
+        assert!(g.has_conditionals());
+        assert!(!g.has_recursion());
+        let v = g.visit_rates();
+        let web = g.node_by_name("websearch").unwrap();
+        // Websearch only on the low-relevance branch.
+        assert!(v[web.id.0] > 0.0 && v[web.id.0] < 1.0);
+        let gen = g.node_by_name("generator").unwrap();
+        assert!((v[gen.id.0] - 1.0).abs() < 1e-9, "all paths generate");
+    }
+
+    #[test]
+    fn self_rag_structure() {
+        let g = apps::self_rag();
+        g.validate().unwrap();
+        assert!(g.has_conditionals());
+        assert!(g.has_recursion());
+        let v = g.visit_rates();
+        let retr = g.node_by_name("retriever").unwrap();
+        // Recursion re-enters the retriever: expected visits > 1.
+        assert!(v[retr.id.0] > 1.0, "retriever visits {}", v[retr.id.0]);
+        // Sink receives exactly one completion per admitted request.
+        assert!((v[g.sink.0] - 1.0).abs() < 1e-6, "sink {}", v[g.sink.0]);
+    }
+
+    #[test]
+    fn adaptive_rag_structure() {
+        let g = apps::adaptive_rag();
+        g.validate().unwrap();
+        assert!(g.has_conditionals());
+        assert!(g.has_recursion());
+        let v = g.visit_rates();
+        assert!((v[g.sink.0] - 1.0).abs() < 1e-6, "sink {}", v[g.sink.0]);
+    }
+
+    #[test]
+    fn validation_catches_bad_probabilities() {
+        let mut g = apps::vanilla_rag();
+        // Corrupt: make retriever's outgoing edge probability 0.5.
+        let retr = g.node_by_name("retriever").unwrap().id;
+        for e in g.edges.iter_mut() {
+            if e.from == retr {
+                e.prob = 0.5;
+            }
+        }
+        match g.validate() {
+            Err(ValidationError::BadProbabilitySum { .. }) => {}
+            other => panic!("expected BadProbabilitySum, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn validation_catches_unreachable() {
+        let mut g = apps::vanilla_rag();
+        let id = NodeId(g.nodes.len());
+        g.nodes.push(NodeSpec {
+            id,
+            name: "orphan".into(),
+            kind: ComponentKind::WebSearch,
+            stateful: false,
+            base_instances: 1,
+            resources: vec![(ResourceKind::Cpu, 1.0)],
+            alpha: vec![(ResourceKind::Cpu, 1.0)],
+            gamma: 1.0,
+            streamable: false,
+        });
+        // orphan needs an edge to sink for NoPathToSink not to trigger first
+        g.edges.push(EdgeSpec { from: id, to: g.sink, prob: 1.0, back_edge: false });
+        match g.validate() {
+            Err(ValidationError::Unreachable { node }) => assert_eq!(node, "orphan"),
+            other => panic!("expected Unreachable, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn visit_rates_geometric_loop() {
+        // source -> a -> sink with a self-loop of probability 0.5:
+        // expected visits of a = 1/(1-0.5) = 2.
+        let mut b = crate::spec::PipelineBuilder::new("loop-test");
+        let a = b
+            .component("a", ComponentKind::Generator)
+            .resources(&[(ResourceKind::Gpu, 1.0)])
+            .add();
+        b.edge_from_source(a, 1.0);
+        b.branch(a, &[]); // no forward branches; we add manually below
+        let mut g = b.build_unvalidated();
+        g.edges.push(EdgeSpec { from: a, to: a, prob: 0.5, back_edge: true });
+        g.edges.push(EdgeSpec { from: a, to: g.sink, prob: 0.5, back_edge: false });
+        g.validate().unwrap();
+        let v = g.visit_rates();
+        assert!((v[a.0] - 2.0).abs() < 1e-9, "visits {}", v[a.0]);
+        assert!((v[g.sink.0] - 1.0).abs() < 1e-9);
+    }
+}

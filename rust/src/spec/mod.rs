@@ -1,0 +1,18 @@
+//! The RAG **specification layer** (§3.1): pipelines as component graphs
+//! with conditional branches, recursion, request amplification, and
+//! declarative constraints (stateful routing, resource demands, base
+//! instances).
+//!
+//! The paper captures this graph from idiomatic Python via AST analysis;
+//! here the same machine-readable representation is produced by an
+//! imperative [`builder::PipelineBuilder`] (the capture substitute), and
+//! [`apps`] provides the four reference workflows of Table 1.
+
+pub mod apps;
+pub mod builder;
+pub mod graph;
+
+pub use builder::PipelineBuilder;
+pub use graph::{
+    ComponentKind, EdgeSpec, NodeId, NodeSpec, PipelineGraph, ResourceKind, ValidationError,
+};

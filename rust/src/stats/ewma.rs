@@ -1,0 +1,77 @@
+//! Exponentially-weighted moving average — the controller's smoother for
+//! per-component load, service-rate and branch-frequency telemetry (§3.3.1
+//! "Resource Reallocation" re-estimates α, γ, p from these).
+
+/// EWMA with configurable smoothing factor `alpha` in (0, 1].
+#[derive(Clone, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0,1]");
+        Ewma { alpha, value: None }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            None => x,
+            Some(v) => v + self.alpha * (x - v),
+        });
+    }
+
+    /// Current estimate, or `default` if nothing observed yet.
+    pub fn get_or(&self, default: f64) -> f64 {
+        self.value.unwrap_or(default)
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn reset(&mut self) {
+        self.value = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_observation_initializes() {
+        let mut e = Ewma::new(0.2);
+        assert_eq!(e.get(), None);
+        e.observe(10.0);
+        assert_eq!(e.get(), Some(10.0));
+    }
+
+    #[test]
+    fn converges_to_constant_signal() {
+        let mut e = Ewma::new(0.3);
+        for _ in 0..100 {
+            e.observe(5.0);
+        }
+        assert!((e.get().unwrap() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tracks_level_shift() {
+        let mut e = Ewma::new(0.5);
+        for _ in 0..20 {
+            e.observe(1.0);
+        }
+        for _ in 0..20 {
+            e.observe(9.0);
+        }
+        assert!((e.get().unwrap() - 9.0).abs() < 0.01);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_alpha() {
+        Ewma::new(0.0);
+    }
+}

@@ -1,0 +1,150 @@
+//! Online multivariate linear regression via recursive least squares with
+//! exponential forgetting.
+//!
+//! This is the paper's §3.3.2 slack predictor: "the runtime maintains
+//! online linear regression models that map upstream execution features —
+//! such as the number of retrieved documents or token counts — to
+//! downstream component latencies". RLS gives O(d²) updates with no stored
+//! history, cheap enough to run per completed stage.
+
+/// RLS estimator for y ≈ wᵀx + b with forgetting factor `lambda` (≤ 1).
+#[derive(Clone, Debug)]
+pub struct OnlineLinReg {
+    /// Dimensionality including the bias term.
+    d: usize,
+    /// Weights, last element is the bias.
+    w: Vec<f64>,
+    /// Inverse covariance P (d×d, row-major).
+    p: Vec<f64>,
+    lambda: f64,
+    n: u64,
+}
+
+impl OnlineLinReg {
+    /// `features`: number of input features (bias added internally).
+    pub fn new(features: usize, lambda: f64) -> Self {
+        let d = features + 1;
+        let mut p = vec![0.0; d * d];
+        for i in 0..d {
+            p[i * d + i] = 1e3; // large prior variance => fast initial adaptation
+        }
+        OnlineLinReg { d, w: vec![0.0; d], p, lambda, n: 0 }
+    }
+
+    fn aug(&self, x: &[f64]) -> Vec<f64> {
+        let mut v = Vec::with_capacity(self.d);
+        v.extend_from_slice(x);
+        v.push(1.0);
+        v
+    }
+
+    /// Observe (x, y) and update the model.
+    pub fn observe(&mut self, x: &[f64], y: f64) {
+        assert_eq!(x.len() + 1, self.d, "feature arity mismatch");
+        let xa = self.aug(x);
+        let d = self.d;
+        // k = P x / (lambda + xᵀ P x)
+        let mut px = vec![0.0; d];
+        for i in 0..d {
+            let mut s = 0.0;
+            for j in 0..d {
+                s += self.p[i * d + j] * xa[j];
+            }
+            px[i] = s;
+        }
+        let denom = self.lambda + xa.iter().zip(&px).map(|(a, b)| a * b).sum::<f64>();
+        let err = y - self.predict_aug(&xa);
+        for i in 0..d {
+            self.w[i] += px[i] / denom * err;
+        }
+        // P = (P - k xᵀ P) / lambda
+        for i in 0..d {
+            for j in 0..d {
+                self.p[i * d + j] = (self.p[i * d + j] - px[i] * px[j] / denom) / self.lambda;
+            }
+        }
+        self.n += 1;
+    }
+
+    fn predict_aug(&self, xa: &[f64]) -> f64 {
+        self.w.iter().zip(xa).map(|(w, x)| w * x).sum()
+    }
+
+    /// Predict y for features x.
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        assert_eq!(x.len() + 1, self.d, "feature arity mismatch");
+        self.predict_aug(&self.aug(x))
+    }
+
+    /// Number of observations so far.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// True once the model has seen enough data to be trusted by the
+    /// scheduler (before that, callers fall back to profile means).
+    pub fn warmed_up(&self) -> bool {
+        self.n >= 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn learns_linear_function_exactly() {
+        let mut m = OnlineLinReg::new(2, 1.0);
+        let mut rng = Rng::new(0);
+        for _ in 0..200 {
+            let x = [rng.uniform(-5.0, 5.0), rng.uniform(-5.0, 5.0)];
+            let y = 3.0 * x[0] - 2.0 * x[1] + 7.0;
+            m.observe(&x, y);
+        }
+        // RLS with a finite prior is ridge-biased; 1e-3 is "exact" here.
+        let pred = m.predict(&[1.0, 1.0]);
+        assert!((pred - 8.0).abs() < 1e-3, "pred {pred}");
+    }
+
+    #[test]
+    fn learns_under_noise() {
+        let mut m = OnlineLinReg::new(1, 1.0);
+        let mut rng = Rng::new(1);
+        for _ in 0..2000 {
+            let x = rng.uniform(0.0, 10.0);
+            let y = 0.5 * x + 2.0 + rng.normal() * 0.1;
+            m.observe(&[x], y);
+        }
+        let pred = m.predict(&[4.0]);
+        assert!((pred - 4.0).abs() < 0.1, "pred {pred}");
+    }
+
+    #[test]
+    fn forgetting_tracks_drift() {
+        let mut m = OnlineLinReg::new(1, 0.95);
+        let mut rng = Rng::new(2);
+        // regime 1: y = x
+        for _ in 0..300 {
+            let x = rng.uniform(0.0, 10.0);
+            m.observe(&[x], x);
+        }
+        // regime 2: y = 3x (drifted workload)
+        for _ in 0..300 {
+            let x = rng.uniform(0.0, 10.0);
+            m.observe(&[x], 3.0 * x);
+        }
+        let pred = m.predict(&[5.0]);
+        assert!((pred - 15.0).abs() < 0.5, "pred {pred}");
+    }
+
+    #[test]
+    fn warmup_threshold() {
+        let mut m = OnlineLinReg::new(1, 1.0);
+        assert!(!m.warmed_up());
+        for i in 0..8 {
+            m.observe(&[i as f64], i as f64);
+        }
+        assert!(m.warmed_up());
+    }
+}

@@ -1,0 +1,10 @@
+//! Statistics substrate: online estimators used by the runtime controller
+//! (telemetry smoothing, slack prediction) and by the metrics layer.
+
+pub mod ewma;
+pub mod linreg;
+pub mod percentile;
+
+pub use ewma::Ewma;
+pub use linreg::OnlineLinReg;
+pub use percentile::{percentile, Histogram};

@@ -1,0 +1,166 @@
+//! Percentile helpers and a fixed-bucket log-scale histogram for latency
+//! recording (SLO attainment, p50/p95/p99 reporting).
+
+/// Exact percentile of a sample (interpolated, like numpy's 'linear').
+/// `p` in [0, 100].
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]), "input must be sorted");
+    let rank = (p / 100.0) * (sorted.len() as f64 - 1.0);
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Log-scale histogram over (1us, ~1000s) with bounded memory; used where
+/// storing every sample would be too expensive (DES with millions of
+/// events).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// buckets[i] counts samples in [lo * GROWTH^i, lo * GROWTH^{i+1}).
+    buckets: Vec<u64>,
+    lo: f64,
+    growth: f64,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+const N_BUCKETS: usize = 256;
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            buckets: vec![0; N_BUCKETS],
+            lo: 1e-6,
+            growth: 1.09, // 256 buckets cover 1e-6 .. ~4e3 seconds
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket_of(&self, x: f64) -> usize {
+        if x <= self.lo {
+            return 0;
+        }
+        let b = ((x / self.lo).ln() / self.growth.ln()) as usize;
+        b.min(N_BUCKETS - 1)
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        let b = self.bucket_of(x);
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Approximate quantile (bucket upper edge); error bounded by growth
+    /// factor (~9%).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return (self.lo * self.growth.powi(i as i32 + 1)).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn percentile_basics() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 5.0);
+        assert_eq!(percentile(&v, 50.0), 3.0);
+        assert!((percentile(&v, 25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert!((percentile(&v, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile(&v, 90.0) - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantiles_close_to_exact() {
+        let mut h = Histogram::new();
+        let mut rng = Rng::new(0);
+        let mut xs: Vec<f64> = (0..50_000).map(|_| rng.lognormal(-3.0, 1.0)).collect();
+        for &x in &xs {
+            h.observe(x);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.5, 0.9, 0.99] {
+            let exact = percentile(&xs, q * 100.0);
+            let approx = h.quantile(q);
+            let rel = (approx - exact).abs() / exact;
+            assert!(rel < 0.15, "q={q} exact={exact} approx={approx}");
+        }
+    }
+
+    #[test]
+    fn histogram_mean_exact() {
+        let mut h = Histogram::new();
+        for x in [0.1, 0.2, 0.3] {
+            h.observe(x);
+        }
+        assert!((h.mean() - 0.2).abs() < 1e-12);
+        assert_eq!(h.count(), 3);
+    }
+
+    #[test]
+    fn histogram_quantile_monotone_property() {
+        property("hist quantile monotone", 30, |g| {
+            let n = g.usize(1, 500);
+            let mut h = Histogram::new();
+            for _ in 0..n {
+                h.observe(g.f64(1e-6, 100.0));
+            }
+            let q1 = h.quantile(0.5);
+            let q2 = h.quantile(0.9);
+            let q3 = h.quantile(0.99);
+            assert!(q1 <= q2 + 1e-12 && q2 <= q3 + 1e-12);
+        });
+    }
+}

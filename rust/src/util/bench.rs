@@ -1,0 +1,112 @@
+//! Minimal benchmarking harness (criterion substitute; criterion is not in
+//! the offline crate cache). Provides warmup, repeated timed runs, and
+//! summary statistics; used by the `benches/*.rs` targets
+//! (`harness = false`).
+
+use std::time::Instant;
+
+/// Result of a timed benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall time in seconds.
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl BenchStats {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<32} iters={:<6} mean={:>10} p50={:>10} p95={:>10}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean),
+            fmt_time(self.p50),
+            fmt_time(self.p95),
+        )
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3}ms", secs * 1e3)
+    } else {
+        format!("{:.3}s", secs)
+    }
+}
+
+/// Time `f` for at least `min_iters` iterations and `min_secs` seconds
+/// (after `warmup` untimed iterations). Returns per-iteration statistics.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize, min_secs: f64, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed().as_secs_f64() < min_secs {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() > 10_000_000 {
+            break;
+        }
+    }
+    stats_from(name, &mut samples)
+}
+
+/// Build stats from raw per-iteration samples.
+pub fn stats_from(name: &str, samples: &mut [f64]) -> BenchStats {
+    assert!(!samples.is_empty());
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let q = |p: f64| samples[((n as f64 - 1.0) * p) as usize];
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean,
+        p50: q(0.50),
+        p95: q(0.95),
+        min: samples[0],
+        max: samples[n - 1],
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let mut acc = 0u64;
+        let s = bench("noop", 2, 50, 0.0, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(s.iters >= 50);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.max);
+        assert!(s.mean > 0.0);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("us"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with('s'));
+    }
+}

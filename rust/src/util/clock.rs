@@ -1,0 +1,92 @@
+//! Clock abstraction so the same policy code (router, scheduler,
+//! autoscaler) runs in live serving (wall clock) and in the discrete-event
+//! simulator (virtual clock). Times are f64 seconds since an arbitrary
+//! epoch.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A monotonically non-decreasing time source in seconds.
+pub trait Clock: Send + Sync {
+    fn now(&self) -> f64;
+}
+
+/// Wall clock anchored at construction.
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock { start: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Virtual clock driven by the DES loop. Stored as integer nanoseconds in
+/// an atomic so policy code can read it from any thread without locks.
+#[derive(Clone)]
+pub struct VirtualClock {
+    nanos: Arc<AtomicU64>,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        VirtualClock { nanos: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// Advance to an absolute time; DES event loops must only move forward.
+    pub fn advance_to(&self, t: f64) {
+        let n = (t * 1e9) as u64;
+        self.nanos.fetch_max(n, Ordering::Relaxed);
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_monotone() {
+        let c = WallClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn virtual_clock_advances_and_never_goes_back() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance_to(1.5);
+        assert!((c.now() - 1.5).abs() < 1e-9);
+        c.advance_to(1.0); // ignored
+        assert!((c.now() - 1.5).abs() < 1e-9);
+        c.advance_to(2.25);
+        assert!((c.now() - 2.25).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,10 @@
+//! Small shared utilities: PRNG, clocks, table printing, a criterion
+//! substitute ([`bench`]) and a proptest substitute ([`proptest`]) — the
+//! offline crate cache only contains `xla` + `anyhow`, so these are built
+//! in-crate.
+
+pub mod bench;
+pub mod clock;
+pub mod proptest;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,131 @@
+//! Tiny property-testing harness (proptest substitute; proptest is not in
+//! the offline crate cache).
+//!
+//! Usage:
+//! ```no_run
+//! use harmonia::util::proptest::{property, Gen};
+//! property("sum is commutative", 100, |g| {
+//!     let a = g.i64(-1000, 1000);
+//!     let b = g.i64(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! On failure the macro panics with the failing case number and seed so the
+//! case can be replayed deterministically.
+
+use crate::util::rng::Rng;
+
+/// Random-input generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Log of generated values, printed on failure for diagnosis.
+    log: Vec<String>,
+}
+
+impl Gen {
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        let v = self.rng.range_i64(lo, hi);
+        self.log.push(format!("i64({lo},{hi})={v}"));
+        v
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.i64(lo as i64, hi as i64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.uniform(lo, hi);
+        self.log.push(format!("f64({lo},{hi})={v}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.chance(0.5);
+        self.log.push(format!("bool={v}"));
+        v
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.rng.uniform(lo, hi)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        let i = self.rng.index(xs.len());
+        self.log.push(format!("choose idx={i}"));
+        &xs[i]
+    }
+
+    /// Raw access for structured generation.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `f` against `cases` generated inputs. Panics (with seed + input log)
+/// on the first failing case.
+pub fn property<F: FnMut(&mut Gen)>(name: &str, cases: usize, f: F) {
+    property_seeded(name, cases, 0xC0FFEE, f)
+}
+
+pub fn property_seeded<F: FnMut(&mut Gen)>(name: &str, cases: usize, seed: u64, mut f: F) {
+    let mut master = Rng::new(seed);
+    for case in 0..cases {
+        let case_rng = master.fork();
+        let mut g = Gen { rng: case_rng, log: Vec::new() };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed:#x})\n  inputs: {}\n  panic: {msg}",
+                g.log.join(", "),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        property("add-commutes", 50, |g| {
+            let a = g.i64(-100, 100);
+            let b = g.i64(-100, 100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_case() {
+        let r = std::panic::catch_unwind(|| {
+            property("always-fails-eventually", 50, |g| {
+                let v = g.i64(0, 10);
+                assert!(v < 10, "hit the max");
+            });
+        });
+        let err = r.expect_err("should fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("always-fails-eventually"));
+        assert!(msg.contains("inputs:"));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut seen = Vec::new();
+        property_seeded("record", 5, 42, |g| {
+            seen.push(g.i64(0, 1_000_000));
+        });
+        let mut seen2 = Vec::new();
+        property_seeded("record2", 5, 42, |g| {
+            seen2.push(g.i64(0, 1_000_000));
+        });
+        assert_eq!(seen, seen2);
+        assert_eq!(seen.len(), 5);
+    }
+}

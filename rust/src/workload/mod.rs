@@ -1,0 +1,15 @@
+//! Workload substrate: synthetic corpus, query/trace generation.
+//!
+//! Substitutes the paper's datasets (LMSYS-Chat-1M chats, Wiki-DPR
+//! passages) with deterministic generators that match the *statistics*
+//! the serving results depend on: Poisson arrivals, heavy-tailed prompt
+//! and generation lengths, k ∈ [100, 300] retrieved documents, and an
+//! A-RAG complexity mix.
+
+pub mod corpus;
+pub mod queries;
+pub mod trace;
+
+pub use corpus::{Corpus, Passage};
+pub use queries::{Query, QueryGen};
+pub use trace::{Request, Trace, TraceConfig};

@@ -1,0 +1,101 @@
+//! Query generation: topic-targeted byte-string queries, so retrieval has
+//! ground truth (a query about topic T should retrieve topic-T passages —
+//! the recall axis of the Fig. 4 `search_ef` study).
+
+use crate::util::rng::Rng;
+use crate::workload::corpus::Corpus;
+
+/// A user query tied to a ground-truth topic.
+#[derive(Clone, Debug)]
+pub struct Query {
+    pub id: usize,
+    pub topic: usize,
+    pub text: Vec<u8>,
+}
+
+/// Generates queries resembling passages of a chosen topic.
+pub struct QueryGen<'a> {
+    corpus: &'a Corpus,
+    rng: Rng,
+    next_id: usize,
+}
+
+impl<'a> QueryGen<'a> {
+    pub fn new(corpus: &'a Corpus, seed: u64) -> Self {
+        QueryGen { corpus, rng: Rng::new(seed), next_id: 0 }
+    }
+
+    /// A query is a perturbed excerpt of a random passage of its topic.
+    pub fn next(&mut self) -> Query {
+        let topic = self.rng.index(self.corpus.n_topics);
+        self.next_with_topic(topic)
+    }
+
+    pub fn next_with_topic(&mut self, topic: usize) -> Query {
+        // Pick a passage of this topic (corpus topics are dense enough
+        // that a few tries suffice; fall back to any passage).
+        let mut base = None;
+        for _ in 0..64 {
+            let p = self.rng.choose(&self.corpus.passages);
+            if p.topic == topic {
+                base = Some(p);
+                break;
+            }
+        }
+        let p = base.unwrap_or_else(|| self.rng.choose(&self.corpus.passages));
+        let mut text = p.text[..p.text.len().min(48)].to_vec();
+        for b in text.iter_mut() {
+            if self.rng.chance(0.15) {
+                *b = (self.rng.below(64) + 32) as u8;
+            }
+        }
+        let q = Query { id: self.next_id, topic: p.topic, text };
+        self.next_id += 1;
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::corpus::Corpus;
+
+    #[test]
+    fn queries_carry_topics() {
+        let c = Corpus::generate(100, 4, 64, 0);
+        let mut qg = QueryGen::new(&c, 1);
+        let qs: Vec<Query> = (0..50).map(|_| qg.next()).collect();
+        let topics: std::collections::HashSet<usize> = qs.iter().map(|q| q.topic).collect();
+        assert!(topics.len() > 1, "should cover multiple topics");
+        assert!(qs.iter().all(|q| q.topic < 4));
+        // ids are unique and increasing
+        for (i, q) in qs.iter().enumerate() {
+            assert_eq!(q.id, i);
+        }
+    }
+
+    #[test]
+    fn query_embedding_near_its_topic() {
+        let c = Corpus::generate(400, 4, 64, 3);
+        let mut qg = QueryGen::new(&c, 2);
+        let mut hits = 0;
+        let trials = 30;
+        for _ in 0..trials {
+            let q = qg.next();
+            let qe = Corpus::hash_embed(&q.text, 32);
+            // Nearest passage by brute force should share the topic (mostly).
+            let mut best = (f32::NEG_INFINITY, 0usize);
+            for p in &c.passages {
+                let pe = Corpus::hash_embed(&p.text, 32);
+                let s: f32 = qe.iter().zip(&pe).map(|(a, b)| a * b).sum();
+                if s > best.0 {
+                    best = (s, p.topic);
+                }
+            }
+            if best.1 == q.topic {
+                hits += 1;
+            }
+        }
+        assert!(hits as f64 / trials as f64 > 0.7, "topic hit rate {hits}/{trials}");
+    }
+}

@@ -1,0 +1,199 @@
+//! Request traces: Poisson arrivals with heavy-tailed per-request work —
+//! the LMSYS-Chat-1M substitute (matched length statistics, not text).
+
+use crate::profile::models::RequestFeatures;
+use crate::util::rng::Rng;
+
+/// One admitted request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: usize,
+    /// Arrival time in seconds from trace start.
+    pub arrival: f64,
+    pub features: RequestFeatures,
+    /// SLO deadline (arrival + slo_latency), if an SLO is configured.
+    pub deadline: Option<f64>,
+}
+
+/// Trace generation parameters.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Mean arrival rate (requests/second) of the Poisson process.
+    pub rate: f64,
+    /// Number of requests to generate.
+    pub n: usize,
+    /// SLO latency budget in seconds (None = no deadline).
+    pub slo: Option<f64>,
+    /// Prompt length lognormal (mu, sigma) in log-token space.
+    pub prompt_mu: f64,
+    pub prompt_sigma: f64,
+    /// Generation length lognormal (mu, sigma).
+    pub gen_mu: f64,
+    pub gen_sigma: f64,
+    /// Retrieved-docs range [k_lo, k_hi] (paper: 100–300).
+    pub k_lo: usize,
+    pub k_hi: usize,
+    /// A-RAG complexity mix (simple, standard, complex); must sum to 1.
+    pub complexity_mix: [f64; 3],
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            rate: 16.0,
+            n: 1000,
+            slo: None,
+            // exp(4.1) ≈ 60 tokens median prompt, heavy tail.
+            prompt_mu: 4.1,
+            prompt_sigma: 0.6,
+            // exp(3.7) ≈ 40 tokens median generation.
+            gen_mu: 3.7,
+            gen_sigma: 0.7,
+            k_lo: 100,
+            k_hi: 300,
+            complexity_mix: [0.2, 0.5, 0.3],
+        }
+    }
+}
+
+impl TraceConfig {
+    /// Sample one request's features.
+    pub fn sample_features(&self, rng: &mut Rng) -> RequestFeatures {
+        let prompt_len = rng
+            .lognormal(self.prompt_mu, self.prompt_sigma)
+            .round()
+            .clamp(4.0, 127.0) as usize;
+        let gen_len = rng
+            .lognormal(self.gen_mu, self.gen_sigma)
+            .round()
+            .clamp(4.0, 96.0) as usize;
+        let k_docs = rng.range_i64(self.k_lo as i64, self.k_hi as i64) as usize;
+        let complexity = rng.weighted(&self.complexity_mix) as u8;
+        RequestFeatures { prompt_len, gen_len, k_docs, complexity }
+    }
+
+    /// Generate the full trace (deterministic for a seed).
+    pub fn generate(&self, seed: u64) -> Trace {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        let mut requests = Vec::with_capacity(self.n);
+        for id in 0..self.n {
+            t += rng.exp(self.rate);
+            let features = self.sample_features(&mut rng);
+            requests.push(Request {
+                id,
+                arrival: t,
+                features,
+                deadline: self.slo.map(|s| t + s),
+            });
+        }
+        Trace { requests, rate: self.rate }
+    }
+}
+
+/// A generated trace.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+    pub rate: f64,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Duration from first to last arrival.
+    pub fn span(&self) -> f64 {
+        if self.requests.len() < 2 {
+            return 0.0;
+        }
+        self.requests.last().unwrap().arrival - self.requests[0].arrival
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+
+    #[test]
+    fn poisson_rate_is_respected() {
+        let cfg = TraceConfig { rate: 50.0, n: 20_000, ..Default::default() };
+        let tr = cfg.generate(0);
+        let empirical = (tr.len() - 1) as f64 / tr.span();
+        assert!((empirical - 50.0).abs() / 50.0 < 0.05, "rate {empirical}");
+    }
+
+    #[test]
+    fn arrivals_monotone_nondecreasing() {
+        let tr = TraceConfig::default().generate(1);
+        for w in tr.requests.windows(2) {
+            assert!(w[1].arrival >= w[0].arrival);
+        }
+    }
+
+    #[test]
+    fn k_docs_in_paper_range() {
+        let tr = TraceConfig::default().generate(2);
+        for r in &tr.requests {
+            assert!((100..=300).contains(&r.features.k_docs));
+        }
+    }
+
+    #[test]
+    fn deadlines_set_when_slo_configured() {
+        let cfg = TraceConfig { slo: Some(2.0), n: 10, ..Default::default() };
+        let tr = cfg.generate(3);
+        for r in &tr.requests {
+            let d = r.deadline.unwrap();
+            assert!((d - r.arrival - 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn trace_deterministic_per_seed() {
+        let cfg = TraceConfig::default();
+        let a = cfg.generate(9);
+        let b = cfg.generate(9);
+        for (ra, rb) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(ra.arrival, rb.arrival);
+            assert_eq!(ra.features.prompt_len, rb.features.prompt_len);
+        }
+    }
+
+    #[test]
+    fn feature_distributions_property() {
+        property("trace features sane", 20, |g| {
+            let cfg = TraceConfig {
+                rate: g.f64(1.0, 100.0),
+                n: 50,
+                ..Default::default()
+            };
+            let tr = cfg.generate(g.i64(0, 1 << 30) as u64);
+            for r in &tr.requests {
+                assert!(r.features.prompt_len >= 4 && r.features.prompt_len < 128);
+                assert!(r.features.gen_len >= 4 && r.features.gen_len <= 96);
+                assert!(r.features.complexity <= 2);
+            }
+        });
+    }
+
+    #[test]
+    fn complexity_mix_matches_config() {
+        let cfg = TraceConfig { n: 30_000, ..Default::default() };
+        let tr = cfg.generate(4);
+        let mut counts = [0usize; 3];
+        for r in &tr.requests {
+            counts[r.features.complexity as usize] += 1;
+        }
+        for (i, &expected) in cfg.complexity_mix.iter().enumerate() {
+            let got = counts[i] as f64 / tr.len() as f64;
+            assert!((got - expected).abs() < 0.02, "class {i}: {got} vs {expected}");
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Integration tests: full live serving through real XLA artifacts —
+//! deploy a pipeline, push requests, verify answers + control flow.
+//! Skipped (with a notice) when `make artifacts` hasn't run.
+
+use std::collections::HashMap;
+
+use harmonia::coordinator::controller::{deploy, ControllerConfig};
+use harmonia::runtime::{artifacts_available, default_artifacts_dir};
+use harmonia::spec::apps;
+
+fn cfg() -> ControllerConfig {
+    let mut c = ControllerConfig::quick(default_artifacts_dir());
+    c.corpus_size = 128; // keep index build fast
+    c.n_topics = 4;
+    c
+}
+
+#[test]
+fn vanilla_rag_serves_end_to_end() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let h = deploy(apps::vanilla_rag(), cfg()).unwrap();
+    let rx = h.submit(b"what is in topic zero?");
+    let resp = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert!(resp.latency_secs > 0.0);
+    assert_eq!(resp.hops, 2, "retriever + generator");
+    let report = h.report();
+    assert_eq!(report.completed, 1);
+    assert!(report.components.contains_key("retriever"));
+    assert!(report.components.contains_key("generator"));
+    h.shutdown();
+}
+
+#[test]
+fn vanilla_rag_batched_requests() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let h = deploy(apps::vanilla_rag(), cfg()).unwrap();
+    let rxs: Vec<_> = (0..6)
+        .map(|i| h.submit(format!("query number {i} about something").as_bytes()))
+        .collect();
+    let mut answers = Vec::new();
+    for rx in rxs {
+        let r = rx.recv_timeout(std::time::Duration::from_secs(180)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        answers.push(r.answer);
+    }
+    assert_eq!(answers.len(), 6);
+    let report = h.report();
+    assert_eq!(report.completed, 6);
+    assert!(report.throughput > 0.0);
+    h.shutdown();
+}
+
+#[test]
+fn corrective_rag_exercises_conditional_flow() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut c = cfg();
+    // One instance per component keeps worker startup tractable.
+    c.instances = Some(
+        [("grader".to_string(), 1usize)]
+            .into_iter()
+            .collect::<HashMap<_, _>>(),
+    );
+    let h = deploy(apps::corrective_rag(), c).unwrap();
+    let rxs: Vec<_> = (0..4)
+        .map(|i| h.submit(format!("crag question {i}?").as_bytes()))
+        .collect();
+    for rx in rxs {
+        let r = rx.recv_timeout(std::time::Duration::from_secs(240)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        // hops: retriever + grader + [rewriter + websearch] + generator.
+        assert!(r.hops == 3 || r.hops == 5, "hops {}", r.hops);
+    }
+    let report = h.report();
+    assert_eq!(report.completed, 4);
+    assert!(report.components.contains_key("grader"));
+    h.shutdown();
+}
+
+#[test]
+fn self_rag_loop_terminates() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let h = deploy(apps::self_rag(), cfg()).unwrap();
+    let rx = h.submit(b"loopy question");
+    let r = rx.recv_timeout(std::time::Duration::from_secs(240)).unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    // 1 iteration = 3 hops (retr, gen, critic); each extra iteration adds
+    // rewriter + the loop body. Iteration bound 2 → at most 11 hops.
+    assert!((3..=11).contains(&r.hops), "hops {}", r.hops);
+    h.shutdown();
+}
+
+#[test]
+fn adaptive_rag_classifies_and_routes() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let h = deploy(apps::adaptive_rag(), cfg()).unwrap();
+    let rxs: Vec<_> = (0..4)
+        .map(|i| h.submit(format!("adaptive question {i} with varied length {}", "x".repeat(i * 7)).as_bytes()))
+        .collect();
+    for rx in rxs {
+        let r = rx.recv_timeout(std::time::Duration::from_secs(240)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(r.hops >= 1);
+    }
+    let report = h.report();
+    assert_eq!(report.completed, 4);
+    assert!(report.components.contains_key("classifier"));
+    h.shutdown();
+}
