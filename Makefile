@@ -1,0 +1,42 @@
+# Harmonia (Patchwork reproduction) — build / verify / bench entrypoints.
+#
+# `make verify` is the tier-1 gate plus lint: release build, tests,
+# rustfmt check, and clippy with warnings denied.
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: all build test lint fmt clippy verify artifacts bench bench-shards clean
+
+all: build
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+fmt:
+	$(CARGO) fmt --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+lint: fmt clippy
+
+verify: build test lint
+
+# AOT-compile the JAX/Pallas models to XLA artifacts (live mode).
+artifacts:
+	cd python/compile && $(PYTHON) aot.py --out ../../artifacts
+
+# Run every paper-figure bench (plain binaries; no harness).
+bench:
+	$(CARGO) bench
+
+# The sharded-retrieval scaling bench only.
+bench-shards:
+	$(CARGO) bench --bench fig04b_shard_scaling
+
+clean:
+	$(CARGO) clean

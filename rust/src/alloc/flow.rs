@@ -74,20 +74,30 @@ impl<'a> FlowProblem<'a> {
             let _ = i;
         }
 
-        // Resource variables r_{i,k} for work nodes that demand k.
-        let mut r_vars: HashMap<(NodeId, ResourceKind), crate::lp::model::Var> = HashMap::new();
+        // Resource variables r_{i,k,s}: one column per (node, resource,
+        // shard). Unsharded nodes have a single shard (s = 0); sharded
+        // components (retrieval scatter-gather) get an independent column
+        // per shard so the allocator sizes each shard's replica pool on
+        // its own — the paper's "unique scalability characteristics"
+        // applied to the index partitions.
+        let mut r_vars: HashMap<(NodeId, ResourceKind), Vec<crate::lp::model::Var>> =
+            HashMap::new();
         for node in g.work_nodes() {
+            let s_count = node.shards.max(1);
             for &(k, _) in &node.resources {
-                r_vars.insert((node.id, k), m.var(format!("r_{}_{}", node.name, k.name()), 0.0));
+                let vars: Vec<_> = (0..s_count)
+                    .map(|s| m.var(format!("r_{}_{}_{s}", node.name, k.name()), 0.0))
+                    .collect();
+                r_vars.insert((node.id, k), vars);
             }
         }
 
-        // Budgets: Σ_i r_{i,k} ≤ C_k.
+        // Budgets: Σ_{i,s} r_{i,k,s} ≤ C_k.
         for &(k, cap) in &self.budgets {
             let terms: Vec<_> = r_vars
                 .iter()
                 .filter(|((_, rk), _)| *rk == k)
-                .map(|(_, &v)| (v, 1.0))
+                .flat_map(|(_, vars)| vars.iter().map(|&v| (v, 1.0)))
                 .collect();
             if !terms.is_empty() {
                 m.constrain(terms, Sense::Le, cap);
@@ -113,12 +123,22 @@ impl<'a> FlowProblem<'a> {
             if inflow.is_empty() {
                 continue;
             }
+            // For sharded nodes every request visits *all* shards, so each
+            // shard pool must individually keep up with the full inflow:
+            // Σ_u f_{u,i} ≤ α_{i,k} r_{i,k,s}  ∀k, ∀s. The profiled α is
+            // per-shard already (the profiler applies the calibrated shard
+            // service factor), so no extra scaling appears here; the LP
+            // naturally sizes all shard pools equally, and the total
+            // resource bill matches the unsharded formulation up to the
+            // scatter-gather overhead.
             for &(k, _) in &node.resources {
                 let a = self.profile.alpha_for(node.id, k);
                 if a > 0.0 {
-                    let mut terms = inflow.clone();
-                    terms.push((r_vars[&(node.id, k)], -a));
-                    m.constrain(terms, Sense::Le, 0.0);
+                    for &rv in &r_vars[&(node.id, k)] {
+                        let mut terms = inflow.clone();
+                        terms.push((rv, -a));
+                        m.constrain(terms, Sense::Le, 0.0);
+                    }
                 }
             }
         }
@@ -152,14 +172,19 @@ impl<'a> FlowProblem<'a> {
         }
 
         let mut resources = HashMap::new();
-        for ((node, k), var) in &r_vars {
-            resources.insert((*node, *k), sol.x[var.0]);
+        let mut shard_resources = HashMap::new();
+        for ((node, k), vars) in &r_vars {
+            let vals: Vec<f64> = vars.iter().map(|v| sol.x[v.0]).collect();
+            let total: f64 = vals.iter().sum();
+            resources.insert((*node, *k), total);
+            shard_resources.insert((*node, *k), vals);
         }
         let edge_flows = f_vars.iter().map(|v| sol.x[v.0]).collect();
         Ok(AllocationPlan::from_lp(
             g,
             self.profile,
             resources,
+            shard_resources,
             edge_flows,
             sol.objective,
             sol.pivots,
@@ -224,6 +249,43 @@ mod tests {
         );
         let ratio = rg / rgen;
         assert!((1.2..2.6).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn sharded_retriever_gets_independent_per_shard_pools() {
+        let g = apps::sharded_vanilla_rag(4);
+        let plan = plan_for(&g, 2000, 0);
+        assert!(plan.throughput > 0.0);
+        let retr = g.node_by_name("retriever").unwrap().id;
+        let per_shard = plan.shard_instance_counts(retr);
+        assert_eq!(per_shard.len(), 4, "one replica pool per shard");
+        assert!(per_shard.iter().all(|&c| c >= 1), "every shard staffed: {per_shard:?}");
+        assert_eq!(
+            plan.instances(retr),
+            per_shard.iter().sum::<usize>(),
+            "component total = sum of shard pools"
+        );
+        // Deployable units = complete replica sets (min across pools).
+        assert_eq!(plan.units(retr), *per_shard.iter().min().unwrap());
+        // Unsharded nodes keep a single pool and units == instances.
+        let gen = g.node_by_name("generator").unwrap().id;
+        assert_eq!(plan.shard_instance_counts(gen).len(), 1);
+        assert_eq!(plan.units(gen), plan.instances(gen));
+    }
+
+    #[test]
+    fn sharded_vrag_matches_vrag_throughput() {
+        // Sharding retrieval must not cost end-to-end throughput: v-rag
+        // is generator-bound under the paper budgets, and the scatter-
+        // gather overhead only taxes the (cheap) CPU side.
+        let sharded = plan_for(&apps::sharded_vanilla_rag(4), 2000, 3);
+        let full = plan_for(&apps::vanilla_rag(), 2000, 3);
+        assert!(
+            sharded.throughput > full.throughput * 0.9,
+            "sharded {} vs unsharded {}",
+            sharded.throughput,
+            full.throughput
+        );
     }
 
     #[test]

@@ -10,10 +10,14 @@ use crate::spec::graph::{NodeId, PipelineGraph, ResourceKind};
 /// A deployable allocation.
 #[derive(Clone, Debug)]
 pub struct AllocationPlan {
-    /// Continuous resource assignment r_{i,k} from the LP.
+    /// Continuous resource assignment r_{i,k} from the LP (summed across
+    /// shards for sharded components).
     pub resources: HashMap<(NodeId, ResourceKind), f64>,
-    /// Rounded instances per component.
+    /// Rounded instances per component (summed across shards).
     pub instance_counts: HashMap<NodeId, usize>,
+    /// Rounded replica count per shard (len == the node's `shards`; a
+    /// single entry for unsharded components).
+    pub shard_instances: HashMap<NodeId, Vec<usize>>,
     /// Optimal edge flows f_{i,j} (requests/sec).
     pub edge_flows: Vec<f64>,
     /// Optimal end-to-end throughput (flow into sink, requests/sec).
@@ -27,26 +31,58 @@ impl AllocationPlan {
         graph: &PipelineGraph,
         _profile: &Profile,
         resources: HashMap<(NodeId, ResourceKind), f64>,
+        shard_resources: HashMap<(NodeId, ResourceKind), Vec<f64>>,
         edge_flows: Vec<f64>,
         throughput: f64,
         pivots: usize,
     ) -> AllocationPlan {
-        // Instances = max over resources of ceil(r_{i,k} / demand_{i,k}),
-        // floored at base_instances.
+        // Per shard: instances = max over resources of
+        // ceil(r_{i,k,s} / demand_{i,k}); every shard of a sharded
+        // component keeps ≥1 replica (a shard with no replica would drop
+        // its slice of the corpus). The component total is floored at
+        // base_instances.
         let mut instance_counts = HashMap::new();
+        let mut shard_instances = HashMap::new();
         for node in graph.work_nodes() {
-            let mut n_inst = 0usize;
-            for &(k, demand) in &node.resources {
-                if demand <= 0.0 {
-                    continue;
+            let s_count = node.shards.max(1);
+            let mut per_shard = vec![0usize; s_count];
+            for (s, slot) in per_shard.iter_mut().enumerate() {
+                let mut n_inst = 0usize;
+                for &(k, demand) in &node.resources {
+                    if demand <= 0.0 {
+                        continue;
+                    }
+                    let r = shard_resources
+                        .get(&(node.id, k))
+                        .and_then(|v| v.get(s))
+                        .copied()
+                        .unwrap_or(0.0);
+                    n_inst = n_inst.max((r / demand).ceil() as usize);
                 }
-                let r = resources.get(&(node.id, k)).copied().unwrap_or(0.0);
-                let implied = (r / demand).ceil() as usize;
-                n_inst = n_inst.max(implied);
+                *slot = if s_count > 1 { n_inst.max(1) } else { n_inst };
             }
-            instance_counts.insert(node.id, n_inst.max(node.base_instances).max(1));
+            let raw: usize = per_shard.iter().sum();
+            let total = raw.max(node.base_instances).max(1);
+            if s_count == 1 {
+                per_shard[0] = total;
+            } else if total > raw {
+                // Distribute the base_instances floor shortfall round-robin
+                // so `instances == Σ shard pools` holds for sharded nodes.
+                for i in 0..(total - raw) {
+                    per_shard[i % s_count] += 1;
+                }
+            }
+            instance_counts.insert(node.id, total);
+            shard_instances.insert(node.id, per_shard);
         }
-        AllocationPlan { resources, instance_counts, edge_flows, throughput, pivots }
+        AllocationPlan {
+            resources,
+            instance_counts,
+            shard_instances,
+            edge_flows,
+            throughput,
+            pivots,
+        }
     }
 
     /// Continuous resource units assigned to a node.
@@ -54,9 +90,28 @@ impl AllocationPlan {
         self.resources.get(&(node, k)).copied().unwrap_or(0.0)
     }
 
-    /// Concrete instance count for a node.
+    /// Concrete instance count for a node (summed across shards).
     pub fn instances(&self, node: NodeId) -> usize {
         self.instance_counts.get(&node).copied().unwrap_or(0)
+    }
+
+    /// Replica counts per shard for a node (empty if the node is unknown;
+    /// a single entry for unsharded components).
+    pub fn shard_instance_counts(&self, node: NodeId) -> &[usize] {
+        self.shard_instances.get(&node).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Deployable scatter-gather units. A request to a sharded component
+    /// must touch one replica of EVERY shard, so a schedulable "unit" is
+    /// a complete replica set — the number of such sets is the minimum
+    /// across the shard pools (a partial set cannot serve). Unsharded
+    /// nodes: same as [`AllocationPlan::instances`]. One unit occupies
+    /// `shards` per-replica resource bundles.
+    pub fn units(&self, node: NodeId) -> usize {
+        match self.shard_instances.get(&node) {
+            Some(v) if v.len() > 1 => v.iter().copied().min().unwrap_or(0),
+            _ => self.instances(node),
+        }
     }
 
     /// A uniform baseline plan (the Haystack/Ray substitute): divide each
@@ -78,6 +133,7 @@ impl AllocationPlan {
             }
         }
         let mut instance_counts = HashMap::new();
+        let mut shard_instances = HashMap::new();
         for node in graph.work_nodes() {
             let mut n_inst = usize::MAX;
             let mut any = false;
@@ -92,11 +148,27 @@ impl AllocationPlan {
                 n_inst = n_inst.min((r / demand).floor() as usize);
             }
             let n_inst = if any { n_inst } else { 1 };
-            instance_counts.insert(node.id, n_inst.max(node.base_instances).max(1));
+            let total = n_inst.max(node.base_instances).max(1);
+            // Baselines are shard-blind: spread the replicas round-robin,
+            // but never leave a shard with zero replicas — its corpus
+            // slice would be unreachable.
+            let s_count = node.shards.max(1);
+            let mut per_shard = vec![total / s_count; s_count];
+            for slot in per_shard.iter_mut().take(total % s_count) {
+                *slot += 1;
+            }
+            if s_count > 1 {
+                for slot in per_shard.iter_mut() {
+                    *slot = (*slot).max(1);
+                }
+            }
+            instance_counts.insert(node.id, total.max(per_shard.iter().sum()));
+            shard_instances.insert(node.id, per_shard);
         }
         AllocationPlan {
             resources,
             instance_counts,
+            shard_instances,
             edge_flows: vec![0.0; graph.edges.len()],
             throughput: 0.0,
             pivots: 0,
@@ -112,7 +184,12 @@ impl AllocationPlan {
             for &(k, _) in &node.resources {
                 res.push_str(&format!(" {}={:.1}", k.name(), self.resource(node.id, k)));
             }
-            out.push_str(&format!("  {:<16} instances={inst}{res}\n", node.name));
+            let shards = if node.shards > 1 {
+                format!(" shards={:?}", self.shard_instance_counts(node.id))
+            } else {
+                String::new()
+            };
+            out.push_str(&format!("  {:<16} instances={inst}{res}{shards}\n", node.name));
         }
         out
     }

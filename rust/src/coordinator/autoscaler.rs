@@ -87,7 +87,11 @@ impl Autoscaler {
         let t0 = Instant::now();
         let plan = FlowProblem::new(graph, &profile, budgets.to_vec()).solve().ok()?;
         self.solve_times.push(t0.elapsed().as_secs_f64());
-        let counts = plan.instance_counts.clone();
+        // Scale targets are deployable units: for sharded components one
+        // unit is a complete replica set (the runtime's schedulable
+        // quantum), for everything else a plain instance.
+        let counts: HashMap<NodeId, usize> =
+            graph.work_nodes().map(|n| (n.id, plan.units(n.id))).collect();
         match &self.pending {
             Some(prev) if plans_agree(prev, &counts) => {
                 self.pending = None;

@@ -30,6 +30,8 @@ pub struct ControllerConfig {
     pub artifacts: PathBuf,
     pub corpus_size: usize,
     pub n_topics: usize,
+    /// Retrieval index shards (scatter-gather fan-out; 1 = unsharded).
+    pub n_shards: usize,
     pub seed: u64,
     /// Instances per component (None → the spec's base_instances).
     pub instances: Option<HashMap<String, usize>>,
@@ -43,6 +45,7 @@ impl ControllerConfig {
             artifacts,
             corpus_size: 512,
             n_topics: 8,
+            n_shards: 4,
             seed: 0,
             instances: None,
             slo: None,
@@ -108,8 +111,14 @@ struct InflightReq {
 /// Deploy a pipeline graph as live workers + a controller thread.
 pub fn deploy(graph: PipelineGraph, cfg: ControllerConfig) -> Result<ServingHandle> {
     let shared = Arc::new(
-        build_live_shared(cfg.artifacts.clone(), cfg.corpus_size, cfg.n_topics, cfg.seed)
-            .context("building live shared state (corpus/index)")?,
+        build_live_shared(
+            cfg.artifacts.clone(),
+            cfg.corpus_size,
+            cfg.n_topics,
+            cfg.n_shards,
+            cfg.seed,
+        )
+        .context("building live shared state (corpus/index)")?,
     );
 
     // Spawn workers per component.

@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::retrieval::IvfIndex;
+use crate::retrieval::{IvfParams, ShardParams, ShardedIndex};
 use crate::runtime::classifier::Classifier;
 use crate::runtime::embedder::Embedder;
 use crate::runtime::generator::{GenRequest, Generator};
@@ -21,7 +21,9 @@ use super::worker::{spawn_worker, StageLogic, WorkerHandle};
 /// Shared read-only deployment state handed to every worker.
 pub struct LiveShared {
     pub corpus: Arc<Corpus>,
-    pub index: Arc<IvfIndex>,
+    /// Sharded IVF index: retrieval scatter-gathers across corpus shards
+    /// (see `retrieval::sharded`).
+    pub index: Arc<ShardedIndex>,
     pub artifacts: PathBuf,
     /// Top-k passages to retrieve per query (live scale).
     pub k_docs: usize,
@@ -46,6 +48,12 @@ impl StageLogic for Box<dyn StageLogic> {
 
 // ---------------------------------------------------------------------------
 
+/// Scatter-gather retriever: embeds the batch in one artifact call, then
+/// fans the whole batch out across the index shards (one scoped thread
+/// per shard, per the sharded scatter in `retrieval::sharded`) and
+/// gathers the merged top-k per query. Each worker instance of this
+/// logic is one scatter-gather replica; the router spreads requests
+/// across replicas while the replica spreads each request across shards.
 struct RetrieverLogic {
     embedder: Embedder,
     shared: Arc<LiveShared>,
@@ -57,8 +65,10 @@ impl StageLogic for RetrieverLogic {
         for chunk in items.chunks_mut(self.embedder.batch()) {
             let texts: Vec<&[u8]> = chunk.iter().map(|i| i.state.query.as_slice()).collect();
             let embs = self.embedder.embed_batch(&texts)?;
-            for (it, emb) in chunk.iter_mut().zip(embs) {
-                let hits = self.shared.index.search(&emb, self.shared.k_docs, self.shared.search_ef);
+            // Scatter the batch across shards, gather merged top-k.
+            let all_hits =
+                self.shared.index.search_batch(&embs, self.shared.k_docs, self.shared.search_ef);
+            for (it, hits) in chunk.iter_mut().zip(all_hits) {
                 let mut ctx = Vec::new();
                 let mut ids = Vec::new();
                 for h in hits {
@@ -275,11 +285,13 @@ pub fn spawn_for_kind(
 }
 
 /// Build the shared deployment state: generate the corpus, embed it with
-/// the real embedder, and build the IVF index.
+/// the real embedder, and build the sharded IVF index (`n_shards` corpus
+/// partitions searched scatter-gather style).
 pub fn build_live_shared(
     artifacts: PathBuf,
     corpus_size: usize,
     n_topics: usize,
+    n_shards: usize,
     seed: u64,
 ) -> Result<LiveShared> {
     let corpus = Arc::new(Corpus::generate(corpus_size, n_topics, 64, seed));
@@ -291,10 +303,13 @@ pub fn build_live_shared(
     for e in &embs {
         flat.extend_from_slice(e);
     }
-    let index = Arc::new(IvfIndex::build(
+    let index = Arc::new(ShardedIndex::build(
         flat,
         dim,
-        crate::retrieval::IvfParams { n_lists: (corpus_size / 64).max(4), kmeans_iters: 6, seed },
+        ShardParams {
+            n_shards: n_shards.max(1),
+            ivf: IvfParams { n_lists: (corpus_size / 64).max(4), kmeans_iters: 6, seed },
+        },
     ));
     Ok(LiveShared {
         corpus,

@@ -18,6 +18,9 @@
 //! * [`runtime`] + [`exec`] — the **live data plane**: AOT-compiled XLA
 //!   artifacts (JAX/Pallas, lowered at build time) executed via PJRT from
 //!   worker threads; Python never runs on the request path.
+//! * [`retrieval`] — the ChromaDB substitute: an IVF index with the
+//!   paper's `search_ef` knob, sharded scatter-gather search
+//!   (`retrieval::sharded`) for independently scalable retrieval.
 //! * [`sim`] — a discrete-event **cluster simulator** that runs the same
 //!   policy code against calibrated latency models to reproduce the
 //!   paper-scale experiments (32 GPUs, 1024 req/s) on one machine.

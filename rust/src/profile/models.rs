@@ -146,6 +146,40 @@ impl LatencyModel {
     }
 }
 
+/// Serial fraction of a scatter-gather retrieval request that does not
+/// shrink with the shard count (embedding the query, dispatching the
+/// fan-out, assembling the response). Modeled at 5%; the
+/// `fig04b_shard_scaling` bench is the calibration target — re-fit this
+/// constant to its measured curve when the bench is run on real
+/// hardware (see EXPERIMENTS.md).
+pub const SHARD_SERIAL_FRAC: f64 = 0.05;
+
+/// Per-extra-shard merge/coordination overhead as a fraction of the
+/// unsharded service time: each additional shard contributes one more
+/// sorted top-k list to the k-way gather merge plus one more fan-out
+/// message.
+pub const SHARD_MERGE_FRAC: f64 = 0.01;
+
+/// Calibrated shard latency model: service-time multiplier for a
+/// component whose data is partitioned across `shards` partitions probed
+/// in parallel (retrieval scatter-gather). Amdahl-style:
+///
+/// `factor(S) = serial + (1 - serial)/S + merge·(S - 1)`
+///
+/// `factor(1) == 1.0` exactly, so unsharded components are untouched;
+/// speedup is sublinear and eventually reverses (merge overhead grows
+/// with S) — the shape `benches/fig04b_shard_scaling` exists to measure
+/// (re-fit the constants from its output; they are modeled, not yet
+/// measured). Applied consistently by the deploy-time profiler and the
+/// DES, so LP priors and simulated telemetry agree.
+pub fn shard_service_factor(shards: usize) -> f64 {
+    if shards <= 1 {
+        return 1.0; // exact identity: unsharded latencies are untouched
+    }
+    let s = shards as f64;
+    SHARD_SERIAL_FRAC + (1.0 - SHARD_SERIAL_FRAC) / s + SHARD_MERGE_FRAC * (s - 1.0)
+}
+
 /// GPU components serve several requests concurrently (continuous
 /// batching); effective concurrency per instance.
 pub fn instance_concurrency(kind: &ComponentKind) -> usize {

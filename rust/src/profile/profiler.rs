@@ -50,7 +50,11 @@ pub fn profile_graph(graph: &PipelineGraph, n: usize, seed: u64) -> Profile {
             hops += 1;
             let node = graph.node(cur);
             let model = LatencyModel::for_kind(&node.kind);
-            let t = model.sample(&feats, &mut rng);
+            // Sharded components scatter-gather: per-request service time
+            // shrinks by the calibrated shard factor, and the resulting α
+            // is already the *per-shard-pool* coefficient the LP uses.
+            let t = model.sample(&feats, &mut rng)
+                * crate::profile::models::shard_service_factor(node.shards);
             let e = service_sums.entry(cur).or_insert((0.0, 0));
             e.0 += t;
             e.1 += 1;

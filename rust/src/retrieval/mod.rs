@@ -1,14 +1,64 @@
 //! Retrieval substrate — the ChromaDB substitute.
 //!
-//! An IVF (inverted-file) dense vector index: passages are clustered into
-//! lists by k-means; a query probes the nearest lists and exact-scores the
-//! candidates. The `search_ef` knob bounds the number of candidates
-//! scanned — the same latency/recall tradeoff the paper tunes in ChromaDB
-//! (Fig. 4: for small K, low `search_ef` is up to ~20× faster).
+//! # IVF search
+//!
+//! [`IvfIndex`] is an inverted-file dense vector index: passages are
+//! clustered into `n_lists` lists by cosine k-means; a query scores the
+//! list centroids, probes the nearest lists, and exact-scores the
+//! gathered candidates. Degenerate (empty) clusters left behind by
+//! k-means are repaired at build time by reseeding from the largest
+//! list, so the effective list count always equals `n_lists` and the
+//! probe curve stays calibrated.
+//!
+//! # The `search_ef` bound
+//!
+//! `search_ef` caps the number of candidates exact-scored per query:
+//! lists are probed in decreasing centroid similarity until at least
+//! `search_ef` candidates have been gathered. It is the paper's Fig. 4
+//! knob (ChromaDB's `search_ef`), and the axis along which retrieval
+//! trades recall for latency:
+//!
+//! * low `search_ef` → few lists probed → fast, but the true top-k may
+//!   live in an unprobed list (recall < 1). For small K the paper
+//!   measures up to ~20× speedup at modest recall loss;
+//! * `search_ef >= corpus size` → every list probed → exact search.
+//!
+//! Because candidates are gathered in whole lists, the actual candidate
+//! count quantizes to list-size granularity (always ≥ `search_ef` until
+//! the corpus is exhausted).
+//!
+//! # Sharded search (scatter-gather)
+//!
+//! [`ShardedIndex`] partitions the corpus round-robin across `n_shards`
+//! independent [`IvfIndex`] shards (see [`sharded`]). A query scatters to
+//! every shard in parallel (scoped threads), each shard probes its slice
+//! with `search_ef / n_shards` of the candidate budget, and the sorted
+//! per-shard top-k lists are gathered with a binary-heap k-way merge.
+//! Compared to one big index at the same total budget:
+//!
+//! * **latency** — per-shard work is ~1/S of the single-index search and
+//!   runs concurrently, so service time approaches `t₁/S` plus a small
+//!   scatter/merge overhead (calibrated in `sim::cluster`);
+//! * **recall** — each shard returns its *local* top-k, so the merged
+//!   candidate pool is at least as targeted as the single-index probe at
+//!   the same total `search_ef`; with the full budget the result is
+//!   exactly the single-index top-k (the oracle property tested in
+//!   [`sharded`]);
+//! * **scalability** — shards are independent replica pools, which is
+//!   what lets the allocation LP and the autoscaler size retrieval
+//!   separately from the LLM stages (the paper's "unique scalability
+//!   characteristics").
+//!
+//! [`IvfIndex::search_batch`] / [`ShardedIndex::search_batch`] amortize a
+//! query batch: centroid scoring runs centroid-major across the whole
+//! batch, and the scatter fan-out costs one thread spawn per shard per
+//! batch instead of per query.
 //!
 //! Scoring runs either in pure Rust (`score_block`) or through the Pallas
 //! `retrieval_score` artifact (live mode; see `runtime::scorer`).
 
+pub mod sharded;
 pub mod store;
 
+pub use sharded::{ShardParams, ShardedIndex};
 pub use store::{IvfIndex, IvfParams, SearchResult};

@@ -109,7 +109,14 @@ impl IvfIndex {
             }
             lists[best.1].push(i);
         }
+        repair_empty_lists(&vectors, dim, &mut centroids, &mut lists);
         IvfIndex { dim, vectors, centroids, lists }
+    }
+
+    /// List occupancy (diagnostics; after [`IvfIndex::build`] every list
+    /// is non-empty as long as the corpus has at least `n_lists` rows).
+    pub fn list_sizes(&self) -> Vec<usize> {
+        self.lists.iter().map(|l| l.len()).collect()
     }
 
     pub fn len(&self) -> usize {
@@ -133,14 +140,22 @@ impl IvfIndex {
     /// `search_ef` candidates have been gathered.
     pub fn candidates(&self, query: &[f32], search_ef: usize) -> Vec<usize> {
         assert_eq!(query.len(), self.dim);
-        let mut order: Vec<(f32, usize)> = (0..self.lists.len())
+        let scores: Vec<(f32, usize)> = (0..self.lists.len())
             .map(|c| (dot(query, &self.centroids[c * self.dim..(c + 1) * self.dim]), c))
             .collect();
-        order.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-        let mut cand = Vec::with_capacity(search_ef + 64);
-        for (_, c) in order {
+        self.gather_by_scores(scores, search_ef)
+    }
+
+    /// Probe lists in decreasing `scores` order until at least `ef`
+    /// candidates are gathered. Shared by [`IvfIndex::candidates`] and
+    /// [`IvfIndex::search_batch`]: the probe order and tie behavior being
+    /// identical is what makes batched results match `search` exactly.
+    fn gather_by_scores(&self, mut scores: Vec<(f32, usize)>, ef: usize) -> Vec<usize> {
+        scores.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut cand = Vec::with_capacity(ef + 64);
+        for (_, c) in scores {
             cand.extend_from_slice(&self.lists[c]);
-            if cand.len() >= search_ef {
+            if cand.len() >= ef {
                 break;
             }
         }
@@ -172,6 +187,46 @@ impl IvfIndex {
         self.score_candidates(query, &cand, k)
     }
 
+    /// Batched multi-query search. Centroid scoring runs centroid-major —
+    /// one pass over the centroid block serves the whole batch, keeping
+    /// each centroid row hot in cache across queries — which is where most
+    /// of a small-`search_ef` probe's time goes once `n_lists` is large.
+    /// Results per query are identical to [`IvfIndex::search`].
+    pub fn search_batch(
+        &self,
+        queries: &[Vec<f32>],
+        k: usize,
+        search_ef: usize,
+    ) -> Vec<Vec<SearchResult>> {
+        let nq = queries.len();
+        let nl = self.lists.len();
+        if nq == 0 {
+            return Vec::new();
+        }
+        for q in queries {
+            assert_eq!(q.len(), self.dim, "query dim mismatch");
+        }
+        // [nq, nl] query-centroid scores, filled centroid-major.
+        let mut cscores = vec![0f32; nq * nl];
+        for c in 0..nl {
+            let cv = &self.centroids[c * self.dim..(c + 1) * self.dim];
+            for (qi, q) in queries.iter().enumerate() {
+                cscores[qi * nl + c] = dot(q, cv);
+            }
+        }
+        let ef = search_ef.max(k);
+        queries
+            .iter()
+            .enumerate()
+            .map(|(qi, q)| {
+                let scores: Vec<(f32, usize)> =
+                    (0..nl).map(|c| (cscores[qi * nl + c], c)).collect();
+                let cand = self.gather_by_scores(scores, ef);
+                self.score_candidates(q, &cand, k)
+            })
+            .collect()
+    }
+
     /// Brute-force exact top-k (ground truth for recall).
     pub fn search_exact(&self, query: &[f32], k: usize) -> Vec<SearchResult> {
         let all: Vec<usize> = (0..self.len()).collect();
@@ -191,6 +246,42 @@ impl IvfIndex {
     /// Raw vector row (used by the XLA scorer path to build shards).
     pub fn vector(&self, i: usize) -> &[f32] {
         &self.vectors[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+/// Repair degenerate clusters after k-means: duplicate rows or an unlucky
+/// init can leave inverted lists empty, silently shrinking the effective
+/// `n_lists` (a probe that "covers" such a list gathers nothing, skewing
+/// the `search_ef` ↔ recall curve). Each empty list is reseeded from the
+/// largest list: the donor's member *least* similar to the donor centroid
+/// moves over and becomes the new centroid. Every iteration fills one
+/// empty list while leaving the donor non-empty, so the loop terminates
+/// with all lists occupied whenever the corpus has ≥ `n_lists` rows.
+fn repair_empty_lists(
+    vectors: &[f32],
+    dim: usize,
+    centroids: &mut [f32],
+    lists: &mut [Vec<usize>],
+) {
+    loop {
+        let Some(empty) = lists.iter().position(|l| l.is_empty()) else { break };
+        let donor = (0..lists.len())
+            .max_by_key(|&c| lists[c].len())
+            .expect("at least one list");
+        if lists[donor].len() < 2 {
+            break; // corpus smaller than n_lists: nothing left to split
+        }
+        let dc = &centroids[donor * dim..(donor + 1) * dim];
+        let (pos, _) = lists[donor]
+            .iter()
+            .enumerate()
+            .map(|(p, &vid)| (p, dot(&vectors[vid * dim..(vid + 1) * dim], dc)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .expect("donor non-empty");
+        let vid = lists[donor].swap_remove(pos);
+        lists[empty].push(vid);
+        centroids[empty * dim..(empty + 1) * dim]
+            .copy_from_slice(&vectors[vid * dim..(vid + 1) * dim]);
     }
 }
 
@@ -277,6 +368,76 @@ mod tests {
     #[test]
     fn lists_partition_the_corpus() {
         let (idx, _) = build_test_index(400, 16, 4);
+        let mut seen = vec![false; idx.len()];
+        for l in &idx.lists {
+            for &i in l {
+                assert!(!seen[i], "duplicate membership {i}");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn search_batch_matches_single_query_search() {
+        let (idx, corpus) = build_test_index(1500, 32, 8);
+        let mut qg = crate::workload::queries::QueryGen::new(&corpus, 5);
+        let queries: Vec<Vec<f32>> =
+            (0..10).map(|_| Corpus::hash_embed(&qg.next().text, 32)).collect();
+        for ef in [30usize, 300, 1500] {
+            let batched = idx.search_batch(&queries, 8, ef);
+            assert_eq!(batched.len(), queries.len());
+            for (q, got) in queries.iter().zip(&batched) {
+                let want = idx.search(q, 8, ef);
+                assert_eq!(got.len(), want.len());
+                for (a, b) in got.iter().zip(&want) {
+                    assert_eq!(a.id, b.id);
+                    assert_eq!(a.score, b.score);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_clusters_are_repaired() {
+        // All rows identical: k-means collapses every row into one list,
+        // which without repair leaves n_lists - 1 lists empty.
+        let dim = 16;
+        let n = 64;
+        let one = Corpus::hash_embed(b"the same passage", dim);
+        let mut vectors = Vec::with_capacity(n * dim);
+        for _ in 0..n {
+            vectors.extend_from_slice(&one);
+        }
+        let idx = IvfIndex::build(
+            vectors,
+            dim,
+            IvfParams { n_lists: 8, kmeans_iters: 4, seed: 3 },
+        );
+        let sizes = idx.list_sizes();
+        assert_eq!(sizes.len(), 8);
+        assert!(sizes.iter().all(|&s| s > 0), "empty list survived repair: {sizes:?}");
+        assert_eq!(sizes.iter().sum::<usize>(), n, "repair must preserve the partition");
+    }
+
+    #[test]
+    fn repaired_lists_still_partition_clustered_corpus() {
+        // A corpus with fewer distinct rows than lists exercises the
+        // donor loop repeatedly.
+        let dim = 16;
+        let a = Corpus::hash_embed(b"topic alpha", dim);
+        let b = Corpus::hash_embed(b"topic beta", dim);
+        let mut vectors = Vec::new();
+        for i in 0..40 {
+            vectors.extend_from_slice(if i % 2 == 0 { &a } else { &b });
+        }
+        let idx = IvfIndex::build(
+            vectors,
+            dim,
+            IvfParams { n_lists: 10, kmeans_iters: 6, seed: 9 },
+        );
+        let sizes = idx.list_sizes();
+        assert!(sizes.iter().all(|&s| s > 0), "{sizes:?}");
         let mut seen = vec![false; idx.len()];
         for l in &idx.lists {
             for &i in l {

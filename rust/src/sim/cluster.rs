@@ -45,6 +45,15 @@ impl Machine {
 /// model 0.5%).
 pub const COLOCATION_SLOWDOWN: f64 = 1.005;
 
+/// The simulator's calibration point for sharded (scatter-gather)
+/// components. The model itself lives with the other calibrated latency
+/// models in `profile::models` so the deploy-time profiler does not
+/// depend on the simulator; re-exported here because the DES applies it
+/// to every sampled service time.
+pub use crate::profile::models::{
+    shard_service_factor, SHARD_MERGE_FRAC, SHARD_SERIAL_FRAC,
+};
+
 /// The cluster: a bag of machines plus placement bookkeeping.
 #[derive(Clone, Debug)]
 pub struct Cluster {
@@ -158,6 +167,33 @@ mod tests {
         assert!(c.place(&d, true).is_none());
         c.release(p, &d);
         assert!(c.place(&d, true).is_some());
+    }
+
+    #[test]
+    fn shard_factor_identity_at_one_shard() {
+        assert_eq!(shard_service_factor(1), 1.0);
+        assert_eq!(shard_service_factor(0), 1.0, "0 clamps to 1");
+    }
+
+    #[test]
+    fn shard_factor_speedup_is_sublinear_and_monotone_in_useful_range() {
+        let mut prev = shard_service_factor(1);
+        for s in 2..=8 {
+            let f = shard_service_factor(s);
+            assert!(f < prev, "factor must fall up to 8 shards: {s} → {f}");
+            // Sublinear: never better than perfect 1/S scaling.
+            assert!(f > 1.0 / s as f64, "superlinear at {s}: {f}");
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn shard_factor_overhead_dominates_at_extreme_fanout() {
+        // Past the sweet spot the merge term wins: more shards get slower.
+        assert!(shard_service_factor(64) > shard_service_factor(10));
+        // But even extreme fan-out never exceeds the unsharded baseline
+        // within a sane range.
+        assert!(shard_service_factor(64) < 1.0);
     }
 
     #[test]

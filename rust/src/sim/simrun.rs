@@ -334,7 +334,10 @@ impl SimWorld {
         }
         let node_ids: Vec<NodeId> = self.graph.work_nodes().map(|n| n.id).collect();
         for id in node_ids {
-            let count = plan.instances(id).max(1);
+            // Sharded nodes deploy in complete replica *sets* (one replica
+            // of every shard); `units` counts those, matching what one
+            // simulated instance actually serves.
+            let count = plan.units(id).max(1);
             let v = (0..count).map(|_| self.make_instance(id)).collect();
             self.instances.insert(id, v);
         }
@@ -342,7 +345,16 @@ impl SimWorld {
 
     fn make_instance(&mut self, node: NodeId) -> SimInstance {
         let spec = self.graph.node(node);
-        let placement = self.cluster.place(&spec.resources, spec.kind.gpu_bound());
+        // One simulated instance of a sharded component is a complete
+        // scatter-gather unit — one replica of every shard — so it
+        // occupies `shards` per-replica resource bundles.
+        let mut demands = spec.resources.clone();
+        if spec.shards > 1 {
+            for d in demands.iter_mut() {
+                d.1 *= spec.shards as f64;
+            }
+        }
+        let placement = self.cluster.place(&demands, spec.kind.gpu_bound());
         SimInstance {
             slots: instance_concurrency(&spec.kind),
             active: 0,
@@ -486,6 +498,8 @@ impl SimWorld {
         let model = LatencyModel::for_kind(&spec.kind);
         let features = self.reqs[req].features;
         let mut t = model.sample(&features, &mut self.reqs[req].rng);
+        // Sharded components scatter-gather across parallel partitions.
+        t *= super::cluster::shard_service_factor(spec.shards);
         t *= concurrency_slowdown(active);
         if colocated {
             t *= COLOCATION_SLOWDOWN;
@@ -658,6 +672,7 @@ impl SimWorld {
             let spec = self.graph.node(cur).clone();
             let model = LatencyModel::for_kind(&spec.kind);
             let mut t = model.sample(&features, &mut self.reqs[req].rng);
+            t *= super::cluster::shard_service_factor(spec.shards);
             t *= concurrency_slowdown(active);
             total += t;
             self.recorder.on_execution(
@@ -732,7 +747,15 @@ impl SimWorld {
                     self.q.schedule(now + cold, Ev::InstanceUp { node, inst: idx });
                 }
             } else if target < have {
-                let floor = self.graph.node(node).base_instances.max(1);
+                // `have`/`target` count deployable units; base_instances is
+                // a per-replica floor, so convert for sharded nodes (one
+                // unit = `shards` replicas).
+                let spec = self.graph.node(node);
+                let floor = if spec.shards > 1 {
+                    spec.base_instances.div_ceil(spec.shards).max(1)
+                } else {
+                    spec.base_instances.max(1)
+                };
                 let keep = target.max(floor);
                 let v = self.instances.get_mut(&node).unwrap();
                 for i in v.iter_mut().skip(keep) {
@@ -893,6 +916,25 @@ mod tests {
             "rate {}",
             r.report.slo_violation_rate
         );
+    }
+
+    #[test]
+    fn sharded_retrieval_cuts_retriever_service_time() {
+        // Same workload, same seed: the 4-shard retriever's mean service
+        // time must track the calibrated scatter-gather factor, and the
+        // run must still complete end to end.
+        let unsharded = run_point(SystemKind::Harmonia, apps::vanilla_rag(), 8.0, 300, Some(2.0), 11);
+        let sharded =
+            run_point(SystemKind::Harmonia, apps::sharded_vanilla_rag(4), 8.0, 300, Some(2.0), 11);
+        assert_eq!(sharded.report.completed, 300);
+        let m_full = unsharded.report.components["retriever"].mean_service();
+        let m_shard = sharded.report.components["retriever"].mean_service();
+        let factor = crate::sim::cluster::shard_service_factor(4);
+        assert!(
+            m_shard < m_full * (factor + 0.15),
+            "sharded mean {m_shard} vs unsharded {m_full} (factor {factor})"
+        );
+        assert!(m_shard < m_full, "sharding must reduce retrieval service time");
     }
 
     #[test]

@@ -51,6 +51,41 @@ pub fn vanilla_rag() -> PipelineGraph {
     b.build().expect("v-rag is valid")
 }
 
+/// Vanilla RAG with a sharded retriever: the corpus is partitioned into
+/// `n_shards` independent IVF shards; every query scatter-gathers across
+/// one replica of each shard. Per-replica resources describe one shard
+/// replica of the *modeled distributed deployment* and shrink with the
+/// shard count (such a replica holds ~1/n of the corpus, so its RAM
+/// footprint divides) — the independent-scaling lever the paper
+/// attributes to retrieval: the allocator can add capacity in
+/// shard-replica quanta instead of whole-corpus quanta. (The in-process
+/// live path approximates this: workers share one `Arc<ShardedIndex>`,
+/// so process memory holds a single corpus copy regardless of replica
+/// count; the simulator charges a complete replica set `n` bundles.)
+pub fn sharded_vanilla_rag(n_shards: usize) -> PipelineGraph {
+    let n_shards = n_shards.max(1);
+    let mut b = PipelineBuilder::new("v-rag-sharded");
+    let shard_res = [
+        (ResourceKind::Cpu, 8.0),
+        (ResourceKind::Ram, (112.0 / n_shards as f64).max(1.0)),
+    ];
+    let retr = b
+        .component("retriever", ComponentKind::Retriever)
+        .resources(&shard_res)
+        .shards(n_shards)
+        .streamable(true)
+        .add();
+    let gen = b
+        .component("generator", ComponentKind::Generator)
+        .resources(&GPU_RES)
+        .streamable(true)
+        .add();
+    b.edge_from_source(retr, 1.0);
+    b.edge(retr, gen, 1.0);
+    b.edge_to_sink(gen, 1.0);
+    b.build().expect("v-rag-sharded is valid")
+}
+
 /// Corrective RAG [Yan et al.]: retrieve → grade → {generate | rewrite →
 /// web search → generate}. Purely conditional control flow.
 pub fn corrective_rag() -> PipelineGraph {
@@ -174,10 +209,12 @@ pub fn all() -> Vec<PipelineGraph> {
     vec![vanilla_rag(), corrective_rag(), self_rag(), adaptive_rag()]
 }
 
-/// Look up an app by its short name (v-rag, c-rag, s-rag, a-rag).
+/// Look up an app by its short name (v-rag, c-rag, s-rag, a-rag, plus
+/// the sharded-retrieval variant v-rag-sharded).
 pub fn by_name(name: &str) -> Option<PipelineGraph> {
     match name {
         "v-rag" => Some(vanilla_rag()),
+        "v-rag-sharded" => Some(sharded_vanilla_rag(4)),
         "c-rag" => Some(corrective_rag()),
         "s-rag" => Some(self_rag()),
         "a-rag" => Some(adaptive_rag()),
@@ -239,6 +276,23 @@ mod tests {
         let iretr = g.node_by_name("iter_retriever").unwrap();
         let expected = ARAG_P_COMPLEX / (1.0 - ARAG_P_LOOP);
         assert!((v[iretr.id.0] - expected).abs() < 1e-6, "{}", v[iretr.id.0]);
+    }
+
+    #[test]
+    fn sharded_vrag_mirrors_vrag_structure() {
+        let g = sharded_vanilla_rag(4);
+        g.validate().unwrap();
+        assert!(!g.has_conditionals());
+        assert!(!g.has_recursion());
+        let retr = g.node_by_name("retriever").unwrap();
+        assert_eq!(retr.shards, 4);
+        // Per-replica RAM shrinks with the shard count.
+        let full = vanilla_rag();
+        let full_ram = full.node_by_name("retriever").unwrap().demand_for(ResourceKind::Ram);
+        assert!(retr.demand_for(ResourceKind::Ram) < full_ram / 2.0);
+        // Degenerate case: 1 shard is plain v-rag resourcing.
+        let g1 = sharded_vanilla_rag(1);
+        assert_eq!(g1.node_by_name("retriever").unwrap().shards, 1);
     }
 
     #[test]

@@ -44,6 +44,15 @@ impl<'a> ComponentBuilder<'a> {
         self
     }
 
+    /// Partition the component's data across `n` shards searched
+    /// scatter-gather style (retrieval). Each shard's replica pool is
+    /// sized independently by the allocator; per-instance `resources`
+    /// describe ONE shard replica (holding ~1/n of the data).
+    pub fn shards(mut self, n: usize) -> Self {
+        self.spec.shards = n;
+        self
+    }
+
     /// Per-instance resource demand.
     pub fn resources(mut self, r: &[(ResourceKind, f64)]) -> Self {
         self.spec.resources = r.to_vec();
@@ -94,6 +103,7 @@ impl PipelineBuilder {
             kind,
             stateful: false,
             base_instances: 0,
+            shards: 1,
             resources: vec![],
             alpha: vec![],
             gamma: 1.0,
@@ -132,6 +142,7 @@ impl PipelineBuilder {
             kind,
             stateful: false,
             base_instances: 1,
+            shards: 1,
             resources: default_res,
             alpha: vec![],
             gamma: 1.0,
@@ -226,6 +237,7 @@ mod tests {
             .component("g", ComponentKind::Generator)
             .stateful(true)
             .base_instances(3)
+            .shards(2)
             .gamma(1.5)
             .streamable(true)
             .add();
@@ -235,6 +247,7 @@ mod tests {
         let n = graph.node(g);
         assert!(n.stateful);
         assert_eq!(n.base_instances, 3);
+        assert_eq!(n.shards, 2);
         assert_eq!(n.gamma, 1.5);
         assert!(n.streamable);
     }

@@ -103,6 +103,11 @@ pub struct NodeSpec {
     pub stateful: bool,
     /// Minimum instances kept warm (cold-start protection).
     pub base_instances: usize,
+    /// Index shards for partitioned components (retrieval scatter-gather):
+    /// each request fans out to all `shards` partitions in parallel, each
+    /// holding ~1/shards of the data. 1 = unsharded. The allocator sizes
+    /// each shard's replica pool independently.
+    pub shards: usize,
     /// Per-instance resource demand (r constraint granularity).
     pub resources: Vec<(ResourceKind, f64)>,
     /// Throughput coefficient α_{i,k}: requests/sec per unit of resource k
@@ -158,6 +163,7 @@ pub enum ValidationError {
     Unreachable { node: String },
     NoPathToSink { node: String },
     BadGamma { node: String, gamma: f64 },
+    BadShards { node: String },
     SelfLoopWithoutBackEdge { node: String },
     DuplicateName(String),
 }
@@ -172,6 +178,9 @@ impl std::fmt::Display for ValidationError {
             ValidationError::NoPathToSink { node } => write!(f, "'{node}' has no path to sink"),
             ValidationError::BadGamma { node, gamma } => {
                 write!(f, "'{node}' has non-positive gamma {gamma}")
+            }
+            ValidationError::BadShards { node } => {
+                write!(f, "'{node}' has zero shards (must be >= 1)")
             }
             ValidationError::SelfLoopWithoutBackEdge { node } => {
                 write!(f, "'{node}' has a self loop not marked as back edge")
@@ -229,6 +238,9 @@ impl PipelineGraph {
             }
             if n.gamma <= 0.0 {
                 return Err(ValidationError::BadGamma { node: n.name.clone(), gamma: n.gamma });
+            }
+            if n.shards == 0 {
+                return Err(ValidationError::BadShards { node: n.name.clone() });
             }
         }
         // Probability sums.
@@ -406,6 +418,7 @@ mod tests {
             kind: ComponentKind::WebSearch,
             stateful: false,
             base_instances: 1,
+            shards: 1,
             resources: vec![(ResourceKind::Cpu, 1.0)],
             alpha: vec![(ResourceKind::Cpu, 1.0)],
             gamma: 1.0,
@@ -416,6 +429,17 @@ mod tests {
         match g.validate() {
             Err(ValidationError::Unreachable { node }) => assert_eq!(node, "orphan"),
             other => panic!("expected Unreachable, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn validation_catches_zero_shards() {
+        let mut g = apps::vanilla_rag();
+        let retr = g.node_by_name("retriever").unwrap().id;
+        g.nodes[retr.0].shards = 0;
+        match g.validate() {
+            Err(ValidationError::BadShards { node }) => assert_eq!(node, "retriever"),
+            other => panic!("expected BadShards, got {other:?}"),
         }
     }
 
