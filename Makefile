@@ -6,7 +6,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test lint fmt clippy verify artifacts bench bench-shards clean
+.PHONY: all build test test-fast lint fmt clippy verify artifacts bench bench-shards bench-cache clean
 
 all: build
 
@@ -15,6 +15,12 @@ build:
 
 test:
 	$(CARGO) test -q
+
+# Unit + doc-free fast path: library tests only. Skips the bench
+# binaries and the integration targets (`live_serving` needs XLA
+# artifacts, `golden_trace` rides with the full `test`).
+test-fast:
+	$(CARGO) test --lib -q
 
 fmt:
 	$(CARGO) fmt --check
@@ -37,6 +43,10 @@ bench:
 # The sharded-retrieval scaling bench only.
 bench-shards:
 	$(CARGO) bench --bench fig04b_shard_scaling
+
+# The request-cache hit-curve bench only.
+bench-cache:
+	$(CARGO) bench --bench fig04c_cache_hit_curve
 
 clean:
 	$(CARGO) clean

@@ -1,0 +1,57 @@
+"""Hypothesis gate: re-export the real library when it is installed,
+otherwise fall back to a tiny deterministic re-implementation of the
+subset these tests use (``given``/``settings``/``integers``/
+``sampled_from``).
+
+The offline test image does not ship ``hypothesis``; without this shim
+the whole module fails at collection and the non-property tests are lost
+with it. The fallback runs each property against a fixed number of
+seeded samples, so the suite stays meaningful (if less adversarial)
+everywhere.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ModuleNotFoundError:
+    import random
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rnd):
+            return self._draw(rnd)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(values):
+            values = list(values)
+            return _Strategy(lambda rnd: values[rnd.randrange(len(values))])
+
+    st = _Strategies()
+
+    def settings(**_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — copying fn's signature would make
+            # pytest treat the property arguments as fixtures.
+            def wrapper():
+                rnd = random.Random(0xC0FFEE)
+                for _ in range(8):
+                    kwargs = {k: s.draw(rnd) for k, s in strategies.items()}
+                    fn(**kwargs)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

@@ -8,7 +8,7 @@ signal for the compute hot-spots that end up inside the AOT artifacts.
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from compile.kernels import flash_attention as fa
 from compile.kernels import topk_score as ts

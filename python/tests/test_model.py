@@ -10,7 +10,7 @@ Key invariants:
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from compile import model
 

@@ -274,6 +274,32 @@ mod tests {
     }
 
     #[test]
+    fn cached_retriever_lifts_the_throughput_ceiling() {
+        // The profiler hands the LP a cache-adjusted α for the retrieval
+        // pool (hits cost ~5% of a pass). Under the paper budgets,
+        // unsharded V-RAG is RAM-bound at the retriever (112 GiB per
+        // whole-corpus replica against 1 TiB); with a hot cache the
+        // retrieval pool only has to absorb the miss traffic, so the
+        // binding constraint moves to the GPUs and the LP's end-to-end
+        // ceiling rises — effective retrieval capacity grows with load
+        // skew.
+        let plain = plan_for(&apps::vanilla_rag(), 3000, 7);
+        let cached = plan_for(&apps::cached_vanilla_rag(1.3, 0.8, 2048, 4096), 3000, 7);
+        assert!(
+            cached.throughput > plain.throughput * 1.2,
+            "cached ceiling {} should clearly exceed plain {}",
+            cached.throughput,
+            plain.throughput
+        );
+        // The plan still staffs both stages.
+        let g = apps::cached_vanilla_rag(1.3, 0.8, 2048, 4096);
+        for name in ["retriever", "generator"] {
+            let id = g.node_by_name(name).unwrap().id;
+            assert!(cached.instances(id) >= 1, "{name} unstaffed");
+        }
+    }
+
+    #[test]
     fn sharded_vrag_matches_vrag_throughput() {
         // Sharding retrieval must not cost end-to-end throughput: v-rag
         // is generator-bound under the paper budgets, and the scatter-

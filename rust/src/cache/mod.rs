@@ -1,0 +1,30 @@
+//! Request cache — memoization of the embed→retrieve prefix.
+//!
+//! Real RAG traffic is heavily skewed (a few queries account for most of
+//! the volume), so the cheapest retrieval capacity is work never redone.
+//! [`QueryCache`] short-circuits the retrieval stage with two tiers:
+//!
+//! * an **exact tier** keyed on normalized query text — a repeat of a
+//!   previously served query returns the memoized top-k verbatim
+//!   (bit-identical to the uncached pass, pinned by property tests);
+//! * a **semantic tier** that reuses the *already computed* query
+//!   embedding to probe an LRU of recent `(embedding, top-k)` entries
+//!   under a cosine-similarity threshold — near-duplicates (paraphrases,
+//!   typo variants) reuse their neighbor's results, in the spirit of the
+//!   semantic caches (RAGCache / GPTCache) in PAPERS.md.
+//!
+//! Both tiers apply TTL + capacity (LRU) eviction and export
+//! hit/miss/stale counters through [`crate::metrics::cache`]. The cache
+//! is sharded by key hash and safe for concurrent use from the worker
+//! threads of `exec::components`.
+//!
+//! The modeling side lives in `profile::models`
+//! (`cache_service_factor`, `zipf_hit_rate`): the profiler, the
+//! allocation LP, and the DES all see the same cache-adjusted α for the
+//! retrieval pool, making the cache the first component whose effective
+//! capacity *grows* with load skew — the per-component scaling
+//! heterogeneity the paper argues a unified serving layer must model.
+
+pub mod query_cache;
+
+pub use query_cache::{normalize_query, CacheConfig, QueryCache};

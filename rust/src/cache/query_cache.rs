@@ -1,0 +1,590 @@
+//! The sharded, concurrency-safe query cache (exact + semantic tiers).
+//!
+//! Time is explicit: every operation takes `now` in seconds from an
+//! arbitrary epoch. The live path feeds wall-clock seconds, tests and
+//! the bench feed a logical clock — TTL behavior is deterministic and
+//! property-testable either way.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::metrics::cache::{CacheCounters, CacheSnapshot};
+use crate::retrieval::SearchResult;
+
+/// Cache sizing and policy knobs (`ControllerConfig::cache` threads these
+/// into the live deployment).
+#[derive(Clone, Copy, Debug)]
+pub struct CacheConfig {
+    /// Max entries in the exact tier (across all shards).
+    pub exact_capacity: usize,
+    /// Max entries in the semantic tier (across all shards).
+    pub semantic_capacity: usize,
+    /// Seconds an entry stays servable; older entries count as stale and
+    /// are dropped on lookup.
+    pub ttl: f64,
+    /// Cosine-similarity floor for a semantic hit (embeddings are
+    /// unit-norm, so this is a dot-product threshold).
+    pub sim_threshold: f32,
+    /// Lock shards (concurrency, not correctness; clamped to ≥1).
+    pub n_shards: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            exact_capacity: 1024,
+            // The semantic tier serves a *neighbor's* documents for
+            // similar-but-distinct queries — correct answers can change.
+            // It is opt-in (capacity 0 = disabled); the default cache is
+            // exact-repeat memoization only.
+            semantic_capacity: 0,
+            ttl: 300.0,
+            sim_threshold: 0.92,
+            n_shards: 8,
+        }
+    }
+}
+
+struct ExactEntry {
+    results: Vec<SearchResult>,
+    inserted_at: f64,
+    last_used: u64,
+}
+
+struct SemanticEntry {
+    /// Stable identity (recency is bumped after the scan picks a winner;
+    /// positions shift under concurrent eviction, ids do not).
+    id: u64,
+    embedding: Vec<f32>,
+    results: Vec<SearchResult>,
+    inserted_at: f64,
+    last_used: u64,
+}
+
+/// One lock shard: a slice of both tiers plus a logical tick for LRU
+/// recency (deterministic — no wall clock involved).
+#[derive(Default)]
+struct Shard {
+    exact: HashMap<Vec<u8>, ExactEntry>,
+    semantic: Vec<SemanticEntry>,
+    tick: u64,
+}
+
+/// Sharded two-tier query cache. See the module docs in [`crate::cache`].
+pub struct QueryCache {
+    cfg: CacheConfig,
+    shards: Vec<Mutex<Shard>>,
+    counters: CacheCounters,
+    next_sem_id: AtomicU64,
+}
+
+/// Canonical form of a query for exact matching: ASCII-lowercased with
+/// whitespace runs collapsed to single spaces and outer whitespace
+/// trimmed — trivially re-ordered requests ("Foo  bar " vs "foo bar")
+/// memoize together without touching semantics.
+pub fn normalize_query(query: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(query.len());
+    let mut pending_space = false;
+    for &b in query {
+        if b.is_ascii_whitespace() {
+            pending_space = !out.is_empty();
+        } else {
+            if pending_space {
+                out.push(b' ');
+                pending_space = false;
+            }
+            out.push(b.to_ascii_lowercase());
+        }
+    }
+    out
+}
+
+fn key_hash(key: &[u8]) -> u64 {
+    // FNV-1a: stable, dependency-free, good enough for shard spreading.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in key {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+impl QueryCache {
+    pub fn new(cfg: CacheConfig) -> QueryCache {
+        let n = cfg.n_shards.max(1);
+        QueryCache {
+            cfg,
+            shards: (0..n).map(|_| Mutex::new(Shard::default())).collect(),
+            counters: CacheCounters::new(),
+            next_sem_id: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    /// Counter snapshot (exported into `RunReport::cache`).
+    pub fn snapshot(&self) -> CacheSnapshot {
+        self.counters.snapshot()
+    }
+
+    fn shard_for(&self, key: &[u8]) -> usize {
+        (key_hash(key) % self.shards.len() as u64) as usize
+    }
+
+    fn per_shard_cap(&self, total: usize) -> usize {
+        total.div_ceil(self.shards.len()).max(1)
+    }
+
+    /// Exact-tier lookup. A hit returns the memoized top-k verbatim; an
+    /// exact miss is NOT counted here — the terminal miss for a lookup
+    /// is recorded by [`QueryCache::lookup_semantic`], which callers
+    /// continue to (it counts the miss even when the tier is disabled).
+    pub fn lookup_exact(&self, query: &[u8], now: f64) -> Option<Vec<SearchResult>> {
+        let key = normalize_query(query);
+        let si = self.shard_for(&key);
+        let mut shard = self.shards[si].lock().expect("cache shard poisoned");
+        shard.tick += 1;
+        let tick = shard.tick;
+        // Tri-state probe first, mutate the map after: the match scrutinee
+        // holds a &mut borrow of the map for all arms.
+        let probe = match shard.exact.get_mut(&key) {
+            Some(e) if now - e.inserted_at <= self.cfg.ttl => {
+                e.last_used = tick;
+                Some(Some(e.results.clone()))
+            }
+            Some(_) => Some(None), // present but expired
+            None => None,
+        };
+        match probe {
+            Some(Some(results)) => {
+                self.counters.on_exact_hit();
+                Some(results)
+            }
+            Some(None) => {
+                shard.exact.remove(&key);
+                self.counters.on_stale();
+                None
+            }
+            None => None,
+        }
+    }
+
+    /// Semantic-tier lookup with the already-computed query embedding:
+    /// returns the results of the most similar live entry at or above the
+    /// similarity threshold. Counts the terminal hit/miss for the lookup.
+    /// The scan mutates nothing; only the winning entry's recency is
+    /// bumped afterwards (by stable id — touching every candidate that
+    /// temporarily led the scan would corrupt LRU eviction).
+    pub fn lookup_semantic(&self, embedding: &[f32], now: f64) -> Option<Vec<SearchResult>> {
+        if self.cfg.semantic_capacity == 0 {
+            // Tier disabled: terminal miss without sweeping the locks.
+            self.counters.on_miss();
+            return None;
+        }
+        // Scan holds each lock briefly and allocates nothing: only
+        // (score, shard, id) is tracked; the winner's results are cloned
+        // once in the re-lock step below.
+        let mut best: Option<(f32, usize, u64)> = None;
+        for (si, m) in self.shards.iter().enumerate() {
+            let mut shard = m.lock().expect("cache shard poisoned");
+            // Drop expired entries eagerly so they can never be returned.
+            let ttl = self.cfg.ttl;
+            let before = shard.semantic.len();
+            shard.semantic.retain(|e| now - e.inserted_at <= ttl);
+            for _ in shard.semantic.len()..before {
+                self.counters.on_stale();
+            }
+            for e in shard.semantic.iter() {
+                let s = dot(embedding, &e.embedding);
+                let better = match &best {
+                    None => true,
+                    Some((bs, _, _)) => s > *bs,
+                };
+                if s >= self.cfg.sim_threshold && better {
+                    best = Some((s, si, e.id));
+                }
+            }
+        }
+        let served = best.and_then(|(_, si, id)| {
+            // Re-lock the winner's shard, refresh its recency, and clone
+            // its results; the entry may have been evicted concurrently,
+            // in which case the lookup degrades to a miss.
+            let mut shard = self.shards[si].lock().expect("cache shard poisoned");
+            shard.tick += 1;
+            let tick = shard.tick;
+            shard.semantic.iter_mut().find(|e| e.id == id).map(|e| {
+                e.last_used = tick;
+                e.results.clone()
+            })
+        });
+        match served {
+            Some(results) => {
+                self.counters.on_semantic_hit();
+                Some(results)
+            }
+            None => {
+                self.counters.on_miss();
+                None
+            }
+        }
+    }
+
+    /// Populate both tiers after an uncached retrieval pass.
+    pub fn insert(&self, query: &[u8], embedding: &[f32], results: &[SearchResult], now: f64) {
+        let key = normalize_query(query);
+        let si = self.shard_for(&key);
+        let exact_cap = self.per_shard_cap(self.cfg.exact_capacity);
+        let sem_cap = self.per_shard_cap(self.cfg.semantic_capacity);
+        let mut shard = self.shards[si].lock().expect("cache shard poisoned");
+        shard.tick += 1;
+        let tick = shard.tick;
+        let mut wrote = false;
+
+        if self.cfg.exact_capacity > 0 {
+            if shard.exact.len() >= exact_cap && !shard.exact.contains_key(&key) {
+                // LRU eviction: drop the least recently used key.
+                if let Some(victim) = shard
+                    .exact
+                    .iter()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k, _)| k.clone())
+                {
+                    shard.exact.remove(&victim);
+                    self.counters.on_eviction();
+                }
+            }
+            shard.exact.insert(
+                key,
+                ExactEntry { results: results.to_vec(), inserted_at: now, last_used: tick },
+            );
+            wrote = true;
+        }
+
+        if self.cfg.semantic_capacity > 0 {
+            if shard.semantic.len() >= sem_cap {
+                if let Some(victim) = shard
+                    .semantic
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(i, _)| i)
+                {
+                    shard.semantic.swap_remove(victim);
+                    self.counters.on_eviction();
+                }
+            }
+            shard.semantic.push(SemanticEntry {
+                id: self.next_sem_id.fetch_add(1, Ordering::Relaxed),
+                embedding: embedding.to_vec(),
+                results: results.to_vec(),
+                inserted_at: now,
+                last_used: tick,
+            });
+            wrote = true;
+        }
+        if wrote {
+            self.counters.on_insertion();
+        }
+    }
+
+    /// Live entries per tier (diagnostics).
+    pub fn len(&self) -> (usize, usize) {
+        let mut exact = 0;
+        let mut sem = 0;
+        for m in &self.shards {
+            let s = m.lock().expect("cache shard poisoned");
+            exact += s.exact.len();
+            sem += s.semantic.len();
+        }
+        (exact, sem)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        let (e, s) = self.len();
+        e == 0 && s == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::retrieval::{IvfParams, ShardParams, ShardedIndex};
+    use crate::util::proptest::property;
+    use crate::workload::corpus::Corpus;
+    use crate::workload::queries::{QueryMix, ZipfQueryGen};
+
+    const DIM: usize = 32;
+
+    fn results(ids: &[usize]) -> Vec<SearchResult> {
+        ids.iter()
+            .map(|&id| SearchResult { id, score: 1.0 - id as f32 * 0.01 })
+            .collect()
+    }
+
+    #[test]
+    fn normalize_collapses_case_and_whitespace() {
+        assert_eq!(normalize_query(b"  Foo   BAR "), b"foo bar".to_vec());
+        assert_eq!(normalize_query(b"foo bar"), b"foo bar".to_vec());
+        assert_eq!(normalize_query(b""), Vec::<u8>::new());
+        assert_eq!(normalize_query(b"\t a \n b "), b"a b".to_vec());
+    }
+
+    #[test]
+    fn exact_hit_returns_identical_results() {
+        let c = QueryCache::new(CacheConfig::default());
+        let r = results(&[3, 1, 4]);
+        let emb = vec![1.0; 4];
+        c.insert(b"What is RAG?", &emb, &r, 0.0);
+        let got = c.lookup_exact(b"what is  rag?", 1.0).expect("hit");
+        assert_eq!(got, r);
+        let s = c.snapshot();
+        assert_eq!(s.exact_hits, 1);
+        assert_eq!(s.insertions, 1);
+    }
+
+    #[test]
+    fn ttl_expires_entries() {
+        let c = QueryCache::new(CacheConfig {
+            ttl: 10.0,
+            semantic_capacity: 16,
+            ..Default::default()
+        });
+        let emb = vec![1.0, 0.0];
+        c.insert(b"q", &emb, &results(&[1]), 0.0);
+        assert!(c.lookup_exact(b"q", 10.0).is_some(), "at TTL still live");
+        assert!(c.lookup_exact(b"q", 10.1).is_none(), "past TTL stale");
+        assert_eq!(c.snapshot().stale, 1);
+        // Semantic tier expires too.
+        assert!(c.lookup_semantic(&emb, 10.1).is_none());
+    }
+
+    #[test]
+    fn semantic_tier_disabled_by_default() {
+        // The default config is exact-repeat memoization only: a
+        // paraphrase must never be served a neighbor's documents unless
+        // the operator opts in with semantic_capacity > 0.
+        let c = QueryCache::new(CacheConfig::default());
+        let emb = vec![1.0, 0.0];
+        c.insert(b"orig", &emb, &results(&[7]), 0.0);
+        assert!(c.lookup_semantic(&emb, 0.0).is_none(), "identical embedding must still miss");
+        let (_, sem) = c.len();
+        assert_eq!(sem, 0, "no semantic entries stored");
+        assert_eq!(c.snapshot().misses, 1);
+    }
+
+    #[test]
+    fn exact_capacity_zero_disables_the_exact_tier() {
+        let c = QueryCache::new(CacheConfig {
+            exact_capacity: 0,
+            semantic_capacity: 0,
+            ..Default::default()
+        });
+        let emb = vec![1.0];
+        c.insert(b"q", &emb, &results(&[1]), 0.0);
+        assert!(c.lookup_exact(b"q", 0.0).is_none());
+        assert!(c.is_empty());
+        assert_eq!(c.snapshot().insertions, 0, "fully disabled cache records no insertions");
+    }
+
+    #[test]
+    fn semantic_hit_requires_threshold() {
+        let c = QueryCache::new(CacheConfig {
+            sim_threshold: 0.9,
+            semantic_capacity: 16,
+            ..Default::default()
+        });
+        let a = vec![1.0, 0.0];
+        c.insert(b"orig", &a, &results(&[7]), 0.0);
+        // Identical embedding: hit.
+        assert!(c.lookup_semantic(&a, 1.0).is_some());
+        // Orthogonal embedding: miss.
+        let b = vec![0.0, 1.0];
+        assert!(c.lookup_semantic(&b, 1.0).is_none());
+        let s = c.snapshot();
+        assert_eq!(s.semantic_hits, 1);
+        assert_eq!(s.misses, 1);
+    }
+
+    #[test]
+    fn semantic_lookup_bumps_only_the_winning_entry() {
+        let c = QueryCache::new(CacheConfig {
+            exact_capacity: 8,
+            semantic_capacity: 2,
+            ttl: 1e9,
+            sim_threshold: 0.1,
+            n_shards: 1,
+        });
+        c.insert(b"e1", &[1.0, 0.0], &results(&[1]), 0.0);
+        c.insert(b"e2", &[0.8, 0.6], &results(&[2]), 0.0);
+        // Probe closer to e2: both clear the threshold, e2 wins — only
+        // e2's recency may be refreshed.
+        let hit = c.lookup_semantic(&[0.6, 0.8], 0.0).expect("hit");
+        assert_eq!(hit, results(&[2]));
+        // Capacity 2: the next insert must evict the never-serving e1,
+        // not the just-served e2 (the bug this test pins: a scan that
+        // touches every leading candidate would keep e1 alive).
+        c.insert(b"e3", &[0.0, 1.0], &results(&[3]), 0.0);
+        let again = c.lookup_semantic(&[0.8, 0.6], 0.0).expect("e2 must survive eviction");
+        assert_eq!(again, results(&[2]));
+    }
+
+    #[test]
+    fn capacity_evicts_lru() {
+        let cfg = CacheConfig {
+            exact_capacity: 2,
+            semantic_capacity: 2,
+            ttl: 1e9,
+            sim_threshold: 0.99,
+            n_shards: 1,
+        };
+        let c = QueryCache::new(cfg);
+        let emb = vec![1.0];
+        c.insert(b"a", &emb, &results(&[1]), 0.0);
+        c.insert(b"b", &emb, &results(&[2]), 0.0);
+        // Touch "a" so "b" is the LRU victim.
+        assert!(c.lookup_exact(b"a", 0.0).is_some());
+        c.insert(b"c", &emb, &results(&[3]), 0.0);
+        assert!(c.lookup_exact(b"a", 0.0).is_some(), "recently used survives");
+        assert!(c.lookup_exact(b"b", 0.0).is_none(), "LRU victim evicted");
+        assert!(c.lookup_exact(b"c", 0.0).is_some());
+        assert!(c.snapshot().evictions >= 1);
+        let (exact, _) = c.len();
+        assert_eq!(exact, 2);
+    }
+
+    /// Build a small sharded index + cache and drive a Zipfian query
+    /// stream through both a cached pass and an uncached oracle pass.
+    fn cached_vs_oracle_property(seed: u64, n: usize, n_queries: usize) {
+        let corpus = Corpus::generate(n, 8, 64, seed);
+        let mut vectors = Vec::with_capacity(n * DIM);
+        for p in &corpus.passages {
+            vectors.extend(Corpus::hash_embed(&p.text, DIM));
+        }
+        let index = ShardedIndex::build(
+            vectors,
+            DIM,
+            ShardParams { n_shards: 4, ivf: IvfParams::default() },
+        );
+        let cache = QueryCache::new(CacheConfig {
+            exact_capacity: 512,
+            semantic_capacity: 0, // exact-repeat identity is the property
+            ttl: 1e9,
+            sim_threshold: 2.0, // unreachable: cosine ≤ 1
+            n_shards: 4,
+        });
+        let mix = QueryMix { zipf_s: 1.1, repeat_frac: 0.7, pool_size: 16 };
+        let mut qg = ZipfQueryGen::new(&corpus, mix, seed ^ 0x51);
+        let k = 5;
+        let ef = 64;
+        for t in 0..n_queries {
+            let q = qg.next();
+            let now = t as f64;
+            let oracle = index.search(&Corpus::hash_embed(&q.text, DIM), k, ef);
+            let got = match cache.lookup_exact(&q.text, now) {
+                Some(hit) => hit,
+                None => {
+                    let emb = Corpus::hash_embed(&q.text, DIM);
+                    let fresh = index.search(&emb, k, ef);
+                    cache.insert(&q.text, &emb, &fresh, now);
+                    fresh
+                }
+            };
+            // Bit-identical to the uncached oracle pass: same ids, same
+            // scores (the index is deterministic, so a memoized repeat
+            // must equal a recomputed one exactly).
+            assert_eq!(got.len(), oracle.len());
+            for (a, b) in got.iter().zip(&oracle) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.score, b.score);
+            }
+        }
+        assert!(cache.snapshot().exact_hits > 0, "zipf stream must repeat");
+    }
+
+    #[test]
+    fn cached_pass_identical_to_uncached_oracle_on_exact_repeats() {
+        property("cache == oracle on repeats", 6, |g| {
+            let seed = g.i64(0, 1 << 20) as u64;
+            let n = g.usize(120, 400);
+            cached_vs_oracle_property(seed, n, 60);
+        });
+    }
+
+    #[test]
+    fn never_returns_expired_or_below_threshold_entries() {
+        property("ttl + threshold safety", 12, |g| {
+            let ttl = g.f64(1.0, 50.0);
+            let threshold = g.f64(0.3, 0.99) as f32;
+            let cfg = CacheConfig {
+                exact_capacity: 64,
+                semantic_capacity: 64,
+                ttl,
+                sim_threshold: threshold,
+                n_shards: g.usize(1, 4),
+            };
+            let c = QueryCache::new(cfg);
+            // Insert entries with random ages; probe with random vectors.
+            let mut entries: Vec<(Vec<u8>, Vec<f32>, f64)> = Vec::new();
+            for i in 0..12 {
+                let name = format!("query number {i}").into_bytes();
+                let mut emb: Vec<f32> = (0..8).map(|_| g.f64(-1.0, 1.0) as f32).collect();
+                let norm = emb.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+                emb.iter_mut().for_each(|x| *x /= norm);
+                let at = g.f64(0.0, 100.0);
+                c.insert(&name, &emb, &results(&[i]), at);
+                entries.push((name, emb, at));
+            }
+            let now = g.f64(0.0, 160.0);
+            for (name, emb, at) in &entries {
+                if now - at > ttl {
+                    assert!(
+                        c.lookup_exact(name, now).is_none(),
+                        "expired exact entry returned (age {})",
+                        now - at
+                    );
+                }
+                if let Some(hit) = c.lookup_semantic(emb, now) {
+                    // A semantic hit must come from a live entry at or
+                    // above the threshold; verify one exists.
+                    let witness = entries
+                        .iter()
+                        .any(|(_, e2, at2)| now - at2 <= ttl && dot(emb, e2) >= threshold);
+                    assert!(witness, "semantic hit without a qualifying entry");
+                    assert!(!hit.is_empty());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn concurrent_access_is_safe() {
+        let c = std::sync::Arc::new(QueryCache::new(CacheConfig::default()));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..200u64 {
+                    let key = format!("q{}", (t * 7 + i) % 50).into_bytes();
+                    let emb = vec![1.0, t as f32, i as f32];
+                    if c.lookup_exact(&key, i as f64).is_none() {
+                        let r = [SearchResult { id: i as usize, score: 0.5 }];
+                        c.insert(&key, &emb, &r, i as f64);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = c.snapshot();
+        assert!(s.insertions > 0 && s.exact_hits > 0);
+    }
+}

@@ -32,6 +32,9 @@ pub struct ControllerConfig {
     pub n_topics: usize,
     /// Retrieval index shards (scatter-gather fan-out; 1 = unsharded).
     pub n_shards: usize,
+    /// Request-cache knobs (tier capacities, TTL, similarity threshold);
+    /// None serves every query through the full embed→retrieve pass.
+    pub cache: Option<crate::cache::CacheConfig>,
     pub seed: u64,
     /// Instances per component (None → the spec's base_instances).
     pub instances: Option<HashMap<String, usize>>,
@@ -46,6 +49,7 @@ impl ControllerConfig {
             corpus_size: 512,
             n_topics: 8,
             n_shards: 4,
+            cache: Some(crate::cache::CacheConfig::default()),
             seed: 0,
             instances: None,
             slo: None,
@@ -116,6 +120,7 @@ pub fn deploy(graph: PipelineGraph, cfg: ControllerConfig) -> Result<ServingHand
             cfg.corpus_size,
             cfg.n_topics,
             cfg.n_shards,
+            cfg.cache,
             cfg.seed,
         )
         .context("building live shared state (corpus/index)")?,
@@ -152,9 +157,10 @@ pub fn deploy(graph: PipelineGraph, cfg: ControllerConfig) -> Result<ServingHand
     }
 
     let slo = cfg.slo;
+    let cache = shared.cache.clone();
     let join = std::thread::Builder::new()
         .name("harmonia-controller".into())
-        .spawn(move || controller_loop(graph, workers, rx, done_tx, slo))
+        .spawn(move || controller_loop(graph, workers, rx, done_tx, slo, cache))
         .expect("spawn controller");
 
     Ok(ServingHandle { tx, join: Some(join) })
@@ -166,6 +172,7 @@ fn controller_loop(
     rx: Receiver<Msg>,
     done_tx: Sender<Done>,
     slo: Option<f64>,
+    cache: Option<Arc<crate::cache::QueryCache>>,
 ) {
     let mut router = Router::new(RoutingPolicy::LoadStateAware);
     let mut recorder = Recorder::new();
@@ -266,6 +273,9 @@ fn controller_loop(
                 }
             }
             Msg::Report(tx) => {
+                if let Some(c) = &cache {
+                    recorder.set_cache(c.snapshot());
+                }
                 let _ = tx.send(recorder.report());
             }
             Msg::Shutdown => break,

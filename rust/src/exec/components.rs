@@ -5,10 +5,12 @@
 
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::retrieval::{IvfParams, ShardParams, ShardedIndex};
+use crate::cache::{CacheConfig, QueryCache};
+use crate::retrieval::{IvfParams, SearchResult, ShardParams, ShardedIndex};
 use crate::runtime::classifier::Classifier;
 use crate::runtime::embedder::Embedder;
 use crate::runtime::generator::{GenRequest, Generator};
@@ -24,6 +26,11 @@ pub struct LiveShared {
     /// Sharded IVF index: retrieval scatter-gathers across corpus shards
     /// (see `retrieval::sharded`).
     pub index: Arc<ShardedIndex>,
+    /// Request cache memoizing the embed→retrieve prefix (None = every
+    /// query pays the full scatter-gather; see `cache::QueryCache`).
+    pub cache: Option<Arc<QueryCache>>,
+    /// Epoch for the cache's explicit clock (TTL accounting).
+    pub epoch: Instant,
     pub artifacts: PathBuf,
     /// Top-k passages to retrieve per query (live scale).
     pub k_docs: usize,
@@ -48,38 +55,133 @@ impl StageLogic for Box<dyn StageLogic> {
 
 // ---------------------------------------------------------------------------
 
-/// Scatter-gather retriever: embeds the batch in one artifact call, then
-/// fans the whole batch out across the index shards (one scoped thread
-/// per shard, per the sharded scatter in `retrieval::sharded`) and
-/// gathers the merged top-k per query. Each worker instance of this
-/// logic is one scatter-gather replica; the router spreads requests
-/// across replicas while the replica spreads each request across shards.
+/// Scatter-gather retriever with a request cache in front: each query
+/// first probes the cache's exact tier (normalized text), misses are
+/// embedded in one artifact call, probe the semantic tier with that
+/// embedding, and only the residual misses pay the scatter-gather across
+/// the index shards (one scoped thread per shard, per
+/// `retrieval::sharded`); fresh results repopulate both tiers. Each
+/// worker instance of this logic is one scatter-gather replica; the
+/// router spreads requests across replicas while the replica spreads
+/// each request across shards (the cache is shared across replicas, so a
+/// repeat hits no matter which replica served the original).
 struct RetrieverLogic {
     embedder: Embedder,
     shared: Arc<LiveShared>,
 }
 
+/// Assemble the retrieval output (context bytes + doc ids) from a top-k
+/// hit list — shared by the cached and uncached paths, so a cache hit is
+/// bit-identical to recomputing the same hits.
+fn fill_from_hits(
+    shared: &LiveShared,
+    state: &mut crate::exec::messages::RagState,
+    hits: &[SearchResult],
+) {
+    let mut ctx = Vec::new();
+    let mut ids = Vec::new();
+    for h in hits {
+        ids.push(h.id);
+        let p = &shared.corpus.passages[h.id];
+        let take = p.text.len().min(shared.ctx_bytes_per_doc);
+        ctx.extend_from_slice(&p.text[..take]);
+        ctx.push(b' ');
+    }
+    state.context = ctx;
+    state.doc_ids = ids;
+}
+
 impl StageLogic for RetrieverLogic {
     fn process_batch(&mut self, items: &mut [WorkItem]) -> Result<()> {
-        // Embed all queries in one artifact call (batch 8).
         for chunk in items.chunks_mut(self.embedder.batch()) {
-            let texts: Vec<&[u8]> = chunk.iter().map(|i| i.state.query.as_slice()).collect();
-            let embs = self.embedder.embed_batch(&texts)?;
-            // Scatter the batch across shards, gather merged top-k.
-            let all_hits =
-                self.shared.index.search_batch(&embs, self.shared.k_docs, self.shared.search_ef);
-            for (it, hits) in chunk.iter_mut().zip(all_hits) {
-                let mut ctx = Vec::new();
-                let mut ids = Vec::new();
-                for h in hits {
-                    ids.push(h.id);
-                    let p = &self.shared.corpus.passages[h.id];
-                    let take = p.text.len().min(self.shared.ctx_bytes_per_doc);
-                    ctx.extend_from_slice(&p.text[..take]);
-                    ctx.push(b' ');
+            let now = self.shared.epoch.elapsed().as_secs_f64();
+            // Tier 1: exact-match probe on normalized query text.
+            let mut miss_idx: Vec<usize> = Vec::new();
+            for (i, it) in chunk.iter_mut().enumerate() {
+                let hit = self
+                    .shared
+                    .cache
+                    .as_ref()
+                    .and_then(|c| c.lookup_exact(&it.state.query, now));
+                match hit {
+                    Some(hits) => fill_from_hits(&self.shared, &mut it.state, &hits),
+                    None => miss_idx.push(i),
                 }
-                it.state.context = ctx;
-                it.state.doc_ids = ids;
+            }
+            if miss_idx.is_empty() {
+                continue;
+            }
+            // Embed the misses in one artifact call.
+            let texts: Vec<&[u8]> =
+                miss_idx.iter().map(|&i| chunk[i].state.query.as_slice()).collect();
+            let embs = self.embedder.embed_batch(&texts)?;
+            // Tier 2: semantic probe with the just-computed embeddings.
+            let mut search_idx: Vec<usize> = Vec::new(); // indexes into miss_idx
+            for (mi, emb) in embs.iter().enumerate() {
+                let hit = self
+                    .shared
+                    .cache
+                    .as_ref()
+                    .and_then(|c| c.lookup_semantic(emb, now));
+                match hit {
+                    Some(hits) => {
+                        fill_from_hits(&self.shared, &mut chunk[miss_idx[mi]].state, &hits)
+                    }
+                    None => search_idx.push(mi),
+                }
+            }
+            if search_idx.is_empty() {
+                continue;
+            }
+            // Dedup residual misses by normalized query text: intra-chunk
+            // repeats of a hot query (the common case under Zipf skew)
+            // fan out once and share the result. Sharing results across
+            // normalization variants is the exact tier's documented
+            // semantics, so this only runs when the cache is enabled —
+            // with cache: None every query retrieves with its own
+            // embedding, exactly like the pre-cache code path.
+            let mut uniq: Vec<usize> = Vec::new(); // representative mi per key
+            let mut rep_of: Vec<usize> = Vec::with_capacity(search_idx.len());
+            if self.shared.cache.is_some() {
+                let mut seen: std::collections::HashMap<Vec<u8>, usize> =
+                    std::collections::HashMap::new();
+                for &mi in &search_idx {
+                    let key =
+                        crate::cache::normalize_query(&chunk[miss_idx[mi]].state.query);
+                    let next = uniq.len();
+                    let slot = *seen.entry(key).or_insert(next);
+                    if slot == next {
+                        uniq.push(mi);
+                    }
+                    rep_of.push(slot);
+                }
+            } else {
+                uniq.extend_from_slice(&search_idx);
+                rep_of.extend(0..search_idx.len());
+            }
+            // Scatter across shards, gather merged top-k, repopulate the
+            // cache. When every query missed and is distinct (always the
+            // case with the cache disabled) the embeddings pass straight
+            // through — no per-query clone on the uncached hot path.
+            let all_hits = if uniq.len() == embs.len() {
+                self.shared.index.search_batch(&embs, self.shared.k_docs, self.shared.search_ef)
+            } else {
+                let residual: Vec<Vec<f32>> = uniq.iter().map(|&mi| embs[mi].clone()).collect();
+                self.shared
+                    .index
+                    .search_batch(&residual, self.shared.k_docs, self.shared.search_ef)
+            };
+            for (j, &mi) in search_idx.iter().enumerate() {
+                let hits = &all_hits[rep_of[j]];
+                let it = &mut chunk[miss_idx[mi]];
+                // One cache write per distinct key (the representative).
+                match self.shared.cache.as_ref() {
+                    Some(c) if uniq[rep_of[j]] == mi => {
+                        c.insert(&it.state.query, &embs[mi], hits, now)
+                    }
+                    _ => {}
+                }
+                fill_from_hits(&self.shared, &mut it.state, hits);
             }
         }
         Ok(())
@@ -285,13 +387,15 @@ pub fn spawn_for_kind(
 }
 
 /// Build the shared deployment state: generate the corpus, embed it with
-/// the real embedder, and build the sharded IVF index (`n_shards` corpus
-/// partitions searched scatter-gather style).
+/// the real embedder, build the sharded IVF index (`n_shards` corpus
+/// partitions searched scatter-gather style), and stand up the request
+/// cache (`cache`: None disables memoization).
 pub fn build_live_shared(
     artifacts: PathBuf,
     corpus_size: usize,
     n_topics: usize,
     n_shards: usize,
+    cache: Option<CacheConfig>,
     seed: u64,
 ) -> Result<LiveShared> {
     let corpus = Arc::new(Corpus::generate(corpus_size, n_topics, 64, seed));
@@ -314,6 +418,8 @@ pub fn build_live_shared(
     Ok(LiveShared {
         corpus,
         index,
+        cache: cache.map(|cfg| Arc::new(QueryCache::new(cfg))),
+        epoch: Instant::now(),
         artifacts,
         k_docs: 4,
         search_ef: 256,

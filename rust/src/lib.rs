@@ -21,6 +21,10 @@
 //! * [`retrieval`] — the ChromaDB substitute: an IVF index with the
 //!   paper's `search_ef` knob, sharded scatter-gather search
 //!   (`retrieval::sharded`) for independently scalable retrieval.
+//! * [`cache`] — the request cache: exact + semantic memoization of the
+//!   embed→retrieve prefix, so skewed (Zipfian) traffic short-circuits
+//!   retrieval entirely on repeats; modeled end-to-end via
+//!   `profile::models::cache_service_factor`.
 //! * [`sim`] — a discrete-event **cluster simulator** that runs the same
 //!   policy code against calibrated latency models to reproduce the
 //!   paper-scale experiments (32 GPUs, 1024 req/s) on one machine.
@@ -32,6 +36,7 @@
 
 pub mod alloc;
 pub mod baselines;
+pub mod cache;
 pub mod coordinator;
 pub mod exec;
 pub mod lp;

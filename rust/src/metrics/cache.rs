@@ -1,0 +1,129 @@
+//! Cache observability: lock-free hit/miss/stale counters shared by the
+//! live `cache::QueryCache` and the DES's modeled cache, plus the
+//! snapshot type embedded in [`crate::metrics::RunReport`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic counters updated on the request hot path (relaxed atomics:
+/// the counters are statistics, not synchronization).
+#[derive(Debug, Default)]
+pub struct CacheCounters {
+    /// Exact-tier hits (normalized query text matched).
+    pub exact_hits: AtomicU64,
+    /// Semantic-tier hits (embedding within the similarity threshold).
+    pub semantic_hits: AtomicU64,
+    /// Lookups that fell through both tiers.
+    pub misses: AtomicU64,
+    /// Entries rejected (and dropped) because their TTL had expired.
+    pub stale: AtomicU64,
+    /// Entries evicted by capacity pressure.
+    pub evictions: AtomicU64,
+    /// Entries written.
+    pub insertions: AtomicU64,
+}
+
+impl CacheCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn on_exact_hit(&self) {
+        self.exact_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn on_semantic_hit(&self) {
+        self.semantic_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn on_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn on_stale(&self) {
+        self.stale.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn on_eviction(&self) {
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn on_insertion(&self) {
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of the counters.
+    pub fn snapshot(&self) -> CacheSnapshot {
+        CacheSnapshot {
+            exact_hits: self.exact_hits.load(Ordering::Relaxed),
+            semantic_hits: self.semantic_hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            stale: self.stale.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Frozen counter values; the report row a run prints.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheSnapshot {
+    pub exact_hits: u64,
+    pub semantic_hits: u64,
+    pub misses: u64,
+    pub stale: u64,
+    pub evictions: u64,
+    pub insertions: u64,
+}
+
+impl CacheSnapshot {
+    /// Total lookups that reached the cache.
+    pub fn lookups(&self) -> u64 {
+        self.exact_hits + self.semantic_hits + self.misses
+    }
+
+    /// Combined (exact + semantic) hit rate; 0 when no lookups happened.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.lookups();
+        if total == 0 {
+            0.0
+        } else {
+            (self.exact_hits + self.semantic_hits) as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_snapshot() {
+        let c = CacheCounters::new();
+        c.on_exact_hit();
+        c.on_exact_hit();
+        c.on_semantic_hit();
+        c.on_miss();
+        c.on_stale();
+        c.on_insertion();
+        let s = c.snapshot();
+        assert_eq!(s.exact_hits, 2);
+        assert_eq!(s.semantic_hits, 1);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.stale, 1);
+        assert_eq!(s.insertions, 1);
+        assert_eq!(s.lookups(), 4);
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_snapshot_hit_rate_is_zero() {
+        assert_eq!(CacheSnapshot::default().hit_rate(), 0.0);
+        assert_eq!(CacheSnapshot::default().lookups(), 0);
+    }
+}

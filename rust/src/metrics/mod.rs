@@ -1,6 +1,8 @@
 //! Metrics: per-request and per-component recording, SLO accounting, and
 //! the report types the bench harnesses print.
 
+pub mod cache;
 pub mod recorder;
 
+pub use cache::{CacheCounters, CacheSnapshot};
 pub use recorder::{ComponentStats, Recorder, RunReport};

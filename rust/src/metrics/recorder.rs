@@ -3,6 +3,7 @@
 
 use std::collections::HashMap;
 
+use crate::metrics::cache::CacheSnapshot;
 use crate::stats::percentile::percentile;
 
 /// Aggregated per-component execution statistics.
@@ -43,6 +44,8 @@ pub struct Recorder {
     first_arrival: Option<f64>,
     last_completion: f64,
     pub components: HashMap<String, ComponentStats>,
+    /// Cache counters captured at the end of the run (None = no cache).
+    cache: Option<CacheSnapshot>,
 }
 
 impl Recorder {
@@ -82,6 +85,11 @@ impl Recorder {
         self.completed
     }
 
+    /// Attach the run's cache counter snapshot (shows up in the report).
+    pub fn set_cache(&mut self, snapshot: CacheSnapshot) {
+        self.cache = Some(snapshot);
+    }
+
     /// Finalize into a report.
     pub fn report(&self) -> RunReport {
         let mut lats = self.latencies.clone();
@@ -100,6 +108,7 @@ impl Recorder {
                 self.violations as f64 / self.completed as f64
             },
             components: self.components.clone(),
+            cache: self.cache,
         }
     }
 }
@@ -117,6 +126,8 @@ pub struct RunReport {
     /// Fraction of completed requests that missed their deadline.
     pub slo_violation_rate: f64,
     pub components: HashMap<String, ComponentStats>,
+    /// Query-cache counters, if the run served through a cache.
+    pub cache: Option<CacheSnapshot>,
 }
 
 #[cfg(test)]
@@ -166,5 +177,16 @@ mod tests {
         let rep = Recorder::new().report();
         assert_eq!(rep.completed, 0);
         assert_eq!(rep.throughput, 0.0);
+        assert!(rep.cache.is_none());
+    }
+
+    #[test]
+    fn cache_snapshot_travels_into_report() {
+        let mut r = Recorder::new();
+        let snap = CacheSnapshot { exact_hits: 5, misses: 5, ..Default::default() };
+        r.set_cache(snap);
+        let rep = r.report();
+        assert_eq!(rep.cache, Some(snap));
+        assert!((rep.cache.unwrap().hit_rate() - 0.5).abs() < 1e-12);
     }
 }

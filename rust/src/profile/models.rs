@@ -180,6 +180,50 @@ pub fn shard_service_factor(shards: usize) -> f64 {
     SHARD_SERIAL_FRAC + (1.0 - SHARD_SERIAL_FRAC) / s + SHARD_MERGE_FRAC * (s - 1.0)
 }
 
+/// Cost of a request-cache hit relative to a full retrieval pass:
+/// normalize + hash probe (exact tier) or one dot-product scan (semantic
+/// tier) plus context assembly, against an embed + scatter-gather +
+/// merge. Modeled at 5%; `benches/fig04c_cache_hit_curve.rs` is the
+/// calibration target — re-fit from its measured hit/miss latencies.
+pub const CACHE_HIT_COST_FRAC: f64 = 0.05;
+
+/// Cache-adjusted mean service-time multiplier for a component with
+/// expected hit rate `h`:
+///
+/// `factor(h) = (1 - h) + h · CACHE_HIT_COST_FRAC`
+///
+/// `factor(0) == 1.0` exactly, so uncached components are untouched.
+/// The DES samples per-request hits instead of applying the mean (the
+/// latency distribution is bimodal — that is what moves p50 at high hit
+/// rates); this closed form is what the profiler's α estimate and the
+/// allocation LP converge to over many samples, keeping deploy-time
+/// priors and simulated telemetry consistent.
+pub fn cache_service_factor(hit_rate: f64) -> f64 {
+    let h = hit_rate.clamp(0.0, 1.0);
+    1.0 - h * (1.0 - CACHE_HIT_COST_FRAC)
+}
+
+/// Steady-state hit-rate estimate for a Zipf(s) repeat-query workload
+/// (`workload::queries::QueryMix`): a `repeat_frac` fraction of requests
+/// re-draw from a pool of `pool` known queries with rank popularity
+/// ∝ 1/rank^s, and an LRU/LFU cache of `cache_entries` entries holds the
+/// hottest ranks, so
+///
+/// `hit ≈ repeat_frac · H(min(cache, pool), s) / H(pool, s)`
+///
+/// with `H(n, s) = Σ_{i=1..n} i^{-s}` the generalized harmonic number.
+/// Cold (first-touch) misses are ignored — this is the long-run rate.
+/// Monotone in `s`, `repeat_frac`, and `cache_entries`; use it to set
+/// `NodeSpec::cache_hit_rate` from workload knobs.
+pub fn zipf_hit_rate(zipf_s: f64, repeat_frac: f64, pool: usize, cache_entries: usize) -> f64 {
+    if pool == 0 || cache_entries == 0 {
+        return 0.0;
+    }
+    let harmonic = |n: usize| -> f64 { (1..=n).map(|i| (i as f64).powf(-zipf_s)).sum::<f64>() };
+    let covered = harmonic(cache_entries.min(pool)) / harmonic(pool);
+    (repeat_frac.clamp(0.0, 1.0) * covered).clamp(0.0, 1.0)
+}
+
 /// GPU components serve several requests concurrently (continuous
 /// batching); effective concurrency per instance.
 pub fn instance_concurrency(kind: &ComponentKind) -> usize {
@@ -262,6 +306,46 @@ mod tests {
         for _ in 0..1000 {
             assert!(m.sample(&f, &mut rng) > 0.0);
         }
+    }
+
+    #[test]
+    fn cache_factor_identity_when_uncached() {
+        assert_eq!(cache_service_factor(0.0), 1.0);
+        // Full hits cost exactly the hit fraction.
+        assert!((cache_service_factor(1.0) - CACHE_HIT_COST_FRAC).abs() < 1e-12);
+        // Monotone decreasing in the hit rate.
+        let mut prev = cache_service_factor(0.0);
+        for i in 1..=10 {
+            let f = cache_service_factor(i as f64 / 10.0);
+            assert!(f < prev, "factor must fall with hit rate: {f} vs {prev}");
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn zipf_hit_rate_monotone_in_skew_and_capacity() {
+        // More skew → hotter head → more of the mass fits in the cache.
+        let pool = 4096;
+        let cache = 256;
+        let mut prev = 0.0;
+        for s in [0.4, 0.8, 1.2, 1.6] {
+            let h = zipf_hit_rate(s, 0.8, pool, cache);
+            assert!(h > prev, "hit rate must grow with zipf_s: {h} vs {prev}");
+            assert!((0.0..1.0).contains(&h));
+            prev = h;
+        }
+        // Bigger cache → more hits, saturating at repeat_frac.
+        let mut prev = 0.0;
+        for c in [16, 64, 256, 1024, 4096] {
+            let h = zipf_hit_rate(1.1, 0.8, pool, c);
+            assert!(h >= prev);
+            prev = h;
+        }
+        assert!((zipf_hit_rate(1.1, 0.8, pool, pool) - 0.8).abs() < 1e-12);
+        // Degenerate inputs.
+        assert_eq!(zipf_hit_rate(1.0, 0.8, 0, 64), 0.0);
+        assert_eq!(zipf_hit_rate(1.0, 0.8, 1024, 0), 0.0);
+        assert_eq!(zipf_hit_rate(1.0, 0.0, 1024, 64), 0.0);
     }
 
     #[test]

@@ -53,8 +53,17 @@ pub fn profile_graph(graph: &PipelineGraph, n: usize, seed: u64) -> Profile {
             // Sharded components scatter-gather: per-request service time
             // shrinks by the calibrated shard factor, and the resulting α
             // is already the *per-shard-pool* coefficient the LP uses.
-            let t = model.sample(&feats, &mut rng)
+            let mut t = model.sample(&feats, &mut rng)
                 * crate::profile::models::shard_service_factor(node.shards);
+            // Cached components: a `cache_hit_rate` fraction of visits
+            // costs only the hit fraction (sampled, same model the DES
+            // uses), so the profiled α — and with it the LP priors and
+            // the autoscaler targets — is cache-adjusted. The rng draw
+            // happens only for cached nodes, keeping uncached profiles
+            // bit-identical to the pre-cache code path.
+            if node.cache_hit_rate > 0.0 && rng.chance(node.cache_hit_rate) {
+                t *= crate::profile::models::CACHE_HIT_COST_FRAC;
+            }
             let e = service_sums.entry(cur).or_insert((0.0, 0));
             e.0 += t;
             e.1 += 1;
@@ -163,6 +172,28 @@ mod tests {
                 .any(|&k| p.alpha_for(node.id, k) > 0.0);
             assert!(has_alpha, "{} missing alpha", node.name);
         }
+    }
+
+    #[test]
+    fn cached_retriever_profiles_faster_and_alpha_rises() {
+        let plain = apps::vanilla_rag();
+        let cached = apps::cached_vanilla_rag(1.2, 0.8, 1024, 4096);
+        let pp = profile_graph(&plain, 3000, 11);
+        let pc = profile_graph(&cached, 3000, 11);
+        let rp = plain.node_by_name("retriever").unwrap();
+        let rc = cached.node_by_name("retriever").unwrap();
+        let h = rc.cache_hit_rate;
+        assert!(h > 0.3, "workload should produce a real hit rate, got {h}");
+        let expect = crate::profile::models::cache_service_factor(h);
+        let ratio = pc.mean_service[&rc.id] / pp.mean_service[&rp.id];
+        // Sampled hit draws converge to the closed-form factor.
+        assert!(
+            (ratio - expect).abs() < 0.08,
+            "mean-service ratio {ratio} vs cache factor {expect}"
+        );
+        // Cache-adjusted α: the LP sees more throughput per CPU unit.
+        let k = crate::spec::ResourceKind::Cpu;
+        assert!(pc.alpha_for(rc.id, k) > pp.alpha_for(rp.id, k));
     }
 
     #[test]

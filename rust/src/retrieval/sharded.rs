@@ -348,6 +348,63 @@ mod tests {
     }
 
     #[test]
+    fn oracle_property_randomized_corpora_shards_and_duplicates() {
+        // Property form of the oracle: across randomized corpus sizes,
+        // shard counts S ∈ {1..8}, and duplicate-heavy corpora, the
+        // sharded merged top-k at full `search_ef` equals the single
+        // IvfIndex top-k (canonical (score desc, id asc) order — equal
+        // scores may be permuted within a tie by either path).
+        use crate::util::proptest::property;
+        property("sharded == single-index oracle", 12, |g| {
+            let n = g.usize(40, 600);
+            let seed = g.i64(0, 1 << 24) as u64;
+            let n_shards = g.usize(1, 8);
+            let duplicate_heavy = g.bool();
+            let mut vectors = corpus_vectors(n, seed);
+            if duplicate_heavy {
+                // Collapse most rows onto a handful of distinct vectors:
+                // exercises tie-breaking in the k-way merge and the
+                // degenerate-cluster repair inside each shard.
+                let distinct = g.usize(1, 4);
+                for i in distinct..n {
+                    let src = i % distinct;
+                    let (a, b) = vectors.split_at_mut(i * DIM);
+                    b[..DIM].copy_from_slice(&a[src * DIM..(src + 1) * DIM]);
+                }
+            }
+            let ivf = IvfParams { n_lists: g.usize(2, 32), kmeans_iters: 4, seed };
+            let single = IvfIndex::build(vectors.clone(), DIM, ivf);
+            let sharded =
+                ShardedIndex::build(vectors.clone(), DIM, ShardParams { n_shards, ivf });
+            let k = g.usize(1, 12);
+            for q in queries_from(&vectors, 4) {
+                let want = canon(single.search(&q, k, n));
+                let got = canon(sharded.search(&q, k, n));
+                assert_eq!(
+                    got.len(),
+                    want.len(),
+                    "n={n} S={n_shards} k={k} dup={duplicate_heavy}"
+                );
+                for (a, b) in got.iter().zip(&want) {
+                    // Ids may differ inside an exact score tie (duplicate
+                    // rows are interchangeable); scores must be identical.
+                    assert_eq!(a.1.to_bits(), b.1.to_bits(), "score mismatch at n={n} S={n_shards}");
+                }
+                // The id multisets must agree up to tie groups: every
+                // returned id must score exactly its returned score.
+                for &(id, score) in &got {
+                    let s: f32 = vectors[id * DIM..(id + 1) * DIM]
+                        .iter()
+                        .zip(&q)
+                        .map(|(x, y)| x * y)
+                        .sum();
+                    assert_eq!(s.to_bits(), score.to_bits(), "stale id→score pair");
+                }
+            }
+        });
+    }
+
+    #[test]
     fn batched_search_matches_sequential_search() {
         let n = 800;
         let vectors = corpus_vectors(n, 7);

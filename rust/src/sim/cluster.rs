@@ -45,13 +45,14 @@ impl Machine {
 /// model 0.5%).
 pub const COLOCATION_SLOWDOWN: f64 = 1.005;
 
-/// The simulator's calibration point for sharded (scatter-gather)
-/// components. The model itself lives with the other calibrated latency
-/// models in `profile::models` so the deploy-time profiler does not
-/// depend on the simulator; re-exported here because the DES applies it
-/// to every sampled service time.
+/// The simulator's calibration points for sharded (scatter-gather) and
+/// cached (request-memoizing) components. The models themselves live
+/// with the other calibrated latency models in `profile::models` so the
+/// deploy-time profiler does not depend on the simulator; re-exported
+/// here because the DES applies them to every sampled service time.
 pub use crate::profile::models::{
-    shard_service_factor, SHARD_MERGE_FRAC, SHARD_SERIAL_FRAC,
+    cache_service_factor, shard_service_factor, zipf_hit_rate, CACHE_HIT_COST_FRAC,
+    SHARD_MERGE_FRAC, SHARD_SERIAL_FRAC,
 };
 
 /// The cluster: a bag of machines plus placement bookkeeping.

@@ -16,8 +16,10 @@ use crate::coordinator::scheduler::{PrioQueue, QueueDiscipline, SlackPredictor};
 use crate::coordinator::streaming::{StreamPolicy, StreamingMode, CHUNK_OVERHEAD};
 use crate::coordinator::telemetry::Telemetry;
 use crate::coordinator::Autoscaler;
-use crate::metrics::{Recorder, RunReport};
-use crate::profile::models::{concurrency_slowdown, instance_concurrency, LatencyModel};
+use crate::metrics::{CacheCounters, Recorder, RunReport};
+use crate::profile::models::{
+    concurrency_slowdown, instance_concurrency, LatencyModel, CACHE_HIT_COST_FRAC,
+};
 use crate::profile::{profile_graph, Profile};
 use crate::spec::graph::{NodeId, PipelineGraph};
 use crate::util::rng::Rng;
@@ -195,6 +197,9 @@ pub struct SimWorld {
     decisions: u64,
     monolithic: bool,
     completed: usize,
+    /// Modeled query-cache hits/misses (components with
+    /// `cache_hit_rate > 0`); surfaces in `RunReport::cache`.
+    cache_counters: CacheCounters,
 }
 
 impl SimWorld {
@@ -295,6 +300,7 @@ impl SimWorld {
             decisions: 0,
             monolithic,
             completed: 0,
+            cache_counters: CacheCounters::new(),
             prior,
             graph,
             cfg,
@@ -406,6 +412,10 @@ impl SimWorld {
                 break;
             }
         }
+        let cache_snap = self.cache_counters.snapshot();
+        if cache_snap.lookups() > 0 {
+            self.recorder.set_cache(cache_snap);
+        }
         let final_instances = self
             .instances
             .iter()
@@ -500,6 +510,13 @@ impl SimWorld {
         let mut t = model.sample(&features, &mut self.reqs[req].rng);
         // Sharded components scatter-gather across parallel partitions.
         t *= super::cluster::shard_service_factor(spec.shards);
+        // Modeled request cache: a `cache_hit_rate` fraction of visits is
+        // served from the memoized embed→retrieve prefix at the hit cost.
+        // Per-request sampling (not the mean factor) keeps the latency
+        // distribution bimodal — the p50 collapse at high hit rates.
+        if self.draw_cache_hit(req, spec.cache_hit_rate) {
+            t *= CACHE_HIT_COST_FRAC;
+        }
         t *= concurrency_slowdown(active);
         if colocated {
             t *= COLOCATION_SLOWDOWN;
@@ -611,6 +628,22 @@ impl SimWorld {
         self.router.release(req as u64);
     }
 
+    /// Draw whether this visit is served by the modeled request cache
+    /// (`NodeSpec::cache_hit_rate`); uncached nodes consume no
+    /// randomness, so pre-cache traces replay bit-identically.
+    fn draw_cache_hit(&mut self, req: usize, hit_rate: f64) -> bool {
+        if hit_rate <= 0.0 {
+            return false;
+        }
+        let hit = self.reqs[req].rng.chance(hit_rate);
+        if hit {
+            self.cache_counters.on_exact_hit();
+        } else {
+            self.cache_counters.on_miss();
+        }
+        hit
+    }
+
     fn utilization(&self, node: NodeId) -> f64 {
         let Some(v) = self.instances.get(&node) else { return 0.0 };
         let cap: usize = v.iter().filter(|i| i.up).map(|i| i.slots).sum();
@@ -673,6 +706,9 @@ impl SimWorld {
             let model = LatencyModel::for_kind(&spec.kind);
             let mut t = model.sample(&features, &mut self.reqs[req].rng);
             t *= super::cluster::shard_service_factor(spec.shards);
+            if self.draw_cache_hit(req, spec.cache_hit_rate) {
+                t *= CACHE_HIT_COST_FRAC;
+            }
             t *= concurrency_slowdown(active);
             total += t;
             self.recorder.on_execution(
@@ -935,6 +971,43 @@ mod tests {
             "sharded mean {m_shard} vs unsharded {m_full} (factor {factor})"
         );
         assert!(m_shard < m_full, "sharding must reduce retrieval service time");
+    }
+
+    #[test]
+    fn cached_retrieval_cuts_p50_and_reports_hit_rate() {
+        // Same workload, same seed: the cached retriever must report a
+        // hit rate near the spec's expectation and cut its mean service
+        // time toward the closed-form cache factor; uncached runs carry
+        // no cache section at all.
+        let plain = run_point(SystemKind::Harmonia, apps::vanilla_rag(), 8.0, 400, Some(2.0), 21);
+        assert!(plain.report.cache.is_none(), "uncached run must not report a cache");
+        let g = apps::cached_vanilla_rag(1.3, 0.8, 2048, 4096);
+        let h = g.node_by_name("retriever").unwrap().cache_hit_rate;
+        assert!(h >= 0.5, "workload should be hot enough for the p50 claim, got {h}");
+        let cached = run_point(SystemKind::Harmonia, g, 8.0, 400, Some(2.0), 21);
+        assert_eq!(cached.report.completed, 400);
+        let snap = cached.report.cache.expect("cached run reports counters");
+        assert!(snap.lookups() >= 400);
+        assert!(
+            (snap.hit_rate() - h).abs() < 0.1,
+            "observed hit rate {} vs modeled {h}",
+            snap.hit_rate()
+        );
+        let m_plain = plain.report.components["retriever"].mean_service();
+        let m_cached = cached.report.components["retriever"].mean_service();
+        let factor = crate::profile::models::cache_service_factor(h);
+        assert!(
+            m_cached < m_plain * (factor + 0.15),
+            "cached mean {m_cached} vs plain {m_plain} (factor {factor})"
+        );
+        // End-to-end median improves too: at h ≥ 0.5 the median request
+        // hits and skips the full retrieval pass.
+        assert!(
+            cached.report.p50 < plain.report.p50,
+            "cached p50 {} vs plain {}",
+            cached.report.p50,
+            plain.report.p50
+        );
     }
 
     #[test]

@@ -86,6 +86,41 @@ pub fn sharded_vanilla_rag(n_shards: usize) -> PipelineGraph {
     b.build().expect("v-rag-sharded is valid")
 }
 
+/// Vanilla RAG with a request cache in front of retrieval: a Zipfian
+/// repeat-query workload (`QueryMix { zipf_s, repeat_frac }` over a pool
+/// of `query_pool` distinct queries) against a cache of `cache_entries`
+/// entries yields the steady-state hit rate
+/// `profile::models::zipf_hit_rate`, recorded on the retriever as
+/// `NodeSpec::cache_hit_rate`. The profiler and DES shrink that fraction
+/// of retrievals to the cache-hit cost, so the allocation LP sizes the
+/// retrieval pool for the *miss* traffic only — the first component
+/// whose effective capacity grows with load skew.
+pub fn cached_vanilla_rag(
+    zipf_s: f64,
+    repeat_frac: f64,
+    cache_entries: usize,
+    query_pool: usize,
+) -> PipelineGraph {
+    let hit = crate::profile::models::zipf_hit_rate(zipf_s, repeat_frac, query_pool, cache_entries)
+        .min(0.99);
+    let mut b = PipelineBuilder::new("v-rag-cached");
+    let retr = b
+        .component("retriever", ComponentKind::Retriever)
+        .resources(&RETRIEVER_RES)
+        .cache_hit_rate(hit)
+        .streamable(true)
+        .add();
+    let gen = b
+        .component("generator", ComponentKind::Generator)
+        .resources(&GPU_RES)
+        .streamable(true)
+        .add();
+    b.edge_from_source(retr, 1.0);
+    b.edge(retr, gen, 1.0);
+    b.edge_to_sink(gen, 1.0);
+    b.build().expect("v-rag-cached is valid")
+}
+
 /// Corrective RAG [Yan et al.]: retrieve → grade → {generate | rewrite →
 /// web search → generate}. Purely conditional control flow.
 pub fn corrective_rag() -> PipelineGraph {
@@ -210,11 +245,13 @@ pub fn all() -> Vec<PipelineGraph> {
 }
 
 /// Look up an app by its short name (v-rag, c-rag, s-rag, a-rag, plus
-/// the sharded-retrieval variant v-rag-sharded).
+/// the sharded-retrieval variant v-rag-sharded and the request-cache
+/// variant v-rag-cached).
 pub fn by_name(name: &str) -> Option<PipelineGraph> {
     match name {
         "v-rag" => Some(vanilla_rag()),
         "v-rag-sharded" => Some(sharded_vanilla_rag(4)),
+        "v-rag-cached" => Some(cached_vanilla_rag(1.1, 0.7, 1024, 4096)),
         "c-rag" => Some(corrective_rag()),
         "s-rag" => Some(self_rag()),
         "a-rag" => Some(adaptive_rag()),
@@ -293,6 +330,22 @@ mod tests {
         // Degenerate case: 1 shard is plain v-rag resourcing.
         let g1 = sharded_vanilla_rag(1);
         assert_eq!(g1.node_by_name("retriever").unwrap().shards, 1);
+    }
+
+    #[test]
+    fn cached_vrag_records_skew_derived_hit_rate() {
+        let g = cached_vanilla_rag(1.2, 0.8, 1024, 4096);
+        g.validate().unwrap();
+        let retr = g.node_by_name("retriever").unwrap();
+        assert!((0.0..1.0).contains(&retr.cache_hit_rate));
+        assert!(retr.cache_hit_rate > 0.3, "hit {}", retr.cache_hit_rate);
+        // More skew → higher recorded hit rate.
+        let flat = cached_vanilla_rag(0.3, 0.8, 1024, 4096);
+        assert!(flat.node_by_name("retriever").unwrap().cache_hit_rate < retr.cache_hit_rate);
+        // No repeats → no hits → plain v-rag economics.
+        let cold = cached_vanilla_rag(1.2, 0.0, 1024, 4096);
+        assert_eq!(cold.node_by_name("retriever").unwrap().cache_hit_rate, 0.0);
+        assert!(by_name("v-rag-cached").is_some());
     }
 
     #[test]

@@ -53,6 +53,15 @@ impl<'a> ComponentBuilder<'a> {
         self
     }
 
+    /// Expected request-cache hit rate (retrieval memoization); the DES
+    /// and the profiler shrink this fraction of visits to the cache-hit
+    /// cost (`profile::models::CACHE_HIT_COST_FRAC`). Derive from the
+    /// workload skew with `profile::models::zipf_hit_rate`.
+    pub fn cache_hit_rate(mut self, h: f64) -> Self {
+        self.spec.cache_hit_rate = h;
+        self
+    }
+
     /// Per-instance resource demand.
     pub fn resources(mut self, r: &[(ResourceKind, f64)]) -> Self {
         self.spec.resources = r.to_vec();
@@ -104,6 +113,7 @@ impl PipelineBuilder {
             stateful: false,
             base_instances: 0,
             shards: 1,
+            cache_hit_rate: 0.0,
             resources: vec![],
             alpha: vec![],
             gamma: 1.0,
@@ -143,6 +153,7 @@ impl PipelineBuilder {
             stateful: false,
             base_instances: 1,
             shards: 1,
+            cache_hit_rate: 0.0,
             resources: default_res,
             alpha: vec![],
             gamma: 1.0,
@@ -238,6 +249,7 @@ mod tests {
             .stateful(true)
             .base_instances(3)
             .shards(2)
+            .cache_hit_rate(0.4)
             .gamma(1.5)
             .streamable(true)
             .add();
@@ -248,6 +260,7 @@ mod tests {
         assert!(n.stateful);
         assert_eq!(n.base_instances, 3);
         assert_eq!(n.shards, 2);
+        assert_eq!(n.cache_hit_rate, 0.4);
         assert_eq!(n.gamma, 1.5);
         assert!(n.streamable);
     }

@@ -108,6 +108,14 @@ pub struct NodeSpec {
     /// holding ~1/shards of the data. 1 = unsharded. The allocator sizes
     /// each shard's replica pool independently.
     pub shards: usize,
+    /// Expected request-cache hit rate for this component (retrieval
+    /// memoization): fraction of visits served from the query cache at a
+    /// small fixed cost instead of a full pass. 0 = uncached. Set from
+    /// the workload skew via `profile::models::zipf_hit_rate`; applied by
+    /// the profiler and the DES through
+    /// `profile::models::cache_service_factor`, so the LP priors and the
+    /// autoscaler see cache-adjusted α.
+    pub cache_hit_rate: f64,
     /// Per-instance resource demand (r constraint granularity).
     pub resources: Vec<(ResourceKind, f64)>,
     /// Throughput coefficient α_{i,k}: requests/sec per unit of resource k
@@ -164,6 +172,7 @@ pub enum ValidationError {
     NoPathToSink { node: String },
     BadGamma { node: String, gamma: f64 },
     BadShards { node: String },
+    BadCacheHitRate { node: String, rate: f64 },
     SelfLoopWithoutBackEdge { node: String },
     DuplicateName(String),
 }
@@ -181,6 +190,9 @@ impl std::fmt::Display for ValidationError {
             }
             ValidationError::BadShards { node } => {
                 write!(f, "'{node}' has zero shards (must be >= 1)")
+            }
+            ValidationError::BadCacheHitRate { node, rate } => {
+                write!(f, "'{node}' has cache hit rate {rate} outside [0, 1)")
             }
             ValidationError::SelfLoopWithoutBackEdge { node } => {
                 write!(f, "'{node}' has a self loop not marked as back edge")
@@ -241,6 +253,12 @@ impl PipelineGraph {
             }
             if n.shards == 0 {
                 return Err(ValidationError::BadShards { node: n.name.clone() });
+            }
+            if !(0.0..1.0).contains(&n.cache_hit_rate) {
+                return Err(ValidationError::BadCacheHitRate {
+                    node: n.name.clone(),
+                    rate: n.cache_hit_rate,
+                });
             }
         }
         // Probability sums.
@@ -419,6 +437,7 @@ mod tests {
             stateful: false,
             base_instances: 1,
             shards: 1,
+            cache_hit_rate: 0.0,
             resources: vec![(ResourceKind::Cpu, 1.0)],
             alpha: vec![(ResourceKind::Cpu, 1.0)],
             gamma: 1.0,
@@ -441,6 +460,19 @@ mod tests {
             Err(ValidationError::BadShards { node }) => assert_eq!(node, "retriever"),
             other => panic!("expected BadShards, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn validation_catches_bad_cache_hit_rate() {
+        let mut g = apps::vanilla_rag();
+        let retr = g.node_by_name("retriever").unwrap().id;
+        g.nodes[retr.0].cache_hit_rate = 1.0; // a component cannot hit 100%
+        match g.validate() {
+            Err(ValidationError::BadCacheHitRate { node, .. }) => assert_eq!(node, "retriever"),
+            other => panic!("expected BadCacheHitRate, got {other:?}"),
+        }
+        g.nodes[retr.0].cache_hit_rate = 0.85;
+        g.validate().unwrap();
     }
 
     #[test]

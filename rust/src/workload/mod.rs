@@ -11,5 +11,5 @@ pub mod queries;
 pub mod trace;
 
 pub use corpus::{Corpus, Passage};
-pub use queries::{Query, QueryGen};
+pub use queries::{Query, QueryGen, QueryMix, ZipfQueryGen};
 pub use trace::{Request, Trace, TraceConfig};

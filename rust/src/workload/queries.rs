@@ -1,6 +1,8 @@
 //! Query generation: topic-targeted byte-string queries, so retrieval has
 //! ground truth (a query about topic T should retrieve topic-T passages —
-//! the recall axis of the Fig. 4 `search_ef` study).
+//! the recall axis of the Fig. 4 `search_ef` study), plus a Zipfian
+//! repeat-query stream ([`ZipfQueryGen`]) for the skewed workloads the
+//! request cache (`cache::QueryCache`) exists to exploit.
 
 use crate::util::rng::Rng;
 use crate::workload::corpus::Corpus;
@@ -55,6 +57,87 @@ impl<'a> QueryGen<'a> {
     }
 }
 
+/// Skew knobs for a repeat-heavy query stream: with probability
+/// `repeat_frac` the next query re-draws from a fixed pool of
+/// `pool_size` known queries with rank popularity ∝ 1/rank^`zipf_s`
+/// (rank 1 hottest); otherwise it is a fresh unique query. `zipf_s = 0`
+/// makes repeats uniform over the pool; larger s concentrates traffic on
+/// the head — the axis the `fig04c_cache_hit_curve` bench sweeps. The
+/// steady-state cache hit rate this induces is
+/// `profile::models::zipf_hit_rate`.
+#[derive(Clone, Copy, Debug)]
+pub struct QueryMix {
+    pub zipf_s: f64,
+    pub repeat_frac: f64,
+    pub pool_size: usize,
+}
+
+impl Default for QueryMix {
+    fn default() -> Self {
+        QueryMix { zipf_s: 1.0, repeat_frac: 0.7, pool_size: 1024 }
+    }
+}
+
+/// Zipfian repeat-query generator: wraps [`QueryGen`] with a popularity
+/// pool. Deterministic for (corpus, mix, seed); emitted queries carry
+/// fresh unique ids even when their text repeats (a repeat is a new
+/// request for the same content, which is exactly what a request cache
+/// sees in production).
+pub struct ZipfQueryGen<'a> {
+    base: QueryGen<'a>,
+    pool: Vec<Query>,
+    /// CDF over pool ranks (precomputed; sampled by binary search).
+    cdf: Vec<f64>,
+    repeat_frac: f64,
+    rng: Rng,
+    next_id: usize,
+}
+
+impl<'a> ZipfQueryGen<'a> {
+    pub fn new(corpus: &'a Corpus, mix: QueryMix, seed: u64) -> Self {
+        let mut base = QueryGen::new(corpus, seed);
+        let pool_size = mix.pool_size.max(1);
+        let pool: Vec<Query> = (0..pool_size).map(|_| base.next()).collect();
+        let mut cdf = Vec::with_capacity(pool_size);
+        let mut acc = 0.0;
+        for rank in 1..=pool_size {
+            acc += (rank as f64).powf(-mix.zipf_s);
+            cdf.push(acc);
+        }
+        for c in cdf.iter_mut() {
+            *c /= acc;
+        }
+        ZipfQueryGen {
+            base,
+            pool,
+            cdf,
+            repeat_frac: mix.repeat_frac.clamp(0.0, 1.0),
+            rng: Rng::new(seed ^ 0x21F),
+            next_id: 0,
+        }
+    }
+
+    /// Sample a pool rank from the Zipf CDF.
+    fn sample_rank(&mut self) -> usize {
+        let u = self.rng.f64();
+        self.cdf.partition_point(|&c| c < u).min(self.pool.len() - 1)
+    }
+
+    /// Next query: a Zipf-weighted repeat with probability `repeat_frac`,
+    /// a fresh query otherwise.
+    pub fn next(&mut self) -> Query {
+        let mut q = if self.rng.chance(self.repeat_frac) {
+            let rank = self.sample_rank();
+            self.pool[rank].clone()
+        } else {
+            self.base.next()
+        };
+        q.id = self.next_id;
+        self.next_id += 1;
+        q
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -69,6 +152,65 @@ mod tests {
         assert!(topics.len() > 1, "should cover multiple topics");
         assert!(qs.iter().all(|q| q.topic < 4));
         // ids are unique and increasing
+        for (i, q) in qs.iter().enumerate() {
+            assert_eq!(q.id, i);
+        }
+    }
+
+    #[test]
+    fn zipf_stream_is_skewed_and_deterministic() {
+        let c = Corpus::generate(200, 4, 64, 0);
+        let mix = QueryMix { zipf_s: 1.2, repeat_frac: 0.8, pool_size: 64 };
+        let mut a = ZipfQueryGen::new(&c, mix, 9);
+        let mut b = ZipfQueryGen::new(&c, mix, 9);
+        let mut freq: std::collections::HashMap<Vec<u8>, usize> = std::collections::HashMap::new();
+        for i in 0..2000 {
+            let qa = a.next();
+            let qb = b.next();
+            assert_eq!(qa.text, qb.text, "deterministic for a seed");
+            assert_eq!(qa.id, i, "fresh unique ids");
+            *freq.entry(qa.text).or_insert(0) += 1;
+        }
+        // Skew: the hottest query dominates; total repeats near repeat_frac.
+        let mut counts: Vec<usize> = freq.values().copied().collect();
+        counts.sort_unstable_by(|x, y| y.cmp(x));
+        assert!(counts[0] > 2000 / 64, "head rank must beat uniform: {}", counts[0]);
+        let repeats: usize = counts.iter().filter(|&&c| c > 1).map(|&c| c - 1).sum();
+        let frac = repeats as f64 / 2000.0;
+        assert!((0.6..0.95).contains(&frac), "repeat fraction {frac}");
+    }
+
+    #[test]
+    fn higher_zipf_s_concentrates_mass_on_the_head() {
+        let c = Corpus::generate(200, 4, 64, 1);
+        let head_mass = |s: f64| -> usize {
+            let mix = QueryMix { zipf_s: s, repeat_frac: 1.0, pool_size: 256 };
+            let mut g = ZipfQueryGen::new(&c, mix, 5);
+            let mut freq: std::collections::HashMap<Vec<u8>, usize> =
+                std::collections::HashMap::new();
+            for _ in 0..4000 {
+                *freq.entry(g.next().text).or_insert(0) += 1;
+            }
+            let mut counts: Vec<usize> = freq.values().copied().collect();
+            counts.sort_unstable_by(|x, y| y.cmp(x));
+            counts.iter().take(10).sum()
+        };
+        let flat = head_mass(0.2);
+        let skewed = head_mass(1.5);
+        assert!(
+            skewed > flat + 400,
+            "top-10 mass must grow with zipf_s: {skewed} vs {flat}"
+        );
+    }
+
+    #[test]
+    fn zero_repeat_frac_never_repeats_pool() {
+        let c = Corpus::generate(100, 4, 64, 2);
+        let mix = QueryMix { zipf_s: 1.0, repeat_frac: 0.0, pool_size: 8 };
+        let mut g = ZipfQueryGen::new(&c, mix, 3);
+        // With repeat_frac = 0 every emission comes from the base
+        // generator; ids are sequential and the stream advances.
+        let qs: Vec<Query> = (0..50).map(|_| g.next()).collect();
         for (i, q) in qs.iter().enumerate() {
             assert_eq!(q.id, i);
         }

@@ -1,0 +1,116 @@
+//! Golden-trace DES regression: a fixed-seed V-RAG simulation pins the
+//! run-level summary statistics within tolerance bands, guarding future
+//! scheduler / allocator / simulator refactors against silent behavior
+//! drift. Always runs (no artifacts needed — the DES is pure Rust).
+//!
+//! The bands are derived from the calibrated latency models (see
+//! `profile::models`): at 8 req/s V-RAG is lightly loaded, so end-to-end
+//! latency ≈ retriever (~0.1 s mean) + generator (~0.1 s mean) plus
+//! small queueing/controller overheads, and throughput tracks the
+//! arrival rate. If an intentional model change moves a statistic out of
+//! its band, re-pin the band in the same commit and say why.
+
+use harmonia::sim::{run_point, SimConfig, SimWorld, SystemKind};
+use harmonia::spec::apps;
+use harmonia::workload::TraceConfig;
+
+const SEED: u64 = 0x601D;
+const RATE: f64 = 8.0;
+const N: usize = 400;
+const SLO: f64 = 2.0;
+
+fn golden_run() -> harmonia::sim::SimResult {
+    run_point(SystemKind::Harmonia, apps::vanilla_rag(), RATE, N, Some(SLO), SEED)
+}
+
+#[test]
+fn golden_vrag_summary_stats_within_bands() {
+    let r = golden_run();
+    let rep = &r.report;
+    // Every admitted request completes.
+    assert_eq!(rep.completed, N as u64);
+    // Throughput tracks the Poisson arrival rate over the active horizon
+    // (light load: the system drains as fast as requests arrive).
+    assert!(
+        (6.0..10.0).contains(&rep.throughput),
+        "throughput {} outside golden band [6, 10)",
+        rep.throughput
+    );
+    // Latency bands from the calibrated models (retriever ≈ generator ≈
+    // 0.1 s mean service at k_docs ∈ [100, 300]).
+    assert!(
+        (0.1..0.8).contains(&rep.mean_latency),
+        "mean latency {} outside golden band [0.1, 0.8)",
+        rep.mean_latency
+    );
+    assert!(
+        (0.1..0.7).contains(&rep.p50),
+        "p50 {} outside golden band [0.1, 0.7)",
+        rep.p50
+    );
+    assert!(
+        rep.p50 <= rep.p95 && rep.p95 <= rep.p99,
+        "percentiles out of order: {} / {} / {}",
+        rep.p50,
+        rep.p95,
+        rep.p99
+    );
+    assert!(
+        rep.p99 < SLO,
+        "p99 {} must clear the 2 s SLO at light load",
+        rep.p99
+    );
+    // Light load, 2 s SLO: violations are rare events.
+    assert!(
+        rep.slo_violation_rate < 0.05,
+        "violation rate {} outside golden band",
+        rep.slo_violation_rate
+    );
+    // Both stages recorded, with V-RAG's "naturally balanced" ratio.
+    let retr = rep.components["retriever"].mean_service();
+    let genr = rep.components["generator"].mean_service();
+    assert!(
+        (0.5..2.0).contains(&(retr / genr)),
+        "V-RAG balance drifted: retriever {retr} vs generator {genr}"
+    );
+    // No cache in the golden pipeline: the report must not grow one.
+    assert!(rep.cache.is_none());
+}
+
+#[test]
+fn golden_vrag_is_bit_reproducible() {
+    // The golden statistics are only a regression anchor if the run is
+    // exactly reproducible: identical seeds must give identical floats,
+    // not merely close ones.
+    let a = golden_run();
+    let b = golden_run();
+    assert_eq!(a.report.completed, b.report.completed);
+    assert_eq!(a.report.throughput.to_bits(), b.report.throughput.to_bits());
+    assert_eq!(a.report.mean_latency.to_bits(), b.report.mean_latency.to_bits());
+    assert_eq!(a.report.p99.to_bits(), b.report.p99.to_bits());
+    assert_eq!(
+        a.report.slo_violation_rate.to_bits(),
+        b.report.slo_violation_rate.to_bits()
+    );
+}
+
+#[test]
+fn golden_bands_hold_across_all_reference_apps() {
+    // Coarser guard for the conditional/recursive apps: everything
+    // completes, percentiles are ordered, and the run stays deterministic.
+    for app in ["c-rag", "s-rag", "a-rag"] {
+        let g = apps::by_name(app).unwrap();
+        let trace = TraceConfig { rate: 8.0, n: 200, slo: Some(4.0), ..TraceConfig::default() };
+        let cfg = SimConfig::new(SystemKind::Harmonia, trace.clone(), SEED);
+        let r = SimWorld::simulate(g.clone(), cfg);
+        assert_eq!(r.report.completed, 200, "{app}");
+        assert!(r.report.p50 <= r.report.p99, "{app}");
+        assert!(r.report.slo_violation_rate < 0.5, "{app}: {}", r.report.slo_violation_rate);
+        let r2 = SimWorld::simulate(g, SimConfig::new(SystemKind::Harmonia, trace, SEED));
+        assert_eq!(
+            r.report.mean_latency.to_bits(),
+            r2.report.mean_latency.to_bits(),
+            "{app} must be bit-reproducible"
+        );
+    }
+}

@@ -58,6 +58,35 @@ fn vanilla_rag_batched_requests() {
 }
 
 #[test]
+fn repeat_query_hits_the_request_cache() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // ControllerConfig::quick enables the cache by default; an exact
+    // repeat must be served from the exact tier and produce the same
+    // answer (same memoized context + greedy decoding).
+    let h = deploy(apps::vanilla_rag(), cfg()).unwrap();
+    let q: &[u8] = b"tell me about topic one";
+    let first = h
+        .submit(q)
+        .recv_timeout(std::time::Duration::from_secs(120))
+        .unwrap();
+    assert!(first.error.is_none(), "{:?}", first.error);
+    let second = h
+        .submit(q)
+        .recv_timeout(std::time::Duration::from_secs(120))
+        .unwrap();
+    assert!(second.error.is_none(), "{:?}", second.error);
+    assert_eq!(first.answer, second.answer, "memoized retrieval must not change the answer");
+    let report = h.report();
+    let snap = report.cache.expect("cache counters in the live report");
+    assert!(snap.exact_hits >= 1, "repeat did not hit: {snap:?}");
+    assert!(snap.insertions >= 1);
+    h.shutdown();
+}
+
+#[test]
 fn corrective_rag_exercises_conditional_flow() {
     if !artifacts_available() {
         eprintln!("skipping: artifacts not built");
