@@ -6,7 +6,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test test-fast lint fmt clippy verify artifacts bench bench-shards bench-cache clean
+.PHONY: all build test test-fast lint fmt clippy verify artifacts bench bench-shards bench-cache bench-overload bench-smoke clean
 
 all: build
 
@@ -47,6 +47,18 @@ bench-shards:
 # The request-cache hit-curve bench only.
 bench-cache:
 	$(CARGO) bench --bench fig04c_cache_hit_curve
+
+# The overload control-plane bench only (fig11b).
+bench-overload:
+	$(CARGO) bench --bench fig11b_overload
+
+# Quick-iteration bench pass (CI): actually *execute* the bench binaries
+# with `--smoke`-shrunk workloads (see util::bench::smoke) instead of
+# only compiling them. Keeps the paper-figure harnesses from bit-rotting.
+bench-smoke:
+	$(CARGO) bench --bench fig11b_overload -- --smoke
+	$(CARGO) bench --bench fig04b_shard_scaling -- --smoke
+	$(CARGO) bench --bench fig04c_cache_hit_curve -- --smoke
 
 clean:
 	$(CARGO) clean

@@ -12,15 +12,18 @@
 use std::time::Instant;
 
 use harmonia::retrieval::{IvfIndex, IvfParams, ShardParams, ShardedIndex};
+use harmonia::util::bench::smoke_scale;
 use harmonia::util::table::{f, Table};
 use harmonia::workload::{Corpus, QueryGen};
 
 fn main() {
-    let n = 40_000;
+    // `--smoke`: shrink the corpus/probe budget so CI can execute the
+    // bench end-to-end in seconds (see util::bench::smoke).
+    let n = smoke_scale(40_000, 6_000);
     let dim = 64;
     let k = 10;
-    let search_ef = 4096;
-    let batch = 64;
+    let search_ef = smoke_scale(4096, 512);
+    let batch = smoke_scale(64, 16);
     println!(
         "Figure 4b: sharded scatter-gather retrieval scaling \
          (corpus n={n}, d={dim}, K={k}, search_ef={search_ef}, batch={batch})\n"

@@ -19,6 +19,7 @@ use harmonia::retrieval::{IvfParams, ShardParams, ShardedIndex};
 use harmonia::sim::{run_point, SystemKind};
 use harmonia::spec::apps;
 use harmonia::stats::percentile::percentile;
+use harmonia::util::bench::smoke_scale;
 use harmonia::util::table::{f, Table};
 use harmonia::workload::queries::{QueryMix, ZipfQueryGen};
 use harmonia::workload::Corpus;
@@ -26,7 +27,11 @@ use harmonia::workload::Corpus;
 const DIM: usize = 64;
 const K: usize = 10;
 const SEARCH_EF: usize = 2048;
-const N_QUERIES: usize = 4000;
+/// Queries per cached sweep point (shrunk under `--smoke` so CI can
+/// execute the bench; see `util::bench::smoke`).
+fn n_queries() -> usize {
+    smoke_scale(4000, 800)
+}
 const POOL: usize = 1024;
 const REPEAT_FRAC: f64 = 0.8;
 
@@ -57,9 +62,9 @@ fn run_cached(
     });
     let mix = QueryMix { zipf_s, repeat_frac: REPEAT_FRAC, pool_size: POOL };
     let mut qg = ZipfQueryGen::new(corpus, mix, 0xF16_4C);
-    let mut lats = Vec::with_capacity(N_QUERIES);
+    let mut lats = Vec::with_capacity(n_queries());
     let mut exact_identical = true;
-    for t in 0..N_QUERIES {
+    for t in 0..n_queries() {
         let q = qg.next();
         let now = t as f64;
         let t0 = Instant::now();
@@ -103,11 +108,12 @@ fn run_cached(
 }
 
 fn main() {
-    let n = 20_000;
+    let n = smoke_scale(20_000, 5_000);
     println!(
         "Figure 4c: request-cache hit curve (corpus n={n}, d={DIM}, K={K}, \
          search_ef={SEARCH_EF}, pool={POOL}, repeat_frac={REPEAT_FRAC}, \
-         {N_QUERIES} queries)\n"
+         {} queries)\n",
+        n_queries()
     );
 
     let corpus = Corpus::generate(n, 64, 64, 0xF16_4C);
@@ -124,7 +130,7 @@ fn main() {
     // Uncached baseline: every query pays embed + scatter-gather.
     let mix = QueryMix { zipf_s: 1.1, repeat_frac: REPEAT_FRAC, pool_size: POOL };
     let mut qg = ZipfQueryGen::new(&corpus, mix, 0xF16_4C);
-    let mut base_lats: Vec<f64> = (0..N_QUERIES)
+    let mut base_lats: Vec<f64> = (0..n_queries())
         .map(|_| {
             let q = qg.next();
             let t0 = Instant::now();
@@ -191,7 +197,7 @@ fn main() {
         "end-to-end DES latency with cache-adjusted retrieval (V-RAG, 16 req/s)",
         &["app", "modeled hit", "p50 s", "p99 s", "throughput"],
     );
-    let plain = run_point(SystemKind::Harmonia, apps::vanilla_rag(), 16.0, 800, Some(2.0), 42);
+    let plain = run_point(SystemKind::Harmonia, apps::vanilla_rag(), 16.0, smoke_scale(800, 200), Some(2.0), 42);
     t3.row(&[
         "v-rag".into(),
         "0.000".into(),
@@ -202,7 +208,7 @@ fn main() {
     for zipf_s in [0.8, 1.1, 1.4] {
         let g = apps::cached_vanilla_rag(zipf_s, REPEAT_FRAC, 512, POOL);
         let h = g.node_by_name("retriever").unwrap().cache_hit_rate;
-        let r = run_point(SystemKind::Harmonia, g, 16.0, 800, Some(2.0), 42);
+        let r = run_point(SystemKind::Harmonia, g, 16.0, smoke_scale(800, 200), Some(2.0), 42);
         t3.row(&[
             format!("v-rag-cached s={zipf_s}"),
             f(h, 3),

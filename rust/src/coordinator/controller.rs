@@ -7,12 +7,19 @@
 //! and the controller's completion channel — the controller inspects
 //! state only where the program's control flow requires it (verdicts,
 //! classes).
+//!
+//! All scheduling policy — routing, admission, degradation, predicted
+//! slack — is delegated to the same [`crate::sched::ControlPlane`] the
+//! DES drives; here its clock is `util::clock::WallClock` and its tick
+//! runs from the message loop (`recv_timeout` keeps it firing while
+//! idle). This module keeps only the execution mechanics: worker
+//! channels, in-flight bookkeeping, and control-flow decoding.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -20,9 +27,20 @@ use crate::exec::components::{build_live_shared, spawn_for_kind};
 use crate::exec::messages::{Done, RagState, WorkItem};
 use crate::exec::worker::WorkerHandle;
 use crate::metrics::{Recorder, RunReport};
+use crate::profile::models::RequestFeatures;
+use crate::profile::profile_graph;
+use crate::sched::{ControlPlane, QueueDiscipline, SchedConfig};
 use crate::spec::graph::{ComponentKind, NodeId, PipelineGraph};
+use crate::util::clock::{Clock, WallClock};
 
-use super::router::{InstanceState, Router, RoutingPolicy};
+use super::router::{InstanceState, RoutingPolicy};
+
+/// Concurrency slots one live worker exposes to the router's load score
+/// (also the active/queued split point for its pending count).
+const WORKER_SLOTS: usize = 8;
+
+/// Seconds between control-plane ticks (overload ladder reassessment).
+const TICK_INTERVAL: f64 = 1.0;
 
 /// Live deployment configuration.
 #[derive(Clone, Debug)]
@@ -40,6 +58,10 @@ pub struct ControllerConfig {
     pub instances: Option<HashMap<String, usize>>,
     /// SLO deadline applied to every request (seconds).
     pub slo: Option<f64>,
+    /// Overload-control knobs (admission shedding, degradation ladder,
+    /// queue rekey) — `SchedConfig::default()` disables all of them, so
+    /// the stock deployment admits everything at full fidelity.
+    pub sched: SchedConfig,
 }
 
 impl ControllerConfig {
@@ -53,6 +75,7 @@ impl ControllerConfig {
             seed: 0,
             instances: None,
             slo: None,
+            sched: SchedConfig::default(),
         }
     }
 }
@@ -110,6 +133,9 @@ struct InflightReq {
     deadline: Option<f64>,
     hops: usize,
     current: NodeId,
+    /// Approximate request features feeding the slack predictor (live
+    /// queries carry no token counts; prompt bytes stand in).
+    features: RequestFeatures,
 }
 
 /// Deploy a pipeline graph as live workers + a controller thread.
@@ -126,7 +152,8 @@ pub fn deploy(graph: PipelineGraph, cfg: ControllerConfig) -> Result<ServingHand
         .context("building live shared state (corpus/index)")?,
     );
 
-    // Spawn workers per component.
+    // Spawn workers per component (each carries its node's degrade knob
+    // so it can shed fidelity when the shared overload cell says so).
     let mut workers: HashMap<NodeId, Vec<WorkerHandle>> = HashMap::new();
     for node in graph.work_nodes() {
         let n = cfg
@@ -136,7 +163,12 @@ pub fn deploy(graph: PipelineGraph, cfg: ControllerConfig) -> Result<ServingHand
             .unwrap_or_else(|| node.base_instances.max(1));
         let v: Vec<WorkerHandle> = (0..n)
             .map(|i| {
-                spawn_for_kind(format!("{}-{i}", node.name), &node.kind, shared.clone())
+                spawn_for_kind(
+                    format!("{}-{i}", node.name),
+                    &node.kind,
+                    node.degrade,
+                    shared.clone(),
+                )
             })
             .collect();
         workers.insert(node.id, v);
@@ -156,52 +188,97 @@ pub fn deploy(graph: PipelineGraph, cfg: ControllerConfig) -> Result<ServingHand
         });
     }
 
+    // The shared control plane: same policy object the DES drives, wired
+    // to the workers' overload cell + counters, ticked by the wall clock.
+    let prior = profile_graph(&graph, 200, cfg.seed ^ 0x5CED);
+    let plane = ControlPlane::new(
+        &graph,
+        &prior.mean_service,
+        RoutingPolicy::LoadStateAware,
+        QueueDiscipline::LeastSlack,
+        cfg.sched,
+        10.0,
+    )
+    .share(shared.degrade.clone(), shared.sched_counters.clone());
+
     let slo = cfg.slo;
     let cache = shared.cache.clone();
+    let k_docs = shared.k_docs;
+    let max_new_tokens = shared.max_new_tokens;
     let join = std::thread::Builder::new()
         .name("harmonia-controller".into())
-        .spawn(move || controller_loop(graph, workers, rx, done_tx, slo, cache))
+        .spawn(move || {
+            controller_loop(ControllerLoop {
+                graph,
+                workers,
+                rx,
+                done_tx,
+                slo,
+                cache,
+                plane,
+                k_docs,
+                max_new_tokens,
+            })
+        })
         .expect("spawn controller");
 
     Ok(ServingHandle { tx, join: Some(join) })
 }
 
-fn controller_loop(
+/// Everything the controller thread owns.
+struct ControllerLoop {
     graph: PipelineGraph,
     workers: HashMap<NodeId, Vec<WorkerHandle>>,
     rx: Receiver<Msg>,
     done_tx: Sender<Done>,
     slo: Option<f64>,
     cache: Option<Arc<crate::cache::QueryCache>>,
-) {
-    let mut router = Router::new(RoutingPolicy::LoadStateAware);
+    plane: ControlPlane,
+    k_docs: usize,
+    max_new_tokens: usize,
+}
+
+fn controller_loop(lp: ControllerLoop) {
+    let ControllerLoop {
+        graph,
+        workers,
+        rx,
+        done_tx,
+        slo,
+        cache,
+        mut plane,
+        k_docs,
+        max_new_tokens,
+    } = lp;
     let mut recorder = Recorder::new();
     let mut inflight: HashMap<u64, InflightReq> = HashMap::new();
     let mut next_req: u64 = 0;
-    let epoch = Instant::now();
+    let clock = WallClock::new();
+    let mut last_tick = 0.0f64;
     let mut rng = crate::util::rng::Rng::new(0x11FE);
 
+    let total_slots: usize = workers.values().map(|v| v.len() * WORKER_SLOTS).sum();
     let stateful_map: HashMap<NodeId, bool> =
         graph.nodes.iter().map(|n| (n.id, n.stateful)).collect();
     let dispatch = |req: u64,
                     node: NodeId,
                     state: RagState,
-                    router: &mut Router,
+                    plane: &mut ControlPlane,
                     workers: &HashMap<NodeId, Vec<WorkerHandle>>,
                     done_tx: &Sender<Done>| {
         let pool = &workers[&node];
         let states: Vec<InstanceState> = pool
             .iter()
             .map(|w| InstanceState {
-                active: w.pending().min(8),
-                queued: w.pending().saturating_sub(8),
-                slots: 8,
+                active: w.pending().min(WORKER_SLOTS),
+                queued: w.pending().saturating_sub(WORKER_SLOTS),
+                slots: WORKER_SLOTS,
                 expected_reentries: 0.0,
                 up: w.is_up(),
             })
             .collect();
         let stateful = stateful_map.get(&node).copied().unwrap_or(false);
-        let pick = router.route(req, node, stateful, &states);
+        let pick = plane.route(req, node, stateful, &states);
         let item = WorkItem {
             req,
             node,
@@ -212,17 +289,70 @@ fn controller_loop(
         let _ = pool[pick].submit(item);
     };
 
-    for msg in rx {
+    loop {
+        // The unified control tick, wall-clock driven. Live queues are
+        // worker channels (FIFO by construction), so the tick's rekey
+        // outcome has nothing to reorder here; reallocation needs worker
+        // spawn/drain and stays sim-only for now — hence `realloc: None`.
+        let now = clock.now();
+        if now - last_tick >= TICK_INTERVAL {
+            last_tick = now;
+            let pending: usize = workers.values().flatten().map(|w| w.pending()).sum();
+            let util = pending as f64 / total_slots.max(1) as f64;
+            let _ = plane.tick(now, util, None);
+        }
+
+        let msg = match rx.recv_timeout(Duration::from_millis(200)) {
+            Ok(m) => m,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
         match msg {
             Msg::Submit { query, resp } => {
                 let req = next_req;
                 next_req += 1;
-                recorder.on_arrival(epoch.elapsed().as_secs_f64());
+                let now = clock.now();
+                recorder.on_arrival(now);
                 let entry = graph
                     .successors(graph.source)
                     .next()
                     .expect("source successor")
                     .to;
+                // Live features: prompt bytes stand in for token counts;
+                // retrieval volume and generation budget come from the
+                // deployment, so the slack regressors see real signals.
+                let features = RequestFeatures {
+                    prompt_len: query.len().clamp(4, 127),
+                    gen_len: max_new_tokens,
+                    k_docs,
+                    complexity: 1,
+                };
+                if plane.admission_enabled() {
+                    let pool = &workers[&entry];
+                    // Queued work only (pending minus the slots actively
+                    // executing), matching the DES's node_load semantics
+                    // so one AdmissionConfig means the same thresholds on
+                    // both backends.
+                    let queued: usize = pool
+                        .iter()
+                        .map(|w| w.pending().saturating_sub(WORKER_SLOTS))
+                        .sum();
+                    let capacity = pool.len() * WORKER_SLOTS;
+                    let deadline = slo.map(|s| now + s);
+                    let decision =
+                        plane.admit(entry, &features, now, deadline, queued, capacity);
+                    if !decision.admitted() {
+                        recorder.on_shed();
+                        let _ = resp.send(LiveResponse {
+                            req,
+                            answer: Vec::new(),
+                            latency_secs: 0.0,
+                            hops: 0,
+                            error: Some(format!("shed by admission control: {decision:?}")),
+                        });
+                        continue;
+                    }
+                }
                 let state = RagState::new(&query);
                 inflight.insert(
                     req,
@@ -232,15 +362,17 @@ fn controller_loop(
                         deadline: slo,
                         hops: 0,
                         current: entry,
+                        features,
                     },
                 );
-                dispatch(req, entry, state, &mut router, &workers, &done_tx);
+                dispatch(req, entry, state, &mut plane, &workers, &done_tx);
             }
             Msg::Done(d) => {
                 let Some(fl) = inflight.get_mut(&d.req) else { continue };
                 fl.hops += 1;
                 let node_name = graph.node(d.node).name.clone();
                 recorder.on_execution(&node_name, d.service_secs, d.queue_secs);
+                let features = fl.features;
                 if let Some(err) = d.error {
                     let fl = inflight.remove(&d.req).unwrap();
                     let _ = fl.resp.send(LiveResponse {
@@ -250,14 +382,20 @@ fn controller_loop(
                         hops: fl.hops,
                         error: Some(err),
                     });
-                    router.release(d.req);
+                    plane.release(d.req);
                     continue;
                 }
+                // Successful completions only: an errored item reports
+                // service_secs ≈ 0 (worker init failure), and feeding that
+                // into the slack regressors would collapse predictions to
+                // zero exactly when admission control needs them.
+                plane.on_complete(d.node, d.service_secs);
+                plane.observe_service(d.node, &features, d.service_secs);
                 let next = decide_next(&graph, d.node, &d.state, &mut rng);
                 if next == graph.sink {
                     let fl = inflight.remove(&d.req).unwrap();
                     let latency = fl.started.elapsed().as_secs_f64();
-                    let now = epoch.elapsed().as_secs_f64();
+                    let now = clock.now();
                     recorder.on_completion(now - latency, now, fl.deadline.map(|s| now - latency + s));
                     let _ = fl.resp.send(LiveResponse {
                         req: d.req,
@@ -266,15 +404,18 @@ fn controller_loop(
                         hops: fl.hops,
                         error: None,
                     });
-                    router.release(d.req);
+                    plane.release(d.req);
                 } else {
                     fl.current = next;
-                    dispatch(d.req, next, d.state, &mut router, &workers, &done_tx);
+                    dispatch(d.req, next, d.state, &mut plane, &workers, &done_tx);
                 }
             }
             Msg::Report(tx) => {
                 if let Some(c) = &cache {
                     recorder.set_cache(c.snapshot());
+                }
+                if plane.cfg.enabled() {
+                    recorder.set_sched(plane.counters.snapshot());
                 }
                 let _ = tx.send(recorder.report());
             }

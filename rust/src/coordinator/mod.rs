@@ -10,9 +10,11 @@
 //! * [`router`] — load- **and state-aware** routing (§3.3.1): stateful
 //!   re-entries are pinned; predicted near-future load (outstanding
 //!   stateful iterations) is part of the routing score.
-//! * [`scheduler`] — deadline-aware EDF with *predicted slack* (§3.3.2):
-//!   online linear-regression models map upstream features to downstream
-//!   latencies; least-slack requests get priority.
+//! * `sched::queue` (re-exported here) — deadline-aware EDF with
+//!   *predicted slack* (§3.3.2): online linear-regression models map
+//!   upstream features to downstream latencies; least-slack requests get
+//!   priority. Lives in the shared [`crate::sched`] layer together with
+//!   admission control and graduated degradation.
 //! * [`autoscaler`] — periodic LP re-solve from telemetry (§3.3.1
 //!   "Resource Reallocation"), committed after two agreeing solutions.
 //! * [`streaming`] — the managed Streaming Object: chunk granularity is
@@ -23,12 +25,13 @@
 pub mod autoscaler;
 pub mod controller;
 pub mod router;
-pub mod scheduler;
 pub mod streaming;
 pub mod telemetry;
 
 pub use autoscaler::Autoscaler;
 pub use router::{InstanceState, Router, RoutingPolicy};
-pub use scheduler::{QueueDiscipline, SlackPredictor};
+// Queueing/scheduling moved into the shared `sched` layer; re-exported
+// here so runtime-layer callers keep one import surface.
+pub use crate::sched::queue::{QueueDiscipline, SlackPredictor};
 pub use streaming::{StreamPolicy, StreamingMode};
 pub use telemetry::Telemetry;

@@ -10,11 +10,13 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::cache::{CacheConfig, QueryCache};
+use crate::metrics::SchedCounters;
 use crate::retrieval::{IvfParams, SearchResult, ShardParams, ShardedIndex};
 use crate::runtime::classifier::Classifier;
 use crate::runtime::embedder::Embedder;
 use crate::runtime::generator::{GenRequest, Generator};
-use crate::spec::graph::ComponentKind;
+use crate::sched::degrade::{degraded_top_k, OverloadCell, OverloadLevel};
+use crate::spec::graph::{ComponentKind, DegradeKnob};
 use crate::workload::Corpus;
 
 use super::messages::WorkItem;
@@ -29,6 +31,13 @@ pub struct LiveShared {
     /// Request cache memoizing the embed→retrieve prefix (None = every
     /// query pays the full scatter-gather; see `cache::QueryCache`).
     pub cache: Option<Arc<QueryCache>>,
+    /// Shared overload level published by the controller's control-plane
+    /// tick; workers with a degrade knob poll it on their hot path
+    /// (`Normal` forever unless `sched::DegradePolicy` is enabled).
+    pub degrade: Arc<OverloadCell>,
+    /// Overload-control counters shared with the controller's plane
+    /// (workers report degraded visits here).
+    pub sched_counters: Arc<SchedCounters>,
     /// Epoch for the cache's explicit clock (TTL accounting).
     pub epoch: Instant,
     pub artifacts: PathBuf,
@@ -68,6 +77,9 @@ impl StageLogic for Box<dyn StageLogic> {
 struct RetrieverLogic {
     embedder: Embedder,
     shared: Arc<LiveShared>,
+    /// Degrade knob from the node spec (`ShrinkTopK` on retrieval
+    /// stages): under overload the scatter-gather fetches fewer docs.
+    knob: DegradeKnob,
 }
 
 /// Assemble the retrieval output (context bytes + doc ids) from a top-k
@@ -159,24 +171,34 @@ impl StageLogic for RetrieverLogic {
                 uniq.extend_from_slice(&search_idx);
                 rep_of.extend(0..search_idx.len());
             }
+            // Overload degradation (ShrinkTopK): fetch fewer docs while
+            // the shared cell reports overload. Degraded results are NOT
+            // written to the cache — a post-overload repeat must get the
+            // full-fidelity pass, not a memoized degraded one. Counted
+            // per request served degraded (one per residual miss), the
+            // same unit the DES and VerdictLogic use.
+            let level = self.shared.degrade.level();
+            let k = degraded_top_k(self.shared.k_docs, self.knob, level);
+            if k < self.shared.k_docs {
+                self.shared.sched_counters.on_degraded_n(search_idx.len() as u64);
+            }
             // Scatter across shards, gather merged top-k, repopulate the
             // cache. When every query missed and is distinct (always the
             // case with the cache disabled) the embeddings pass straight
             // through — no per-query clone on the uncached hot path.
             let all_hits = if uniq.len() == embs.len() {
-                self.shared.index.search_batch(&embs, self.shared.k_docs, self.shared.search_ef)
+                self.shared.index.search_batch(&embs, k, self.shared.search_ef)
             } else {
                 let residual: Vec<Vec<f32>> = uniq.iter().map(|&mi| embs[mi].clone()).collect();
-                self.shared
-                    .index
-                    .search_batch(&residual, self.shared.k_docs, self.shared.search_ef)
+                self.shared.index.search_batch(&residual, k, self.shared.search_ef)
             };
             for (j, &mi) in search_idx.iter().enumerate() {
                 let hits = &all_hits[rep_of[j]];
                 let it = &mut chunk[miss_idx[mi]];
-                // One cache write per distinct key (the representative).
+                // One cache write per distinct key (the representative),
+                // full-fidelity results only.
                 match self.shared.cache.as_ref() {
-                    Some(c) if uniq[rep_of[j]] == mi => {
+                    Some(c) if uniq[rep_of[j]] == mi && k == self.shared.k_docs => {
                         c.insert(&it.state.query, &embs[mi], hits, now)
                     }
                     _ => {}
@@ -237,10 +259,28 @@ impl StageLogic for GeneratorLogic {
 struct VerdictLogic {
     generator: Generator,
     judge_answer: bool,
+    /// `SkipHop` (grader: bypass the quality gate) or `CapIterations`
+    /// (critic: force-accept so the loop exits) under severe overload.
+    knob: DegradeKnob,
+    degrade: Arc<OverloadCell>,
+    sched_counters: Arc<SchedCounters>,
 }
 
 impl StageLogic for VerdictLogic {
     fn process_batch(&mut self, items: &mut [WorkItem]) -> Result<()> {
+        // Severe overload + a degradable verdict stage: pass every
+        // request through on the success path without touching the GPU.
+        // A skipped grader pretends the context was relevant; a capped
+        // critic accepts the current answer, exiting the rewrite loop.
+        let skip = matches!(self.knob, DegradeKnob::SkipHop | DegradeKnob::CapIterations)
+            && self.degrade.level() == OverloadLevel::Severe;
+        if skip {
+            for it in items.iter_mut() {
+                self.sched_counters.on_degraded();
+                it.state.verdict = Some(true);
+            }
+            return Ok(());
+        }
         for it in items.iter_mut() {
             let mut text = Vec::new();
             text.extend_from_slice(if self.judge_answer {
@@ -342,16 +382,18 @@ impl StageLogic for ClassifierLogic {
 
 /// Spawn a worker instance for a component kind. Engines are constructed
 /// inside the worker thread (cold start), mirroring §3.1's stateful
-/// actors.
+/// actors. `knob` is the node's degrade annotation; workers honor it
+/// against the shared overload cell.
 pub fn spawn_for_kind(
     name: String,
     kind: &ComponentKind,
+    knob: DegradeKnob,
     shared: Arc<LiveShared>,
 ) -> WorkerHandle {
     let dir = shared.artifacts.clone();
     match kind {
         ComponentKind::Retriever => spawn_worker(name, move || {
-            Ok(Box::new(RetrieverLogic { embedder: Embedder::new(&dir)?, shared })
+            Ok(Box::new(RetrieverLogic { embedder: Embedder::new(&dir)?, shared, knob })
                 as Box<dyn StageLogic>)
         }),
         ComponentKind::Generator => spawn_worker(name, move || {
@@ -359,12 +401,22 @@ pub fn spawn_for_kind(
                 as Box<dyn StageLogic>)
         }),
         ComponentKind::Grader => spawn_worker(name, move || {
-            Ok(Box::new(VerdictLogic { generator: Generator::new(&dir)?, judge_answer: false })
-                as Box<dyn StageLogic>)
+            Ok(Box::new(VerdictLogic {
+                generator: Generator::new(&dir)?,
+                judge_answer: false,
+                knob,
+                degrade: shared.degrade.clone(),
+                sched_counters: shared.sched_counters.clone(),
+            }) as Box<dyn StageLogic>)
         }),
         ComponentKind::Critic => spawn_worker(name, move || {
-            Ok(Box::new(VerdictLogic { generator: Generator::new(&dir)?, judge_answer: true })
-                as Box<dyn StageLogic>)
+            Ok(Box::new(VerdictLogic {
+                generator: Generator::new(&dir)?,
+                judge_answer: true,
+                knob,
+                degrade: shared.degrade.clone(),
+                sched_counters: shared.sched_counters.clone(),
+            }) as Box<dyn StageLogic>)
         }),
         ComponentKind::Rewriter => spawn_worker(name, move || {
             Ok(Box::new(RewriterLogic { generator: Generator::new(&dir)? }) as Box<dyn StageLogic>)
@@ -419,6 +471,8 @@ pub fn build_live_shared(
         corpus,
         index,
         cache: cache.map(|cfg| Arc::new(QueryCache::new(cfg))),
+        degrade: Arc::new(OverloadCell::new()),
+        sched_counters: Arc::new(SchedCounters::new()),
         epoch: Instant::now(),
         artifacts,
         k_docs: 4,

@@ -15,6 +15,11 @@
 //!   with load/state-aware routing, deadline-aware (EDF + predicted slack)
 //!   scheduling, telemetry-driven re-solving, and managed streaming with
 //!   load-dependent chunk granularity.
+//! * [`sched`] — the **scheduling layer** shared by the simulator and the
+//!   live controller: deadline-aware queueing (`PrioQueue`,
+//!   `SlackPredictor`), admission control (negative-slack shedding +
+//!   backpressure), graduated degradation (top-k shrink / hop skip /
+//!   iteration caps), unified behind `sched::ControlPlane`.
 //! * [`runtime`] + [`exec`] — the **live data plane**: AOT-compiled XLA
 //!   artifacts (JAX/Pallas, lowered at build time) executed via PJRT from
 //!   worker threads; Python never runs on the request path.
@@ -27,15 +32,14 @@
 //!   `profile::models::cache_service_factor`.
 //! * [`sim`] — a discrete-event **cluster simulator** that runs the same
 //!   policy code against calibrated latency models to reproduce the
-//!   paper-scale experiments (32 GPUs, 1024 req/s) on one machine.
-//! * [`baselines`] — LangChain-like (monolithic) and Haystack/Ray-like
-//!   (task-centric) serving baselines.
+//!   paper-scale experiments (32 GPUs, 1024 req/s) on one machine; the
+//!   LangChain-like and Haystack/Ray-like serving baselines live there as
+//!   `sim::SystemKind::{LangChain, Haystack}`.
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod alloc;
-pub mod baselines;
 pub mod cache;
 pub mod coordinator;
 pub mod exec;
@@ -44,6 +48,7 @@ pub mod metrics;
 pub mod profile;
 pub mod retrieval;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod spec;
 pub mod stats;

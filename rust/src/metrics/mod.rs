@@ -3,6 +3,8 @@
 
 pub mod cache;
 pub mod recorder;
+pub mod sched;
 
 pub use cache::{CacheCounters, CacheSnapshot};
 pub use recorder::{ComponentStats, Recorder, RunReport};
+pub use sched::{SchedCounters, SchedSnapshot};

@@ -4,6 +4,7 @@
 use std::collections::HashMap;
 
 use crate::metrics::cache::CacheSnapshot;
+use crate::metrics::sched::SchedSnapshot;
 use crate::stats::percentile::percentile;
 
 /// Aggregated per-component execution statistics.
@@ -41,11 +42,15 @@ pub struct Recorder {
     latencies: Vec<f64>,
     violations: u64,
     completed: u64,
+    /// Requests shed by admission control (never entered the pipeline).
+    shed: u64,
     first_arrival: Option<f64>,
     last_completion: f64,
     pub components: HashMap<String, ComponentStats>,
     /// Cache counters captured at the end of the run (None = no cache).
     cache: Option<CacheSnapshot>,
+    /// Overload-control counters (None = stock control plane).
+    sched: Option<SchedSnapshot>,
 }
 
 impl Recorder {
@@ -85,9 +90,21 @@ impl Recorder {
         self.completed
     }
 
+    /// Record a request shed at admission (counted separately from
+    /// completions: shed requests never produce a latency sample and
+    /// never count against the SLO violation rate).
+    pub fn on_shed(&mut self) {
+        self.shed += 1;
+    }
+
     /// Attach the run's cache counter snapshot (shows up in the report).
     pub fn set_cache(&mut self, snapshot: CacheSnapshot) {
         self.cache = Some(snapshot);
+    }
+
+    /// Attach the run's overload-control counter snapshot.
+    pub fn set_sched(&mut self, snapshot: SchedSnapshot) {
+        self.sched = Some(snapshot);
     }
 
     /// Finalize into a report.
@@ -109,6 +126,8 @@ impl Recorder {
             },
             components: self.components.clone(),
             cache: self.cache,
+            shed: self.shed,
+            sched: self.sched,
         }
     }
 }
@@ -128,6 +147,19 @@ pub struct RunReport {
     pub components: HashMap<String, ComponentStats>,
     /// Query-cache counters, if the run served through a cache.
     pub cache: Option<CacheSnapshot>,
+    /// Requests shed at admission (0 with the stock control plane).
+    pub shed: u64,
+    /// Overload-control counters, if any sched policy was enabled.
+    pub sched: Option<SchedSnapshot>,
+}
+
+impl RunReport {
+    /// Goodput: SLO-meeting completions per second over the active
+    /// horizon — the figure of merit under overload (raw throughput
+    /// rewards serving requests that already blew their deadline).
+    pub fn goodput(&self) -> f64 {
+        self.throughput * (1.0 - self.slo_violation_rate)
+    }
 }
 
 #[cfg(test)]
@@ -178,6 +210,26 @@ mod tests {
         assert_eq!(rep.completed, 0);
         assert_eq!(rep.throughput, 0.0);
         assert!(rep.cache.is_none());
+        assert_eq!(rep.shed, 0);
+        assert!(rep.sched.is_none());
+    }
+
+    #[test]
+    fn shed_and_sched_travel_into_report() {
+        let mut r = Recorder::new();
+        r.on_arrival(0.0);
+        r.on_shed();
+        r.on_shed();
+        r.on_completion(0.0, 1.0, Some(0.5)); // one violating completion
+        let snap = SchedSnapshot { admitted: 1, shed_slack: 2, ..Default::default() };
+        r.set_sched(snap);
+        let rep = r.report();
+        assert_eq!(rep.shed, 2);
+        assert_eq!(rep.completed, 1, "shed requests are not completions");
+        assert_eq!(rep.slo_violation_rate, 1.0, "violations counted over completions only");
+        assert_eq!(rep.sched, Some(snap));
+        // goodput = throughput × SLO-meeting fraction.
+        assert_eq!(rep.goodput(), 0.0);
     }
 
     #[test]

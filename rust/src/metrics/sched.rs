@@ -1,0 +1,124 @@
+//! Overload-control observability: admission / shedding / degradation
+//! counters shared by the live controller and the DES, plus the snapshot
+//! type embedded in [`crate::metrics::RunReport`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic counters updated on the admission/dispatch path (relaxed
+/// atomics: statistics, not synchronization — live workers and the
+/// controller thread update them concurrently).
+#[derive(Debug, Default)]
+pub struct SchedCounters {
+    /// Requests admitted into the pipeline.
+    pub admitted: AtomicU64,
+    /// Requests shed because predicted slack was already negative.
+    pub shed_slack: AtomicU64,
+    /// Requests shed by queue-depth backpressure.
+    pub shed_backpressure: AtomicU64,
+    /// Component visits served at reduced fidelity (top-k shrunk, hop
+    /// skipped, or loop iteration clamped).
+    pub degraded: AtomicU64,
+}
+
+impl SchedCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn on_admitted(&self) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn on_shed_slack(&self) {
+        self.shed_slack.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn on_shed_backpressure(&self) {
+        self.shed_backpressure.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn on_degraded(&self) {
+        self.degraded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count `n` degraded visits at once (batched stages).
+    #[inline]
+    pub fn on_degraded_n(&self, n: u64) {
+        self.degraded.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of the counters.
+    pub fn snapshot(&self) -> SchedSnapshot {
+        SchedSnapshot {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            shed_slack: self.shed_slack.load(Ordering::Relaxed),
+            shed_backpressure: self.shed_backpressure.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Frozen counter values; the overload-control row a run prints.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SchedSnapshot {
+    pub admitted: u64,
+    pub shed_slack: u64,
+    pub shed_backpressure: u64,
+    pub degraded: u64,
+}
+
+impl SchedSnapshot {
+    /// Total requests shed at admission.
+    pub fn shed(&self) -> u64 {
+        self.shed_slack + self.shed_backpressure
+    }
+
+    /// Total offered load that reached the admission gate.
+    pub fn offered(&self) -> u64 {
+        self.admitted + self.shed()
+    }
+
+    /// Fraction of offered requests shed; 0 when nothing was offered.
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.offered();
+        if offered == 0 {
+            0.0
+        } else {
+            self.shed() as f64 / offered as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_snapshot() {
+        let c = SchedCounters::new();
+        c.on_admitted();
+        c.on_admitted();
+        c.on_admitted();
+        c.on_shed_slack();
+        c.on_shed_backpressure();
+        c.on_degraded();
+        c.on_degraded_n(2);
+        let s = c.snapshot();
+        assert_eq!(s.admitted, 3);
+        assert_eq!(s.shed(), 2);
+        assert_eq!(s.offered(), 5);
+        assert!((s.shed_rate() - 0.4).abs() < 1e-12);
+        assert_eq!(s.degraded, 3);
+    }
+
+    #[test]
+    fn empty_snapshot_is_safe() {
+        let s = SchedSnapshot::default();
+        assert_eq!(s.shed_rate(), 0.0);
+        assert_eq!(s.offered(), 0);
+    }
+}

@@ -17,7 +17,8 @@
 //! profiler (`profiler.rs`) re-estimates α from whichever substrate it
 //! runs against, so policies never hardcode these values.
 
-use crate::spec::graph::ComponentKind;
+use crate::sched::degrade::OverloadLevel;
+use crate::spec::graph::{ComponentKind, DegradeKnob};
 use crate::util::rng::Rng;
 
 /// Per-request workload features, sampled at admission (workload layer)
@@ -224,6 +225,37 @@ pub fn zipf_hit_rate(zipf_s: f64, repeat_frac: f64, pool: usize, cache_entries: 
     (repeat_frac.clamp(0.0, 1.0) * covered).clamp(0.0, 1.0)
 }
 
+/// Cost of a skipped optional hop (grader/rerank bypassed at severe
+/// overload) relative to the full pass: the stage still receives and
+/// forwards the request (one dispatch + a constant-time pass-through
+/// verdict), but runs no model. Same order as a cache hit.
+pub const DEGRADE_SKIP_COST_FRAC: f64 = 0.05;
+
+/// Service-time multiplier for a component with degradation knob `knob`
+/// under overload `level` — the DES counterpart of what live workers do
+/// (shrink top-k / skip the hop). Calibrated against the latency models
+/// above:
+///
+/// * `ShrinkTopK`: retrieval-style stages are `base + per_doc·k`; halving
+///   k (Elevated) removes ~half the k-term → ≈0.75 of the mean at
+///   k ∈ [100, 300]; quartering (Severe) → ≈0.6.
+/// * `SkipHop`: full cost until `Severe`, then the pass-through cost.
+/// * `CapIterations`: per-visit cost is unchanged (the knob cuts the
+///   *number* of loop visits, applied at branch-sampling time).
+///
+/// Exactly 1.0 whenever `level == Normal` or `knob == None`, so runs
+/// with degradation disabled are bit-identical to pre-degradation runs.
+pub fn degrade_service_factor(knob: DegradeKnob, level: OverloadLevel) -> f64 {
+    match (knob, level) {
+        (DegradeKnob::None, _) | (_, OverloadLevel::Normal) => 1.0,
+        (DegradeKnob::ShrinkTopK, OverloadLevel::Elevated) => 0.75,
+        (DegradeKnob::ShrinkTopK, OverloadLevel::Severe) => 0.6,
+        (DegradeKnob::SkipHop, OverloadLevel::Elevated) => 1.0,
+        (DegradeKnob::SkipHop, OverloadLevel::Severe) => DEGRADE_SKIP_COST_FRAC,
+        (DegradeKnob::CapIterations, _) => 1.0,
+    }
+}
+
 /// GPU components serve several requests concurrently (continuous
 /// batching); effective concurrency per instance.
 pub fn instance_concurrency(kind: &ComponentKind) -> usize {
@@ -346,6 +378,33 @@ mod tests {
         assert_eq!(zipf_hit_rate(1.0, 0.8, 0, 64), 0.0);
         assert_eq!(zipf_hit_rate(1.0, 0.8, 1024, 0), 0.0);
         assert_eq!(zipf_hit_rate(1.0, 0.0, 1024, 64), 0.0);
+    }
+
+    #[test]
+    fn degrade_factor_identity_when_normal_or_unannotated() {
+        for knob in [
+            DegradeKnob::None,
+            DegradeKnob::ShrinkTopK,
+            DegradeKnob::SkipHop,
+            DegradeKnob::CapIterations,
+        ] {
+            assert_eq!(degrade_service_factor(knob, OverloadLevel::Normal), 1.0, "{knob:?}");
+        }
+        for level in [OverloadLevel::Normal, OverloadLevel::Elevated, OverloadLevel::Severe] {
+            assert_eq!(degrade_service_factor(DegradeKnob::None, level), 1.0, "{level:?}");
+        }
+        // The ladder is monotone: more overload, less work per visit.
+        let shrink = |l| degrade_service_factor(DegradeKnob::ShrinkTopK, l);
+        assert!(shrink(OverloadLevel::Severe) < shrink(OverloadLevel::Elevated));
+        assert!(shrink(OverloadLevel::Elevated) < shrink(OverloadLevel::Normal));
+        // SkipHop collapses to the pass-through cost only at Severe.
+        assert_eq!(degrade_service_factor(DegradeKnob::SkipHop, OverloadLevel::Elevated), 1.0);
+        assert_eq!(
+            degrade_service_factor(DegradeKnob::SkipHop, OverloadLevel::Severe),
+            DEGRADE_SKIP_COST_FRAC
+        );
+        // CapIterations never changes per-visit cost.
+        assert_eq!(degrade_service_factor(DegradeKnob::CapIterations, OverloadLevel::Severe), 1.0);
     }
 
     #[test]

@@ -1,0 +1,160 @@
+//! Admission control — the overload defense that acts *before* queueing.
+//!
+//! EDF reordering alone cannot save an SLO once the backlog exceeds the
+//! deadline budget: every queued request is already late, and serving
+//! them in a smarter order only chooses *which* requests violate.
+//! Harmonia-style admission makes the decision at arrival time instead:
+//! a request whose predicted slack is already negative when it enters the
+//! system (deadline − predicted service − predicted queue wait < 0) is
+//! shed immediately, and queue-depth backpressure bounds the backlog even
+//! for requests without deadlines. Shed requests cost one prediction
+//! instead of a full pipeline pass, so capacity is spent only on requests
+//! that can still meet their SLO — goodput instead of throughput.
+//!
+//! Everything here is pure arithmetic over plain state: no clocks, no
+//! channels. The caller (DES or live controller) supplies `now`, the
+//! predicted slack, and the queue picture; see [`crate::sched::plane`].
+
+/// Admission-control knobs. **Disabled by default** — the stock control
+/// plane admits everything, and golden traces replay unchanged.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    /// Master switch; `false` admits every request unconditionally.
+    pub enabled: bool,
+    /// Shed when predicted slack at admission falls below this (seconds).
+    /// 0.0 = shed exactly when the deadline is already unattainable.
+    pub min_slack: f64,
+    /// Queue-depth backpressure: shed when the entry component's queued
+    /// work exceeds `backpressure_depth ×` its concurrent capacity
+    /// (slots). Guards no-deadline traffic and caps worst-case backlog.
+    pub backpressure_depth: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { enabled: false, min_slack: 0.0, backpressure_depth: 4.0 }
+    }
+}
+
+/// Outcome of one admission decision.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AdmissionDecision {
+    Admit,
+    /// Predicted slack below `min_slack`: the deadline is unattainable.
+    ShedSlack { predicted_slack: f64 },
+    /// Entry queue above the backpressure threshold.
+    ShedBackpressure { queue_depth: usize },
+}
+
+impl AdmissionDecision {
+    pub fn admitted(&self) -> bool {
+        matches!(self, AdmissionDecision::Admit)
+    }
+}
+
+/// The admission policy object. Stateless beyond its config; counters
+/// live in [`crate::metrics::SchedCounters`] (attached by the plane).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdmissionController {
+    pub cfg: AdmissionConfig,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        AdmissionController { cfg }
+    }
+
+    /// Decide admission for one arriving request.
+    ///
+    /// * `predicted_slack` — deadline − now − predicted (service + queue
+    ///   wait); `None` when the request carries no deadline (then only
+    ///   backpressure applies).
+    /// * `queue_depth` / `capacity` — entry component's queued work and
+    ///   total concurrent slots.
+    ///
+    /// Invariant (pinned by the property test below): a request with
+    /// non-negative predicted slack and a queue below the backpressure
+    /// threshold is **always** admitted.
+    pub fn decide(
+        &self,
+        predicted_slack: Option<f64>,
+        queue_depth: usize,
+        capacity: usize,
+    ) -> AdmissionDecision {
+        if !self.cfg.enabled {
+            return AdmissionDecision::Admit;
+        }
+        if let Some(s) = predicted_slack {
+            if s < self.cfg.min_slack {
+                return AdmissionDecision::ShedSlack { predicted_slack: s };
+            }
+        }
+        let limit = self.cfg.backpressure_depth * capacity.max(1) as f64;
+        if queue_depth as f64 > limit {
+            return AdmissionDecision::ShedBackpressure { queue_depth };
+        }
+        AdmissionDecision::Admit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+
+    #[test]
+    fn disabled_admits_everything() {
+        let a = AdmissionController::default();
+        assert!(!a.cfg.enabled, "admission must default off");
+        // Hopeless slack and a huge backlog: still admitted when disabled.
+        assert_eq!(a.decide(Some(-100.0), 1_000_000, 1), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn sheds_negative_slack_and_deep_queues() {
+        let a = AdmissionController::new(AdmissionConfig {
+            enabled: true,
+            ..AdmissionConfig::default()
+        });
+        match a.decide(Some(-0.1), 0, 8) {
+            AdmissionDecision::ShedSlack { predicted_slack } => {
+                assert!((predicted_slack + 0.1).abs() < 1e-12)
+            }
+            other => panic!("expected ShedSlack, got {other:?}"),
+        }
+        // depth 33 > 4.0 × 8 slots.
+        match a.decide(None, 33, 8) {
+            AdmissionDecision::ShedBackpressure { queue_depth } => assert_eq!(queue_depth, 33),
+            other => panic!("expected ShedBackpressure, got {other:?}"),
+        }
+        assert_eq!(a.decide(Some(0.5), 32, 8), AdmissionDecision::Admit);
+    }
+
+    #[test]
+    fn never_sheds_healthy_requests_property() {
+        // The control-plane invariant: admission never sheds while
+        // predicted slack ≥ min_slack and the queue is below the
+        // backpressure threshold — whatever the config.
+        property("healthy requests always admitted", 500, |g| {
+            let cfg = AdmissionConfig {
+                enabled: true,
+                min_slack: g.f64(-1.0, 1.0),
+                backpressure_depth: g.f64(0.5, 16.0),
+            };
+            let a = AdmissionController::new(cfg);
+            let capacity = g.usize(1, 512);
+            let limit = (cfg.backpressure_depth * capacity as f64).floor().max(0.0) as usize;
+            let queue_depth = g.usize(0, limit);
+            let slack = if g.bool() {
+                Some(cfg.min_slack + g.f64(0.0, 10.0))
+            } else {
+                None // no deadline: slack rule cannot apply
+            };
+            assert_eq!(
+                a.decide(slack, queue_depth, capacity),
+                AdmissionDecision::Admit,
+                "healthy request shed: slack {slack:?}, depth {queue_depth}/{capacity}"
+            );
+        });
+    }
+}

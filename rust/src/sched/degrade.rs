@@ -1,0 +1,219 @@
+//! Graduated degradation — trading small quality deltas for large
+//! latency wins under overload (RAGO-style per-stage knobs).
+//!
+//! RAG pipelines have stage-local fidelity knobs that are invisible to a
+//! generic scheduler: retrieval top-k, optional rerank/grader hops, and
+//! refinement-loop iteration budgets. [`DegradePolicy`] watches cluster
+//! utilization and exposes a three-level overload ladder; components
+//! annotated with a [`DegradeKnob`] (see `spec::graph`) shed work
+//! accordingly — the DES through
+//! `profile::models::degrade_service_factor`, the live workers by
+//! shrinking top-k / skipping the hop outright.
+//!
+//! The current level lives in a shared atomic cell ([`OverloadCell`]) so
+//! live worker threads read it without locks, while the DES reads it
+//! synchronously from the policy. **Disabled by default**: the level is
+//! pinned at [`OverloadLevel::Normal`] and every factor is exactly 1.0,
+//! so golden traces replay bit-identically.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Arc;
+
+use crate::spec::graph::DegradeKnob;
+
+/// The overload ladder. Ordering is meaningful: higher = more degraded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum OverloadLevel {
+    /// Full fidelity (the only level when the policy is disabled).
+    #[default]
+    Normal = 0,
+    /// Utilization above `elevated_util`: shrink retrieval top-k.
+    Elevated = 1,
+    /// Utilization above `severe_util`: additionally skip optional hops
+    /// and cap refinement loops.
+    Severe = 2,
+}
+
+impl OverloadLevel {
+    fn from_u8(v: u8) -> OverloadLevel {
+        match v {
+            2 => OverloadLevel::Severe,
+            1 => OverloadLevel::Elevated,
+            _ => OverloadLevel::Normal,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OverloadLevel::Normal => "normal",
+            OverloadLevel::Elevated => "elevated",
+            OverloadLevel::Severe => "severe",
+        }
+    }
+}
+
+/// Degradation knobs. **Disabled by default.**
+#[derive(Clone, Copy, Debug)]
+pub struct DegradeConfig {
+    /// Master switch; `false` pins the level at `Normal`.
+    pub enabled: bool,
+    /// Utilization (queued + active work per concurrent slot, cluster
+    /// wide) above which the ladder moves to `Elevated`.
+    pub elevated_util: f64,
+    /// Utilization above which the ladder moves to `Severe`.
+    pub severe_util: f64,
+}
+
+impl Default for DegradeConfig {
+    fn default() -> Self {
+        DegradeConfig { enabled: false, elevated_util: 1.25, severe_util: 2.5 }
+    }
+}
+
+/// Shared, lock-free holder of the current overload level. Live worker
+/// threads poll it on their hot path (one relaxed atomic load); the
+/// controller's tick stores into it.
+#[derive(Debug, Default)]
+pub struct OverloadCell(AtomicU8);
+
+impl OverloadCell {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn level(&self) -> OverloadLevel {
+        OverloadLevel::from_u8(self.0.load(Ordering::Relaxed))
+    }
+
+    #[inline]
+    pub fn set(&self, level: OverloadLevel) {
+        self.0.store(level as u8, Ordering::Relaxed);
+    }
+}
+
+/// The degradation policy object: maps utilization to an overload level
+/// on each control tick and publishes it through the shared cell.
+#[derive(Clone, Debug)]
+pub struct DegradePolicy {
+    pub cfg: DegradeConfig,
+    cell: Arc<OverloadCell>,
+}
+
+impl Default for DegradePolicy {
+    fn default() -> Self {
+        DegradePolicy::new(DegradeConfig::default())
+    }
+}
+
+impl DegradePolicy {
+    pub fn new(cfg: DegradeConfig) -> Self {
+        DegradePolicy { cfg, cell: Arc::new(OverloadCell::new()) }
+    }
+
+    /// Build over an existing cell (the live path: workers hold the same
+    /// `Arc` and see level changes without any controller round-trip).
+    pub fn with_cell(cfg: DegradeConfig, cell: Arc<OverloadCell>) -> Self {
+        DegradePolicy { cfg, cell }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// The shared cell, for handing to live workers.
+    pub fn cell(&self) -> Arc<OverloadCell> {
+        self.cell.clone()
+    }
+
+    /// Current published level (`Normal` whenever disabled).
+    pub fn level(&self) -> OverloadLevel {
+        if !self.cfg.enabled {
+            return OverloadLevel::Normal;
+        }
+        self.cell.level()
+    }
+
+    /// Control-tick step: map utilization to a level and publish it.
+    pub fn assess(&mut self, utilization: f64) -> OverloadLevel {
+        let level = if !self.cfg.enabled {
+            OverloadLevel::Normal
+        } else if utilization >= self.cfg.severe_util {
+            OverloadLevel::Severe
+        } else if utilization >= self.cfg.elevated_util {
+            OverloadLevel::Elevated
+        } else {
+            OverloadLevel::Normal
+        };
+        self.cell.set(level);
+        level
+    }
+
+    /// Should a sampled back-edge re-entry be clamped (loop forced to
+    /// exit)? True only at `Severe` for `CapIterations` components.
+    pub fn cap_iterations(&self, knob: DegradeKnob) -> bool {
+        knob == DegradeKnob::CapIterations && self.level() == OverloadLevel::Severe
+    }
+}
+
+/// Effective retrieval top-k for a component under the given level:
+/// halves at `Elevated`, quarters at `Severe` (never below 1). Identity
+/// for every knob other than `ShrinkTopK`.
+pub fn degraded_top_k(k: usize, knob: DegradeKnob, level: OverloadLevel) -> usize {
+    if knob != DegradeKnob::ShrinkTopK {
+        return k;
+    }
+    match level {
+        OverloadLevel::Normal => k,
+        OverloadLevel::Elevated => (k / 2).max(1),
+        OverloadLevel::Severe => (k / 4).max(1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_policy_never_degrades() {
+        let mut p = DegradePolicy::default();
+        assert!(!p.enabled(), "degradation must default off");
+        assert_eq!(p.assess(100.0), OverloadLevel::Normal);
+        assert_eq!(p.level(), OverloadLevel::Normal);
+        assert!(!p.cap_iterations(DegradeKnob::CapIterations));
+    }
+
+    #[test]
+    fn ladder_follows_utilization() {
+        let cfg = DegradeConfig { enabled: true, ..DegradeConfig::default() };
+        let mut p = DegradePolicy::new(cfg);
+        assert_eq!(p.assess(0.5), OverloadLevel::Normal);
+        assert_eq!(p.assess(1.5), OverloadLevel::Elevated);
+        assert_eq!(p.assess(3.0), OverloadLevel::Severe);
+        assert!(p.cap_iterations(DegradeKnob::CapIterations));
+        assert!(!p.cap_iterations(DegradeKnob::ShrinkTopK));
+        // Recovery: the ladder steps back down.
+        assert_eq!(p.assess(0.2), OverloadLevel::Normal);
+    }
+
+    #[test]
+    fn cell_is_shared_with_workers() {
+        let cfg = DegradeConfig { enabled: true, ..DegradeConfig::default() };
+        let mut p = DegradePolicy::new(cfg);
+        let worker_view = p.cell();
+        assert_eq!(worker_view.level(), OverloadLevel::Normal);
+        p.assess(5.0);
+        assert_eq!(worker_view.level(), OverloadLevel::Severe);
+    }
+
+    #[test]
+    fn top_k_shrinks_with_level() {
+        assert_eq!(degraded_top_k(8, DegradeKnob::ShrinkTopK, OverloadLevel::Normal), 8);
+        assert_eq!(degraded_top_k(8, DegradeKnob::ShrinkTopK, OverloadLevel::Elevated), 4);
+        assert_eq!(degraded_top_k(8, DegradeKnob::ShrinkTopK, OverloadLevel::Severe), 2);
+        // Never below 1; other knobs untouched.
+        assert_eq!(degraded_top_k(1, DegradeKnob::ShrinkTopK, OverloadLevel::Severe), 1);
+        assert_eq!(degraded_top_k(8, DegradeKnob::SkipHop, OverloadLevel::Severe), 8);
+        assert_eq!(degraded_top_k(8, DegradeKnob::None, OverloadLevel::Severe), 8);
+    }
+}

@@ -1,0 +1,46 @@
+//! The **scheduling layer**: a clock-agnostic overload control plane
+//! shared by the discrete-event simulator and the live controller.
+//!
+//! Patchwork's third pillar is online scheduling that minimizes SLO
+//! violations through strategic prioritization — but queue reordering
+//! (EDF) is only half of an overload story. Once the backlog exceeds the
+//! deadline budget, *every* order loses; the remaining levers act before
+//! and around the queue:
+//!
+//! * [`queue`] — deadline-aware queueing: [`queue::SlackPredictor`]
+//!   (per-node online regression → predicted remaining time) and
+//!   [`queue::PrioQueue`], a binary heap on `(slack, fifo_seq)` with a
+//!   FIFO-stable tiebreak.
+//! * [`admission`] — admission control: shed requests whose predicted
+//!   slack is already negative at arrival, plus queue-depth backpressure
+//!   (Harmonia-style admission-time decisions).
+//! * [`degrade`] — graduated degradation: a utilization-driven overload
+//!   ladder that shrinks retrieval top-k, skips optional quality hops,
+//!   and caps refinement loops on components annotated with
+//!   `spec::DegradeKnob` (RAGO-style per-stage knobs).
+//! * [`plane`] — [`plane::ControlPlane`]: routing + slack + telemetry +
+//!   autoscaling + admission + degradation behind one API, with a
+//!   unified tick (admission ladder → rekey → autoscale). Every method
+//!   takes `now: f64` seconds, so the DES drives it with virtual time
+//!   and the live controller with `util::clock::WallClock`.
+//!
+//! **Defaults preserve history**: admission, degradation, and rekeying
+//! all ship disabled, and a default-configured plane reproduces the
+//! pre-refactor scheduler decisions bit-for-bit on deadline-carrying
+//! traces (`golden_trace.rs` pins this). One deliberate exception: the
+//! heap's FIFO tiebreak replaces the old linear scan's
+//! insertion-shuffled order among *exactly equal* keys — observable
+//! only under LeastSlack with no deadlines (every key 0.0), where the
+//! old order was an artifact of `swap_remove`, not a policy. The
+//! `fig11b_overload` bench sweeps the policy ladder (FIFO / EDF /
+//! EDF+admission / EDF+admission+degrade) across offered load.
+
+pub mod admission;
+pub mod degrade;
+pub mod plane;
+pub mod queue;
+
+pub use admission::{AdmissionConfig, AdmissionController, AdmissionDecision};
+pub use degrade::{degraded_top_k, DegradeConfig, DegradePolicy, OverloadCell, OverloadLevel};
+pub use plane::{ControlPlane, SchedConfig, TickOutcome};
+pub use queue::{PrioQueue, QueueDiscipline, SlackPredictor};

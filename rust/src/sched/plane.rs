@@ -1,0 +1,458 @@
+//! The unified control plane: one policy object both execution backends
+//! drive instead of reimplementing.
+//!
+//! [`ControlPlane`] bundles every per-request policy — routing, predicted
+//! slack, queue keys, admission, degradation — plus the periodic tick
+//! (admission ladder → queue rekey → autoscale). It is **clock-agnostic**:
+//! every method takes `now` in seconds from an arbitrary epoch, so the
+//! DES drives it with virtual time and the live controller with
+//! `util::clock::WallClock`. Neither backend holds policy logic anymore;
+//! `sim::simrun::SimWorld` and `coordinator::controller` keep only the
+//! execution mechanics (event wiring / worker channels) and delegate
+//! every decision here.
+//!
+//! Division of labor for the tick: the plane decides *whether* to rekey
+//! and *what* the new keys are ([`ControlPlane::slack_value`]); the
+//! caller owns the queues and applies the rekey mechanically (queues are
+//! execution state — the DES holds `PrioQueue`s, the live path holds
+//! worker channels that cannot reorder).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::coordinator::autoscaler::Autoscaler;
+use crate::coordinator::router::{InstanceState, Router, RoutingPolicy};
+use crate::coordinator::telemetry::Telemetry;
+use crate::metrics::SchedCounters;
+use crate::profile::models::{degrade_service_factor, RequestFeatures};
+use crate::profile::Profile;
+use crate::spec::graph::{DegradeKnob, NodeId, PipelineGraph, ResourceKind};
+
+use super::admission::{AdmissionController, AdmissionDecision};
+use super::degrade::{DegradePolicy, OverloadLevel};
+use super::queue::{QueueDiscipline, SlackPredictor};
+
+/// All overload-control knobs in one place. **Everything defaults off**:
+/// a default-configured plane admits every request, never degrades, and
+/// never rekeys — byte-for-byte the pre-refactor behavior, which is what
+/// keeps `golden_trace.rs` bit-identical.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SchedConfig {
+    pub admission: super::admission::AdmissionConfig,
+    pub degrade: super::degrade::DegradeConfig,
+    /// Re-key LeastSlack queues on the control tick (slack decays as
+    /// time passes; without rekey, EDF order is frozen at enqueue time).
+    pub rekey_on_tick: bool,
+}
+
+impl SchedConfig {
+    /// Every overload defense on (admission + degradation + rekey) with
+    /// default thresholds — the bench/test preset.
+    pub fn overload_defense() -> Self {
+        SchedConfig {
+            admission: super::admission::AdmissionConfig {
+                enabled: true,
+                ..Default::default()
+            },
+            degrade: super::degrade::DegradeConfig { enabled: true, ..Default::default() },
+            rekey_on_tick: true,
+        }
+    }
+
+    /// Is any non-default policy active (i.e. should the run attach a
+    /// sched section to its report)?
+    pub fn enabled(&self) -> bool {
+        self.admission.enabled || self.degrade.enabled || self.rekey_on_tick
+    }
+}
+
+/// What one control tick decided.
+#[derive(Clone, Debug)]
+pub struct TickOutcome {
+    /// Overload level published for this interval.
+    pub level: OverloadLevel,
+    /// Caller should rebuild its LeastSlack queues with fresh
+    /// [`ControlPlane::slack_value`] keys.
+    pub rekey: bool,
+    /// Committed reallocation plan (deployable units per node), if the
+    /// autoscaler's damping rule fired.
+    pub plan: Option<HashMap<NodeId, usize>>,
+}
+
+/// The shared scheduling control plane.
+pub struct ControlPlane {
+    pub cfg: SchedConfig,
+    pub router: Router,
+    pub slack: SlackPredictor,
+    pub telemetry: Telemetry,
+    pub autoscaler: Autoscaler,
+    pub admission: AdmissionController,
+    pub degrade: DegradePolicy,
+    pub discipline: QueueDiscipline,
+    /// Shared atomics so live workers can report degraded visits.
+    pub counters: Arc<SchedCounters>,
+}
+
+impl ControlPlane {
+    /// Build a plane over a pipeline's deploy-time priors.
+    /// `autoscale_interval` is in clock seconds (virtual or wall).
+    pub fn new(
+        graph: &PipelineGraph,
+        prior_mean_service: &HashMap<NodeId, f64>,
+        routing: RoutingPolicy,
+        discipline: QueueDiscipline,
+        cfg: SchedConfig,
+        autoscale_interval: f64,
+    ) -> ControlPlane {
+        ControlPlane {
+            router: Router::new(routing),
+            slack: SlackPredictor::new(graph, prior_mean_service),
+            telemetry: Telemetry::new(graph),
+            autoscaler: Autoscaler::new(autoscale_interval),
+            admission: AdmissionController::new(cfg.admission),
+            degrade: DegradePolicy::new(cfg.degrade),
+            discipline,
+            counters: Arc::new(SchedCounters::new()),
+            cfg,
+        }
+    }
+
+    /// Swap in externally shared state (live path: workers hold the same
+    /// degrade cell and counters the controller updates).
+    pub fn share(
+        mut self,
+        cell: Arc<super::degrade::OverloadCell>,
+        counters: Arc<SchedCounters>,
+    ) -> ControlPlane {
+        self.degrade = DegradePolicy::with_cell(self.cfg.degrade, cell);
+        self.counters = counters;
+        self
+    }
+
+    // ---- admission ---------------------------------------------------------
+
+    pub fn admission_enabled(&self) -> bool {
+        self.admission.cfg.enabled
+    }
+
+    /// Predicted slack at admission: deadline − now − predicted pipeline
+    /// service − predicted queue wait at the entry component. The wait
+    /// term is what makes admission bite under overload — by the time a
+    /// backlog is worth shedding over, queueing dominates service.
+    pub fn admission_slack(
+        &self,
+        entry: NodeId,
+        features: &RequestFeatures,
+        now: f64,
+        deadline: f64,
+        queue_depth: usize,
+        capacity: usize,
+    ) -> f64 {
+        let wait = queue_depth as f64 / capacity.max(1) as f64
+            * self.slack.predict_node(entry, features);
+        self.slack.slack(entry, features, now, deadline) - wait
+    }
+
+    /// Admission gate for one arriving request; updates the counters.
+    pub fn admit(
+        &mut self,
+        entry: NodeId,
+        features: &RequestFeatures,
+        now: f64,
+        deadline: Option<f64>,
+        queue_depth: usize,
+        capacity: usize,
+    ) -> AdmissionDecision {
+        let predicted = deadline
+            .map(|d| self.admission_slack(entry, features, now, d, queue_depth, capacity));
+        let decision = self.admission.decide(predicted, queue_depth, capacity);
+        match decision {
+            AdmissionDecision::Admit => self.counters.on_admitted(),
+            AdmissionDecision::ShedSlack { .. } => self.counters.on_shed_slack(),
+            AdmissionDecision::ShedBackpressure { .. } => self.counters.on_shed_backpressure(),
+        }
+        decision
+    }
+
+    // ---- per-dispatch policy ----------------------------------------------
+
+    /// Route a request to an instance of `node` (load/state-aware or the
+    /// configured baseline policy).
+    pub fn route(
+        &mut self,
+        req: u64,
+        node: NodeId,
+        stateful: bool,
+        states: &[InstanceState],
+    ) -> usize {
+        self.router.route(req, node, stateful, states)
+    }
+
+    /// Drop a completed request's stateful bindings.
+    pub fn release(&mut self, req: u64) {
+        self.router.release(req);
+    }
+
+    /// Priority key for enqueueing at `node`: predicted slack under
+    /// LeastSlack with a deadline, 0.0 otherwise (FIFO queues ignore it).
+    pub fn enqueue_key(
+        &self,
+        node: NodeId,
+        features: &RequestFeatures,
+        now: f64,
+        deadline: Option<f64>,
+    ) -> f64 {
+        match deadline {
+            Some(d) if self.discipline == QueueDiscipline::LeastSlack => {
+                self.slack.slack(node, features, now, d)
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// Raw slack for queue rekeying (no discipline gate — the caller only
+    /// rekeys when [`TickOutcome::rekey`] said to).
+    pub fn slack_value(
+        &self,
+        node: NodeId,
+        features: &RequestFeatures,
+        now: f64,
+        deadline: Option<f64>,
+    ) -> f64 {
+        match deadline {
+            Some(d) => self.slack.slack(node, features, now, d),
+            None => 0.0,
+        }
+    }
+
+    /// Record an observed (features → service) sample for the slack
+    /// predictor.
+    pub fn observe_service(&mut self, node: NodeId, features: &RequestFeatures, service: f64) {
+        self.slack.observe(node, features, service);
+    }
+
+    // ---- telemetry passthrough --------------------------------------------
+
+    pub fn on_enqueue(&mut self, node: NodeId) {
+        self.telemetry.on_enqueue(node);
+    }
+
+    pub fn on_complete(&mut self, node: NodeId, service: f64) {
+        self.telemetry.on_complete(node, service);
+    }
+
+    pub fn on_edge(&mut self, edge_idx: usize, node: NodeId) {
+        self.telemetry.on_edge(edge_idx, node);
+    }
+
+    // ---- degradation -------------------------------------------------------
+
+    pub fn degrade_enabled(&self) -> bool {
+        self.degrade.enabled()
+    }
+
+    /// Service-time multiplier for a visit to a component with `knob`
+    /// under the current overload level; counts degraded visits.
+    pub fn service_factor(&self, knob: DegradeKnob) -> f64 {
+        let f = degrade_service_factor(knob, self.degrade.level());
+        if f != 1.0 {
+            self.counters.on_degraded();
+        }
+        f
+    }
+
+    /// Should loop re-entry decisions at a `knob` component be clamped
+    /// to the exit branch right now? (Pure query — callers count an
+    /// [`SchedCounters::on_degraded`] only when a decision was actually
+    /// overridden.)
+    pub fn cap_iterations(&self, knob: DegradeKnob) -> bool {
+        self.degrade.cap_iterations(knob)
+    }
+
+    // ---- the unified tick --------------------------------------------------
+
+    /// One control-tick: (1) reassess the overload ladder from cluster
+    /// utilization, (2) decide whether queues must be rekeyed, (3) run
+    /// the telemetry-driven autoscaler when `realloc` inputs are given
+    /// (None = reallocation disabled or unavailable on this backend).
+    pub fn tick(
+        &mut self,
+        now: f64,
+        utilization: f64,
+        realloc: Option<(&PipelineGraph, &Profile, &[(ResourceKind, f64)])>,
+    ) -> TickOutcome {
+        let level = self.degrade.assess(utilization);
+        let rekey = self.cfg.rekey_on_tick && self.discipline == QueueDiscipline::LeastSlack;
+        let plan = match realloc {
+            Some((graph, prior, budgets)) => {
+                self.autoscaler
+                    .maybe_rescale(now, graph, &self.telemetry, prior, budgets)
+            }
+            None => None,
+        };
+        TickOutcome { level, rekey, plan }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{SimConfig, SimWorld, SystemKind};
+    use crate::spec::apps;
+    use crate::workload::TraceConfig;
+
+    fn plane(cfg: SchedConfig) -> ControlPlane {
+        let g = apps::vanilla_rag();
+        let priors: HashMap<NodeId, f64> = g.nodes.iter().map(|n| (n.id, 0.1)).collect();
+        ControlPlane::new(
+            &g,
+            &priors,
+            RoutingPolicy::LoadStateAware,
+            QueueDiscipline::LeastSlack,
+            cfg,
+            10.0,
+        )
+    }
+
+    fn feats() -> RequestFeatures {
+        RequestFeatures { prompt_len: 60, gen_len: 40, k_docs: 200, complexity: 1 }
+    }
+
+    #[test]
+    fn default_plane_is_dormant() {
+        let mut p = plane(SchedConfig::default());
+        assert!(!p.cfg.enabled());
+        let entry = apps::vanilla_rag().node_by_name("retriever").unwrap().id;
+        // Hopeless request: admitted anyway (admission off).
+        let d = p.admit(entry, &feats(), 0.0, Some(0.0), 10_000, 8);
+        assert!(d.admitted());
+        let out = p.tick(1.0, 50.0, None);
+        assert_eq!(out.level, OverloadLevel::Normal);
+        assert!(!out.rekey);
+        assert!(out.plan.is_none());
+        assert_eq!(p.service_factor(DegradeKnob::ShrinkTopK), 1.0);
+        assert_eq!(p.counters.snapshot().degraded, 0);
+    }
+
+    #[test]
+    fn admission_slack_includes_queue_wait() {
+        let p = plane(SchedConfig::overload_defense());
+        let entry = apps::vanilla_rag().node_by_name("retriever").unwrap().id;
+        let f = feats();
+        let empty = p.admission_slack(entry, &f, 0.0, 2.0, 0, 8);
+        let backed_up = p.admission_slack(entry, &f, 0.0, 2.0, 800, 8);
+        assert!(empty > 0.0, "light load must leave positive slack, got {empty}");
+        assert!(
+            backed_up < empty - 1.0,
+            "a 100-deep-per-slot queue must crush slack: {backed_up} vs {empty}"
+        );
+    }
+
+    #[test]
+    fn overloaded_plane_sheds_and_counts() {
+        let mut p = plane(SchedConfig::overload_defense());
+        let entry = apps::vanilla_rag().node_by_name("retriever").unwrap().id;
+        let f = feats();
+        assert!(p.admit(entry, &f, 0.0, Some(2.0), 0, 8).admitted());
+        // Deep backlog: slack goes negative long before backpressure.
+        let d = p.admit(entry, &f, 0.0, Some(2.0), 5_000, 8);
+        assert!(matches!(d, AdmissionDecision::ShedSlack { .. }), "{d:?}");
+        // No deadline: only backpressure applies.
+        let d = p.admit(entry, &f, 0.0, None, 5_000, 8);
+        assert!(matches!(d, AdmissionDecision::ShedBackpressure { .. }), "{d:?}");
+        let snap = p.counters.snapshot();
+        assert_eq!(snap.admitted, 1);
+        assert_eq!(snap.shed_slack, 1);
+        assert_eq!(snap.shed_backpressure, 1);
+        assert!((snap.shed_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tick_publishes_ladder_and_requests_rekey() {
+        let mut p = plane(SchedConfig::overload_defense());
+        let out = p.tick(1.0, 3.0, None);
+        assert_eq!(out.level, OverloadLevel::Severe);
+        assert!(out.rekey);
+        assert!(p.service_factor(DegradeKnob::SkipHop) < 1.0);
+        assert!(p.cap_iterations(DegradeKnob::CapIterations));
+        // Recovery.
+        let out = p.tick(2.0, 0.1, None);
+        assert_eq!(out.level, OverloadLevel::Normal);
+        assert_eq!(p.service_factor(DegradeKnob::SkipHop), 1.0);
+    }
+
+    // ---- fixed-seed DES regression ----------------------------------------
+
+    /// ~2× the retriever-bound capacity of V-RAG on the paper testbed
+    /// (the LP places ~9 retriever instances × 8 slots / ~0.1 s ≈ 730/s).
+    const OVERLOAD_RATE: f64 = 1440.0;
+    const OVERLOAD_SEED: u64 = 0xA11;
+
+    fn overload_cfg(sched: SchedConfig) -> SimConfig {
+        let trace = TraceConfig {
+            rate: OVERLOAD_RATE,
+            n: 4000,
+            slo: Some(2.0),
+            ..TraceConfig::default()
+        };
+        let mut cfg = SimConfig::new(SystemKind::Harmonia, trace, OVERLOAD_SEED);
+        cfg.sched = sched;
+        cfg
+    }
+
+    #[test]
+    fn admission_and_degradation_cut_slo_violations_at_2x_overload() {
+        // Plain EDF at 2× capacity: the backlog grows without bound, so a
+        // large fraction of completions blow the 2 s SLO.
+        let edf = SimWorld::simulate(apps::vanilla_rag(), overload_cfg(SchedConfig::default()));
+        assert_eq!(edf.report.completed, 4000);
+        assert_eq!(edf.report.shed, 0);
+        assert!(
+            edf.report.slo_violation_rate > 0.15,
+            "2x overload should hurt plain EDF, rate {}",
+            edf.report.slo_violation_rate
+        );
+
+        // EDF + admission + degradation: shed hopeless requests at the
+        // door, shrink per-request work under the ladder — the survivors
+        // overwhelmingly meet the SLO.
+        let defended = SimWorld::simulate(
+            apps::vanilla_rag(),
+            overload_cfg(SchedConfig::overload_defense()),
+        );
+        assert!(
+            defended.report.slo_violation_rate < edf.report.slo_violation_rate,
+            "defense must strictly reduce violations: {} vs {}",
+            defended.report.slo_violation_rate,
+            edf.report.slo_violation_rate
+        );
+        assert!(defended.report.shed > 0, "2x overload must shed something");
+        let snap = defended.report.sched.expect("defended run reports sched counters");
+        assert_eq!(snap.shed(), defended.report.shed);
+        assert_eq!(
+            snap.offered(),
+            4000,
+            "every request passes the admission gate exactly once"
+        );
+        // Degradation engaged at some point during the burst.
+        assert!(snap.degraded > 0, "overload should trigger the degrade ladder");
+    }
+
+    #[test]
+    fn overload_regression_is_deterministic() {
+        let a = SimWorld::simulate(
+            apps::vanilla_rag(),
+            overload_cfg(SchedConfig::overload_defense()),
+        );
+        let b = SimWorld::simulate(
+            apps::vanilla_rag(),
+            overload_cfg(SchedConfig::overload_defense()),
+        );
+        assert_eq!(a.report.completed, b.report.completed);
+        assert_eq!(a.report.shed, b.report.shed);
+        assert_eq!(
+            a.report.slo_violation_rate.to_bits(),
+            b.report.slo_violation_rate.to_bits()
+        );
+    }
+}

@@ -1,4 +1,4 @@
-//! Deadline-aware scheduling with predicted slack (§3.3.2).
+//! Deadline-aware queueing with predicted slack (§3.3.2).
 //!
 //! The controller maintains one online linear-regression model per
 //! pipeline node mapping request features (prompt/generation lengths,
@@ -7,7 +7,15 @@
 //! weighted by expected remaining visits (from the graph's branch
 //! structure). Slack = deadline − now − predicted remaining; queues pop
 //! least-slack-first (EDF). Baselines use FIFO.
+//!
+//! [`PrioQueue`] is a binary heap keyed on `(key, fifo_seq)` — O(log n)
+//! push/pop with a FIFO-stable tiebreak (equal keys pop in insertion
+//! order), replacing the earlier O(n) linear-scan pop. [`PrioQueue::rekey`]
+//! rebuilds the heap under fresh keys; the control plane uses it on its
+//! tick because slack decays as time passes.
 
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
 use std::collections::HashMap;
 
 use crate::profile::models::RequestFeatures;
@@ -105,62 +113,93 @@ fn visits_from(graph: &PipelineGraph, start: NodeId) -> Vec<f64> {
     v
 }
 
-/// A priority queue entry: (request id, slack). Generic queue helper used
-/// by the sim's per-instance queues.
+/// One heap entry; min-ordered on `(key, seq)` so equal-key entries pop
+/// in insertion order (FIFO-stable tiebreak).
+#[derive(Clone, Debug)]
+struct HeapEntry<T> {
+    key: f64,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for HeapEntry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key.total_cmp(&other.key) == CmpOrdering::Equal && self.seq == other.seq
+    }
+}
+
+impl<T> Eq for HeapEntry<T> {}
+
+impl<T> Ord for HeapEntry<T> {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        // `BinaryHeap` is a max-heap; reverse both fields so `pop()`
+        // yields the minimum (key, seq).
+        other
+            .key
+            .total_cmp(&self.key)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl<T> PartialOrd for HeapEntry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// A priority queue of request work items keyed by slack (or enqueue
+/// order under FIFO). Binary heap: O(log n) push/pop vs the previous
+/// linear-scan pop, with FIFO-stable ordering on equal keys.
 #[derive(Clone, Debug)]
 pub struct PrioQueue<T> {
-    items: Vec<(f64, T)>,
+    heap: BinaryHeap<HeapEntry<T>>,
     discipline: QueueDiscipline,
     fifo_seq: u64,
 }
 
 impl<T> PrioQueue<T> {
     pub fn new(discipline: QueueDiscipline) -> Self {
-        PrioQueue { items: Vec::new(), discipline, fifo_seq: 0 }
+        PrioQueue { heap: BinaryHeap::new(), discipline, fifo_seq: 0 }
     }
 
     pub fn len(&self) -> usize {
-        self.items.len()
+        self.heap.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.items.is_empty()
+        self.heap.is_empty()
     }
 
     /// Push with a priority key (slack; ignored under FIFO).
     pub fn push(&mut self, key: f64, item: T) {
+        self.fifo_seq += 1;
         let key = match self.discipline {
-            QueueDiscipline::Fifo => {
-                self.fifo_seq += 1;
-                self.fifo_seq as f64
-            }
+            QueueDiscipline::Fifo => self.fifo_seq as f64,
             QueueDiscipline::LeastSlack => key,
         };
-        self.items.push((key, item));
+        self.heap.push(HeapEntry { key, seq: self.fifo_seq, item });
     }
 
     /// Pop the minimum-key item (least slack / earliest enqueue).
     pub fn pop(&mut self) -> Option<T> {
-        if self.items.is_empty() {
-            return None;
-        }
-        let mut best = 0;
-        for i in 1..self.items.len() {
-            if self.items[i].0 < self.items[best].0 {
-                best = i;
-            }
-        }
-        Some(self.items.swap_remove(best).1)
+        self.heap.pop().map(|e| e.item)
     }
 
-    /// Re-key all entries (slack decays as time passes; the sim re-keys on
-    /// pop instead, but the live controller uses this on its control tick).
+    /// Re-key all entries (slack decays as time passes; the control
+    /// plane's tick calls this so queued work is re-prioritized under the
+    /// current clock). Rebuilds the heap; FIFO queues are untouched.
     pub fn rekey(&mut self, mut f: impl FnMut(&T) -> f64) {
-        if self.discipline == QueueDiscipline::LeastSlack {
-            for (k, item) in self.items.iter_mut() {
-                *k = f(item);
-            }
+        if self.discipline != QueueDiscipline::LeastSlack {
+            return;
         }
+        let entries: Vec<HeapEntry<T>> = self.heap.drain().collect();
+        self.heap = entries
+            .into_iter()
+            .map(|mut e| {
+                e.key = f(&e.item);
+                e
+            })
+            .collect();
     }
 }
 
@@ -244,6 +283,35 @@ mod tests {
     }
 
     #[test]
+    fn equal_keys_pop_in_fifo_order() {
+        // The heap's tiebreak: equal slack keys drain in insertion order
+        // (no starvation/reordering among equally urgent requests).
+        let mut q = PrioQueue::new(QueueDiscipline::LeastSlack);
+        for i in 0..16u64 {
+            q.push(0.0, i);
+        }
+        let drained: Vec<u64> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(drained, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn heap_pops_min_over_many_random_keys() {
+        let mut rng = crate::util::rng::Rng::new(42);
+        let mut q = PrioQueue::new(QueueDiscipline::LeastSlack);
+        let mut keys = Vec::new();
+        for i in 0..500usize {
+            let k = rng.uniform(-10.0, 10.0);
+            keys.push(k);
+            q.push(k, i);
+        }
+        let mut prev = f64::NEG_INFINITY;
+        while let Some(i) = q.pop() {
+            assert!(keys[i] >= prev, "heap order violated: {} after {prev}", keys[i]);
+            prev = keys[i];
+        }
+    }
+
+    #[test]
     fn rekey_reorders() {
         let mut q = PrioQueue::new(QueueDiscipline::LeastSlack);
         q.push(1.0, 10u64);
@@ -251,5 +319,18 @@ mod tests {
         // After rekey, item 20 becomes most urgent.
         q.rekey(|&item| if item == 20 { 0.0 } else { 5.0 });
         assert_eq!(q.pop(), Some(20));
+    }
+
+    #[test]
+    fn rekey_preserves_fifo_tiebreak() {
+        let mut q = PrioQueue::new(QueueDiscipline::LeastSlack);
+        q.push(3.0, 1u64);
+        q.push(2.0, 2u64);
+        q.push(1.0, 3u64);
+        // Collapse every key to the same value: insertion order must win.
+        q.rekey(|_| 0.0);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
     }
 }

@@ -3,7 +3,10 @@
 //! Reproduces the paper's 4×8-A100 experiments on one machine by driving
 //! the real coordinator policy code over calibrated latency models:
 //! [`des`] provides the event core, [`cluster`] the machines/placement,
-//! [`simrun`] the serving world (Harmonia + both baselines).
+//! [`simrun`] the serving world. The serving **baselines** also live in
+//! [`simrun`]: `SystemKind::LangChain` (monolithic whole-pipeline
+//! replicas) and `SystemKind::Haystack` (task-centric, idle-first, FIFO)
+//! — there is no separate baselines module.
 
 pub mod cluster;
 pub mod des;

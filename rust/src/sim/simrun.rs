@@ -1,26 +1,27 @@
 //! The serving simulation: one pipeline + one system (Harmonia or a
 //! baseline) + one trace → a [`SimResult`].
 //!
-//! The simulator drives the *actual* coordinator policy code (`Router`,
-//! `SlackPredictor`, `PrioQueue`, `Autoscaler`, `StreamPolicy`) against a
-//! virtual cluster whose component service times come from the calibrated
+//! The simulator drives the *actual* shared control plane
+//! ([`crate::sched::ControlPlane`]: routing, predicted slack, admission,
+//! degradation, autoscaling — plus `StreamPolicy`) against a virtual
+//! cluster whose component service times come from the calibrated
 //! latency models — so the paper-scale experiments measure the same
 //! policies a live deployment runs, at 32-GPU/1000-req scale on one box.
+//! `SimWorld` itself holds only execution state (event queue, instances,
+//! queues); every scheduling decision is delegated to the plane.
 
 use std::collections::{HashMap, HashSet};
 use std::time::Instant;
 
 use crate::alloc::{AllocationPlan, FlowProblem};
-use crate::coordinator::router::{InstanceState, Router, RoutingPolicy};
-use crate::coordinator::scheduler::{PrioQueue, QueueDiscipline, SlackPredictor};
+use crate::coordinator::router::{InstanceState, RoutingPolicy};
 use crate::coordinator::streaming::{StreamPolicy, StreamingMode, CHUNK_OVERHEAD};
-use crate::coordinator::telemetry::Telemetry;
-use crate::coordinator::Autoscaler;
 use crate::metrics::{CacheCounters, Recorder, RunReport};
 use crate::profile::models::{
     concurrency_slowdown, instance_concurrency, LatencyModel, CACHE_HIT_COST_FRAC,
 };
 use crate::profile::{profile_graph, Profile};
+use crate::sched::{ControlPlane, PrioQueue, QueueDiscipline, SchedConfig};
 use crate::spec::graph::{NodeId, PipelineGraph};
 use crate::util::rng::Rng;
 use crate::workload::TraceConfig;
@@ -91,6 +92,10 @@ pub struct SimConfig {
     pub cold_start: f64,
     /// Hard stop (simulated seconds).
     pub max_sim_time: f64,
+    /// Overload-control knobs (admission / degradation / rekey). All off
+    /// by default: the stock plane admits everything and golden traces
+    /// replay bit-identically.
+    pub sched: SchedConfig,
 }
 
 impl SimConfig {
@@ -108,6 +113,7 @@ impl SimConfig {
             controller_overhead: 2.0e-3,
             cold_start: 2.0,
             max_sim_time: 3600.0,
+            sched: SchedConfig::default(),
         }
     }
 }
@@ -167,18 +173,17 @@ struct SimReq {
     done: bool,
 }
 
-/// The simulation world.
+/// The simulation world. Execution state only — policy lives in `plane`.
 pub struct SimWorld {
     cfg: SimConfig,
     graph: PipelineGraph,
     q: EventQueue<Ev>,
     reqs: Vec<SimReq>,
     instances: HashMap<NodeId, Vec<SimInstance>>,
-    router: Router,
-    discipline: QueueDiscipline,
-    slack: SlackPredictor,
-    telemetry: Telemetry,
-    autoscaler: Autoscaler,
+    /// The shared scheduling control plane (routing, slack, admission,
+    /// degradation, telemetry, autoscaling) — the same object the live
+    /// controller drives, here ticked by the virtual clock.
+    plane: ControlPlane,
     prior: Profile,
     recorder: Recorder,
     cluster: Cluster,
@@ -197,6 +202,8 @@ pub struct SimWorld {
     decisions: u64,
     monolithic: bool,
     completed: usize,
+    /// Requests shed at admission (terminal, like completion).
+    shed: usize,
     /// Modeled query-cache hits/misses (components with
     /// `cache_hit_rate > 0`); surfaces in `RunReport::cache`.
     cache_counters: CacheCounters,
@@ -281,12 +288,16 @@ impl SimWorld {
             QueueDiscipline::Fifo
         };
 
-        let mut world = SimWorld {
-            slack: SlackPredictor::new(&graph, &prior.mean_service),
-            telemetry: Telemetry::new(&graph),
-            autoscaler: Autoscaler::new(10.0),
-            router: Router::new(routing),
+        let plane = ControlPlane::new(
+            &graph,
+            &prior.mean_service,
+            routing,
             discipline,
+            cfg.sched,
+            10.0,
+        );
+        let mut world = SimWorld {
+            plane,
             instances: HashMap::new(),
             q: EventQueue::new(),
             reqs,
@@ -300,6 +311,7 @@ impl SimWorld {
             decisions: 0,
             monolithic,
             completed: 0,
+            shed: 0,
             cache_counters: CacheCounters::new(),
             prior,
             graph,
@@ -325,7 +337,7 @@ impl SimWorld {
                 replicas.push(SimInstance {
                     slots: 4, // concurrent requests inside one process
                     active: 0,
-                    queue: PrioQueue::new(self.discipline),
+                    queue: PrioQueue::new(self.plane.discipline),
                     up: true,
                     colocated: false,
                     expected_reentries: 0.0,
@@ -364,7 +376,7 @@ impl SimWorld {
         SimInstance {
             slots: instance_concurrency(&spec.kind),
             active: 0,
-            queue: PrioQueue::new(self.discipline),
+            queue: PrioQueue::new(self.plane.discipline),
             up: true,
             colocated: placement.map(|p| p.colocated).unwrap_or(false),
             expected_reentries: 0.0,
@@ -387,10 +399,17 @@ impl SimWorld {
                     self.recorder.on_arrival(now);
                     let entry =
                         if self.monolithic { self.graph.source } else { self.first_node() };
-                    self.q.schedule_in(
-                        self.cfg.controller_overhead,
-                        Ev::Dispatch { req: i, node: entry, earliest_finish: 0.0, stream_chunks: 0.0 },
-                    );
+                    if self.admit_arrival(i, entry, now) {
+                        self.q.schedule_in(
+                            self.cfg.controller_overhead,
+                            Ev::Dispatch {
+                                req: i,
+                                node: entry,
+                                earliest_finish: 0.0,
+                                stream_chunks: 0.0,
+                            },
+                        );
+                    }
                 }
                 Ev::Dispatch { req, node, earliest_finish, stream_chunks } => {
                     self.on_dispatch(req, node, earliest_finish, stream_chunks)
@@ -400,7 +419,7 @@ impl SimWorld {
                 }
                 Ev::ControlTick => {
                     self.on_control_tick();
-                    if self.completed < self.reqs.len() {
+                    if self.completed + self.shed < self.reqs.len() {
                         self.q.schedule_in(1.0, Ev::ControlTick);
                     }
                 }
@@ -408,13 +427,16 @@ impl SimWorld {
                     self.on_instance_up(node, inst);
                 }
             }
-            if self.completed == self.reqs.len() {
+            if self.completed + self.shed == self.reqs.len() {
                 break;
             }
         }
         let cache_snap = self.cache_counters.snapshot();
         if cache_snap.lookups() > 0 {
             self.recorder.set_cache(cache_snap);
+        }
+        if self.cfg.sched.enabled() {
+            self.recorder.set_sched(self.plane.counters.snapshot());
         }
         let final_instances = self
             .instances
@@ -431,9 +453,52 @@ impl SimWorld {
                 0.0
             },
             controller_decisions: self.decisions,
-            lp_solve_secs: self.autoscaler.solve_times.clone(),
-            reallocations: self.autoscaler.commits.len(),
+            lp_solve_secs: self.plane.autoscaler.solve_times.clone(),
+            reallocations: self.plane.autoscaler.commits.len(),
             final_instances,
+        }
+    }
+
+    /// Admission gate for one arrival; true = admitted. The decision is
+    /// entirely the plane's — this only collects the queue picture and
+    /// books the shed. With admission disabled (the default) no plane
+    /// call happens at all, so the pre-admission event stream is
+    /// untouched.
+    fn admit_arrival(&mut self, req: usize, entry: NodeId, now: f64) -> bool {
+        if self.monolithic
+            || self.cfg.system != SystemKind::Harmonia
+            || !self.plane.admission_enabled()
+        {
+            return true;
+        }
+        let t0 = Instant::now();
+        let (queued, capacity) = self.node_load(entry);
+        let features = self.reqs[req].features;
+        let deadline = self.reqs[req].deadline;
+        let decision = self.plane.admit(entry, &features, now, deadline, queued, capacity);
+        self.decision_time += t0.elapsed().as_secs_f64();
+        self.decisions += 1;
+        if decision.admitted() {
+            return true;
+        }
+        // Shed: terminal for the request, no latency sample recorded.
+        self.reqs[req].done = true;
+        self.shed += 1;
+        self.recorder.on_shed();
+        false
+    }
+
+    /// Queued work and concurrent capacity of one component (all
+    /// instances + the central queue) — the admission gate's inputs.
+    fn node_load(&self, node: NodeId) -> (usize, usize) {
+        let central = self.node_queues.get(&node).map_or(0, |q| q.len());
+        match self.instances.get(&node) {
+            Some(v) => {
+                let queued: usize = v.iter().map(|i| i.queue.len()).sum::<usize>() + central;
+                let capacity: usize = v.iter().filter(|i| i.up).map(|i| i.slots).sum();
+                (queued, capacity)
+            }
+            None => (central, 0),
         }
     }
 
@@ -469,17 +534,14 @@ impl SimWorld {
                 up: i.up,
             })
             .collect();
-        let pick = self.router.route(req as u64, node, spec_stateful, &states);
-        let slack_key = match self.reqs[req].deadline {
-            Some(d) if self.discipline == QueueDiscipline::LeastSlack => {
-                self.slack.slack(node, &self.reqs[req].features, now, d)
-            }
-            _ => 0.0,
-        };
+        let pick = self.plane.route(req as u64, node, spec_stateful, &states);
+        let slack_key =
+            self.plane
+                .enqueue_key(node, &self.reqs[req].features, now, self.reqs[req].deadline);
         self.decision_time += t0.elapsed().as_secs_f64();
         self.decisions += 1;
 
-        self.telemetry.on_enqueue(node);
+        self.plane.on_enqueue(node);
         let item = QueuedItem { req, enqueued_at: now, earliest_finish, stream_chunks };
         let inst = &mut self.instances.get_mut(&node).unwrap()[pick];
         if inst.up && inst.active < inst.slots {
@@ -490,7 +552,7 @@ impl SimWorld {
             inst.queue.push(slack_key, item);
         } else {
             // Central component queue: any instance of `node` may pull it.
-            let d = self.discipline;
+            let d = self.plane.discipline;
             self.node_queues
                 .entry(node)
                 .or_insert_with(|| PrioQueue::new(d))
@@ -517,6 +579,13 @@ impl SimWorld {
         if self.draw_cache_hit(req, spec.cache_hit_rate) {
             t *= CACHE_HIT_COST_FRAC;
         }
+        // Overload degradation: visits to annotated components shrink
+        // under the plane's ladder (top-k shrink / hop skip). No rng is
+        // consumed and the factor is exactly 1.0 when the policy is off,
+        // so default traces replay bit-identically.
+        if self.plane.degrade_enabled() {
+            t *= self.plane.service_factor(spec.degrade);
+        }
         t *= concurrency_slowdown(active);
         if colocated {
             t *= COLOCATION_SLOWDOWN;
@@ -526,7 +595,7 @@ impl SimWorld {
         t += item.stream_chunks * crate::coordinator::streaming::CHUNK_PREEMPT;
         let queue_wait = now - item.enqueued_at;
         self.recorder.on_execution(&spec.name, t, queue_wait);
-        self.slack.observe(node, &features, t);
+        self.plane.observe_service(node, &features, t);
 
         let finish = (now + t).max(item.earliest_finish);
         self.q.schedule(finish, Ev::Finish { req, node, inst: pick, service: t });
@@ -563,7 +632,7 @@ impl SimWorld {
         if self.monolithic {
             return self.monolith_finish(req, inst);
         }
-        self.telemetry.on_complete(node, service);
+        self.plane.on_complete(node, service);
         // Free the slot; pull next queued item: bound (stateful) work
         // first, then the central component queue.
         let next_item = {
@@ -611,8 +680,36 @@ impl SimWorld {
         debug_assert!(!edges.is_empty(), "work node must have successors");
         let weights: Vec<f64> = edges.iter().map(|e| e.1).collect();
         let pick = self.reqs[req].rng.weighted(&weights);
-        let (idx, _, to, back) = edges[pick];
-        self.telemetry.on_edge(idx, node);
+        let (mut idx, _, mut to, mut back) = edges[pick];
+        // Degrade ladder, iteration capping: at severe overload a
+        // CapIterations component (critic-style loop gate) takes its exit
+        // branch — the edge toward the sink, else its best forward edge —
+        // instead of re-entering the refinement loop. The rng draw above
+        // always happens, so enabling the policy shifts no other
+        // request's random stream.
+        if self.plane.degrade_enabled()
+            && self.plane.cap_iterations(self.graph.node(node).degrade)
+        {
+            let exit = edges
+                .iter()
+                .find(|e| e.2 == self.graph.sink)
+                .or_else(|| {
+                    edges
+                        .iter()
+                        .filter(|e| !e.3)
+                        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                })
+                .copied();
+            if let Some((eidx, _, eto, eback)) = exit {
+                if eidx != idx {
+                    self.plane.counters.on_degraded();
+                    idx = eidx;
+                    to = eto;
+                    back = eback;
+                }
+            }
+        }
+        self.plane.on_edge(idx, node);
         (to, back)
     }
 
@@ -625,7 +722,7 @@ impl SimWorld {
         r.done = true;
         self.completed += 1;
         self.recorder.on_completion(r.arrival, now, r.deadline);
-        self.router.release(req as u64);
+        self.plane.release(req as u64);
     }
 
     /// Draw whether this visit is served by the modeled request cache
@@ -678,7 +775,7 @@ impl SimWorld {
                 up: i.up,
             })
             .collect();
-        let pick = self.router.route(req as u64, self.graph.source, false, &states);
+        let pick = self.plane.route(req as u64, self.graph.source, false, &states);
         self.decision_time += t0.elapsed().as_secs_f64();
         self.decisions += 1;
         let item = QueuedItem { req, enqueued_at: now, earliest_finish: 0.0, stream_chunks: 0.0 };
@@ -749,22 +846,67 @@ impl SimWorld {
         // Refresh expected re-entries for state-aware routing.
         let node_ids: Vec<NodeId> = self.instances.keys().copied().collect();
         for id in &node_ids {
-            let bound = self.router.bindings_for(*id) as f64;
+            let bound = self.plane.router.bindings_for(*id) as f64;
             let v = self.instances.get_mut(id).unwrap();
             let n = v.len().max(1) as f64;
             for i in v.iter_mut() {
                 i.expected_reentries = bound / n;
             }
         }
-        if !self.cfg.ablation.realloc {
-            return;
-        }
+        // The unified tick: overload ladder → rekey → autoscale.
         let budgets = Cluster::paper_testbed().budgets();
-        if let Some(plan) =
-            self.autoscaler
-                .maybe_rescale(now, &self.graph, &self.telemetry, &self.prior, &budgets)
-        {
+        let util = self.global_utilization();
+        let outcome = if self.cfg.ablation.realloc {
+            self.plane
+                .tick(now, util, Some((&self.graph, &self.prior, &budgets)))
+        } else {
+            self.plane.tick(now, util, None)
+        };
+        if outcome.rekey {
+            self.rekey_queues(now);
+        }
+        if let Some(plan) = outcome.plan {
             self.apply_plan(plan);
+        }
+    }
+
+    /// Cluster-wide (queued + active) work per concurrent slot — the
+    /// overload ladder's input signal.
+    fn global_utilization(&self) -> f64 {
+        let mut load = 0usize;
+        let mut cap = 0usize;
+        for (node, v) in &self.instances {
+            load += v.iter().map(|i| i.active + i.queue.len()).sum::<usize>();
+            load += self.node_queues.get(node).map_or(0, |q| q.len());
+            cap += v.iter().filter(|i| i.up).map(|i| i.slots).sum::<usize>();
+        }
+        if cap == 0 {
+            return 0.0;
+        }
+        load as f64 / cap as f64
+    }
+
+    /// Rebuild every LeastSlack queue under fresh slack keys (slack
+    /// decays with the clock; the plane's tick asked for this). The key
+    /// function is the plane's — this is mechanical application only.
+    fn rekey_queues(&mut self, now: f64) {
+        let reqs = &self.reqs;
+        let plane = &self.plane;
+        for (node, q) in self.node_queues.iter_mut() {
+            let node = *node;
+            q.rekey(|item| {
+                let r = &reqs[item.req];
+                plane.slack_value(node, &r.features, now, r.deadline)
+            });
+        }
+        for (node, v) in self.instances.iter_mut() {
+            let node = *node;
+            for inst in v.iter_mut() {
+                inst.queue.rekey(|item| {
+                    let r = &reqs[item.req];
+                    plane.slack_value(node, &r.features, now, r.deadline)
+                });
+            }
         }
     }
 

@@ -13,7 +13,7 @@
 //! (retrievers: 8 CPU + 112 GiB RAM; LLM components: 1 GPU).
 
 use super::builder::PipelineBuilder;
-use super::graph::{ComponentKind, PipelineGraph, ResourceKind};
+use super::graph::{ComponentKind, DegradeKnob, PipelineGraph, ResourceKind};
 
 const RETRIEVER_RES: [(ResourceKind, f64); 2] =
     [(ResourceKind::Cpu, 8.0), (ResourceKind::Ram, 112.0)];
@@ -38,6 +38,7 @@ pub fn vanilla_rag() -> PipelineGraph {
     let retr = b
         .component("retriever", ComponentKind::Retriever)
         .resources(&RETRIEVER_RES)
+        .degrade(DegradeKnob::ShrinkTopK)
         .streamable(true)
         .add();
     let gen = b
@@ -73,6 +74,7 @@ pub fn sharded_vanilla_rag(n_shards: usize) -> PipelineGraph {
         .component("retriever", ComponentKind::Retriever)
         .resources(&shard_res)
         .shards(n_shards)
+        .degrade(DegradeKnob::ShrinkTopK)
         .streamable(true)
         .add();
     let gen = b
@@ -108,6 +110,7 @@ pub fn cached_vanilla_rag(
         .component("retriever", ComponentKind::Retriever)
         .resources(&RETRIEVER_RES)
         .cache_hit_rate(hit)
+        .degrade(DegradeKnob::ShrinkTopK)
         .streamable(true)
         .add();
     let gen = b
@@ -128,6 +131,7 @@ pub fn corrective_rag() -> PipelineGraph {
     let retr = b
         .component("retriever", ComponentKind::Retriever)
         .resources(&RETRIEVER_RES)
+        .degrade(DegradeKnob::ShrinkTopK)
         .streamable(true)
         .add();
     let grader = b
@@ -135,6 +139,7 @@ pub fn corrective_rag() -> PipelineGraph {
         .resources(&GPU_RES)
         .base_instances(2) // Fig. 7: @harmonia.make(base_instances=2)
         .stateful(true)
+        .degrade(DegradeKnob::SkipHop)
         .add();
     let rewriter = b
         .component("rewriter", ComponentKind::Rewriter)
@@ -165,6 +170,7 @@ pub fn self_rag() -> PipelineGraph {
     let retr = b
         .component("retriever", ComponentKind::Retriever)
         .resources(&RETRIEVER_RES)
+        .degrade(DegradeKnob::ShrinkTopK)
         .streamable(true)
         .add();
     let gen = b
@@ -176,6 +182,7 @@ pub fn self_rag() -> PipelineGraph {
     let critic = b
         .component("critic", ComponentKind::Critic)
         .resources(&GPU_RES)
+        .degrade(DegradeKnob::CapIterations)
         .add();
     let rewriter = b
         .component("rewriter", ComponentKind::Rewriter)
@@ -200,6 +207,7 @@ pub fn adaptive_rag() -> PipelineGraph {
     let retr = b
         .component("retriever", ComponentKind::Retriever)
         .resources(&RETRIEVER_RES)
+        .degrade(DegradeKnob::ShrinkTopK)
         .streamable(true)
         .add();
     let gen = b
@@ -212,6 +220,7 @@ pub fn adaptive_rag() -> PipelineGraph {
     let iretr = b
         .component("iter_retriever", ComponentKind::Retriever)
         .resources(&RETRIEVER_RES)
+        .degrade(DegradeKnob::ShrinkTopK)
         .add();
     let igen = b
         .component("iter_generator", ComponentKind::Generator)
@@ -221,6 +230,7 @@ pub fn adaptive_rag() -> PipelineGraph {
     let icritic = b
         .component("iter_critic", ComponentKind::Critic)
         .resources(&GPU_RES)
+        .degrade(DegradeKnob::CapIterations)
         .add();
 
     b.edge_from_source(cls, 1.0);
@@ -346,6 +356,25 @@ mod tests {
         let cold = cached_vanilla_rag(1.2, 0.0, 1024, 4096);
         assert_eq!(cold.node_by_name("retriever").unwrap().cache_hit_rate, 0.0);
         assert!(by_name("v-rag-cached").is_some());
+    }
+
+    #[test]
+    fn degrade_knobs_annotated() {
+        // Every retrieval stage can shrink top-k; C-RAG's grader is an
+        // optional quality hop; the recursive critics cap their loops.
+        // Generators are never degraded — answers must always be produced.
+        let v = vanilla_rag();
+        assert_eq!(v.node_by_name("retriever").unwrap().degrade, DegradeKnob::ShrinkTopK);
+        assert_eq!(v.node_by_name("generator").unwrap().degrade, DegradeKnob::None);
+        let c = corrective_rag();
+        assert_eq!(c.node_by_name("grader").unwrap().degrade, DegradeKnob::SkipHop);
+        let s = self_rag();
+        assert_eq!(s.node_by_name("critic").unwrap().degrade, DegradeKnob::CapIterations);
+        let a = adaptive_rag();
+        assert_eq!(
+            a.node_by_name("iter_critic").unwrap().degrade,
+            DegradeKnob::CapIterations
+        );
     }
 
     #[test]

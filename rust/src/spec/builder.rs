@@ -21,7 +21,8 @@
 //! ```
 
 use super::graph::{
-    ComponentKind, EdgeSpec, NodeId, NodeSpec, PipelineGraph, ResourceKind, ValidationError,
+    ComponentKind, DegradeKnob, EdgeSpec, NodeId, NodeSpec, PipelineGraph, ResourceKind,
+    ValidationError,
 };
 
 /// Fluent per-component configuration (the `@harmonia.make(...)` decorator
@@ -59,6 +60,14 @@ impl<'a> ComponentBuilder<'a> {
     /// workload skew with `profile::models::zipf_hit_rate`.
     pub fn cache_hit_rate(mut self, h: f64) -> Self {
         self.spec.cache_hit_rate = h;
+        self
+    }
+
+    /// Declare which overload-degradation knob this component exposes
+    /// (default: [`DegradeKnob::None`], never degraded). Acted on only
+    /// when the control plane's `sched::DegradePolicy` is enabled.
+    pub fn degrade(mut self, knob: DegradeKnob) -> Self {
+        self.spec.degrade = knob;
         self
     }
 
@@ -114,6 +123,7 @@ impl PipelineBuilder {
             base_instances: 0,
             shards: 1,
             cache_hit_rate: 0.0,
+            degrade: DegradeKnob::None,
             resources: vec![],
             alpha: vec![],
             gamma: 1.0,
@@ -154,6 +164,7 @@ impl PipelineBuilder {
             base_instances: 1,
             shards: 1,
             cache_hit_rate: 0.0,
+            degrade: DegradeKnob::None,
             resources: default_res,
             alpha: vec![],
             gamma: 1.0,
@@ -250,6 +261,7 @@ mod tests {
             .base_instances(3)
             .shards(2)
             .cache_hit_rate(0.4)
+            .degrade(DegradeKnob::CapIterations)
             .gamma(1.5)
             .streamable(true)
             .add();
@@ -261,6 +273,7 @@ mod tests {
         assert_eq!(n.base_instances, 3);
         assert_eq!(n.shards, 2);
         assert_eq!(n.cache_hit_rate, 0.4);
+        assert_eq!(n.degrade, DegradeKnob::CapIterations);
         assert_eq!(n.gamma, 1.5);
         assert!(n.streamable);
     }

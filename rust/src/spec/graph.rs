@@ -92,6 +92,34 @@ impl ComponentKind {
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct NodeId(pub usize);
 
+/// Which overload-degradation knob this component exposes, if any
+/// (declared per node, like `stateful` or `shards`; acted on only when
+/// the runtime's `sched::DegradePolicy` is enabled and the cluster is
+/// overloaded — the default control plane never degrades).
+///
+/// Each knob trades a small quality delta for a large latency win under
+/// burst load (RAGO-style per-stage degradation):
+///
+/// * [`DegradeKnob::ShrinkTopK`] — retrieval-style stages fetch fewer
+///   documents (top-k shrinks with the overload level).
+/// * [`DegradeKnob::SkipHop`] — optional quality hops (reranker, grader)
+///   are bypassed entirely at severe overload; the pipeline takes the
+///   success branch as if the hop had passed.
+/// * [`DegradeKnob::CapIterations`] — recursive refinement loops
+///   (critic → rewrite) exit after the current pass at severe overload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum DegradeKnob {
+    /// Never degraded (the default for every component).
+    #[default]
+    None,
+    /// Shrink retrieval top-k under overload.
+    ShrinkTopK,
+    /// Skip this optional quality hop at severe overload.
+    SkipHop,
+    /// Stop re-entering the refinement loop at severe overload.
+    CapIterations,
+}
+
 /// One pipeline component plus its declarative constraints (§3.1
 /// "Specifying workflow constraints").
 #[derive(Clone, Debug)]
@@ -116,6 +144,9 @@ pub struct NodeSpec {
     /// `profile::models::cache_service_factor`, so the LP priors and the
     /// autoscaler see cache-adjusted α.
     pub cache_hit_rate: f64,
+    /// Overload-degradation knob (see [`DegradeKnob`]); `None` for
+    /// components that must always run at full fidelity.
+    pub degrade: DegradeKnob,
     /// Per-instance resource demand (r constraint granularity).
     pub resources: Vec<(ResourceKind, f64)>,
     /// Throughput coefficient α_{i,k}: requests/sec per unit of resource k
@@ -438,6 +469,7 @@ mod tests {
             base_instances: 1,
             shards: 1,
             cache_hit_rate: 0.0,
+            degrade: DegradeKnob::None,
             resources: vec![(ResourceKind::Cpu, 1.0)],
             alpha: vec![(ResourceKind::Cpu, 1.0)],
             gamma: 1.0,

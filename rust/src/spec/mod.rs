@@ -14,5 +14,6 @@ pub mod graph;
 
 pub use builder::PipelineBuilder;
 pub use graph::{
-    ComponentKind, EdgeSpec, NodeId, NodeSpec, PipelineGraph, ResourceKind, ValidationError,
+    ComponentKind, DegradeKnob, EdgeSpec, NodeId, NodeSpec, PipelineGraph, ResourceKind,
+    ValidationError,
 };

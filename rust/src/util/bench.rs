@@ -2,8 +2,30 @@
 //! the offline crate cache). Provides warmup, repeated timed runs, and
 //! summary statistics; used by the `benches/*.rs` targets
 //! (`harness = false`).
+//!
+//! Benches accept a `--smoke` flag (`cargo bench --bench <name> -- --smoke`,
+//! or `BENCH_SMOKE=1`): [`smoke`] reports it and [`smoke_scale`] shrinks
+//! sweep sizes, so CI can *execute* every bench binary in seconds instead
+//! of only compiling it (`make bench-smoke`).
 
 use std::time::Instant;
+
+/// True when the bench binary was invoked with `--smoke` (or with
+/// `BENCH_SMOKE=1` in the environment): a quick-iteration run that keeps
+/// the code paths but shrinks the workload.
+pub fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE").is_ok_and(|v| v == "1")
+}
+
+/// `full` normally, `quick` under `--smoke`.
+pub fn smoke_scale(full: usize, quick: usize) -> usize {
+    if smoke() {
+        quick
+    } else {
+        full
+    }
+}
 
 /// Result of a timed benchmark.
 #[derive(Clone, Debug)]

@@ -75,6 +75,31 @@ fn golden_vrag_summary_stats_within_bands() {
     );
     // No cache in the golden pipeline: the report must not grow one.
     assert!(rep.cache.is_none());
+    // The overload control plane defaults off: nothing shed, no sched
+    // section — the golden workload is untouched by the sched refactor.
+    assert_eq!(rep.shed, 0);
+    assert!(rep.sched.is_none());
+}
+
+#[test]
+fn golden_run_identical_under_explicitly_default_sched_config() {
+    // The sched knobs must be *inert* at their defaults, not merely
+    // "mostly off": constructing the config by hand and via Default must
+    // produce bit-identical runs (guards against a future knob that
+    // defaults hot).
+    let a = golden_run();
+    let trace = TraceConfig { rate: RATE, n: N, slo: Some(SLO), ..TraceConfig::default() };
+    let mut cfg = SimConfig::new(SystemKind::Harmonia, trace, SEED);
+    cfg.sched = harmonia::sched::SchedConfig {
+        admission: harmonia::sched::AdmissionConfig::default(),
+        degrade: harmonia::sched::DegradeConfig::default(),
+        rekey_on_tick: false,
+    };
+    let b = SimWorld::simulate(apps::vanilla_rag(), cfg);
+    assert_eq!(a.report.completed, b.report.completed);
+    assert_eq!(a.report.mean_latency.to_bits(), b.report.mean_latency.to_bits());
+    assert_eq!(a.report.p99.to_bits(), b.report.p99.to_bits());
+    assert_eq!(a.report.throughput.to_bits(), b.report.throughput.to_bits());
 }
 
 #[test]
