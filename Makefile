@@ -6,7 +6,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test test-fast lint fmt clippy verify artifacts bench bench-shards bench-cache bench-overload bench-smoke clean
+.PHONY: all build test test-fast lint fmt clippy verify artifacts bench bench-shards bench-cache bench-overload bench-batching bench-smoke clean
 
 all: build
 
@@ -52,6 +52,10 @@ bench-cache:
 bench-overload:
 	$(CARGO) bench --bench fig11b_overload
 
+# The continuous-batching bench only (fig06).
+bench-batching:
+	$(CARGO) bench --bench fig06_continuous_batching
+
 # Quick-iteration bench pass (CI): actually *execute* the bench binaries
 # with `--smoke`-shrunk workloads (see util::bench::smoke) instead of
 # only compiling them. Keeps the paper-figure harnesses from bit-rotting.
@@ -59,6 +63,7 @@ bench-smoke:
 	$(CARGO) bench --bench fig11b_overload -- --smoke
 	$(CARGO) bench --bench fig04b_shard_scaling -- --smoke
 	$(CARGO) bench --bench fig04c_cache_hit_curve -- --smoke
+	$(CARGO) bench --bench fig06_continuous_batching -- --smoke
 
 clean:
 	$(CARGO) clean

@@ -250,15 +250,33 @@ impl QueryCache {
 
         if self.cfg.exact_capacity > 0 {
             if shard.exact.len() >= exact_cap && !shard.exact.contains_key(&key) {
-                // LRU eviction: drop the least recently used key.
-                if let Some(victim) = shard
+                // Expired entries go first: they pin capacity but can
+                // never serve again, and evicting by recency alone can
+                // keep a recently-probed-but-expired entry alive while a
+                // live one gets dropped. Counted as stale (they died of
+                // TTL), not as capacity evictions.
+                let ttl = self.cfg.ttl;
+                let expired: Vec<Vec<u8>> = shard
                     .exact
                     .iter()
-                    .min_by_key(|(_, e)| e.last_used)
+                    .filter(|(_, e)| now - e.inserted_at > ttl)
                     .map(|(k, _)| k.clone())
-                {
-                    shard.exact.remove(&victim);
-                    self.counters.on_eviction();
+                    .collect();
+                for k in expired {
+                    shard.exact.remove(&k);
+                    self.counters.on_stale();
+                }
+                // Still full of *live* entries: LRU eviction.
+                if shard.exact.len() >= exact_cap {
+                    if let Some(victim) = shard
+                        .exact
+                        .iter()
+                        .min_by_key(|(_, e)| e.last_used)
+                        .map(|(k, _)| k.clone())
+                    {
+                        shard.exact.remove(&victim);
+                        self.counters.on_eviction();
+                    }
                 }
             }
             shard.exact.insert(
@@ -269,6 +287,15 @@ impl QueryCache {
         }
 
         if self.cfg.semantic_capacity > 0 {
+            if shard.semantic.len() >= sem_cap {
+                // Same expired-first rule as the exact tier.
+                let ttl = self.cfg.ttl;
+                let before = shard.semantic.len();
+                shard.semantic.retain(|e| now - e.inserted_at <= ttl);
+                for _ in shard.semantic.len()..before {
+                    self.counters.on_stale();
+                }
+            }
             if shard.semantic.len() >= sem_cap {
                 if let Some(victim) = shard
                     .semantic
@@ -434,6 +461,58 @@ mod tests {
         c.insert(b"e3", &[0.0, 1.0], &results(&[3]), 0.0);
         let again = c.lookup_semantic(&[0.8, 0.6], 0.0).expect("e2 must survive eviction");
         assert_eq!(again, results(&[2]));
+    }
+
+    #[test]
+    fn expired_entries_do_not_pin_lru_capacity() {
+        // Regression: a dead (TTL-expired) entry used to count toward
+        // LRU capacity at insert time — and because eviction keyed on
+        // recency alone, a recently-probed-but-expired entry could
+        // survive while a *live* entry was evicted. Expired entries must
+        // be dropped first (counted stale, not evicted).
+        let c = QueryCache::new(CacheConfig {
+            exact_capacity: 2,
+            semantic_capacity: 0,
+            ttl: 10.0,
+            sim_threshold: 0.99,
+            n_shards: 1,
+        });
+        let emb = vec![1.0];
+        c.insert(b"a", &emb, &results(&[1]), 0.0); // expires at t=10
+        c.insert(b"b", &emb, &results(&[2]), 8.0); // expires at t=18
+        // Probe "a" while still live: bumps its recency above "b"'s.
+        assert!(c.lookup_exact(b"a", 9.0).is_some());
+        // t=12: "a" is expired (but most recently used), "b" is live.
+        // Inserting "c" at capacity must drop dead "a", not live "b".
+        c.insert(b"c", &emb, &results(&[3]), 12.0);
+        assert!(c.lookup_exact(b"b", 12.0).is_some(), "live entry evicted for a dead one");
+        assert!(c.lookup_exact(b"c", 12.0).is_some());
+        assert!(c.lookup_exact(b"a", 12.0).is_none());
+        let s = c.snapshot();
+        assert!(s.stale >= 1, "expired-drop must count as stale, got {s:?}");
+        assert_eq!(s.evictions, 0, "no live entry was capacity-evicted");
+        let (exact, _) = c.len();
+        assert_eq!(exact, 2);
+    }
+
+    #[test]
+    fn semantic_tier_drops_expired_before_live_on_insert() {
+        let c = QueryCache::new(CacheConfig {
+            exact_capacity: 0,
+            semantic_capacity: 2,
+            ttl: 10.0,
+            sim_threshold: 0.9,
+            n_shards: 1,
+        });
+        c.insert(b"old", &[1.0, 0.0], &results(&[1]), 0.0); // dead at t=12
+        c.insert(b"live", &[0.0, 1.0], &results(&[2]), 8.0);
+        c.insert(b"new", &[0.7, 0.7], &results(&[3]), 12.0);
+        // The live entry survived; the expired one was dropped as stale.
+        assert!(c.lookup_semantic(&[0.0, 1.0], 12.0).is_some(), "live entry must survive");
+        assert!(c.lookup_semantic(&[1.0, 0.0], 12.0).is_none());
+        let s = c.snapshot();
+        assert!(s.stale >= 1);
+        assert_eq!(s.evictions, 0);
     }
 
     #[test]

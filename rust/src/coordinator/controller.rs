@@ -28,7 +28,7 @@ use crate::exec::messages::{Done, RagState, WorkItem};
 use crate::exec::worker::WorkerHandle;
 use crate::metrics::{Recorder, RunReport};
 use crate::profile::models::RequestFeatures;
-use crate::profile::profile_graph;
+use crate::profile::profile_graph_gen_at;
 use crate::sched::{ControlPlane, QueueDiscipline, SchedConfig};
 use crate::spec::graph::{ComponentKind, NodeId, PipelineGraph};
 use crate::util::clock::{Clock, WallClock};
@@ -62,6 +62,14 @@ pub struct ControllerConfig {
     /// queue rekey) — `SchedConfig::default()` disables all of them, so
     /// the stock deployment admits everything at full fidelity.
     pub sched: SchedConfig,
+    /// Iteration-level (continuous) batching for generator workers: new
+    /// requests prefill into a free decode slot between steps and retire
+    /// at EOS. **Default on** for the live path; `false` falls back to
+    /// run-to-completion static batches. The deploy-time profile prices
+    /// the generator with the matching `profile::models::DecodeCostModel`
+    /// mode either way, so admission-slack predictions and priors agree
+    /// with what the workers actually do.
+    pub continuous_batching: bool,
 }
 
 impl ControllerConfig {
@@ -76,6 +84,7 @@ impl ControllerConfig {
             instances: None,
             slo: None,
             sched: SchedConfig::default(),
+            continuous_batching: true,
         }
     }
 }
@@ -140,17 +149,17 @@ struct InflightReq {
 
 /// Deploy a pipeline graph as live workers + a controller thread.
 pub fn deploy(graph: PipelineGraph, cfg: ControllerConfig) -> Result<ServingHandle> {
-    let shared = Arc::new(
-        build_live_shared(
-            cfg.artifacts.clone(),
-            cfg.corpus_size,
-            cfg.n_topics,
-            cfg.n_shards,
-            cfg.cache,
-            cfg.seed,
-        )
-        .context("building live shared state (corpus/index)")?,
-    );
+    let mut shared = build_live_shared(
+        cfg.artifacts.clone(),
+        cfg.corpus_size,
+        cfg.n_topics,
+        cfg.n_shards,
+        cfg.cache,
+        cfg.seed,
+    )
+    .context("building live shared state (corpus/index)")?;
+    shared.continuous_batching = cfg.continuous_batching;
+    let shared = Arc::new(shared);
 
     // Spawn workers per component (each carries its node's degrade knob
     // so it can shed fidelity when the shared overload cell says so).
@@ -190,7 +199,17 @@ pub fn deploy(graph: PipelineGraph, cfg: ControllerConfig) -> Result<ServingHand
 
     // The shared control plane: same policy object the DES drives, wired
     // to the workers' overload cell + counters, ticked by the wall clock.
-    let prior = profile_graph(&graph, 200, cfg.seed ^ 0x5CED);
+    // The generator prior is priced under the batching mode — and at the
+    // decode occupancy — the workers actually run (the engine batches at
+    // its largest compiled bucket, which matches WORKER_SLOTS), so the
+    // slack predictor's seed (and with it admission control) sees real
+    // batched-decode economics, not the per-instance DES slot count.
+    let gen_mode = if cfg.continuous_batching {
+        crate::profile::GenBatching::Continuous
+    } else {
+        crate::profile::GenBatching::Static
+    };
+    let prior = profile_graph_gen_at(&graph, 200, cfg.seed ^ 0x5CED, gen_mode, WORKER_SLOTS);
     let plane = ControlPlane::new(
         &graph,
         &prior.mean_service,
@@ -279,13 +298,7 @@ fn controller_loop(lp: ControllerLoop) {
             .collect();
         let stateful = stateful_map.get(&node).copied().unwrap_or(false);
         let pick = plane.route(req, node, stateful, &states);
-        let item = WorkItem {
-            req,
-            node,
-            state,
-            enqueued_at: Instant::now(),
-            done: done_tx.clone(),
-        };
+        let item = WorkItem::new(req, node, state, done_tx.clone());
         let _ = pool[pick].submit(item);
     };
 

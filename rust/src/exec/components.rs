@@ -11,16 +11,17 @@ use anyhow::Result;
 
 use crate::cache::{CacheConfig, QueryCache};
 use crate::metrics::SchedCounters;
+use crate::profile::models::DecodeCostModel;
 use crate::retrieval::{IvfParams, SearchResult, ShardParams, ShardedIndex};
 use crate::runtime::classifier::Classifier;
 use crate::runtime::embedder::Embedder;
-use crate::runtime::generator::{GenRequest, Generator};
+use crate::runtime::generator::{GenRequest, Generator, InflightBatch};
 use crate::sched::degrade::{degraded_top_k, OverloadCell, OverloadLevel};
 use crate::spec::graph::{ComponentKind, DegradeKnob};
 use crate::workload::Corpus;
 
 use super::messages::WorkItem;
-use super::worker::{spawn_worker, StageLogic, WorkerHandle};
+use super::worker::{spawn_worker, StageLogic, StepDone, SteppedStage, WorkerHandle};
 
 /// Shared read-only deployment state handed to every worker.
 pub struct LiveShared {
@@ -51,6 +52,11 @@ pub struct LiveShared {
     pub ctx_bytes_per_doc: usize,
     /// Max rewrite iterations before forcing exit (termination bound).
     pub max_iterations: u32,
+    /// Iteration-level (continuous) batching for the generator stage:
+    /// requests join a free decode slot between steps and retire at EOS,
+    /// instead of run-to-completion batches (`ControllerConfig`'s
+    /// `continuous_batching` knob; defaults on for the live path).
+    pub continuous_batching: bool,
 }
 
 impl StageLogic for Box<dyn StageLogic> {
@@ -59,6 +65,9 @@ impl StageLogic for Box<dyn StageLogic> {
     }
     fn max_batch(&self) -> usize {
         (**self).max_batch()
+    }
+    fn stepped(&mut self) -> Option<&mut dyn SteppedStage> {
+        (**self).stepped()
     }
 }
 
@@ -216,9 +225,30 @@ impl StageLogic for RetrieverLogic {
 
 // ---------------------------------------------------------------------------
 
+/// The LLM stage. Two execution modes:
+///
+/// * **Static fallback** (`continuous_batching: false`) — the worker's
+///   run-to-completion batch loop calls `process_batch`; per-item service
+///   attribution is weighted by each slot's prefill + decode cost instead
+///   of the uniform `elapsed / batch.len()` split that skewed telemetry
+///   α-calibration.
+/// * **Continuous** (the default) — the worker runs the stepped loop:
+///   [`SteppedStage::admit`] prefills into a free [`InflightBatch`] slot,
+///   [`SteppedStage::step`] decodes one iteration and retires EOS/capped
+///   requests, and tokens stream into the in-flight item's answer per
+///   step.
 struct GeneratorLogic {
     generator: Generator,
     shared: Arc<LiveShared>,
+    /// Continuous-batching state (lazily created on first admission).
+    inflight: Option<InflightBatch>,
+    /// Per-slot in-flight items, parallel to the batch slots.
+    items: Vec<Option<PendingGen>>,
+}
+
+struct PendingGen {
+    item: WorkItem,
+    queue_secs: f64,
 }
 
 fn build_prompt(state: &crate::exec::messages::RagState, max_len: usize) -> Vec<u8> {
@@ -235,13 +265,20 @@ fn build_prompt(state: &crate::exec::messages::RagState, max_len: usize) -> Vec<
 impl StageLogic for GeneratorLogic {
     fn process_batch(&mut self, items: &mut [WorkItem]) -> Result<()> {
         let budget = self.generator.max_seq() / 2;
+        let dcm = DecodeCostModel::generator();
         for chunk in items.chunks_mut(self.generator.max_batch()) {
             let reqs: Vec<GenRequest> = chunk
                 .iter()
                 .map(|i| GenRequest::greedy(&build_prompt(&i.state, budget), self.shared.max_new_tokens))
                 .collect();
             let (results, _timing) = self.generator.generate_batch(&reqs, |_, _| {})?;
+            let b = chunk.len();
             for (it, r) in chunk.iter_mut().zip(results) {
+                // Per-slot attribution weight: this slot's prefill plus
+                // its own decode steps — not the batch-max the engine ran
+                // for. The worker splits the measured batch time by these.
+                it.service_weight =
+                    dcm.prefill(r.prompt_tokens) + r.generated_tokens as f64 * dcm.step(b);
                 it.state.answer = r.output;
             }
         }
@@ -250,6 +287,102 @@ impl StageLogic for GeneratorLogic {
 
     fn max_batch(&self) -> usize {
         8
+    }
+
+    fn stepped(&mut self) -> Option<&mut dyn SteppedStage> {
+        if self.shared.continuous_batching {
+            Some(self)
+        } else {
+            None
+        }
+    }
+}
+
+impl SteppedStage for GeneratorLogic {
+    fn occupancy(&self) -> usize {
+        self.inflight.as_ref().map_or(0, |b| b.occupancy())
+    }
+
+    fn free_slots(&self) -> usize {
+        self.inflight
+            .as_ref()
+            .map_or_else(|| self.generator.max_batch(), |b| b.free_slots())
+    }
+
+    fn admit(&mut self, mut item: WorkItem) -> Vec<StepDone> {
+        // A drained, poisoned batch is replaced wholesale: the next
+        // admission starts from fresh KV state.
+        if self
+            .inflight
+            .as_ref()
+            .is_some_and(|b| b.poisoned().is_some() && b.occupancy() == 0)
+        {
+            self.inflight = None;
+        }
+        let batch = self
+            .inflight
+            .get_or_insert_with(|| self.generator.begin_inflight());
+        if self.items.is_empty() {
+            self.items = (0..batch.bucket()).map(|_| None).collect();
+        }
+        let queue_secs = item.enqueued_at.elapsed().as_secs_f64();
+        let budget = self.generator.max_seq() / 2;
+        let req = GenRequest::greedy(
+            &build_prompt(&item.state, budget),
+            self.shared.max_new_tokens,
+        );
+        // Tokens stream into the answer as steps decode; start clean.
+        item.state.answer.clear();
+        match self.generator.inflight_admit(batch, &req) {
+            Ok(slot) => {
+                self.items[slot] = Some(PendingGen { item, queue_secs });
+                Vec::new()
+            }
+            // Prefill failure is item-local: the request retires with its
+            // own error and co-resident requests keep decoding.
+            Err(e) => vec![StepDone {
+                item,
+                service_secs: 0.0,
+                queue_secs,
+                error: Some(format!("prefill-on-join failed: {e:#}")),
+            }],
+        }
+    }
+
+    fn step(&mut self) -> Result<Vec<StepDone>> {
+        let GeneratorLogic { generator, inflight, items, .. } = self;
+        let Some(batch) = inflight.as_mut() else { return Ok(Vec::new()) };
+        let retired = generator.inflight_step(batch, &mut |slot, byte| {
+            // Streaming: each accepted token lands in the in-flight
+            // item's answer the step it decodes.
+            if let Some(p) = items[slot].as_mut() {
+                p.item.state.answer.push(byte);
+            }
+        })?;
+        Ok(retired
+            .into_iter()
+            .filter_map(|d| {
+                let p = items[d.slot].take()?;
+                let PendingGen { mut item, queue_secs } = p;
+                item.state.answer = d.result.output;
+                Some(StepDone {
+                    item,
+                    service_secs: d.service_secs,
+                    queue_secs,
+                    error: None,
+                })
+            })
+            .collect())
+    }
+
+    fn drain(&mut self) -> Vec<WorkItem> {
+        // Poisoned after a step error: drop the KV state entirely; the
+        // next admission starts a fresh batch.
+        if let Some(b) = self.inflight.as_mut() {
+            b.clear();
+        }
+        self.inflight = None;
+        self.items.iter_mut().filter_map(|s| s.take()).map(|p| p.item).collect()
     }
 }
 
@@ -309,15 +442,24 @@ struct RewriterLogic {
 
 impl StageLogic for RewriterLogic {
     fn process_batch(&mut self, items: &mut [WorkItem]) -> Result<()> {
-        for it in items.iter_mut() {
+        // Fallible work first, state mutation after the whole batch
+        // succeeded: the worker's error-isolation retry re-runs failed
+        // batches item-by-item, and an append-as-you-go loop would
+        // double-rewrite the items that had already been processed when
+        // a later item errored.
+        let mut suffixes = Vec::with_capacity(items.len());
+        for it in items.iter() {
             let mut prompt = b"Rewrite: ".to_vec();
             prompt.extend_from_slice(&it.state.query);
             let (res, _) = self
                 .generator
                 .generate_batch(&[GenRequest::greedy(&prompt, 8)], |_, _| {})?;
+            suffixes.push(res.into_iter().next().expect("one result").output);
+        }
+        for (it, suffix) in items.iter_mut().zip(suffixes) {
             // Rewritten query = original + refinement suffix.
             it.state.query.push(b' ');
-            it.state.query.extend_from_slice(&res[0].output);
+            it.state.query.extend_from_slice(&suffix);
             it.state.iteration += 1;
         }
         Ok(())
@@ -397,8 +539,12 @@ pub fn spawn_for_kind(
                 as Box<dyn StageLogic>)
         }),
         ComponentKind::Generator => spawn_worker(name, move || {
-            Ok(Box::new(GeneratorLogic { generator: Generator::new(&dir)?, shared })
-                as Box<dyn StageLogic>)
+            Ok(Box::new(GeneratorLogic {
+                generator: Generator::new(&dir)?,
+                shared,
+                inflight: None,
+                items: Vec::new(),
+            }) as Box<dyn StageLogic>)
         }),
         ComponentKind::Grader => spawn_worker(name, move || {
             Ok(Box::new(VerdictLogic {
@@ -480,5 +626,6 @@ pub fn build_live_shared(
         max_new_tokens: 24,
         ctx_bytes_per_doc: 48,
         max_iterations: 2,
+        continuous_batching: true,
     })
 }

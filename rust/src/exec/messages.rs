@@ -38,8 +38,27 @@ pub struct WorkItem {
     pub state: RagState,
     /// Controller timestamp at enqueue (for queue-wait accounting).
     pub enqueued_at: std::time::Instant,
+    /// Per-item service-attribution weight, written by the stage during
+    /// `process_batch` (e.g. the generator's per-slot prefill + decode
+    /// cost). The worker splits the batch's wall time proportionally;
+    /// stages that leave it at the default 1.0 keep the uniform split.
+    pub service_weight: f64,
     /// Reply channel.
     pub done: Sender<Done>,
+}
+
+impl WorkItem {
+    /// Build an item with the default (uniform) service weight.
+    pub fn new(req: u64, node: NodeId, state: RagState, done: Sender<Done>) -> WorkItem {
+        WorkItem {
+            req,
+            node,
+            state,
+            enqueued_at: std::time::Instant::now(),
+            service_weight: 1.0,
+            done,
+        }
+    }
 }
 
 /// Completion notification back to the controller.

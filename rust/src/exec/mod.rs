@@ -11,4 +11,4 @@ pub mod messages;
 pub mod worker;
 
 pub use messages::{Done, RagState, WorkItem};
-pub use worker::{spawn_worker, StageLogic, WorkerHandle};
+pub use worker::{spawn_worker, StageLogic, StepDone, SteppedStage, WorkerHandle};

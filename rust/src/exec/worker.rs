@@ -1,12 +1,16 @@
 //! Worker threads: long-running component instances with micro-batching.
 //!
 //! A worker drains its queue up to the stage's batch capacity before
-//! processing (continuous batching for the GPU-style stages), then sends
-//! one [`Done`] per item. Load counters are shared atomics the router
+//! processing, then sends one [`Done`] per item. Stages that implement
+//! [`SteppedStage`] run an iteration-level loop instead: the worker
+//! polls its queue *between decode steps*, admitting new requests into
+//! free slots (prefill-on-join) and retiring finished ones the step they
+//! complete — continuous batching, instead of blocking for a whole
+//! run-to-completion batch. Load counters are shared atomics the router
 //! reads without locking.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -17,11 +21,51 @@ use super::messages::{Done, WorkItem};
 /// are thread-local).
 pub trait StageLogic {
     /// Process a batch in place; items carry request state.
+    ///
+    /// After a batch-level `Err`, the worker retries the batch
+    /// item-by-item (error isolation), so an item may be processed
+    /// twice: implementations must either mutate state only after all
+    /// fallible work succeeded, or keep mutations overwrite-idempotent.
     fn process_batch(&mut self, items: &mut [WorkItem]) -> anyhow::Result<()>;
     /// Max items per batch (1 = no batching).
     fn max_batch(&self) -> usize {
         1
     }
+    /// Iteration-level execution support: `Some` switches the worker to
+    /// the stepped (continuous-batching) loop, `None` (the default) keeps
+    /// run-to-completion batches.
+    fn stepped(&mut self) -> Option<&mut dyn SteppedStage> {
+        None
+    }
+}
+
+/// A stage that admits and retires work at decode-step granularity.
+pub trait SteppedStage {
+    /// In-flight item count.
+    fn occupancy(&self) -> usize;
+    /// Slots a new item could join right now.
+    fn free_slots(&self) -> usize;
+    /// Admit one item into a free slot (prefill-on-join). An admission
+    /// failure retires the item immediately with its error — it never
+    /// touches co-resident requests.
+    fn admit(&mut self, item: WorkItem) -> Vec<StepDone>;
+    /// Run one decode step; returns the items that retired this step.
+    /// `Err` means the shared decode fabric failed — the caller drains
+    /// the batch via [`SteppedStage::drain`].
+    fn step(&mut self) -> anyhow::Result<Vec<StepDone>>;
+    /// Surrender every in-flight item (shutdown or fabric error).
+    fn drain(&mut self) -> Vec<WorkItem>;
+}
+
+/// One item leaving a stepped stage.
+pub struct StepDone {
+    pub item: WorkItem,
+    /// Attributed service: prefill + this item's share of each decode
+    /// step it participated in (per-slot decode-step accounting).
+    pub service_secs: f64,
+    /// Seconds the item waited before admission.
+    pub queue_secs: f64,
+    pub error: Option<String>,
 }
 
 /// Controller-side handle to one worker instance.
@@ -101,6 +145,10 @@ where
                     return;
                 }
             };
+            if logic.stepped().is_some() {
+                stepped_loop(&mut logic, &rx, &pending2);
+                return;
+            }
             let max_batch = logic.max_batch().max(1);
             loop {
                 // Block for the first item.
@@ -110,7 +158,7 @@ where
                 };
                 let mut batch = vec![first];
                 // Opportunistically drain more (tiny wait to let a burst
-                // coalesce — continuous batching).
+                // coalesce into one engine pass).
                 while batch.len() < max_batch {
                     match rx.recv_timeout(Duration::from_micros(200)) {
                         Ok(i) => batch.push(i),
@@ -120,25 +168,161 @@ where
                 }
                 let t0 = Instant::now();
                 let result = logic.process_batch(&mut batch);
-                let service = t0.elapsed().as_secs_f64() / batch.len() as f64;
-                for item in batch {
-                    pending2.fetch_sub(1, Ordering::Relaxed);
-                    let queue_secs = (t0 - item.enqueued_at).as_secs_f64().max(0.0);
-                    let done = Done {
-                        req: item.req,
-                        node: item.node,
-                        instance: usize::MAX, // controller fills in
-                        state: item.state,
-                        service_secs: service,
-                        queue_secs,
-                        error: result.as_ref().err().map(|e| format!("{e:#}")),
-                    };
-                    let _ = item.done.send(done);
+                match result {
+                    Ok(()) => finish_batch(batch, t0, &pending2),
+                    Err(e) if batch.len() == 1 => {
+                        // A batch of one has nothing to isolate.
+                        pending2.fetch_sub(1, Ordering::Relaxed);
+                        let item = batch.pop().unwrap();
+                        let queue_secs = (t0 - item.enqueued_at).as_secs_f64().max(0.0);
+                        let done = Done {
+                            req: item.req,
+                            node: item.node,
+                            instance: usize::MAX,
+                            state: item.state,
+                            service_secs: t0.elapsed().as_secs_f64(),
+                            queue_secs,
+                            error: Some(format!("{e:#}")),
+                        };
+                        let _ = item.done.send(done);
+                    }
+                    Err(_) => {
+                        // Batch-error isolation: one poisoned request must
+                        // not fail its co-batched neighbors. Retry each
+                        // item alone so an error attaches only to the
+                        // item(s) that fail in a batch of one; healthy
+                        // neighbors complete normally on the retry.
+                        for mut item in batch {
+                            let t1 = Instant::now();
+                            let r = logic.process_batch(std::slice::from_mut(&mut item));
+                            pending2.fetch_sub(1, Ordering::Relaxed);
+                            // Queue wait runs to the retry's own start, so
+                            // the failed batch attempt and time behind
+                            // earlier retries counts as queueing — service
+                            // below covers only the solo re-run.
+                            let queue_secs = (t1 - item.enqueued_at).as_secs_f64().max(0.0);
+                            let done = Done {
+                                req: item.req,
+                                node: item.node,
+                                instance: usize::MAX,
+                                state: item.state,
+                                service_secs: t1.elapsed().as_secs_f64(),
+                                queue_secs,
+                                error: r.err().map(|e| format!("{e:#}")),
+                            };
+                            let _ = item.done.send(done);
+                        }
+                    }
                 }
             }
         })
         .expect("spawn worker thread");
     WorkerHandle { name, tx: Some(tx), pending, failed, join: Some(join) }
+}
+
+/// Report a successfully processed batch: the batch's wall time is split
+/// across items by their stage-written `service_weight` (per-slot decode
+/// steps for the generator), falling back to the uniform split when every
+/// weight is the default — so non-stepped stages report exactly what they
+/// always did, while batched generator telemetry stops skewing the
+/// α-calibration toward the batch mean.
+fn finish_batch(batch: Vec<WorkItem>, t0: Instant, pending: &Arc<AtomicUsize>) {
+    let elapsed = t0.elapsed().as_secs_f64();
+    let n = batch.len() as f64;
+    let wsum: f64 = batch.iter().map(|i| i.service_weight.max(0.0)).sum();
+    for item in batch {
+        pending.fetch_sub(1, Ordering::Relaxed);
+        let service = if wsum > 0.0 {
+            elapsed * item.service_weight.max(0.0) / wsum
+        } else {
+            elapsed / n
+        };
+        let queue_secs = (t0 - item.enqueued_at).as_secs_f64().max(0.0);
+        let done = Done {
+            req: item.req,
+            node: item.node,
+            instance: usize::MAX, // controller fills in
+            state: item.state,
+            service_secs: service,
+            queue_secs,
+            error: None,
+        };
+        let _ = item.done.send(done);
+    }
+}
+
+/// The iteration-level worker loop: block only while idle; once requests
+/// are in flight, poll the queue between decode steps so arrivals join a
+/// free slot immediately instead of waiting for the current batch to run
+/// to completion.
+fn stepped_loop<L: StageLogic + ?Sized>(
+    logic: &mut L,
+    rx: &Receiver<WorkItem>,
+    pending: &Arc<AtomicUsize>,
+) {
+    loop {
+        // Idle: block for the next request (or shut down).
+        if logic.stepped().map_or(0, |s| s.occupancy()) == 0 {
+            let item = match rx.recv() {
+                Ok(i) => i,
+                Err(_) => return, // channel closed and batch drained
+            };
+            for d in logic.stepped().expect("stepped stage").admit(item) {
+                send_step_done(d, pending);
+            }
+        }
+        // Poll between decode steps: fill free slots without blocking.
+        loop {
+            let s = logic.stepped().expect("stepped stage");
+            if s.free_slots() == 0 {
+                break;
+            }
+            match rx.try_recv() {
+                Ok(item) => {
+                    for d in s.admit(item) {
+                        send_step_done(d, pending);
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                // Disconnected: finish the in-flight work, then the idle
+                // recv above ends the loop.
+                Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        // One decode step; retirements free slots for the next poll.
+        match logic.stepped().expect("stepped stage").step() {
+            Ok(dones) => {
+                for d in dones {
+                    send_step_done(d, pending);
+                }
+            }
+            Err(e) => {
+                // The shared decode fabric failed: every in-flight item is
+                // lost (unlike the batch path there is no per-item retry —
+                // the KV state is gone). The stage resets for new work.
+                let msg = format!("decode step failed: {e:#}");
+                for item in logic.stepped().expect("stepped stage").drain() {
+                    pending.fetch_sub(1, Ordering::Relaxed);
+                    fail_item(item, &msg);
+                }
+            }
+        }
+    }
+}
+
+fn send_step_done(d: StepDone, pending: &Arc<AtomicUsize>) {
+    pending.fetch_sub(1, Ordering::Relaxed);
+    let StepDone { item, service_secs, queue_secs, error } = d;
+    let done = Done {
+        req: item.req,
+        node: item.node,
+        instance: usize::MAX,
+        state: item.state,
+        service_secs,
+        queue_secs,
+        error,
+    };
+    let _ = item.done.send(done);
 }
 
 fn fail_item(item: WorkItem, msg: &str) {
@@ -173,13 +357,7 @@ mod tests {
     }
 
     fn item(req: u64, q: &str, done: &Sender<Done>) -> WorkItem {
-        WorkItem {
-            req,
-            node: NodeId(2),
-            state: RagState::new(q.as_bytes()),
-            enqueued_at: Instant::now(),
-            done: done.clone(),
-        }
+        WorkItem::new(req, NodeId(2), RagState::new(q.as_bytes()), done.clone())
     }
 
     #[test]
@@ -224,6 +402,213 @@ mod tests {
         w.submit(item(1, "q", &done_tx)).unwrap();
         let d = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(d.error.is_some());
+        w.shutdown();
+    }
+
+    /// Fails the whole batch whenever any item's query says "poison";
+    /// succeeds on any batch without one — the classic poisoned-batch
+    /// shape the isolation retry exists for.
+    struct Poisonable;
+    impl StageLogic for Poisonable {
+        fn process_batch(&mut self, items: &mut [WorkItem]) -> anyhow::Result<()> {
+            if items.iter().any(|i| i.state.query == b"poison") {
+                anyhow::bail!("engine rejected a request in the batch");
+            }
+            for it in items.iter_mut() {
+                it.state.answer = b"ok".to_vec();
+            }
+            Ok(())
+        }
+        fn max_batch(&self) -> usize {
+            8
+        }
+    }
+
+    #[test]
+    fn poisoned_item_does_not_fail_cobatched_neighbors() {
+        // Regression for the batch-error poisoning bug: process_batch
+        // failure used to stamp the same error on every co-batched item.
+        // With isolation, only the poisoned request errors; its three
+        // neighbors complete on the item-by-item retry.
+        let w = spawn_worker("t".into(), || Ok(Poisonable));
+        let (done_tx, done_rx) = channel();
+        w.submit(item(0, "healthy a", &done_tx)).unwrap();
+        w.submit(item(1, "poison", &done_tx)).unwrap();
+        w.submit(item(2, "healthy b", &done_tx)).unwrap();
+        w.submit(item(3, "healthy c", &done_tx)).unwrap();
+        let mut errors = 0;
+        let mut oks = 0;
+        for _ in 0..4 {
+            let d = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            if d.req == 1 {
+                assert!(d.error.is_some(), "poisoned item must error");
+                errors += 1;
+            } else {
+                assert!(
+                    d.error.is_none(),
+                    "healthy neighbor {} poisoned: {:?}",
+                    d.req,
+                    d.error
+                );
+                assert_eq!(d.state.answer, b"ok");
+                oks += 1;
+            }
+        }
+        assert_eq!((oks, errors), (3, 1));
+        w.shutdown();
+    }
+
+    #[test]
+    fn service_attribution_follows_stage_weights() {
+        // Satellite fix: `elapsed / batch.len()` skewed per-item service;
+        // stages may now write per-item weights (the generator writes its
+        // per-slot prefill+decode cost) and the worker splits the batch
+        // wall time proportionally.
+        struct Weighted {
+            batches: Arc<AtomicUsize>,
+        }
+        impl StageLogic for Weighted {
+            fn process_batch(&mut self, items: &mut [WorkItem]) -> anyhow::Result<()> {
+                self.batches.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_millis(30));
+                // Weight each item by its request id + 1 (1, 2, 3, ...) —
+                // stable under any batch split.
+                for it in items.iter_mut() {
+                    it.service_weight = it.req as f64 + 1.0;
+                }
+                Ok(())
+            }
+            fn max_batch(&self) -> usize {
+                4
+            }
+        }
+        let batches = Arc::new(AtomicUsize::new(0));
+        let b2 = batches.clone();
+        let w = spawn_worker("t".into(), move || Ok(Weighted { batches: b2 }));
+        let (done_tx, done_rx) = channel();
+        for i in 0..4 {
+            w.submit(item(i, "q", &done_tx)).unwrap();
+        }
+        let mut services: Vec<(u64, f64)> = (0..4)
+            .map(|_| {
+                let d = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+                assert!(d.error.is_none());
+                (d.req, d.service_secs)
+            })
+            .collect();
+        services.sort_by_key(|&(r, _)| r);
+        // Under timing jitter the burst may split into several batches;
+        // the proportional split is only checkable when it coalesced.
+        if batches.load(Ordering::Relaxed) == 1 {
+            let total: f64 = services.iter().map(|&(_, s)| s).sum();
+            for (r, s) in &services {
+                let expect = total * (*r as f64 + 1.0) / 10.0;
+                assert!(
+                    (s - expect).abs() < 1e-9,
+                    "req {r}: service {s} vs proportional {expect}"
+                );
+            }
+        }
+        w.shutdown();
+    }
+
+    /// Mock stepped stage: two slots; each item decodes one "token" per
+    /// step until its numeric query (step count) is exhausted.
+    struct MockStepper {
+        slots: Vec<Option<(WorkItem, usize, usize)>>, // (item, remaining, taken)
+        fail_step: bool,
+    }
+    impl MockStepper {
+        fn new() -> Self {
+            MockStepper { slots: vec![None, None], fail_step: false }
+        }
+    }
+    impl StageLogic for MockStepper {
+        fn process_batch(&mut self, _items: &mut [WorkItem]) -> anyhow::Result<()> {
+            unreachable!("stepped stages bypass process_batch")
+        }
+        fn stepped(&mut self) -> Option<&mut dyn SteppedStage> {
+            Some(self)
+        }
+    }
+    impl SteppedStage for MockStepper {
+        fn occupancy(&self) -> usize {
+            self.slots.iter().filter(|s| s.is_some()).count()
+        }
+        fn free_slots(&self) -> usize {
+            self.slots.len() - self.occupancy()
+        }
+        fn admit(&mut self, item: WorkItem) -> Vec<StepDone> {
+            let steps: usize =
+                String::from_utf8_lossy(&item.state.query).parse().unwrap_or(1);
+            let slot = self.slots.iter().position(|s| s.is_none()).unwrap();
+            self.slots[slot] = Some((item, steps, 0));
+            Vec::new()
+        }
+        fn step(&mut self) -> anyhow::Result<Vec<StepDone>> {
+            if self.fail_step {
+                anyhow::bail!("fabric down");
+            }
+            std::thread::sleep(Duration::from_millis(5));
+            let mut out = Vec::new();
+            for s in self.slots.iter_mut() {
+                if let Some((_, remaining, taken)) = s.as_mut() {
+                    *remaining -= 1;
+                    *taken += 1;
+                    if *remaining == 0 {
+                        let (mut item, _, taken) = s.take().unwrap();
+                        item.state.answer = format!("{taken} steps").into_bytes();
+                        out.push(StepDone {
+                            item,
+                            service_secs: taken as f64,
+                            queue_secs: 0.0,
+                            error: None,
+                        });
+                    }
+                }
+            }
+            Ok(out)
+        }
+        fn drain(&mut self) -> Vec<WorkItem> {
+            self.slots.iter_mut().filter_map(|s| s.take()).map(|(i, _, _)| i).collect()
+        }
+    }
+
+    #[test]
+    fn stepped_worker_retires_short_items_before_long_cobatched_ones() {
+        // The continuous-batching property at the worker level: a short
+        // request admitted alongside a long one completes the step it
+        // finishes, instead of waiting for the whole batch.
+        let w = spawn_worker("stepped".into(), || Ok(MockStepper::new()));
+        let (done_tx, done_rx) = channel();
+        w.submit(item(0, "20", &done_tx)).unwrap(); // long: 20 steps
+        w.submit(item(1, "2", &done_tx)).unwrap(); // short: 2 steps
+        let first = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(first.req, 1, "short item must retire first");
+        assert_eq!(first.state.answer, b"2 steps");
+        // The freed slot takes a new admission while the long one decodes.
+        w.submit(item(2, "1", &done_tx)).unwrap();
+        let second = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(second.req, 2, "joiner admitted into the freed slot mid-batch");
+        let third = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(third.req, 0);
+        // Per-slot decode-step attribution, not a uniform batch split.
+        assert!(third.service_secs > first.service_secs);
+        assert_eq!(w.pending(), 0);
+        w.shutdown();
+    }
+
+    #[test]
+    fn stepped_worker_fabric_error_drains_inflight() {
+        let w = spawn_worker("stepped-fail".into(), || {
+            Ok(MockStepper { slots: vec![None, None], fail_step: true })
+        });
+        let (done_tx, done_rx) = channel();
+        w.submit(item(7, "5", &done_tx)).unwrap();
+        let d = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(d.req, 7);
+        assert!(d.error.as_deref().unwrap_or("").contains("decode step failed"));
+        assert_eq!(w.pending(), 0);
         w.shutdown();
     }
 

@@ -22,7 +22,13 @@
 //!   iteration caps), unified behind `sched::ControlPlane`.
 //! * [`runtime`] + [`exec`] — the **live data plane**: AOT-compiled XLA
 //!   artifacts (JAX/Pallas, lowered at build time) executed via PJRT from
-//!   worker threads; Python never runs on the request path.
+//!   worker threads; Python never runs on the request path. The generator
+//!   serves with continuous (iteration-level) batching
+//!   (`runtime::generator::InflightBatch` + `exec::worker::SteppedStage`):
+//!   prefill-on-join into a free decode slot, retire-on-EOS, per-step
+//!   token streaming — priced end-to-end by
+//!   `profile::models::DecodeCostModel` so the DES, the LP priors, and
+//!   admission slack agree on batched decode economics.
 //! * [`retrieval`] — the ChromaDB substitute: an IVF index with the
 //!   paper's `search_ef` knob, sharded scatter-gather search
 //!   (`retrieval::sharded`) for independently scalable retrieval.

@@ -36,6 +36,23 @@ impl ComponentStats {
     }
 }
 
+/// Generation-path latency statistics (continuous-batching metrics):
+/// time-to-first-token and per-output-token pace, the two axes static
+/// run-to-completion batching degrades. `None` in [`RunReport::gen`]
+/// when no samples were recorded (legacy aggregate modeling, or a run
+/// with no generator stage).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct GenStats {
+    /// Samples behind each series.
+    pub samples: u64,
+    /// Time from request arrival to its first generated token (s).
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    /// Per-output-token latency after the first token (s/token).
+    pub tok_p50: f64,
+    pub tok_p99: f64,
+}
+
 /// Collects per-request completions and per-component stats during a run.
 #[derive(Clone, Debug, Default)]
 pub struct Recorder {
@@ -47,6 +64,11 @@ pub struct Recorder {
     first_arrival: Option<f64>,
     last_completion: f64,
     pub components: HashMap<String, ComponentStats>,
+    /// Time-to-first-token samples (one per request reaching a stepped
+    /// generator stage).
+    ttft: Vec<f64>,
+    /// Per-output-token latency samples (one per generator visit).
+    tok_lat: Vec<f64>,
     /// Cache counters captured at the end of the run (None = no cache).
     cache: Option<CacheSnapshot>,
     /// Overload-control counters (None = stock control plane).
@@ -97,6 +119,19 @@ impl Recorder {
         self.shed += 1;
     }
 
+    /// Record a request's time-to-first-token (arrival → first generated
+    /// token). Call at most once per request.
+    pub fn on_first_token(&mut self, ttft: f64) {
+        debug_assert!(ttft >= 0.0);
+        self.ttft.push(ttft);
+    }
+
+    /// Record one generator visit's per-output-token latency.
+    pub fn on_token_latency(&mut self, secs_per_token: f64) {
+        debug_assert!(secs_per_token >= 0.0);
+        self.tok_lat.push(secs_per_token);
+    }
+
     /// Attach the run's cache counter snapshot (shows up in the report).
     pub fn set_cache(&mut self, snapshot: CacheSnapshot) {
         self.cache = Some(snapshot);
@@ -112,6 +147,22 @@ impl Recorder {
         let mut lats = self.latencies.clone();
         lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let horizon = self.last_completion - self.first_arrival.unwrap_or(0.0);
+        let gen = if self.ttft.is_empty() && self.tok_lat.is_empty() {
+            None
+        } else {
+            let mut ttft = self.ttft.clone();
+            ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut tok = self.tok_lat.clone();
+            tok.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let pct = |v: &[f64], p: f64| if v.is_empty() { 0.0 } else { percentile(v, p) };
+            Some(GenStats {
+                samples: (ttft.len().max(tok.len())) as u64,
+                ttft_p50: pct(&ttft, 50.0),
+                ttft_p99: pct(&ttft, 99.0),
+                tok_p50: pct(&tok, 50.0),
+                tok_p99: pct(&tok, 99.0),
+            })
+        };
         RunReport {
             completed: self.completed,
             throughput: if horizon > 0.0 { self.completed as f64 / horizon } else { 0.0 },
@@ -125,6 +176,7 @@ impl Recorder {
                 self.violations as f64 / self.completed as f64
             },
             components: self.components.clone(),
+            gen,
             cache: self.cache,
             shed: self.shed,
             sched: self.sched,
@@ -145,6 +197,10 @@ pub struct RunReport {
     /// Fraction of completed requests that missed their deadline.
     pub slo_violation_rate: f64,
     pub components: HashMap<String, ComponentStats>,
+    /// TTFT / per-token latency, when the run modeled the generator at
+    /// decode-step granularity (`GenBatching::{Static, Continuous}`);
+    /// `None` under the legacy aggregate model.
+    pub gen: Option<GenStats>,
     /// Query-cache counters, if the run served through a cache.
     pub cache: Option<CacheSnapshot>,
     /// Requests shed at admission (0 with the stock control plane).
@@ -212,6 +268,22 @@ mod tests {
         assert!(rep.cache.is_none());
         assert_eq!(rep.shed, 0);
         assert!(rep.sched.is_none());
+        assert!(rep.gen.is_none(), "no decode-step samples → no gen section");
+    }
+
+    #[test]
+    fn gen_stats_percentiles_from_samples() {
+        let mut r = Recorder::new();
+        for i in 0..100 {
+            r.on_first_token(0.01 * (i + 1) as f64);
+            r.on_token_latency(0.002 + 1e-5 * i as f64);
+        }
+        let g = r.report().gen.expect("gen section present");
+        assert_eq!(g.samples, 100);
+        assert!(g.ttft_p50 <= g.ttft_p99);
+        assert!(g.tok_p50 <= g.tok_p99);
+        assert!((0.4..0.7).contains(&g.ttft_p50), "ttft p50 {}", g.ttft_p50);
+        assert!(g.tok_p99 < 0.01);
     }
 
     #[test]

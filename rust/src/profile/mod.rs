@@ -12,5 +12,5 @@
 pub mod models;
 pub mod profiler;
 
-pub use models::{LatencyModel, RequestFeatures};
-pub use profiler::{profile_graph, Profile};
+pub use models::{DecodeCostModel, GenBatching, LatencyModel, RequestFeatures};
+pub use profiler::{profile_graph, profile_graph_gen, profile_graph_gen_at, Profile};

@@ -63,9 +63,14 @@ impl LatencyModel {
 
     /// Sampled service time.
     pub fn sample(&self, f: &RequestFeatures, rng: &mut Rng) -> f64 {
-        // lognormal with unit mean: exp(N(-σ²/2, σ)).
-        let noise = rng.lognormal(-self.sigma * self.sigma / 2.0, self.sigma);
-        (self.mean(f) * noise).max(1e-6)
+        (self.mean(f) * self.noise(rng)).max(1e-6)
+    }
+
+    /// One unit-mean multiplicative noise draw (`exp(N(-σ²/2, σ))`) —
+    /// the same lognormal `sample` applies, exposed so the decomposed
+    /// decode cost model shares this model's variance.
+    pub fn noise(&self, rng: &mut Rng) -> f64 {
+        rng.lognormal(-self.sigma * self.sigma / 2.0, self.sigma)
     }
 
     /// The calibrated model for a component kind.
@@ -256,6 +261,106 @@ pub fn degrade_service_factor(knob: DegradeKnob, level: OverloadLevel) -> f64 {
     }
 }
 
+/// How the generator schedules co-resident requests onto its decode
+/// slots — the batching-policy knob threaded through `SimConfig` (DES)
+/// and `ControllerConfig` (live path).
+///
+/// * [`GenBatching::Legacy`] — the pre-batching aggregate latency model
+///   (`LatencyModel::for_kind(Generator)` sampled per visit). The
+///   default for the DES: fixed-seed golden traces replay bit-identically.
+/// * [`GenBatching::Static`] — run-to-completion batches modeled
+///   explicitly at decode-step granularity: a batch admits up to `B`
+///   requests together, decodes `max(gen_len)` steps, and every member —
+///   including a short answer co-batched with a long one — finishes when
+///   the longest does. This is what the live generator's
+///   `generate_batch` loop actually did, and what the profiler/LP/
+///   autoscaler previously mispriced.
+/// * [`GenBatching::Continuous`] — iteration-level (vLLM/Orca-style)
+///   batching: requests join a free slot between decode steps
+///   (prefill-on-join) and retire the step they emit EOS or hit their
+///   token cap, paying `prefill + own_steps × step(occupancy)`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GenBatching {
+    /// Aggregate calibrated model (golden-trace default for the DES).
+    #[default]
+    Legacy,
+    /// Explicit run-to-completion batches (the static fallback knob).
+    Static,
+    /// Iteration-level continuous batching (the live-path default).
+    Continuous,
+}
+
+/// Occupancy-aware decode cost model (the tentpole's pricing function):
+///
+/// `service = prefill(prompt_tokens) + steps × step(batch_occupancy)`
+///
+/// where `steps` is the request's *own* decode count under continuous
+/// batching and the *batch maximum* under static batching. Consumed by
+/// the DES (`sim::simrun`), the profiler (so LP priors and the
+/// autoscaler's α targets are batching-aware), and — through the
+/// profiled `mean_service` priors seeding `sched::SlackPredictor` — the
+/// admission controller's slack predictions. One pricing function, three
+/// consumers: the simulator, the allocator, and the live data plane
+/// agree on what a batched decode step costs.
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeCostModel {
+    /// Fixed prefill overhead (kernel launch, KV allocation).
+    pub prefill_base: f64,
+    /// Prefill cost per prompt token (parallel over tokens, cheap).
+    pub prefill_per_tok: f64,
+    /// One decode step with a single resident request.
+    pub step_base: f64,
+    /// Relative per-step slowdown per additional co-resident request
+    /// (memory-bandwidth sharing; the occupancy term).
+    pub step_per_occupant: f64,
+}
+
+impl DecodeCostModel {
+    /// The calibrated generator model. At occupancy 1 this reproduces
+    /// `LatencyModel::for_kind(Generator)`'s mean exactly
+    /// (`base + per_prompt_tok·p + per_gen_tok·g`), so the decomposed
+    /// model and the legacy aggregate agree on an unbatched request; the
+    /// occupancy slope mirrors [`concurrency_slowdown`] (6% per extra
+    /// occupant), which it replaces for stepped generators.
+    pub fn generator() -> DecodeCostModel {
+        DecodeCostModel {
+            prefill_base: 0.01,
+            prefill_per_tok: 1.0e-4,
+            step_base: 2.0e-3,
+            step_per_occupant: 0.06,
+        }
+    }
+
+    /// Prefill cost for a prompt of `tokens` tokens.
+    pub fn prefill(&self, tokens: usize) -> f64 {
+        self.prefill_base + self.prefill_per_tok * tokens as f64
+    }
+
+    /// One decode step with `occupancy` co-resident requests (≥ 1).
+    pub fn step(&self, occupancy: usize) -> f64 {
+        self.step_base * (1.0 + self.step_per_occupant * occupancy.saturating_sub(1) as f64)
+    }
+
+    /// Continuous batching: the request pays its own decode steps at the
+    /// occupancy-dependent step cost, independent of its neighbors'
+    /// lengths.
+    pub fn continuous(&self, f: &RequestFeatures, occupancy: usize) -> f64 {
+        self.prefill(f.prompt_len) + f.gen_len as f64 * self.step(occupancy)
+    }
+
+    /// Static run-to-completion batching: every member of a `batch_size`
+    /// batch decodes for the batch's maximum step count — a short answer
+    /// co-batched with a long one pays the long one's decode length.
+    pub fn static_batch(
+        &self,
+        f: &RequestFeatures,
+        batch_max_steps: usize,
+        batch_size: usize,
+    ) -> f64 {
+        self.prefill(f.prompt_len) + batch_max_steps as f64 * self.step(batch_size)
+    }
+}
+
 /// GPU components serve several requests concurrently (continuous
 /// batching); effective concurrency per instance.
 pub fn instance_concurrency(kind: &ComponentKind) -> usize {
@@ -405,6 +510,67 @@ mod tests {
         );
         // CapIterations never changes per-visit cost.
         assert_eq!(degrade_service_factor(DegradeKnob::CapIterations, OverloadLevel::Severe), 1.0);
+    }
+
+    #[test]
+    fn decode_model_matches_legacy_aggregate_at_occupancy_one() {
+        // The decomposed prefill+decode model and the calibrated
+        // aggregate must agree on an unbatched request — that identity is
+        // what lets the Continuous DES mode share the legacy bands.
+        let dcm = DecodeCostModel::generator();
+        let legacy = LatencyModel::for_kind(&ComponentKind::Generator);
+        for f in [
+            feats(),
+            RequestFeatures { prompt_len: 4, gen_len: 96, k_docs: 100, complexity: 0 },
+            RequestFeatures { prompt_len: 127, gen_len: 4, k_docs: 300, complexity: 2 },
+        ] {
+            let a = dcm.continuous(&f, 1);
+            let b = legacy.mean(&f);
+            assert!((a - b).abs() < 1e-12, "continuous@1 {a} vs legacy mean {b}");
+        }
+    }
+
+    #[test]
+    fn short_request_cobatched_with_long_pays_more_under_static() {
+        // The economics the tentpole fixes: a short answer co-batched
+        // with a long one waits for the longest decode under static
+        // batching, but retires at its own EOS under continuous batching.
+        let dcm = DecodeCostModel::generator();
+        let short = RequestFeatures { prompt_len: 60, gen_len: 8, k_docs: 200, complexity: 1 };
+        let long_steps = 96;
+        let static_t = dcm.static_batch(&short, long_steps, 2);
+        let cont_t = dcm.continuous(&short, 2);
+        assert!(
+            static_t > 2.0 * cont_t,
+            "static co-batch {static_t} must dominate continuous {cont_t}"
+        );
+        // A request that IS the longest pays the same decode count either
+        // way (occupancy equal): static adds nothing beyond step pricing.
+        let long =
+            RequestFeatures { prompt_len: 60, gen_len: long_steps, k_docs: 200, complexity: 1 };
+        let a = dcm.static_batch(&long, long_steps, 2);
+        let b = dcm.continuous(&long, 2);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decode_step_cost_monotone_in_occupancy() {
+        let dcm = DecodeCostModel::generator();
+        let mut prev = 0.0;
+        for occ in 1..=8 {
+            let s = dcm.step(occ);
+            assert!(s > prev, "step cost must grow with occupancy: {s} vs {prev}");
+            prev = s;
+        }
+        // Throughput still wins: 8 co-resident requests decode 8 tokens
+        // per step at < 8× the solo step cost (the batching dividend).
+        assert!(dcm.step(8) < 8.0 * dcm.step(1));
+    }
+
+    #[test]
+    fn gen_batching_defaults_to_legacy() {
+        // The inert default is what keeps golden traces bit-identical.
+        assert_eq!(GenBatching::default(), GenBatching::Legacy);
     }
 
     #[test]

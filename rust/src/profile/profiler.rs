@@ -4,8 +4,8 @@
 
 use std::collections::HashMap;
 
-use crate::profile::models::{instance_concurrency, LatencyModel};
-use crate::spec::graph::{NodeId, PipelineGraph, ResourceKind};
+use crate::profile::models::{instance_concurrency, DecodeCostModel, GenBatching, LatencyModel};
+use crate::spec::graph::{ComponentKind, NodeId, PipelineGraph, ResourceKind};
 use crate::util::rng::Rng;
 use crate::workload::TraceConfig;
 
@@ -35,8 +35,40 @@ impl Profile {
 /// from the spec priors — at deploy time those are the best estimates;
 /// the runtime controller replaces them with observed frequencies).
 pub fn profile_graph(graph: &PipelineGraph, n: usize, seed: u64) -> Profile {
+    profile_graph_gen(graph, n, seed, GenBatching::Legacy)
+}
+
+/// [`profile_graph`] with an explicit generator-batching model. With
+/// `GenBatching::Static`/`Continuous`, generator visits are priced by the
+/// occupancy-aware [`DecodeCostModel`] instead of the aggregate latency
+/// model — so the LP's α priors, the autoscaler's targets, and (through
+/// the `mean_service` priors seeding `sched::SlackPredictor`) the
+/// admission controller's slack predictions all see what a batched decode
+/// step actually costs. `GenBatching::Legacy` consumes exactly the same
+/// rng stream as the pre-batching profiler, keeping existing profiles
+/// bit-identical.
+pub fn profile_graph_gen(graph: &PipelineGraph, n: usize, seed: u64, gen: GenBatching) -> Profile {
+    // DES-consistent steady-state occupancy: the simulator's generator
+    // instances expose `instance_concurrency` decode slots.
+    profile_graph_gen_at(graph, n, seed, gen, instance_concurrency(&ComponentKind::Generator))
+}
+
+/// [`profile_graph_gen`] with an explicit generator decode occupancy /
+/// batch size. The live path prices its prior at the engine's *actual*
+/// bucket (the largest compiled batch size — `WORKER_SLOTS` slots per
+/// live worker), which is larger than the DES's per-instance slot count;
+/// passing it here keeps the deploy-time prior, and with it the LP α and
+/// admission slack, in agreement with what the live workers really run.
+pub fn profile_graph_gen_at(
+    graph: &PipelineGraph,
+    n: usize,
+    seed: u64,
+    gen: GenBatching,
+    gen_occupancy: usize,
+) -> Profile {
     let mut rng = Rng::new(seed);
     let trace_cfg = TraceConfig::default();
+    let dcm = DecodeCostModel::generator();
     let mut service_sums: HashMap<NodeId, (f64, usize)> = HashMap::new();
     let mut edge_counts = vec![0usize; graph.edges.len()];
     let mut node_exits: HashMap<NodeId, usize> = HashMap::new();
@@ -50,11 +82,36 @@ pub fn profile_graph(graph: &PipelineGraph, n: usize, seed: u64) -> Profile {
             hops += 1;
             let node = graph.node(cur);
             let model = LatencyModel::for_kind(&node.kind);
+            // Generator visits under an explicit batching model: price
+            // the visit with the decomposed prefill+decode cost at the
+            // instance's steady-state occupancy. Static batching further
+            // inflates the decode count to the expected batch maximum
+            // (Monte-Carlo over B−1 co-batched draws from the same
+            // workload the trace generator uses) — the run-to-completion
+            // penalty the LP previously never saw.
+            let batched_gen = matches!(node.kind, ComponentKind::Generator)
+                && gen != GenBatching::Legacy;
             // Sharded components scatter-gather: per-request service time
             // shrinks by the calibrated shard factor, and the resulting α
             // is already the *per-shard-pool* coefficient the LP uses.
-            let mut t = model.sample(&feats, &mut rng)
-                * crate::profile::models::shard_service_factor(node.shards);
+            let mut t = if batched_gen {
+                let b = gen_occupancy.max(1);
+                let base = match gen {
+                    GenBatching::Continuous => dcm.continuous(&feats, b),
+                    _ => {
+                        let mut max_steps = feats.gen_len;
+                        for _ in 1..b {
+                            let co = trace_cfg.sample_gen_len(&mut rng);
+                            max_steps = max_steps.max(co);
+                        }
+                        dcm.static_batch(&feats, max_steps, b)
+                    }
+                };
+                base * model.noise(&mut rng)
+            } else {
+                model.sample(&feats, &mut rng)
+            };
+            t *= crate::profile::models::shard_service_factor(node.shards);
             // Cached components: a `cache_hit_rate` fraction of visits
             // costs only the hit fraction (sampled, same model the DES
             // uses), so the profiled α — and with it the LP priors and
@@ -194,6 +251,49 @@ mod tests {
         // Cache-adjusted α: the LP sees more throughput per CPU unit.
         let k = crate::spec::ResourceKind::Cpu;
         assert!(pc.alpha_for(rc.id, k) > pp.alpha_for(rp.id, k));
+    }
+
+    #[test]
+    fn legacy_mode_profile_is_bit_identical_to_plain_profile() {
+        // `profile_graph` must stay byte-for-byte what it was: the
+        // explicit-Legacy path consumes the same rng stream.
+        let g = apps::corrective_rag();
+        let a = profile_graph(&g, 400, 17);
+        let b = profile_graph_gen(&g, 400, 17, crate::profile::models::GenBatching::Legacy);
+        for n in &g.nodes {
+            assert_eq!(a.mean_service[&n.id].to_bits(), b.mean_service[&n.id].to_bits());
+        }
+        for (pa, pb) in a.edge_probs.iter().zip(&b.edge_probs) {
+            assert_eq!(pa.to_bits(), pb.to_bits());
+        }
+    }
+
+    #[test]
+    fn static_batching_prior_dominates_continuous_which_tracks_legacy() {
+        // The mispricing the tentpole fixes, visible in the priors: the
+        // static run-to-completion model inflates generator service by
+        // the expected batch-max decode count, while continuous batching
+        // prices only the request's own steps (≈ the legacy aggregate at
+        // its occupancy). The LP and admission slack inherit these means.
+        use crate::profile::models::GenBatching;
+        let g = apps::vanilla_rag();
+        let gen = g.node_by_name("generator").unwrap().id;
+        let leg = profile_graph_gen(&g, 3000, 23, GenBatching::Legacy).mean_service[&gen];
+        let sta = profile_graph_gen(&g, 3000, 23, GenBatching::Static).mean_service[&gen];
+        let con = profile_graph_gen(&g, 3000, 23, GenBatching::Continuous).mean_service[&gen];
+        assert!(
+            sta > 1.3 * con,
+            "static prior {sta} must dominate continuous {con} (batch-max inflation)"
+        );
+        // Continuous at steady occupancy = legacy mean × the occupancy
+        // step premium (≤ ~18% at B=4) — same order, never inflated by
+        // a co-batched neighbor's length.
+        assert!(con < 1.3 * leg && con > 0.9 * leg, "continuous {con} vs legacy {leg}");
+        // Retriever (not a generator) is untouched by the knob.
+        let retr = g.node_by_name("retriever").unwrap().id;
+        let a = profile_graph_gen(&g, 500, 29, GenBatching::Legacy).mean_service[&retr];
+        let b = profile_graph_gen(&g, 500, 29, GenBatching::Continuous).mean_service[&retr];
+        assert_eq!(a.to_bits(), b.to_bits());
     }
 
     #[test]

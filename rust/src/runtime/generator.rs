@@ -50,6 +50,96 @@ pub struct BatchTiming {
     pub batch_size: usize,
 }
 
+/// Per-slot state of one in-flight request (continuous batching).
+struct InflightSlot {
+    /// Next KV write position.
+    pos: i32,
+    /// Decode steps this slot has participated in.
+    steps: usize,
+    out: Vec<u8>,
+    max_new: usize,
+    temperature: Option<(f64, u64)>,
+    prompt_tokens: usize,
+    /// Attributed GPU seconds: prefill + this slot's share of each
+    /// decode step it decoded in (step wall time / step occupancy).
+    service_secs: f64,
+}
+
+/// An iteration-level (continuous) batch: per-slot KV state at the
+/// largest compiled bucket, with requests admitted into free slots
+/// between decode steps ([`Generator::inflight_admit`], prefill-on-join)
+/// and retired the step they emit EOS or hit their token cap
+/// ([`Generator::inflight_step`]).
+///
+/// The KV cache is held host-side so a single-request prefill can be
+/// spliced into one slot's slabs without disturbing its neighbors; each
+/// decode step round-trips it through the artifact boundary. That trades
+/// the static path's literal-resident KV optimization for slot-level
+/// admission — a device-side KV scatter would need a new artifact. If
+/// [`Generator::inflight_step`] returns an error the batch state is
+/// poisoned; discard it and start a fresh one with
+/// [`Generator::begin_inflight`].
+pub struct InflightBatch {
+    bucket: usize,
+    /// Host KV cache [L, 2, bucket, H, S, Dh].
+    kv: Vec<f32>,
+    /// Last logits per slot [bucket, vocab].
+    logits: Vec<f32>,
+    slots: Vec<Option<InflightSlot>>,
+    /// Set when a decode execution failed: the KV state is lost, so the
+    /// survivors can never produce another token. The failing step still
+    /// returns the requests that retired *before* the decode ran (their
+    /// outputs were complete); further steps error and admissions are
+    /// refused until the batch is discarded.
+    poisoned: Option<String>,
+}
+
+impl InflightBatch {
+    /// Occupied slots.
+    pub fn occupancy(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Slots a new request could join (0 once the batch is poisoned).
+    pub fn free_slots(&self) -> usize {
+        if self.poisoned.is_some() {
+            return 0;
+        }
+        self.bucket - self.occupancy()
+    }
+
+    /// The decode-failure message, if a step has poisoned this batch.
+    pub fn poisoned(&self) -> Option<&str> {
+        self.poisoned.as_deref()
+    }
+
+    /// Compiled bucket size this batch decodes at.
+    pub fn bucket(&self) -> usize {
+        self.bucket
+    }
+
+    /// Drop every in-flight request (shutdown / after a step error),
+    /// returning the freed slot indices.
+    pub fn clear(&mut self) -> Vec<usize> {
+        let mut freed = Vec::new();
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            if s.take().is_some() {
+                freed.push(i);
+            }
+        }
+        freed
+    }
+}
+
+/// A request retired from an [`InflightBatch`] (EOS or token cap).
+pub struct InflightDone {
+    /// The slot it occupied (now free).
+    pub slot: usize,
+    pub result: GenResult,
+    /// Per-slot attributed service: prefill + decode-step shares.
+    pub service_secs: f64,
+}
+
 /// Byte-level tokenizer: text bytes are tokens; 0 is reserved.
 pub fn tokenize(text: &[u8], max_len: usize) -> (Vec<i32>, i32) {
     let n = text.len().min(max_len).max(1);
@@ -71,6 +161,11 @@ pub struct Generator {
     max_seq: usize,
     vocab: usize,
     kv_elems_per_b: usize,
+    /// KV cache layout [L, 2, B, H, S, Dh]: `kv_planes` = L·2 outer
+    /// planes, each holding `B` contiguous per-slot slabs of `kv_slab`
+    /// = H·S·Dh elements — what [`InflightBatch`] splices per slot.
+    kv_planes: usize,
+    kv_slab: usize,
 }
 
 impl Generator {
@@ -97,6 +192,8 @@ impl Generator {
             max_seq,
             vocab,
             kv_elems_per_b: l * 2 * h * max_seq * dh,
+            kv_planes: l * 2,
+            kv_slab: h * max_seq * dh,
         })
     }
 
@@ -215,6 +312,169 @@ impl Generator {
             })
             .collect();
         Ok((results, BatchTiming { prefill_secs, decode_secs, decode_steps: steps, batch_size: b }))
+    }
+
+    /// Begin an empty in-flight batch at the largest compiled bucket.
+    /// See [`InflightBatch`].
+    pub fn begin_inflight(&self) -> InflightBatch {
+        let bucket = self.max_batch();
+        InflightBatch {
+            bucket,
+            kv: vec![0.0; self.kv_planes * bucket * self.kv_slab],
+            logits: vec![0.0; bucket * self.vocab],
+            slots: (0..bucket).map(|_| None).collect(),
+            poisoned: None,
+        }
+    }
+
+    /// Prefill-on-join: admit one request into a free slot of an
+    /// in-flight batch. Runs a small-bucket prefill for just this request
+    /// and splices its KV rows into the batch cache, so co-resident
+    /// requests keep decoding undisturbed. Returns the slot index.
+    pub fn inflight_admit(&self, b: &mut InflightBatch, req: &GenRequest) -> Result<usize> {
+        if let Some(msg) = &b.poisoned {
+            bail!("in-flight batch poisoned by an earlier decode failure: {msg}");
+        }
+        let slot = b
+            .slots
+            .iter()
+            .position(|s| s.is_none())
+            .context("no free slot in the in-flight batch")?;
+        // Same prompt budget as the static path: leave decode room.
+        let budget = self
+            .max_seq
+            .saturating_sub(req.max_new_tokens.min(self.max_seq / 2))
+            .max(1);
+        let bb = self.bucket_for(1)?;
+        let prefill = format!("generator_prefill_b{bb}");
+        let mut tokens = Vec::with_capacity(bb * self.max_seq);
+        let mut lengths = Vec::with_capacity(bb);
+        for i in 0..bb {
+            let prompt: &[u8] = if i == 0 { &req.prompt } else { b"." };
+            let (t, l) = tokenize(prompt, self.max_seq);
+            tokens.extend_from_slice(&t);
+            lengths.push(if i == 0 { (l as usize).min(budget) as i32 } else { l });
+        }
+        let t0 = Instant::now();
+        let out = self
+            .engine
+            .execute(&prefill, &[Tensor::I32(tokens), Tensor::I32(lengths.clone())])?;
+        let prefill_secs = t0.elapsed().as_secs_f64();
+        let kv1 = out[1].as_f32()?;
+        let logits1 = out[0].as_f32()?;
+        // Splice row 0 of the single-request KV [L,2,bb,H,S,Dh] into this
+        // slot's slabs of the batch KV [L,2,bucket,H,S,Dh].
+        let slab = self.kv_slab;
+        for p in 0..self.kv_planes {
+            let src = &kv1[p * bb * slab..][..slab];
+            b.kv[(p * b.bucket + slot) * slab..][..slab].copy_from_slice(src);
+        }
+        b.logits[slot * self.vocab..][..self.vocab]
+            .copy_from_slice(&logits1[..self.vocab]);
+        b.slots[slot] = Some(InflightSlot {
+            pos: lengths[0],
+            steps: 0,
+            out: Vec::new(),
+            max_new: req.max_new_tokens,
+            temperature: req.temperature,
+            prompt_tokens: req.prompt.len().min(self.max_seq),
+            service_secs: prefill_secs,
+        });
+        Ok(slot)
+    }
+
+    /// One decode step over the in-flight batch: sample each live slot's
+    /// next token from the current logits, retire slots that emit EOS or
+    /// hit their token cap (their slot frees *this* step — the continuous
+    /// batching property), then execute one fixed-bucket decode for the
+    /// survivors. `on_token` streams (slot, byte) as tokens are accepted.
+    /// Each step's wall time is attributed evenly across the slots that
+    /// decoded in it, so retired requests carry per-slot decode-step
+    /// service instead of a uniform batch split.
+    pub fn inflight_step(
+        &self,
+        b: &mut InflightBatch,
+        on_token: &mut dyn FnMut(usize, u8),
+    ) -> Result<Vec<InflightDone>> {
+        if let Some(msg) = &b.poisoned {
+            bail!("in-flight batch poisoned by an earlier decode failure: {msg}");
+        }
+        let mut retired = Vec::new();
+        let mut next: Vec<i32> = vec![EOS; b.bucket];
+        for slot_i in 0..b.bucket {
+            let Some(s) = b.slots[slot_i].as_mut() else { continue };
+            let done = if s.out.len() >= s.max_new {
+                true
+            } else {
+                let row = &b.logits[slot_i * self.vocab..][..self.vocab];
+                let tok = sample(row, s.temperature, s.steps);
+                if tok != EOS {
+                    s.out.push(tok as u8);
+                    on_token(slot_i, tok as u8);
+                    next[slot_i] = tok;
+                }
+                tok == EOS || s.out.len() >= s.max_new
+            };
+            if done {
+                let s = b.slots[slot_i].take().unwrap();
+                retired.push(InflightDone {
+                    slot: slot_i,
+                    result: GenResult {
+                        generated_tokens: s.out.len(),
+                        output: s.out,
+                        prompt_tokens: s.prompt_tokens,
+                    },
+                    service_secs: s.service_secs,
+                });
+                next[slot_i] = EOS;
+            }
+        }
+        let live: Vec<usize> =
+            (0..b.bucket).filter(|&i| b.slots[i].is_some()).collect();
+        if live.is_empty() {
+            return Ok(retired);
+        }
+        let decode = format!("generator_decode_b{}", b.bucket);
+        let write_pos: Vec<i32> = (0..b.bucket)
+            .map(|i| {
+                b.slots[i]
+                    .as_ref()
+                    .map_or(0, |s| s.pos.min(self.max_seq as i32 - 1))
+            })
+            .collect();
+        let t0 = Instant::now();
+        // A decode failure must not discard the requests that already
+        // retired above (their outputs are complete): poison the batch
+        // and still return them — the *next* step/admit errors, at which
+        // point the caller drains the survivors and discards the batch.
+        let kv_host = std::mem::take(&mut b.kv);
+        let exec = (|| -> Result<(Vec<f32>, Vec<f32>)> {
+            let kv_lit = self.engine.input_literal(&decode, 0, &Tensor::F32(kv_host))?;
+            let next_lit = self.engine.input_literal(&decode, 1, &Tensor::I32(next))?;
+            let pos_lit = self.engine.input_literal(&decode, 2, &Tensor::I32(write_pos))?;
+            let mut out = self.engine.execute_literals(&decode, &[kv_lit, next_lit, pos_lit])?;
+            let kv = out.pop().context("missing kv output")?.to_vec::<f32>()?;
+            let logits = out.pop().context("missing logits")?.to_vec::<f32>()?;
+            Ok((kv, logits))
+        })();
+        match exec {
+            Ok((kv, logits)) => {
+                b.kv = kv;
+                b.logits = logits;
+                let step_secs = t0.elapsed().as_secs_f64();
+                let share = step_secs / live.len() as f64;
+                for i in live {
+                    let s = b.slots[i].as_mut().unwrap();
+                    s.pos = (s.pos + 1).min(self.max_seq as i32 - 1);
+                    s.steps += 1;
+                    s.service_secs += share;
+                }
+            }
+            Err(e) => {
+                b.poisoned = Some(format!("{e:#}"));
+            }
+        }
+        Ok(retired)
     }
 
     /// Single-token verdict (grader / critic): prefill and reduce the
@@ -344,6 +604,116 @@ mod tests {
             })
             .unwrap();
         assert_eq!(streamed, res[0].output);
+    }
+
+    #[test]
+    fn inflight_matches_static_greedy_output() {
+        // Per-row attention masking means a request decodes the same
+        // tokens whether it runs solo, statically batched, or spliced
+        // into a continuous batch.
+        let Some(g) = generator() else { return };
+        let req = GenRequest::greedy(b"What is the capital of France?", 8);
+        let (solo, _) = g.generate_batch(std::slice::from_ref(&req), |_, _| {}).unwrap();
+        let mut b = g.begin_inflight();
+        let slot = g.inflight_admit(&mut b, &req).unwrap();
+        assert_eq!(b.occupancy(), 1);
+        let mut done = Vec::new();
+        let mut streamed = Vec::new();
+        for _ in 0..64 {
+            let mut retired = g
+                .inflight_step(&mut b, &mut |s, byte| {
+                    assert_eq!(s, slot);
+                    streamed.push(byte);
+                })
+                .unwrap();
+            done.append(&mut retired);
+            if b.occupancy() == 0 {
+                break;
+            }
+        }
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].slot, slot);
+        assert_eq!(done[0].result.output, solo[0].output);
+        assert_eq!(streamed, solo[0].output, "tokens stream per step");
+        assert!(done[0].service_secs > 0.0);
+    }
+
+    #[test]
+    fn short_request_retires_while_long_keeps_decoding() {
+        // The continuous-batching property: a slot frees the step its
+        // request finishes, and its service attribution stops there — it
+        // does not wait out a co-batched longer request.
+        let Some(g) = generator() else { return };
+        let mut b = g.begin_inflight();
+        let long = GenRequest::greedy(b"a long elaborate question needing detail", 16);
+        let short = GenRequest::greedy(b"hi", 2);
+        let ls = g.inflight_admit(&mut b, &long).unwrap();
+        let ss = g.inflight_admit(&mut b, &short).unwrap();
+        assert_ne!(ls, ss);
+        assert_eq!(b.occupancy(), 2);
+        let mut order = Vec::new();
+        let mut short_done = None;
+        let mut long_done = None;
+        for _ in 0..64 {
+            for d in g.inflight_step(&mut b, &mut |_, _| {}).unwrap() {
+                order.push(d.slot);
+                if d.slot == ss {
+                    short_done = Some(d);
+                } else {
+                    long_done = Some(d);
+                }
+            }
+            if b.occupancy() == 0 {
+                break;
+            }
+        }
+        let (s, l) = (short_done.expect("short finished"), long_done.expect("long finished"));
+        assert!(s.result.generated_tokens <= 2);
+        // With a synthetic LM the long request *may* emit EOS early; the
+        // continuous-batching invariants are asserted whenever it really
+        // decoded longer (the common case with a 16-token cap).
+        if l.result.generated_tokens > s.result.generated_tokens {
+            assert_eq!(order.first(), Some(&ss), "short retires first, freeing its slot");
+            assert!(
+                s.service_secs < l.service_secs,
+                "per-slot decode-step attribution: short {} !< long {}",
+                s.service_secs,
+                l.service_secs
+            );
+        }
+    }
+
+    #[test]
+    fn inflight_admission_after_retirement_reuses_slots() {
+        // Prefill-on-join into a freed slot must not disturb a resident
+        // request: run A+B, retire B, admit C into the freed slot, and A
+        // must still produce its solo greedy output.
+        let Some(g) = generator() else { return };
+        let a = GenRequest::greedy(b"first resident request", 12);
+        let (a_solo, _) = g.generate_batch(std::slice::from_ref(&a), |_, _| {}).unwrap();
+        let mut batch = g.begin_inflight();
+        let a_slot = g.inflight_admit(&mut batch, &a).unwrap();
+        let b_req = GenRequest::greedy(b"quick", 1);
+        g.inflight_admit(&mut batch, &b_req).unwrap();
+        let mut a_out = None;
+        let mut admitted_c = false;
+        for _ in 0..64 {
+            for d in g.inflight_step(&mut batch, &mut |_, _| {}).unwrap() {
+                if d.slot == a_slot {
+                    a_out = Some(d.result.output);
+                } else if !admitted_c {
+                    // B retired: splice C into the freed batch mid-flight.
+                    let c = GenRequest::greedy(b"late joiner", 4);
+                    g.inflight_admit(&mut batch, &c).unwrap();
+                    admitted_c = true;
+                }
+            }
+            if a_out.is_some() {
+                break;
+            }
+        }
+        assert!(admitted_c, "B must retire before A's 12-token budget");
+        assert_eq!(a_out.expect("A finished"), a_solo[0].output);
     }
 
     #[test]

@@ -57,16 +57,21 @@ impl Default for TraceConfig {
 }
 
 impl TraceConfig {
+    /// Sample one request's generation length alone (the profiler's
+    /// co-batch draws for static-batching inflation use this, so the
+    /// batch-maximum estimate comes from the same distribution the trace
+    /// generator emits).
+    pub fn sample_gen_len(&self, rng: &mut Rng) -> usize {
+        rng.lognormal(self.gen_mu, self.gen_sigma).round().clamp(4.0, 96.0) as usize
+    }
+
     /// Sample one request's features.
     pub fn sample_features(&self, rng: &mut Rng) -> RequestFeatures {
         let prompt_len = rng
             .lognormal(self.prompt_mu, self.prompt_sigma)
             .round()
             .clamp(4.0, 127.0) as usize;
-        let gen_len = rng
-            .lognormal(self.gen_mu, self.gen_sigma)
-            .round()
-            .clamp(4.0, 96.0) as usize;
+        let gen_len = self.sample_gen_len(rng);
         let k_docs = rng.range_i64(self.k_lo as i64, self.k_hi as i64) as usize;
         let complexity = rng.weighted(&self.complexity_mix) as u8;
         RequestFeatures { prompt_len, gen_len, k_docs, complexity }

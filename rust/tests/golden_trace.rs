@@ -103,6 +103,24 @@ fn golden_run_identical_under_explicitly_default_sched_config() {
 }
 
 #[test]
+fn golden_run_identical_under_explicitly_legacy_gen_batching() {
+    // The continuous-batching knob must be *inert* at its default:
+    // setting it to Legacy by hand must be bit-identical to the default
+    // run, and the legacy model must record no TTFT/per-token section.
+    let a = golden_run();
+    let trace = TraceConfig { rate: RATE, n: N, slo: Some(SLO), ..TraceConfig::default() };
+    let mut cfg = SimConfig::new(SystemKind::Harmonia, trace, SEED);
+    cfg.gen_batching = harmonia::profile::GenBatching::Legacy;
+    let b = SimWorld::simulate(apps::vanilla_rag(), cfg);
+    assert_eq!(a.report.completed, b.report.completed);
+    assert_eq!(a.report.mean_latency.to_bits(), b.report.mean_latency.to_bits());
+    assert_eq!(a.report.p99.to_bits(), b.report.p99.to_bits());
+    assert_eq!(a.report.throughput.to_bits(), b.report.throughput.to_bits());
+    assert!(a.report.gen.is_none(), "legacy batching records no gen section");
+    assert!(b.report.gen.is_none());
+}
+
+#[test]
 fn golden_vrag_is_bit_reproducible() {
     // The golden statistics are only a regression anchor if the run is
     // exactly reproducible: identical seeds must give identical floats,
