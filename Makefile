@@ -6,7 +6,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test test-fast lint fmt clippy verify artifacts bench bench-shards bench-cache bench-overload bench-batching bench-smoke clean
+.PHONY: all build test test-fast lint fmt clippy doc verify artifacts bench bench-shards bench-cache bench-overload bench-batching bench-parallel bench-smoke clean
 
 all: build
 
@@ -30,7 +30,12 @@ clippy:
 
 lint: fmt clippy
 
-verify: build test lint
+# Rustdoc with warnings denied: keeps intra-doc links (EdgeKind/JoinSpec
+# and friends) valid as the API evolves.
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
+
+verify: build test lint doc
 
 # AOT-compile the JAX/Pallas models to XLA artifacts (live mode).
 artifacts:
@@ -56,6 +61,10 @@ bench-overload:
 bench-batching:
 	$(CARGO) bench --bench fig06_continuous_batching
 
+# The parallel-dataflow (fork/join) bench only (fig07).
+bench-parallel:
+	$(CARGO) bench --bench fig07_parallel_dataflow
+
 # Quick-iteration bench pass (CI): actually *execute* the bench binaries
 # with `--smoke`-shrunk workloads (see util::bench::smoke) instead of
 # only compiling them. Keeps the paper-figure harnesses from bit-rotting.
@@ -64,6 +73,7 @@ bench-smoke:
 	$(CARGO) bench --bench fig04b_shard_scaling -- --smoke
 	$(CARGO) bench --bench fig04c_cache_hit_curve -- --smoke
 	$(CARGO) bench --bench fig06_continuous_batching -- --smoke
+	$(CARGO) bench --bench fig07_parallel_dataflow -- --smoke
 
 clean:
 	$(CARGO) clean

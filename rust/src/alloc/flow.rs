@@ -11,6 +11,13 @@
 //! Recursion (back edges) keeps the flow system linear: the fixed-point of
 //! the conservation equations is encoded directly, so a loop with gain <1
 //! yields finite equilibrium flow, matching `PipelineGraph::visit_rates`.
+//!
+//! Parallel dataflow stays linear too: `Fork` edges carry **full flow**
+//! (the profiler reports p = 1 per branch — every branch is work the plan
+//! must provision), and a join node's inflow is scaled by 1/branches
+//! (`PipelineGraph::join_in_scale`) in both its capacity constraint and
+//! its outgoing conservation rows, because the barrier merges the sibling
+//! subtasks back into one request.
 
 use std::collections::HashMap;
 
@@ -112,13 +119,20 @@ impl<'a> FlowProblem<'a> {
         // instances. We use the Leontief form instead: one constraint per
         // demanded resource, Σ_u f_{u,i} ≤ α_{i,k} r_{i,k} ∀k, which
         // keeps the model linear and forces proportional bundles.
+        // Join inflow scales (1/branches at barriers, 1 elsewhere),
+        // resolved once for both the capacity and conservation rows.
+        let join_scales = g.join_scales();
         for node in g.work_nodes() {
+            // Join nodes: the barrier merges `branches` sibling arrivals
+            // into one request, so the workload each unit of capacity
+            // must absorb is the scaled inflow.
+            let in_scale = join_scales[node.id.0];
             let inflow: Vec<_> = g
                 .edges
                 .iter()
                 .enumerate()
                 .filter(|(_, e)| e.to == node.id)
-                .map(|(i, _)| (f_vars[i], 1.0))
+                .map(|(i, _)| (f_vars[i], in_scale))
                 .collect();
             if inflow.is_empty() {
                 continue;
@@ -143,9 +157,12 @@ impl<'a> FlowProblem<'a> {
             }
         }
 
-        // Branch conservation: f_{i,j} = p_{i,j} γ_i Σ_u f_{u,i} for every
-        // edge leaving a work node; edges leaving the source carry the
-        // admitted flow λ (a free variable we name `lambda`).
+        // Branch conservation: f_{i,j} = p_{i,j} γ_i s_i Σ_u f_{u,i} for
+        // every edge leaving a work node (s_i = the join inflow scale,
+        // 1 everywhere else); edges leaving the source carry the admitted
+        // flow λ (a free variable we name `lambda`). Fork edges arrive
+        // here with p = 1 from the profiler — each branch receives the
+        // node's full outflow.
         let lambda = m.var("lambda", 0.0);
         for (i, e) in g.edges.iter().enumerate() {
             let p = self.profile.edge_probs[i];
@@ -154,10 +171,11 @@ impl<'a> FlowProblem<'a> {
                 m.constrain(vec![(f_vars[i], 1.0), (lambda, -p)], Sense::Eq, 0.0);
             } else {
                 let gamma = self.profile.gamma.get(&e.from).copied().unwrap_or(1.0);
+                let in_scale = join_scales[e.from.0];
                 let mut terms = vec![(f_vars[i], 1.0)];
                 for (j, e2) in g.edges.iter().enumerate() {
                     if e2.to == e.from {
-                        terms.push((f_vars[j], -p * gamma));
+                        terms.push((f_vars[j], -p * gamma * in_scale));
                     }
                 }
                 m.constrain(terms, Sense::Eq, 0.0);
@@ -312,6 +330,70 @@ mod tests {
             sharded.throughput,
             full.throughput
         );
+    }
+
+    #[test]
+    fn hybrid_fork_provisions_both_branches_at_full_flow() {
+        let g = apps::hybrid_rag();
+        let plan = plan_for(&g, 2000, 0);
+        assert!(plan.throughput > 0.0);
+        // Every branch is staffed — forks carry full flow per branch.
+        for name in ["retriever", "websearch", "generator"] {
+            let id = g.node_by_name(name).unwrap().id;
+            assert!(plan.instances(id) >= 1, "{name} unstaffed");
+        }
+        // Both fork edges carry the same (full) flow as the sink edge:
+        // branch flow == λ == throughput.
+        let sink_flow: f64 = g
+            .edges
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.to == g.sink)
+            .map(|(i, _)| plan.edge_flows[i])
+            .sum();
+        for (i, e) in g.edges.iter().enumerate() {
+            if e.is_fork() {
+                assert!(
+                    (plan.edge_flows[i] - sink_flow).abs() < 1e-6 * sink_flow.max(1.0),
+                    "fork edge flow {} vs sink flow {sink_flow}",
+                    plan.edge_flows[i]
+                );
+            }
+        }
+        // Join conservation: the generator's summed inflow is
+        // branches × λ, but its outflow (after the barrier) is λ.
+        let gen = g.node_by_name("generator").unwrap().id;
+        let inflow: f64 = g
+            .edges
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.to == gen)
+            .map(|(i, _)| plan.edge_flows[i])
+            .sum();
+        assert!(
+            (inflow - 2.0 * sink_flow).abs() < 1e-6 * inflow.max(1.0),
+            "join inflow {inflow} vs 2λ {}",
+            2.0 * sink_flow
+        );
+    }
+
+    #[test]
+    fn parallel_and_serialized_hybrids_reach_similar_ceilings() {
+        // Same nodes, same per-visit work: the LP's *throughput* ceiling
+        // is resource-bound, so the fork (a latency structure) must not
+        // change it materially. The latency win is the DES's to show.
+        let par = plan_for(&apps::hybrid_rag(), 2000, 5);
+        let seq = plan_for(&apps::hybrid_rag_sequential(), 2000, 5);
+        let ratio = par.throughput / seq.throughput;
+        assert!((0.8..1.25).contains(&ratio), "ratio {ratio}");
+        // Multi-query: every variant is full-flow work in both shapes.
+        let mq = plan_for(&apps::multiquery_rag(3), 2000, 6);
+        assert!(mq.throughput > 0.0);
+        let g = apps::multiquery_rag(3);
+        for i in 0..3 {
+            let id = g.node_by_name(&format!("retriever_q{i}")).unwrap().id;
+            assert!(mq.instances(id) >= 1, "variant {i} unstaffed");
+        }
     }
 
     #[test]

@@ -30,7 +30,7 @@ use crate::metrics::{Recorder, RunReport};
 use crate::profile::models::RequestFeatures;
 use crate::profile::profile_graph_gen_at;
 use crate::sched::{ControlPlane, QueueDiscipline, SchedConfig};
-use crate::spec::graph::{ComponentKind, NodeId, PipelineGraph};
+use crate::spec::graph::{ComponentKind, ForkGroup, MergePolicy, NodeId, PipelineGraph};
 use crate::util::clock::{Clock, WallClock};
 
 use super::router::{InstanceState, RoutingPolicy};
@@ -145,6 +145,44 @@ struct InflightReq {
     /// Approximate request features feeding the slack predictor (live
     /// queries carry no token counts; prompt bytes stand in).
     features: RequestFeatures,
+    /// Branch-id allocator for fork subtasks (0 = the trunk).
+    next_branch: u32,
+    /// Shared join cells, one per in-flight fork, keyed by the join
+    /// node: branch completions accumulate here until the barrier
+    /// releases; the merged state then dispatches the join exactly once.
+    joins: HashMap<NodeId, LiveJoin>,
+}
+
+/// Barrier state of one in-flight fork on the live path.
+struct LiveJoin {
+    /// Branch ids belonging to THIS fork traversal. Cells are keyed by
+    /// join node and recursion may wrap a fork (loop re-entering it), so
+    /// a stale loser from a previous traversal must not be mistaken for
+    /// a member of the fresh barrier — membership is explicit.
+    branches: std::collections::HashSet<u32>,
+    /// Arrivals that release the barrier.
+    need: usize,
+    merge: MergePolicy,
+    /// Completed branch states, in arrival order.
+    states: Vec<RagState>,
+    /// Wall-clock arrival stamps (join-wait accounting).
+    arrivals: Vec<Instant>,
+    /// Barrier already released: late FirstK losers are dropped here —
+    /// their `Done`s merge nowhere and route nowhere.
+    fired: bool,
+}
+
+impl LiveJoin {
+    fn new(fg: &ForkGroup) -> LiveJoin {
+        LiveJoin {
+            branches: std::collections::HashSet::new(),
+            need: fg.need,
+            merge: fg.merge,
+            states: Vec::new(),
+            arrivals: Vec::new(),
+            fired: false,
+        }
+    }
 }
 
 /// Deploy a pipeline graph as live workers + a controller thread.
@@ -279,8 +317,13 @@ fn controller_loop(lp: ControllerLoop) {
     let total_slots: usize = workers.values().map(|v| v.len() * WORKER_SLOTS).sum();
     let stateful_map: HashMap<NodeId, bool> =
         graph.nodes.iter().map(|n| (n.id, n.stateful)).collect();
+    // Fork node → resolved group (branch entries + join + barrier
+    // policy); the controller dispatches ALL fork successors at once and
+    // merges their `Done`s at the join cell.
+    let fork_map = graph.fork_groups();
     let dispatch = |req: u64,
                     node: NodeId,
+                    branch: u32,
                     state: RagState,
                     plane: &mut ControlPlane,
                     workers: &HashMap<NodeId, Vec<WorkerHandle>>,
@@ -298,7 +341,7 @@ fn controller_loop(lp: ControllerLoop) {
             .collect();
         let stateful = stateful_map.get(&node).copied().unwrap_or(false);
         let pick = plane.route(req, node, stateful, &states);
-        let item = WorkItem::new(req, node, state, done_tx.clone());
+        let item = WorkItem::for_branch(req, node, branch, state, done_tx.clone());
         let _ = pool[pick].submit(item);
     };
 
@@ -376,9 +419,28 @@ fn controller_loop(lp: ControllerLoop) {
                         hops: 0,
                         current: entry,
                         features,
+                        next_branch: 0,
+                        joins: HashMap::new(),
                     },
                 );
-                dispatch(req, entry, state, &mut plane, &workers, &done_tx);
+                // A fork at the pipeline entry fans out immediately
+                // (hybrid retrieval: dense ∥ web from the first hop).
+                if let Some(fg) = fork_map.get(&graph.source) {
+                    let fl = inflight.get_mut(&req).expect("just inserted");
+                    let mut cell = LiveJoin::new(fg);
+                    let mut spawned = Vec::with_capacity(fg.targets.len());
+                    for &target in &fg.targets {
+                        fl.next_branch += 1;
+                        cell.branches.insert(fl.next_branch);
+                        spawned.push((fl.next_branch, target));
+                    }
+                    fl.joins.insert(fg.join, cell);
+                    for (b, target) in spawned {
+                        dispatch(req, target, b, state.clone(), &mut plane, &workers, &done_tx);
+                    }
+                } else {
+                    dispatch(req, entry, 0, state, &mut plane, &workers, &done_tx);
+                }
             }
             Msg::Done(d) => {
                 let Some(fl) = inflight.get_mut(&d.req) else { continue };
@@ -404,7 +466,67 @@ fn controller_loop(lp: ControllerLoop) {
                 // zero exactly when admission control needs them.
                 plane.on_complete(d.node, d.service_secs);
                 plane.observe_service(d.node, &features, d.service_secs);
+                // Parallel fan-out: a fork node's completion dispatches
+                // EVERY branch at once, each tagged with its own branch
+                // id and reporting to a fresh join cell.
+                if let Some(fg) = fork_map.get(&d.node) {
+                    let mut cell = LiveJoin::new(fg);
+                    let mut spawned = Vec::with_capacity(fg.targets.len());
+                    for &target in &fg.targets {
+                        fl.next_branch += 1;
+                        cell.branches.insert(fl.next_branch);
+                        spawned.push((fl.next_branch, target));
+                    }
+                    fl.joins.insert(fg.join, cell);
+                    for (b, target) in spawned {
+                        dispatch(d.req, target, b, d.state.clone(), &mut plane, &workers, &done_tx);
+                    }
+                    continue;
+                }
                 let next = decide_next(&graph, d.node, &d.state, &mut rng);
+                // A branch completion bound for a join node reports to
+                // the barrier instead of dispatching the join directly.
+                if next != graph.sink && graph.node(next).join.is_some() {
+                    if let Some(cell) = fl.joins.get_mut(&next) {
+                        if cell.branches.contains(&d.branch) {
+                            if cell.fired {
+                                // Late FirstK loser: state dropped; its
+                                // worker slot was already released by
+                                // the Done itself.
+                                continue;
+                            }
+                            cell.states.push(d.state);
+                            cell.arrivals.push(Instant::now());
+                            if cell.states.len() < cell.need {
+                                continue;
+                            }
+                            cell.fired = true;
+                            // Losers still in flight retire harmlessly
+                            // at the `fired` gate above — queue and
+                            // engine state stay consistent.
+                            let merged =
+                                RagState::merge(cell.merge, std::mem::take(&mut cell.states));
+                            let release = *cell.arrivals.last().expect("at least one arrival");
+                            let stall: f64 = cell.arrivals[..cell.arrivals.len() - 1]
+                                .iter()
+                                .map(|t| release.duration_since(*t).as_secs_f64())
+                                .sum();
+                            recorder.on_join_wait(&graph.node(next).name, stall);
+                            fl.current = next;
+                            dispatch(d.req, next, 0, merged, &mut plane, &workers, &done_tx);
+                            continue;
+                        }
+                        if d.branch != 0 {
+                            // Stale loser from a PREVIOUS traversal of
+                            // this fork (recursion wrapped a FirstK
+                            // race): it must neither merge into nor
+                            // release the fresh barrier.
+                            continue;
+                        }
+                        // Trunk arrival (no branch context): not a
+                        // barrier member — fall through to a normal hop.
+                    }
+                }
                 if next == graph.sink {
                     let fl = inflight.remove(&d.req).unwrap();
                     let latency = fl.started.elapsed().as_secs_f64();
@@ -420,7 +542,7 @@ fn controller_loop(lp: ControllerLoop) {
                     plane.release(d.req);
                 } else {
                     fl.current = next;
-                    dispatch(d.req, next, d.state, &mut plane, &workers, &done_tx);
+                    dispatch(d.req, next, d.branch, d.state, &mut plane, &workers, &done_tx);
                 }
             }
             Msg::Report(tx) => {
@@ -507,7 +629,7 @@ pub fn decide_next(
         }
         _ => {
             // Probability-weighted (spec priors).
-            let weights: Vec<f64> = succ.iter().map(|e| e.prob).collect();
+            let weights: Vec<f64> = succ.iter().map(|e| e.prob()).collect();
             succ[rng.weighted(&weights)].to
         }
     }

@@ -100,6 +100,14 @@ impl Router {
         self.bindings.keys().filter(|(_, n)| *n == node).count()
     }
 
+    /// Total stateful bindings currently held across all nodes — the
+    /// slot-leak audit's probe: every terminal path (completion, shed,
+    /// error, cancelled fork loser) must leave this at 0 once the system
+    /// drains.
+    pub fn total_bindings(&self) -> usize {
+        self.bindings.len()
+    }
+
     fn pick_load_state_aware(&self, instances: &[InstanceState]) -> usize {
         let mut best = 0usize;
         let mut best_score = f64::INFINITY;

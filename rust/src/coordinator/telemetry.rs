@@ -44,6 +44,13 @@ impl Telemetry {
         self.service.get_mut(&node).map(|e| e.observe(service_secs));
     }
 
+    /// An enqueued item was discarded without executing (cancelled fork
+    /// loser popped from a queue): rebalance the in-flight gauge without
+    /// polluting the service EWMA or the execution counts.
+    pub fn on_cancelled(&mut self, node: NodeId) {
+        *self.inflight.entry(node).or_insert(0) -= 1;
+    }
+
     pub fn on_edge(&mut self, edge_idx: usize, from: NodeId) {
         self.edge_counts[edge_idx] += 1;
         *self.exit_counts.entry(from).or_insert(0) += 1;
@@ -63,12 +70,18 @@ impl Telemetry {
     }
 
     /// Observed branch probability for an edge; falls back to the spec
-    /// prior until enough exits were seen.
+    /// prior until enough exits were seen. Fork edges are structural —
+    /// every branch always fires, so their flow fraction is exactly 1
+    /// regardless of the counters (the DES books one exit per branch,
+    /// which would otherwise read as 1/branches).
     pub fn edge_prob(&self, graph: &PipelineGraph, edge_idx: usize) -> f64 {
         let e = &graph.edges[edge_idx];
+        if e.is_fork() {
+            return 1.0;
+        }
         let exits = self.exit_counts.get(&e.from).copied().unwrap_or(0);
         if exits < 20 {
-            e.prob
+            e.prob()
         } else {
             self.edge_counts[edge_idx] as f64 / exits as f64
         }

@@ -101,14 +101,20 @@ fn fill_from_hits(
 ) {
     let mut ctx = Vec::new();
     let mut ids = Vec::new();
+    let mut segs = Vec::new();
     for h in hits {
         ids.push(h.id);
         let p = &shared.corpus.passages[h.id];
         let take = p.text.len().min(shared.ctx_bytes_per_doc);
+        let before = ctx.len();
         ctx.extend_from_slice(&p.text[..take]);
         ctx.push(b' ');
+        // Per-doc segment boundary: lets a join barrier union branch
+        // contexts with per-document dedup (`RagState::merge`).
+        segs.push(ctx.len() - before);
     }
     state.context = ctx;
+    state.ctx_segments = segs;
     state.doc_ids = ids;
 }
 
@@ -488,6 +494,9 @@ impl StageLogic for WebSearchLogic {
                 ctx.push(b' ');
             }
             it.state.context = ctx;
+            // Web results carry no per-doc segmentation: a join merge
+            // treats this context as opaque (appended whole).
+            it.state.ctx_segments.clear();
         }
         Ok(())
     }

@@ -2,7 +2,7 @@
 
 use std::sync::mpsc::Sender;
 
-use crate::spec::graph::NodeId;
+use crate::spec::graph::{MergePolicy, NodeId};
 
 /// Request-scoped pipeline state threaded through the stages — the live
 /// equivalent of the intermediate values that flow producer→consumer in
@@ -13,6 +13,11 @@ pub struct RagState {
     pub query: Vec<u8>,
     /// Retrieved context (concatenated passages).
     pub context: Vec<u8>,
+    /// Byte length of each retrieved passage's chunk inside `context`,
+    /// parallel to `doc_ids` when populated by retrieval (other
+    /// producers, e.g. web search, leave it empty). Lets a fork/join
+    /// barrier union branch contexts with per-document dedup.
+    pub ctx_segments: Vec<usize>,
     /// Generated answer so far.
     pub answer: Vec<u8>,
     /// Last grader/critic verdict.
@@ -29,12 +34,78 @@ impl RagState {
     pub fn new(query: &[u8]) -> Self {
         RagState { query: query.to_vec(), ..Default::default() }
     }
+
+    /// Merge the states of completed fork branches at a join barrier
+    /// (`states` in branch arrival order; must be non-empty).
+    ///
+    /// * [`MergePolicy::First`] — the first state wins verbatim (the
+    ///   natural pairing for `FirstK(1)` races).
+    /// * [`MergePolicy::Union`] — retrieval results are unioned:
+    ///   `doc_ids` deduplicate across branches (first occurrence wins)
+    ///   and each branch's context contributes only its unseen documents'
+    ///   chunks, preserving per-branch score order (branch-major concat).
+    ///   Branches without per-document segmentation (web search) append
+    ///   their whole context. Scalars take the first populated value;
+    ///   `iteration` takes the max (a rewrite in ANY branch counts
+    ///   toward the loop budget).
+    pub fn merge(policy: MergePolicy, mut states: Vec<RagState>) -> RagState {
+        debug_assert!(!states.is_empty(), "a join merges at least one branch");
+        if states.len() == 1 || policy == MergePolicy::First {
+            return states.swap_remove(0);
+        }
+        let mut out = RagState::new(&states[0].query);
+        let mut seen = std::collections::HashSet::new();
+        for s in &states {
+            if s.ctx_segments.len() == s.doc_ids.len() && !s.doc_ids.is_empty() {
+                let mut off = 0usize;
+                for (&id, &len) in s.doc_ids.iter().zip(&s.ctx_segments) {
+                    let end = (off + len).min(s.context.len());
+                    if seen.insert(id) {
+                        out.doc_ids.push(id);
+                        out.ctx_segments.push(end - off);
+                        out.context.extend_from_slice(&s.context[off..end]);
+                    }
+                    off = end;
+                }
+            } else if !s.context.is_empty() {
+                // Unsegmented producer: no per-doc dedup possible.
+                out.context.extend_from_slice(&s.context);
+                out.ctx_segments.clear(); // segmentation no longer covers doc_ids
+                for &id in &s.doc_ids {
+                    if seen.insert(id) {
+                        out.doc_ids.push(id);
+                    }
+                }
+            }
+            if out.answer.is_empty() && !s.answer.is_empty() {
+                out.answer = s.answer.clone();
+            }
+            if out.verdict.is_none() {
+                out.verdict = s.verdict;
+            }
+            if out.class.is_none() {
+                out.class = s.class;
+            }
+            out.iteration = out.iteration.max(s.iteration);
+        }
+        // An unsegmented contributor invalidated the segment map above;
+        // make that explicit so a later join treats the merged context
+        // as opaque instead of mis-slicing it.
+        if out.ctx_segments.len() != out.doc_ids.len() {
+            out.ctx_segments.clear();
+        }
+        out
+    }
 }
 
 /// A unit of work dispatched to a worker instance.
 pub struct WorkItem {
     pub req: u64,
     pub node: NodeId,
+    /// Fork-branch id (0 = the request's trunk): tags which sibling
+    /// subtask this item belongs to, so the controller's join cells can
+    /// tell branch completions apart.
+    pub branch: u32,
     pub state: RagState,
     /// Controller timestamp at enqueue (for queue-wait accounting).
     pub enqueued_at: std::time::Instant,
@@ -48,16 +119,29 @@ pub struct WorkItem {
 }
 
 impl WorkItem {
-    /// Build an item with the default (uniform) service weight.
+    /// Build an item with the default (uniform) service weight on the
+    /// request trunk.
     pub fn new(req: u64, node: NodeId, state: RagState, done: Sender<Done>) -> WorkItem {
         WorkItem {
             req,
             node,
+            branch: 0,
             state,
             enqueued_at: std::time::Instant::now(),
             service_weight: 1.0,
             done,
         }
+    }
+
+    /// Build an item for a fork-branch subtask.
+    pub fn for_branch(
+        req: u64,
+        node: NodeId,
+        branch: u32,
+        state: RagState,
+        done: Sender<Done>,
+    ) -> WorkItem {
+        WorkItem { branch, ..WorkItem::new(req, node, state, done) }
     }
 }
 
@@ -66,6 +150,8 @@ pub struct Done {
     pub req: u64,
     pub node: NodeId,
     pub instance: usize,
+    /// Fork-branch id the completed item carried (0 = trunk).
+    pub branch: u32,
     pub state: RagState,
     /// Seconds of actual stage execution.
     pub service_secs: f64,
@@ -73,4 +159,66 @@ pub struct Done {
     pub queue_secs: f64,
     /// Worker-reported error, if any (the controller fails the request).
     pub error: Option<String>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn retrieved(query: &[u8], ids: &[usize]) -> RagState {
+        let mut s = RagState::new(query);
+        for &id in ids {
+            let chunk = format!("doc{id} ");
+            s.context.extend_from_slice(chunk.as_bytes());
+            s.ctx_segments.push(chunk.len());
+            s.doc_ids.push(id);
+        }
+        s
+    }
+
+    #[test]
+    fn union_merge_dedups_doc_ids_and_context() {
+        let a = retrieved(b"q", &[3, 1, 2]);
+        let b = retrieved(b"q", &[1, 4]);
+        let m = RagState::merge(MergePolicy::Union, vec![a, b]);
+        // First occurrence wins; per-branch score order preserved.
+        assert_eq!(m.doc_ids, vec![3, 1, 2, 4]);
+        assert_eq!(m.context, b"doc3 doc1 doc2 doc4 ".to_vec());
+        assert_eq!(m.ctx_segments.len(), 4);
+        assert_eq!(m.query, b"q".to_vec());
+    }
+
+    #[test]
+    fn union_merge_appends_unsegmented_context_whole() {
+        let a = retrieved(b"q", &[7]);
+        let mut web = RagState::new(b"q");
+        web.context = b"web results ".to_vec(); // no doc ids / segments
+        let m = RagState::merge(MergePolicy::Union, vec![a, web]);
+        assert_eq!(m.doc_ids, vec![7]);
+        assert!(m.context.ends_with(b"web results "));
+        // Segment map no longer covers the context → cleared.
+        assert!(m.ctx_segments.is_empty());
+    }
+
+    #[test]
+    fn first_merge_is_winner_takes_all() {
+        let a = retrieved(b"q", &[1]);
+        let b = retrieved(b"q", &[2]);
+        let m = RagState::merge(MergePolicy::First, vec![a, b]);
+        assert_eq!(m.doc_ids, vec![1]);
+    }
+
+    #[test]
+    fn scalar_fields_take_first_populated_and_max_iteration() {
+        let mut a = retrieved(b"q", &[1]);
+        a.iteration = 1;
+        let mut b = retrieved(b"q", &[2]);
+        b.verdict = Some(true);
+        b.class = Some(2);
+        b.iteration = 3;
+        let m = RagState::merge(MergePolicy::Union, vec![a, b]);
+        assert_eq!(m.verdict, Some(true));
+        assert_eq!(m.class, Some(2));
+        assert_eq!(m.iteration, 3);
+    }
 }

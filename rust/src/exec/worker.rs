@@ -179,6 +179,7 @@ where
                             req: item.req,
                             node: item.node,
                             instance: usize::MAX,
+                            branch: item.branch,
                             state: item.state,
                             service_secs: t0.elapsed().as_secs_f64(),
                             queue_secs,
@@ -205,6 +206,7 @@ where
                                 req: item.req,
                                 node: item.node,
                                 instance: usize::MAX,
+                                branch: item.branch,
                                 state: item.state,
                                 service_secs: t1.elapsed().as_secs_f64(),
                                 queue_secs,
@@ -242,6 +244,7 @@ fn finish_batch(batch: Vec<WorkItem>, t0: Instant, pending: &Arc<AtomicUsize>) {
             req: item.req,
             node: item.node,
             instance: usize::MAX, // controller fills in
+            branch: item.branch,
             state: item.state,
             service_secs: service,
             queue_secs,
@@ -317,6 +320,7 @@ fn send_step_done(d: StepDone, pending: &Arc<AtomicUsize>) {
         req: item.req,
         node: item.node,
         instance: usize::MAX,
+        branch: item.branch,
         state: item.state,
         service_secs,
         queue_secs,
@@ -330,6 +334,7 @@ fn fail_item(item: WorkItem, msg: &str) {
         req: item.req,
         node: item.node,
         instance: usize::MAX,
+        branch: item.branch,
         state: item.state,
         service_secs: 0.0,
         queue_secs: 0.0,

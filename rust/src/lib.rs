@@ -5,12 +5,19 @@
 //! serving stack for Retrieval-Augmented-Generation pipelines.
 //!
 //! * [`spec`] — the **specification layer**: pipelines as component graphs
-//!   with conditional branches, recursion, amplification and constraints
-//!   (stateful, resources, base instances), plus the four reference RAG
-//!   apps (Vanilla / Corrective / Self / Adaptive RAG).
+//!   with conditional branches, recursion, parallel fork/join dataflow
+//!   (typed `Route`/`Fork` edges, `JoinSpec` barriers with `All` /
+//!   racing `FirstK(k)` policies and state-merge semantics),
+//!   amplification and constraints (stateful, resources, base
+//!   instances), plus the reference RAG apps (Vanilla / Corrective /
+//!   Self / Adaptive RAG) and the parallel-dataflow apps (hybrid
+//!   dense ∥ web retrieval, multi-query expansion).
 //! * [`alloc`] + [`lp`] — the **deployment layer**: the paper's
 //!   generalized-network-flow resource-allocation LP (Fig. 8) solved with
-//!   an in-crate two-phase simplex (Gurobi substitute).
+//!   an in-crate two-phase simplex (Gurobi substitute); fork branches
+//!   carry full flow (all provisioned) while joins scale inflow by
+//!   1/branches, and latency models switch to critical-path over fork
+//!   groups (`profile::graph_latency`).
 //! * [`coordinator`] — the **runtime layer**: a centralized control plane
 //!   with load/state-aware routing, deadline-aware (EDF + predicted slack)
 //!   scheduling, telemetry-driven re-solving, and managed streaming with

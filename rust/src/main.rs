@@ -17,7 +17,7 @@ use harmonia::spec::apps;
 
 const USAGE: &str = "usage:
   harmonia apps
-  harmonia plan  <v-rag|c-rag|s-rag|a-rag>
+  harmonia plan  <v-rag|c-rag|s-rag|a-rag|hybrid-rag|mq-rag|...>
   harmonia sim   <app> <harmonia|langchain|haystack> [rate] [n]
   harmonia serve <app>            (requires `make artifacts`)";
 
@@ -25,13 +25,20 @@ fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(|s| s.as_str()) {
         Some("apps") => {
-            println!("{:<8} {:<12} {:<10} components", "name", "conditional", "recursive");
-            for g in apps::all() {
+            println!(
+                "{:<12} {:<12} {:<10} {:<9} components",
+                "name", "conditional", "recursive", "parallel"
+            );
+            let mut graphs = apps::all();
+            graphs.push(apps::hybrid_rag());
+            graphs.push(apps::multiquery_rag(3));
+            for g in graphs {
                 println!(
-                    "{:<8} {:<12} {:<10} {}",
+                    "{:<12} {:<12} {:<10} {:<9} {}",
                     g.name,
                     g.has_conditionals(),
                     g.has_recursion(),
+                    g.has_forks(),
                     g.work_nodes().map(|n| n.name.clone()).collect::<Vec<_>>().join(", ")
                 );
             }

@@ -16,6 +16,13 @@ pub struct ComponentStats {
     pub executions: u64,
     /// Total time requests spent queued at this component.
     pub queue_time: f64,
+    /// Total time completed fork branches stalled at this component's
+    /// join barrier waiting for their siblings (join nodes only; 0
+    /// elsewhere). Surfaces fork stall time that would otherwise fold
+    /// invisibly into end-to-end latency.
+    pub join_wait: f64,
+    /// Barrier releases recorded at this component (join nodes only).
+    pub joins: u64,
 }
 
 impl ComponentStats {
@@ -32,6 +39,15 @@ impl ComponentStats {
             0.0
         } else {
             self.queue_time / self.executions as f64
+        }
+    }
+
+    /// Mean sibling stall per barrier release (0 for non-join nodes).
+    pub fn mean_join_wait(&self) -> f64 {
+        if self.joins == 0 {
+            0.0
+        } else {
+            self.join_wait / self.joins as f64
         }
     }
 }
@@ -106,6 +122,16 @@ impl Recorder {
         e.busy_time += service;
         e.executions += 1;
         e.queue_time += queued;
+    }
+
+    /// Record one barrier release at a join component: `stall` is the
+    /// total time already-arrived branches spent waiting for the arrival
+    /// that released the barrier.
+    pub fn on_join_wait(&mut self, component: &str, stall: f64) {
+        debug_assert!(stall >= 0.0);
+        let e = self.components.entry(component.to_string()).or_default();
+        e.join_wait += stall;
+        e.joins += 1;
     }
 
     pub fn completed(&self) -> u64 {
@@ -216,6 +242,31 @@ impl RunReport {
     pub fn goodput(&self) -> f64 {
         self.throughput * (1.0 - self.slo_violation_rate)
     }
+
+    /// Per-node latency/visit breakdown (queue vs service vs join-wait)
+    /// rendered with `util::table` — the bench harnesses print this so
+    /// fork stall time is visible instead of folded into end-to-end
+    /// latency. Rows are name-sorted for deterministic output.
+    pub fn breakdown_table(&self, title: &str) -> String {
+        let mut names: Vec<&String> = self.components.keys().collect();
+        names.sort();
+        let mut t = crate::util::table::Table::new(
+            title,
+            &["component", "visits", "queue ms", "service ms", "join-wait ms", "busy s"],
+        );
+        for name in names {
+            let c = &self.components[name];
+            t.row(&[
+                name.clone(),
+                c.executions.to_string(),
+                crate::util::table::f(c.mean_queue() * 1e3, 2),
+                crate::util::table::f(c.mean_service() * 1e3, 2),
+                crate::util::table::f(c.mean_join_wait() * 1e3, 2),
+                crate::util::table::f(c.busy_time, 2),
+            ]);
+        }
+        t.render()
+    }
 }
 
 #[cfg(test)]
@@ -247,6 +298,25 @@ mod tests {
         assert_eq!(g.executions, 2);
         assert!((g.mean_service() - 0.3).abs() < 1e-12);
         assert!((g.mean_queue() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn join_wait_tracked_and_rendered() {
+        let mut r = Recorder::new();
+        r.on_execution("generator", 0.1, 0.0);
+        r.on_join_wait("generator", 0.05);
+        r.on_join_wait("generator", 0.07);
+        let rep = r.report();
+        let g = &rep.components["generator"];
+        assert_eq!(g.joins, 2);
+        assert!((g.mean_join_wait() - 0.06).abs() < 1e-12);
+        // Non-join components stay at zero.
+        r.on_execution("retriever", 0.1, 0.0);
+        assert_eq!(r.report().components["retriever"].mean_join_wait(), 0.0);
+        let table = rep.breakdown_table("breakdown");
+        assert!(table.contains("join-wait ms"), "{table}");
+        assert!(table.contains("generator"), "{table}");
+        assert!(table.contains("60.00"), "mean join wait in ms: {table}");
     }
 
     #[test]

@@ -13,4 +13,6 @@ pub mod models;
 pub mod profiler;
 
 pub use models::{DecodeCostModel, GenBatching, LatencyModel, RequestFeatures};
-pub use profiler::{profile_graph, profile_graph_gen, profile_graph_gen_at, Profile};
+pub use profiler::{
+    graph_latency, profile_graph, profile_graph_gen, profile_graph_gen_at, Profile,
+};

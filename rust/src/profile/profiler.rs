@@ -4,8 +4,10 @@
 
 use std::collections::HashMap;
 
-use crate::profile::models::{instance_concurrency, DecodeCostModel, GenBatching, LatencyModel};
-use crate::spec::graph::{ComponentKind, NodeId, PipelineGraph, ResourceKind};
+use crate::profile::models::{
+    instance_concurrency, DecodeCostModel, GenBatching, LatencyModel, RequestFeatures,
+};
+use crate::spec::graph::{Adjacency, ComponentKind, ForkGroup, NodeId, PipelineGraph, ResourceKind};
 use crate::util::rng::Rng;
 use crate::workload::TraceConfig;
 
@@ -27,6 +29,113 @@ pub struct Profile {
 impl Profile {
     pub fn alpha_for(&self, node: NodeId, k: ResourceKind) -> f64 {
         *self.alpha.get(&(node, k)).unwrap_or(&0.0)
+    }
+}
+
+/// The sampling walk's shared state: graph indexes (adjacency + resolved
+/// fork groups, built once per profile instead of per hop) and the
+/// accumulators the walk fills.
+struct ProfileWalk<'a> {
+    graph: &'a PipelineGraph,
+    adj: Adjacency,
+    fork_groups: HashMap<NodeId, ForkGroup>,
+    trace_cfg: TraceConfig,
+    dcm: DecodeCostModel,
+    gen: GenBatching,
+    gen_occupancy: usize,
+    service_sums: HashMap<NodeId, (f64, usize)>,
+    edge_counts: Vec<usize>,
+    node_exits: HashMap<NodeId, usize>,
+    hops: usize,
+}
+
+impl ProfileWalk<'_> {
+    /// Walk one segment: from `cur` until the sink or `stop` (a fork
+    /// branch's join, exclusive). Fork-free graphs take exactly the
+    /// pre-fork code path — same visits, same rng draws, bit-identical
+    /// profiles. At a fork every branch is walked in edge order (each
+    /// fork edge counted once per traversal, the fork's exit once), then
+    /// the walk resumes at the join.
+    fn segment(
+        &mut self,
+        rng: &mut Rng,
+        feats: &RequestFeatures,
+        mut cur: NodeId,
+        stop: Option<NodeId>,
+    ) {
+        while cur != self.graph.sink && Some(cur) != stop && self.hops < 1000 {
+            self.hops += 1;
+            let node = self.graph.node(cur);
+            let model = LatencyModel::for_kind(&node.kind);
+            // Generator visits under an explicit batching model: price
+            // the visit with the decomposed prefill+decode cost at the
+            // instance's steady-state occupancy. Static batching further
+            // inflates the decode count to the expected batch maximum
+            // (Monte-Carlo over B−1 co-batched draws from the same
+            // workload the trace generator uses) — the run-to-completion
+            // penalty the LP previously never saw.
+            let batched_gen =
+                matches!(node.kind, ComponentKind::Generator) && self.gen != GenBatching::Legacy;
+            // Sharded components scatter-gather: per-request service time
+            // shrinks by the calibrated shard factor, and the resulting α
+            // is already the *per-shard-pool* coefficient the LP uses.
+            let mut t = if batched_gen {
+                let b = self.gen_occupancy.max(1);
+                let base = match self.gen {
+                    GenBatching::Continuous => self.dcm.continuous(feats, b),
+                    _ => {
+                        let mut max_steps = feats.gen_len;
+                        for _ in 1..b {
+                            let co = self.trace_cfg.sample_gen_len(rng);
+                            max_steps = max_steps.max(co);
+                        }
+                        self.dcm.static_batch(feats, max_steps, b)
+                    }
+                };
+                base * model.noise(rng)
+            } else {
+                model.sample(feats, rng)
+            };
+            t *= crate::profile::models::shard_service_factor(node.shards);
+            // Cached components: a `cache_hit_rate` fraction of visits
+            // costs only the hit fraction (sampled, same model the DES
+            // uses), so the profiled α — and with it the LP priors and
+            // the autoscaler targets — is cache-adjusted. The rng draw
+            // happens only for cached nodes, keeping uncached profiles
+            // bit-identical to the pre-cache code path.
+            if node.cache_hit_rate > 0.0 && rng.chance(node.cache_hit_rate) {
+                t *= crate::profile::models::CACHE_HIT_COST_FRAC;
+            }
+            let e = self.service_sums.entry(cur).or_insert((0.0, 0));
+            e.0 += t;
+            e.1 += 1;
+            // Parallel fan-out: traverse every branch, then resume at
+            // the join. Each fork edge fires once per traversal while
+            // the node exits once — the empirical branch "probability"
+            // the LP sees is exactly 1 per branch (full flow).
+            if let Some(fg) = self.fork_groups.get(&cur) {
+                let fg = fg.clone();
+                for &ei in &fg.edges {
+                    self.edge_counts[ei] += 1;
+                }
+                *self.node_exits.entry(cur).or_insert(0) += 1;
+                for &entry in &fg.targets {
+                    self.segment(rng, feats, entry, Some(fg.join));
+                }
+                cur = fg.join;
+                continue;
+            }
+            // Sample next edge (probabilistic routing).
+            let edges = self.adj.out_edges(cur);
+            if edges.is_empty() {
+                break;
+            }
+            let weights: Vec<f64> = edges.iter().map(|&i| self.graph.edges[i].prob()).collect();
+            let pick = edges[rng.weighted(&weights)];
+            self.edge_counts[pick] += 1;
+            *self.node_exits.entry(cur).or_insert(0) += 1;
+            cur = self.graph.edges[pick].to;
+        }
     }
 }
 
@@ -67,81 +176,29 @@ pub fn profile_graph_gen_at(
     gen_occupancy: usize,
 ) -> Profile {
     let mut rng = Rng::new(seed);
-    let trace_cfg = TraceConfig::default();
-    let dcm = DecodeCostModel::generator();
-    let mut service_sums: HashMap<NodeId, (f64, usize)> = HashMap::new();
-    let mut edge_counts = vec![0usize; graph.edges.len()];
-    let mut node_exits: HashMap<NodeId, usize> = HashMap::new();
+    let mut walk = ProfileWalk {
+        graph,
+        adj: graph.adjacency(),
+        fork_groups: graph.fork_groups(),
+        trace_cfg: TraceConfig::default(),
+        dcm: DecodeCostModel::generator(),
+        gen,
+        gen_occupancy,
+        service_sums: HashMap::new(),
+        edge_counts: vec![0usize; graph.edges.len()],
+        node_exits: HashMap::new(),
+        hops: 0,
+    };
 
     for _ in 0..n {
-        let feats = trace_cfg.sample_features(&mut rng);
-        // Walk the graph from source, sampling branches.
-        let mut cur = graph.source;
-        let mut hops = 0;
-        while cur != graph.sink && hops < 1000 {
-            hops += 1;
-            let node = graph.node(cur);
-            let model = LatencyModel::for_kind(&node.kind);
-            // Generator visits under an explicit batching model: price
-            // the visit with the decomposed prefill+decode cost at the
-            // instance's steady-state occupancy. Static batching further
-            // inflates the decode count to the expected batch maximum
-            // (Monte-Carlo over B−1 co-batched draws from the same
-            // workload the trace generator uses) — the run-to-completion
-            // penalty the LP previously never saw.
-            let batched_gen = matches!(node.kind, ComponentKind::Generator)
-                && gen != GenBatching::Legacy;
-            // Sharded components scatter-gather: per-request service time
-            // shrinks by the calibrated shard factor, and the resulting α
-            // is already the *per-shard-pool* coefficient the LP uses.
-            let mut t = if batched_gen {
-                let b = gen_occupancy.max(1);
-                let base = match gen {
-                    GenBatching::Continuous => dcm.continuous(&feats, b),
-                    _ => {
-                        let mut max_steps = feats.gen_len;
-                        for _ in 1..b {
-                            let co = trace_cfg.sample_gen_len(&mut rng);
-                            max_steps = max_steps.max(co);
-                        }
-                        dcm.static_batch(&feats, max_steps, b)
-                    }
-                };
-                base * model.noise(&mut rng)
-            } else {
-                model.sample(&feats, &mut rng)
-            };
-            t *= crate::profile::models::shard_service_factor(node.shards);
-            // Cached components: a `cache_hit_rate` fraction of visits
-            // costs only the hit fraction (sampled, same model the DES
-            // uses), so the profiled α — and with it the LP priors and
-            // the autoscaler targets — is cache-adjusted. The rng draw
-            // happens only for cached nodes, keeping uncached profiles
-            // bit-identical to the pre-cache code path.
-            if node.cache_hit_rate > 0.0 && rng.chance(node.cache_hit_rate) {
-                t *= crate::profile::models::CACHE_HIT_COST_FRAC;
-            }
-            let e = service_sums.entry(cur).or_insert((0.0, 0));
-            e.0 += t;
-            e.1 += 1;
-            // Sample next edge.
-            let edges: Vec<usize> = graph
-                .edges
-                .iter()
-                .enumerate()
-                .filter(|(_, e)| e.from == cur)
-                .map(|(i, _)| i)
-                .collect();
-            if edges.is_empty() {
-                break;
-            }
-            let weights: Vec<f64> = edges.iter().map(|&i| graph.edges[i].prob).collect();
-            let pick = edges[rng.weighted(&weights)];
-            edge_counts[pick] += 1;
-            *node_exits.entry(cur).or_insert(0) += 1;
-            cur = graph.edges[pick].to;
-        }
+        let feats = walk.trace_cfg.sample_features(&mut rng);
+        // Walk the graph from source, sampling branches; fork groups
+        // traverse every branch (sequentially here — the profiler cares
+        // about per-node work, not wall-clock overlap).
+        walk.hops = 0;
+        walk.segment(&mut rng, &feats, graph.source, None);
     }
+    let ProfileWalk { service_sums, edge_counts, node_exits, .. } = walk;
 
     let mut mean_service = HashMap::new();
     let mut alpha = HashMap::new();
@@ -169,7 +226,7 @@ pub fn profile_graph_gen_at(
         .map(|(i, e)| {
             let exits = node_exits.get(&e.from).copied().unwrap_or(0);
             if exits == 0 {
-                e.prob // unvisited: keep prior
+                e.prob() // unvisited: keep prior (1.0 for fork edges)
             } else {
                 edge_counts[i] as f64 / exits as f64
             }
@@ -181,6 +238,38 @@ pub fn profile_graph_gen_at(
     let gamma = graph.nodes.iter().map(|n| (n.id, n.gamma)).collect();
 
     Profile { mean_service, alpha, edge_probs, gamma, samples: n }
+}
+
+/// Expected end-to-end **latency** of one request under `mean_service`
+/// priors. For fork-free graphs this is the familiar visit-rate-weighted
+/// sum of node means; with parallel dataflow it becomes a critical-path
+/// estimate — each fork group contributes only its slowest branch (the
+/// k-th fastest for `FirstK(k)` joins), because sibling branches overlap
+/// in time instead of adding (`PipelineGraph::latency_edge_weights`).
+/// This is the latency model behind `sched::SlackPredictor`'s
+/// remaining-time estimates, and the reason a fork cuts TTFT while the
+/// allocation LP still provisions every branch at full flow.
+pub fn graph_latency(graph: &PipelineGraph, mean_service: &HashMap<NodeId, f64>) -> f64 {
+    let w = graph.latency_edge_weights(mean_service);
+    let n = graph.nodes.len();
+    let mut v = vec![0.0f64; n];
+    v[graph.source.0] = 1.0;
+    for _ in 0..10_000 {
+        let mut nv = vec![0.0f64; n];
+        nv[graph.source.0] = 1.0;
+        for (i, e) in graph.edges.iter().enumerate() {
+            nv[e.to.0] += v[e.from.0] * graph.node(e.from).gamma * w[i];
+        }
+        let diff: f64 = nv.iter().zip(&v).map(|(a, b)| (a - b).abs()).sum();
+        v = nv;
+        if diff < 1e-12 {
+            break;
+        }
+    }
+    v.iter()
+        .enumerate()
+        .map(|(i, &vi)| vi * mean_service.get(&NodeId(i)).copied().unwrap_or(0.0))
+        .sum()
 }
 
 #[cfg(test)]
@@ -294,6 +383,73 @@ mod tests {
         let a = profile_graph_gen(&g, 500, 29, GenBatching::Legacy).mean_service[&retr];
         let b = profile_graph_gen(&g, 500, 29, GenBatching::Continuous).mean_service[&retr];
         assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn fork_branches_profile_at_full_flow_with_unit_edge_probs() {
+        let g = apps::hybrid_rag();
+        let p = profile_graph(&g, 600, 13);
+        // Every branch node sampled once per request.
+        for name in ["retriever", "websearch", "generator"] {
+            let id = g.node_by_name(name).unwrap().id;
+            assert!(p.mean_service[&id] > 0.0, "{name} unprofiled");
+        }
+        // Fork edges report empirical probability 1 — full flow per
+        // branch, which is what the LP's conservation rows consume.
+        for (i, e) in g.edges.iter().enumerate() {
+            if e.is_fork() {
+                assert!(
+                    (p.edge_probs[i] - 1.0).abs() < 1e-12,
+                    "fork edge prob {}",
+                    p.edge_probs[i]
+                );
+            }
+        }
+        // Multi-query: every variant branch is walked (gets real means).
+        let mq = apps::multiquery_rag(3);
+        let pm = profile_graph(&mq, 300, 13);
+        for i in 0..3 {
+            let id = mq.node_by_name(&format!("retriever_q{i}")).unwrap().id;
+            assert!(pm.mean_service[&id] > 0.0, "variant {i} unprofiled");
+        }
+    }
+
+    #[test]
+    fn graph_latency_is_critical_path_not_branch_sum() {
+        // Hybrid vs its serialized control, same node means: the
+        // parallel estimate must equal serial minus the overlapped
+        // (faster) branch — max(retr, web) instead of retr + web.
+        let par = apps::hybrid_rag();
+        let seq = apps::hybrid_rag_sequential();
+        let means = |g: &crate::spec::PipelineGraph| -> HashMap<NodeId, f64> {
+            g.nodes
+                .iter()
+                .map(|n| {
+                    let m = match n.name.as_str() {
+                        "retriever" => 0.10,
+                        "websearch" => 0.15,
+                        "generator" => 0.10,
+                        _ => 0.0,
+                    };
+                    (n.id, m)
+                })
+                .collect()
+        };
+        let lp = graph_latency(&par, &means(&par));
+        let ls = graph_latency(&seq, &means(&seq));
+        assert!((ls - 0.35).abs() < 1e-9, "serial sum {ls}");
+        assert!((lp - 0.25).abs() < 1e-9, "parallel critical path {lp}");
+        // Fork-free graphs: identical to the visit-weighted sum.
+        let g = apps::corrective_rag();
+        let p = profile_graph(&g, 800, 3);
+        let direct: f64 = g
+            .visit_rates()
+            .iter()
+            .enumerate()
+            .map(|(i, v)| v * p.mean_service.get(&NodeId(i)).copied().unwrap_or(0.0))
+            .sum();
+        let cp = graph_latency(&g, &p.mean_service);
+        assert!((cp - direct).abs() < 1e-9, "{cp} vs {direct}");
     }
 
     #[test]

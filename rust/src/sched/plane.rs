@@ -241,6 +241,12 @@ impl ControlPlane {
         self.telemetry.on_complete(node, service);
     }
 
+    /// An enqueued item was discarded without executing (cancelled fork
+    /// loser): rebalances the telemetry in-flight gauge only.
+    pub fn on_cancelled(&mut self, node: NodeId) {
+        self.telemetry.on_cancelled(node);
+    }
+
     pub fn on_edge(&mut self, edge_idx: usize, node: NodeId) {
         self.telemetry.on_edge(edge_idx, node);
     }

@@ -36,7 +36,11 @@ pub struct SlackPredictor {
     models: HashMap<NodeId, OnlineLinReg>,
     /// expected_visits[from][node]: expected visits of `node` for a
     /// request currently about to execute at `from` (includes `from`
-    /// itself once).
+    /// itself once). Latency semantics: within a fork group only the
+    /// critical branch contributes (parallel siblings overlap in time,
+    /// they don't add — `PipelineGraph::latency_edge_weights`), so the
+    /// predicted remaining time is a critical-path estimate, not a sum
+    /// of concurrent work.
     expected_visits: Vec<Vec<f64>>,
     /// Fallback mean service per node (profile prior) until warmed up.
     priors: HashMap<NodeId, f64>,
@@ -45,9 +49,12 @@ pub struct SlackPredictor {
 impl SlackPredictor {
     pub fn new(graph: &PipelineGraph, priors: &HashMap<NodeId, f64>) -> Self {
         let n = graph.nodes.len();
+        // Critical-branch edge weights under the deploy-time priors
+        // (identical to raw probabilities for fork-free graphs).
+        let weights = graph.latency_edge_weights(priors);
         let mut expected_visits = vec![vec![0.0; n]; n];
         for start in 0..n {
-            expected_visits[start] = visits_from(graph, NodeId(start));
+            expected_visits[start] = visits_from(graph, &weights, NodeId(start));
         }
         SlackPredictor {
             models: graph.nodes.iter().map(|nd| (nd.id, OnlineLinReg::new(3, 0.995))).collect(),
@@ -90,8 +97,12 @@ impl SlackPredictor {
 }
 
 /// Expected visits of every node for a request starting at `start`
-/// (fixed-point of v_j = [j==start] + Σ_i v_i γ_i p_{i,j}, sink absorbs).
-fn visits_from(graph: &PipelineGraph, start: NodeId) -> Vec<f64> {
+/// (fixed-point of v_j = [j==start] + Σ_i v_i γ_i w_{i,j}, sink absorbs).
+/// `weights` are the per-edge latency weights (routing probabilities,
+/// with fork groups reduced to their critical branch): starting inside a
+/// non-critical branch still yields the correct downstream path, because
+/// only the fork edges themselves are reweighted.
+fn visits_from(graph: &PipelineGraph, weights: &[f64], start: NodeId) -> Vec<f64> {
     let n = graph.nodes.len();
     let mut v = vec![0.0f64; n];
     v[start.0] = 1.0;
@@ -101,8 +112,8 @@ fn visits_from(graph: &PipelineGraph, start: NodeId) -> Vec<f64> {
         // Note: edges re-entering `start` are counted — those are loop
         // re-visits. Upstream nodes stay 0 (no flow reaches them from
         // `start`), so only the downstream/loop structure contributes.
-        for e in &graph.edges {
-            nv[e.to.0] += v[e.from.0] * graph.node(e.from).gamma * e.prob;
+        for (i, e) in graph.edges.iter().enumerate() {
+            nv[e.to.0] += v[e.from.0] * graph.node(e.from).gamma * weights[i];
         }
         let diff: f64 = nv.iter().zip(&v).map(|(a, b)| (a - b).abs()).sum();
         v = nv;
@@ -259,6 +270,38 @@ mod tests {
         // 4 loop nodes × 0.1 × ~1.54 expected iterations ≈ 0.57; must
         // clearly exceed the single-pass sum of 0.4.
         assert!(rem > 0.45, "remaining {rem}");
+    }
+
+    #[test]
+    fn remaining_time_is_critical_path_over_fork_groups() {
+        // Hybrid: retriever (0.1) ∥ websearch (0.15) → generator (0.1).
+        // Remaining-at-source must be max(branches) + generator, not the
+        // sum of both branches.
+        let g = apps::hybrid_rag();
+        let priors: HashMap<NodeId, f64> = g
+            .nodes
+            .iter()
+            .map(|n| {
+                let m = match n.name.as_str() {
+                    "retriever" => 0.10,
+                    "websearch" => 0.15,
+                    "generator" => 0.10,
+                    _ => 0.0,
+                };
+                (n.id, m)
+            })
+            .collect();
+        let sp = SlackPredictor::new(&g, &priors);
+        let f = features();
+        let at_source = sp.predict_remaining(g.source, &f);
+        // Priors (not warmed models) answer: 0.15 + 0.10 = 0.25, and
+        // strictly under the 0.35 branch sum.
+        assert!((at_source - 0.25).abs() < 1e-9, "remaining {at_source}");
+        // From inside the non-critical branch the whole downstream chain
+        // still counts: retriever + generator.
+        let retr = g.node_by_name("retriever").unwrap().id;
+        let at_retr = sp.predict_remaining(retr, &f);
+        assert!((at_retr - 0.20).abs() < 1e-9, "remaining {at_retr}");
     }
 
     #[test]

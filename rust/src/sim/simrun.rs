@@ -23,7 +23,7 @@ use crate::profile::models::{
 };
 use crate::profile::{profile_graph_gen, Profile};
 use crate::sched::{ControlPlane, PrioQueue, QueueDiscipline, SchedConfig};
-use crate::spec::graph::{ComponentKind, NodeId, PipelineGraph};
+use crate::spec::graph::{Adjacency, ComponentKind, ForkGroup, NodeId, PipelineGraph};
 use crate::util::rng::Rng;
 use crate::workload::TraceConfig;
 
@@ -144,18 +144,41 @@ pub struct SimResult {
     pub reallocations: usize,
     /// Final up-instance counts per component name.
     pub final_instances: HashMap<String, usize>,
+    /// Stateful router bindings still held when the run ended — the
+    /// slot-leak audit's probe: 0 whenever every request reached a
+    /// terminal path (completion, shed, or cancelled fork loser).
+    pub residual_bindings: usize,
 }
 
 #[derive(Clone, Debug)]
 enum Ev {
     Arrival(usize),
-    /// Request runnable at a node. `earliest_finish` > 0 carries the
-    /// streaming floor (cannot finish before upstream's last chunk);
-    /// `stream_chunks` > 0 adds per-chunk preemption busy-time downstream.
-    Dispatch { req: usize, node: NodeId, earliest_finish: f64, stream_chunks: f64 },
-    Finish { req: usize, node: NodeId, inst: usize, service: f64 },
+    /// Request (or fork-branch subtask, `branch` > 0) runnable at a
+    /// node. `earliest_finish` > 0 carries the streaming floor (cannot
+    /// finish before upstream's last chunk); `stream_chunks` > 0 adds
+    /// per-chunk preemption busy-time downstream.
+    Dispatch { req: usize, node: NodeId, branch: u32, earliest_finish: f64, stream_chunks: f64 },
+    Finish { req: usize, node: NodeId, inst: usize, service: f64, branch: u32 },
     ControlTick,
     InstanceUp { node: NodeId, inst: usize },
+}
+
+/// Barrier state of one in-flight fork: which sibling branches are still
+/// out, when the completed ones arrived, and which branch context the
+/// join continues on once released.
+#[derive(Clone, Debug)]
+struct JoinCell {
+    join: NodeId,
+    /// Arrivals that release the barrier (`branches` for All, k for
+    /// FirstK(k)).
+    need: usize,
+    /// Branch context of the fork node itself (0 = trunk; an enclosing
+    /// branch id for nested forks) — the join resumes on it.
+    parent: u32,
+    /// Branch ids not yet arrived.
+    outstanding: Vec<u32>,
+    /// Virtual arrival times of completed branches (join-wait stats).
+    arrivals: Vec<f64>,
 }
 
 struct SimInstance {
@@ -171,6 +194,8 @@ struct SimInstance {
 #[derive(Clone, Debug)]
 struct QueuedItem {
     req: usize,
+    /// Fork-branch subtask id (0 = the request's trunk).
+    branch: u32,
     enqueued_at: f64,
     earliest_finish: f64,
     /// Number of streamed chunks feeding this stage (0 = not streamed).
@@ -185,6 +210,10 @@ struct SimReq {
     done: bool,
     /// TTFT already recorded (first generator visit only).
     ttft_done: bool,
+    /// Branch-id allocator (fork subtasks; 0 is the trunk).
+    next_branch: u32,
+    /// Join-cell allocator (one per executed fork).
+    next_cell: u32,
 }
 
 /// The simulation world. Execution state only — policy lives in `plane`.
@@ -212,6 +241,22 @@ pub struct SimWorld {
     /// Branches pre-sampled at service start (streamable node, hop not
     /// streamed): Finish must honor the already-decided control flow.
     pre_sampled: HashMap<(usize, NodeId), NodeId>,
+    /// Cached adjacency index (edge ids per node, edge order) — the DES
+    /// samples branches every hop; no per-hop O(E) scans.
+    adj: Adjacency,
+    /// Fork node → resolved fork group (branch entries, join, policy).
+    fork_map: HashMap<NodeId, ForkGroup>,
+    /// (req, cell id) → barrier state of an in-flight fork.
+    join_cells: HashMap<(usize, u32), JoinCell>,
+    /// (req, branch) → the join cell the branch reports to.
+    branch_cell: HashMap<(usize, u32), u32>,
+    /// Deterministic per-branch rng streams (forked from the parent
+    /// stream in declaration order at fork time).
+    branch_rngs: HashMap<(usize, u32), Rng>,
+    /// FirstK losers: subtasks cancelled by a released barrier. Queued
+    /// items are discarded lazily when popped; in-service ones free
+    /// their slot at Finish and go no further.
+    cancelled: HashSet<(usize, u32)>,
     decision_time: f64,
     decisions: u64,
     monolithic: bool,
@@ -237,6 +282,8 @@ impl SimWorld {
                 rng: rng.fork(),
                 done: false,
                 ttft_done: false,
+                next_branch: 0,
+                next_cell: 0,
             })
             .collect();
 
@@ -255,11 +302,13 @@ impl SimWorld {
         if cfg.profile_bias != 1.0 {
             let b2 = cfg.profile_bias * cfg.profile_bias;
             for node in &graph.nodes {
+                // Only probabilistic branch mixes drift; fork edges are
+                // structural (always 1 per branch) and stay unbiased.
                 let out: Vec<usize> = graph
                     .edges
                     .iter()
                     .enumerate()
-                    .filter(|(_, e)| e.from == node.id)
+                    .filter(|(_, e)| e.from == node.id && !e.is_fork())
                     .map(|(i, _)| i)
                     .collect();
                 if out.len() < 2 {
@@ -322,6 +371,12 @@ impl SimWorld {
             node_queues: HashMap::new(),
             pending_stream: HashSet::new(),
             pre_sampled: HashMap::new(),
+            adj: graph.adjacency(),
+            fork_map: graph.fork_groups(),
+            join_cells: HashMap::new(),
+            branch_cell: HashMap::new(),
+            branch_rngs: HashMap::new(),
+            cancelled: HashSet::new(),
             decision_time: 0.0,
             decisions: 0,
             monolithic,
@@ -415,22 +470,30 @@ impl SimWorld {
                     let entry =
                         if self.monolithic { self.graph.source } else { self.first_node() };
                     if self.admit_arrival(i, entry, now) {
-                        self.q.schedule_in(
-                            self.cfg.controller_overhead,
-                            Ev::Dispatch {
-                                req: i,
-                                node: entry,
-                                earliest_finish: 0.0,
-                                stream_chunks: 0.0,
-                            },
-                        );
+                        // A fork at the pipeline entry fans the request
+                        // out immediately (hybrid retrieval: dense ∥ web
+                        // from the first hop).
+                        if !self.monolithic && self.fork_map.contains_key(&self.graph.source) {
+                            self.do_fork(i, self.graph.source, 0);
+                        } else {
+                            self.q.schedule_in(
+                                self.cfg.controller_overhead,
+                                Ev::Dispatch {
+                                    req: i,
+                                    node: entry,
+                                    branch: 0,
+                                    earliest_finish: 0.0,
+                                    stream_chunks: 0.0,
+                                },
+                            );
+                        }
                     }
                 }
-                Ev::Dispatch { req, node, earliest_finish, stream_chunks } => {
-                    self.on_dispatch(req, node, earliest_finish, stream_chunks)
+                Ev::Dispatch { req, node, branch, earliest_finish, stream_chunks } => {
+                    self.on_dispatch(req, node, branch, earliest_finish, stream_chunks)
                 }
-                Ev::Finish { req, node, inst, service } => {
-                    self.on_finish(req, node, inst, service)
+                Ev::Finish { req, node, inst, service, branch } => {
+                    self.on_finish(req, node, inst, service, branch)
                 }
                 Ev::ControlTick => {
                     self.on_control_tick();
@@ -471,7 +534,106 @@ impl SimWorld {
             lp_solve_secs: self.plane.autoscaler.solve_times.clone(),
             reallocations: self.plane.autoscaler.commits.len(),
             final_instances,
+            residual_bindings: self.plane.router.total_bindings(),
         }
+    }
+
+    /// Per-request/per-branch rng stream: the trunk uses the request's
+    /// own stream, fork subtasks use theirs (forked deterministically at
+    /// fork time) so sibling branches never perturb each other's draws
+    /// regardless of event interleaving.
+    fn req_rng(&mut self, req: usize, branch: u32) -> &mut Rng {
+        if branch == 0 {
+            &mut self.reqs[req].rng
+        } else {
+            self.branch_rngs.get_mut(&(req, branch)).expect("live branch rng")
+        }
+    }
+
+    /// Fan a request out across a fork's branches: one sibling subtask
+    /// per branch, each with its own rng stream and a shared join cell.
+    fn do_fork(&mut self, req: usize, node: NodeId, parent: u32) {
+        let fg = self.fork_map.get(&node).expect("fork node").clone();
+        let cell_id = {
+            let r = &mut self.reqs[req];
+            r.next_cell += 1;
+            r.next_cell
+        };
+        for &ei in &fg.edges {
+            self.plane.on_edge(ei, node);
+        }
+        let mut spawned = Vec::with_capacity(fg.targets.len());
+        for &target in &fg.targets {
+            let b = {
+                let r = &mut self.reqs[req];
+                r.next_branch += 1;
+                r.next_branch
+            };
+            let child = self.req_rng(req, parent).fork();
+            self.branch_rngs.insert((req, b), child);
+            self.branch_cell.insert((req, b), cell_id);
+            spawned.push((b, target));
+        }
+        self.join_cells.insert(
+            (req, cell_id),
+            JoinCell {
+                join: fg.join,
+                need: fg.need,
+                parent,
+                outstanding: spawned.iter().map(|&(b, _)| b).collect(),
+                arrivals: Vec::new(),
+            },
+        );
+        for (b, target) in spawned {
+            self.q.schedule_in(
+                self.cfg.controller_overhead,
+                Ev::Dispatch {
+                    req,
+                    node: target,
+                    branch: b,
+                    earliest_finish: 0.0,
+                    stream_chunks: 0.0,
+                },
+            );
+        }
+    }
+
+    /// Drop a subtask's branch bookkeeping (join arrival, cancellation,
+    /// or lazy discard of a queued loser).
+    fn purge_branch(&mut self, req: usize, branch: u32) {
+        self.branch_cell.remove(&(req, branch));
+        self.branch_rngs.remove(&(req, branch));
+    }
+
+    /// One fork branch reached its join barrier. Returns control-flow to
+    /// the caller: when the barrier releases, the join node is dispatched
+    /// exactly once on the fork's parent branch context; FirstK losers
+    /// are cancelled without touching queue or engine state directly.
+    fn on_join_arrival(&mut self, req: usize, branch: u32, cell_id: u32, node: NodeId) {
+        self.purge_branch(req, branch);
+        let now = self.q.now();
+        let released = {
+            let cell = self.join_cells.get_mut(&(req, cell_id)).expect("join cell");
+            debug_assert_eq!(cell.join, node, "branch arrived at a foreign join");
+            cell.outstanding.retain(|&b| b != branch);
+            cell.arrivals.push(now);
+            cell.arrivals.len() >= cell.need
+        };
+        if !released {
+            return;
+        }
+        let cell = self.join_cells.remove(&(req, cell_id)).expect("join cell");
+        for &loser in &cell.outstanding {
+            self.cancelled.insert((req, loser));
+        }
+        // Join-wait: time the earlier arrivals stalled at the barrier
+        // waiting for the release — fork slack the breakdown table
+        // surfaces instead of folding into end-to-end latency.
+        let stall: f64 =
+            cell.arrivals[..cell.arrivals.len() - 1].iter().map(|t| now - t).sum();
+        let name = self.graph.node(node).name.clone();
+        self.recorder.on_join_wait(&name, stall);
+        self.dispatch_work(req, node, cell.parent, 0.0, 0.0);
     }
 
     /// Admission gate for one arrival; true = admitted. The decision is
@@ -527,15 +689,48 @@ impl SimWorld {
 
     // ---- event handlers --------------------------------------------------
 
-    fn on_dispatch(&mut self, req: usize, node: NodeId, earliest_finish: f64, stream_chunks: f64) {
-        let now = self.q.now();
+    fn on_dispatch(
+        &mut self,
+        req: usize,
+        node: NodeId,
+        branch: u32,
+        earliest_finish: f64,
+        stream_chunks: f64,
+    ) {
+        // Cancelled FirstK loser: dropped before it touches any queue or
+        // slot (it was still between stages when the barrier released).
+        if self.cancelled.remove(&(req, branch)) {
+            self.purge_branch(req, branch);
+            return;
+        }
         if node == self.graph.sink {
             return self.complete(req);
         }
         if self.monolithic {
             return self.monolith_dispatch(req);
         }
+        // A branch arriving at its fork's join barrier reports there
+        // instead of executing the join directly.
+        if let Some(&cell_id) = self.branch_cell.get(&(req, branch)) {
+            if self.join_cells.get(&(req, cell_id)).map(|c| c.join) == Some(node) {
+                return self.on_join_arrival(req, branch, cell_id, node);
+            }
+        }
+        self.dispatch_work(req, node, branch, earliest_finish, stream_chunks);
+    }
 
+    /// Route + enqueue/start one unit of work at `node` (the pre-fork
+    /// dispatch body, now shared by trunk dispatches, branch subtasks,
+    /// and released join barriers).
+    fn dispatch_work(
+        &mut self,
+        req: usize,
+        node: NodeId,
+        branch: u32,
+        earliest_finish: f64,
+        stream_chunks: f64,
+    ) {
+        let now = self.q.now();
         // Controller decision (routing + priority) — timed for Fig. 13.
         let t0 = Instant::now();
         let spec_stateful = self.graph.node(node).stateful;
@@ -557,7 +752,7 @@ impl SimWorld {
         self.decisions += 1;
 
         self.plane.on_enqueue(node);
-        let item = QueuedItem { req, enqueued_at: now, earliest_finish, stream_chunks };
+        let item = QueuedItem { req, branch, enqueued_at: now, earliest_finish, stream_chunks };
         // Static run-to-completion batching: the generator engine serves
         // one batch at a time, so a request may only start when the
         // instance is idle — and then it drags queued work in with it up
@@ -630,6 +825,13 @@ impl SimWorld {
                 .pop()
                 .or_else(|| self.node_queues.get_mut(&node).and_then(|q| q.pop()))
             {
+                // Lazy discard: a queued FirstK loser never enters the
+                // batch (its slot was never held, nothing to release).
+                Some(it) if self.cancelled.remove(&(it.req, it.branch)) => {
+                    self.branch_cell.remove(&(it.req, it.branch));
+                    self.branch_rngs.remove(&(it.req, it.branch));
+                    self.plane.on_cancelled(node);
+                }
                 Some(it) => batch.push(it),
                 None => break,
             }
@@ -678,10 +880,13 @@ impl SimWorld {
         let mut batch_t = 0.0f64;
         for it in &items {
             let features = self.reqs[it.req].features;
-            let noise = model.noise(&mut self.reqs[it.req].rng);
+            let noise = {
+                let rng = self.req_rng(it.req, it.branch);
+                model.noise(rng)
+            };
             let mut t = dcm.static_batch(&features, max_steps, b) * noise;
             t *= super::cluster::shard_service_factor(spec.shards);
-            if self.draw_cache_hit(it.req, spec.cache_hit_rate) {
+            if self.draw_cache_hit(it.req, it.branch, spec.cache_hit_rate) {
                 t *= CACHE_HIT_COST_FRAC;
             }
             if self.plane.degrade_enabled() {
@@ -721,13 +926,22 @@ impl SimWorld {
             self.recorder
                 .on_token_latency(decode_span / features.gen_len.max(1) as f64);
             let finish = (now + batch_t).max(it.earliest_finish);
-            self.q
-                .schedule(finish, Ev::Finish { req: it.req, node, inst: pick, service: batch_t });
+            self.q.schedule(
+                finish,
+                Ev::Finish {
+                    req: it.req,
+                    node,
+                    inst: pick,
+                    service: batch_t,
+                    branch: it.branch,
+                },
+            );
         }
     }
 
     fn start_service(&mut self, req: usize, node: NodeId, pick: usize, item: QueuedItem) {
         let now = self.q.now();
+        let branch = item.branch;
         let spec = self.graph.node(node).clone();
         let (colocated, active) = {
             let i = &self.instances[&node][pick];
@@ -741,14 +955,23 @@ impl SimWorld {
         // cost (`active` counts co-resident requests, this one included).
         // The occupancy term replaces `concurrency_slowdown` for stepped
         // generators; exactly one noise draw either way keeps the
-        // per-request rng stream aligned with the legacy model.
+        // per-request rng stream aligned with the legacy model (fork
+        // subtasks draw from their own branch stream).
         let (mut t, first_frac) = if continuous {
             let dcm = DecodeCostModel::generator();
             let base = dcm.continuous(&features, active);
             let first = dcm.prefill(features.prompt_len) + dcm.step(active);
-            (base * model.noise(&mut self.reqs[req].rng), first / base)
+            let noise = {
+                let rng = self.req_rng(req, branch);
+                model.noise(rng)
+            };
+            (base * noise, first / base)
         } else {
-            (model.sample(&features, &mut self.reqs[req].rng), 0.0)
+            let sample = {
+                let rng = self.req_rng(req, branch);
+                model.sample(&features, rng)
+            };
+            (sample, 0.0)
         };
         // Sharded components scatter-gather across parallel partitions.
         t *= super::cluster::shard_service_factor(spec.shards);
@@ -756,7 +979,7 @@ impl SimWorld {
         // served from the memoized embed→retrieve prefix at the hit cost.
         // Per-request sampling (not the mean factor) keeps the latency
         // distribution bimodal — the p50 collapse at high hit rates.
-        if self.draw_cache_hit(req, spec.cache_hit_rate) {
+        if self.draw_cache_hit(req, branch, spec.cache_hit_rate) {
             t *= CACHE_HIT_COST_FRAC;
         }
         // Overload degradation: visits to annotated components shrink
@@ -788,12 +1011,15 @@ impl SimWorld {
         }
 
         let finish = (now + t).max(item.earliest_finish);
-        self.q.schedule(finish, Ev::Finish { req, node, inst: pick, service: t });
+        self.q.schedule(finish, Ev::Finish { req, node, inst: pick, service: t, branch });
 
         // Streaming: pre-route the downstream hop at first-chunk time.
-        if spec.streamable {
-            let (next_node, _) = self.sample_next(req, node);
-            if next_node != self.graph.sink {
+        // Fork nodes never pre-route (all branches dispatch at Finish),
+        // and nothing streams INTO a join barrier — the join needs every
+        // branch's complete output before it can start.
+        if spec.streamable && !self.fork_map.contains_key(&node) {
+            let (next_node, _) = self.sample_next(req, branch, node);
+            if next_node != self.graph.sink && self.graph.node(next_node).join.is_none() {
                 let util = self.utilization(next_node);
                 let frac = self
                     .stream_policy
@@ -806,6 +1032,7 @@ impl SimWorld {
                         Ev::Dispatch {
                             req,
                             node: next_node,
+                            branch,
                             earliest_finish: floor,
                             stream_chunks: n_chunks,
                         },
@@ -818,7 +1045,7 @@ impl SimWorld {
         }
     }
 
-    fn on_finish(&mut self, req: usize, node: NodeId, inst: usize, service: f64) {
+    fn on_finish(&mut self, req: usize, node: NodeId, inst: usize, service: f64, branch: u32) {
         if self.monolithic {
             return self.monolith_finish(req, inst);
         }
@@ -841,15 +1068,27 @@ impl SimWorld {
             }
         } else {
             // Free the slot; pull next queued item: bound (stateful) work
-            // first, then the central component queue.
+            // first, then the central component queue. Cancelled FirstK
+            // losers are discarded on pop — they hold no slot.
             let next_item = {
                 let v = self.instances.get_mut(&node).unwrap();
                 let i = &mut v[inst];
                 i.active = i.active.saturating_sub(1);
                 if i.up && i.active < i.slots {
-                    i.queue
-                        .pop()
-                        .or_else(|| self.node_queues.get_mut(&node).and_then(|q| q.pop()))
+                    loop {
+                        match i
+                            .queue
+                            .pop()
+                            .or_else(|| self.node_queues.get_mut(&node).and_then(|q| q.pop()))
+                        {
+                            Some(it) if self.cancelled.remove(&(it.req, it.branch)) => {
+                                self.branch_cell.remove(&(it.req, it.branch));
+                                self.branch_rngs.remove(&(it.req, it.branch));
+                                self.plane.on_cancelled(node);
+                            }
+                            other => break other,
+                        }
+                    }
                 } else {
                     None
                 }
@@ -860,34 +1099,58 @@ impl SimWorld {
                 self.start_service(r, node, inst, item);
             }
         }
+        // Cancelled mid-service: the slot was freed above; the subtask
+        // ends here — no onward dispatch, no queue corruption. If this
+        // stage already streamed a downstream dispatch, the cancellation
+        // mark must survive until that in-flight event fires and is
+        // dropped (consuming it here would revive the branch as a
+        // zombie when the streamed hop lands).
+        if self.cancelled.contains(&(req, branch)) {
+            let streamed = self.pending_stream.remove(&(req, node));
+            self.pre_sampled.remove(&(req, node));
+            if !streamed {
+                self.cancelled.remove(&(req, branch));
+                self.purge_branch(req, branch);
+            }
+            return;
+        }
         // If streaming already dispatched this hop, we're done here.
         if self.pending_stream.remove(&(req, node)) {
             return;
         }
+        // Parallel fan-out happens at Finish: every branch dispatches.
+        if self.fork_map.contains_key(&node) {
+            return self.do_fork(req, node, branch);
+        }
         let next = match self.pre_sampled.remove(&(req, node)) {
             Some(n) => n,
-            None => self.sample_next(req, node).0,
+            None => self.sample_next(req, branch, node).0,
         };
         self.q.schedule_in(
             self.cfg.controller_overhead,
-            Ev::Dispatch { req, node: next, earliest_finish: 0.0, stream_chunks: 0.0 },
+            Ev::Dispatch { req, node: next, branch, earliest_finish: 0.0, stream_chunks: 0.0 },
         );
     }
 
     /// Sample the actual outgoing branch from the spec probabilities (the
-    /// ground-truth workload), recording edge telemetry.
-    fn sample_next(&mut self, req: usize, node: NodeId) -> (NodeId, bool) {
+    /// ground-truth workload), recording edge telemetry. Fork nodes never
+    /// sample — [`SimWorld::do_fork`] dispatches every branch.
+    fn sample_next(&mut self, req: usize, branch: u32, node: NodeId) -> (NodeId, bool) {
         let edges: Vec<(usize, f64, NodeId, bool)> = self
-            .graph
-            .edges
+            .adj
+            .out_edges(node)
             .iter()
-            .enumerate()
-            .filter(|(_, e)| e.from == node)
-            .map(|(i, e)| (i, e.prob, e.to, e.back_edge))
+            .map(|&i| {
+                let e = &self.graph.edges[i];
+                (i, e.prob(), e.to, e.back_edge)
+            })
             .collect();
         debug_assert!(!edges.is_empty(), "work node must have successors");
         let weights: Vec<f64> = edges.iter().map(|e| e.1).collect();
-        let pick = self.reqs[req].rng.weighted(&weights);
+        let pick = {
+            let rng = self.req_rng(req, branch);
+            rng.weighted(&weights)
+        };
         let (mut idx, _, mut to, mut back) = edges[pick];
         // Degrade ladder, iteration capping: at severe overload a
         // CapIterations component (critic-style loop gate) takes its exit
@@ -936,11 +1199,14 @@ impl SimWorld {
     /// Draw whether this visit is served by the modeled request cache
     /// (`NodeSpec::cache_hit_rate`); uncached nodes consume no
     /// randomness, so pre-cache traces replay bit-identically.
-    fn draw_cache_hit(&mut self, req: usize, hit_rate: f64) -> bool {
+    fn draw_cache_hit(&mut self, req: usize, branch: u32, hit_rate: f64) -> bool {
         if hit_rate <= 0.0 {
             return false;
         }
-        let hit = self.reqs[req].rng.chance(hit_rate);
+        let hit = {
+            let rng = self.req_rng(req, branch);
+            rng.chance(hit_rate)
+        };
         if hit {
             self.cache_counters.on_exact_hit();
         } else {
@@ -986,7 +1252,13 @@ impl SimWorld {
         let pick = self.plane.route(req as u64, self.graph.source, false, &states);
         self.decision_time += t0.elapsed().as_secs_f64();
         self.decisions += 1;
-        let item = QueuedItem { req, enqueued_at: now, earliest_finish: 0.0, stream_chunks: 0.0 };
+        let item = QueuedItem {
+            req,
+            branch: 0,
+            enqueued_at: now,
+            earliest_finish: 0.0,
+            stream_chunks: 0.0,
+        };
         let inst = &mut self.instances.get_mut(&self.graph.source).unwrap()[pick];
         if inst.active < inst.slots {
             inst.active += 1;
@@ -998,35 +1270,75 @@ impl SimWorld {
 
     fn monolith_start(&mut self, req: usize, pick: usize, item: QueuedItem) {
         let now = self.q.now();
-        let features = self.reqs[req].features;
         let active = self.instances[&self.graph.source][pick].active;
         // Walk the whole pipeline inside the replica, summing stage times
-        // (function calls: no cross-component overhead, no overlap).
+        // (function calls: no cross-component overhead, no overlap —
+        // fork branches SERIALIZE here, which is exactly the contrast
+        // the parallel-dataflow bench draws against the monolith).
+        let mut hops = 0usize;
+        let mut first_wait = Some(now - item.enqueued_at);
+        let total = if let Some(fg) = self.fork_map.get(&self.graph.source).cloned() {
+            let mut t = 0.0;
+            for &entry in &fg.targets {
+                t += self
+                    .monolith_chain(req, entry, Some(fg.join), active, &mut hops, &mut first_wait);
+            }
+            t + self.monolith_chain(req, fg.join, None, active, &mut hops, &mut first_wait)
+        } else {
+            let entry = self.first_node();
+            self.monolith_chain(req, entry, None, active, &mut hops, &mut first_wait)
+        };
+        self.q.schedule(
+            now + total,
+            Ev::Finish { req, node: self.graph.source, inst: pick, service: total, branch: 0 },
+        );
+    }
+
+    /// Serial stage walk from `cur` until the sink or `stop` (a fork's
+    /// join, exclusive); fork nodes recurse over their branches in
+    /// declaration order, then resume at the join. Trunk rng throughout —
+    /// a monolithic replica is one call stack.
+    fn monolith_chain(
+        &mut self,
+        req: usize,
+        mut cur: NodeId,
+        stop: Option<NodeId>,
+        active: usize,
+        hops: &mut usize,
+        first_wait: &mut Option<f64>,
+    ) -> f64 {
+        let features = self.reqs[req].features;
         let mut total = 0.0;
-        let mut cur = self.first_node();
-        let mut hops = 0;
-        while cur != self.graph.sink && hops < 1000 {
-            hops += 1;
+        while cur != self.graph.sink && Some(cur) != stop && *hops < 1000 {
+            *hops += 1;
             let spec = self.graph.node(cur).clone();
             let model = LatencyModel::for_kind(&spec.kind);
-            let mut t = model.sample(&features, &mut self.reqs[req].rng);
+            let mut t = {
+                let rng = self.req_rng(req, 0);
+                model.sample(&features, rng)
+            };
             t *= super::cluster::shard_service_factor(spec.shards);
-            if self.draw_cache_hit(req, spec.cache_hit_rate) {
+            if self.draw_cache_hit(req, 0, spec.cache_hit_rate) {
                 t *= CACHE_HIT_COST_FRAC;
             }
             t *= concurrency_slowdown(active);
             total += t;
-            self.recorder.on_execution(
-                &spec.name,
-                t,
-                if hops == 1 { now - item.enqueued_at } else { 0.0 },
-            );
-            cur = self.sample_next(req, cur).0;
+            let wait = first_wait.take().unwrap_or(0.0);
+            self.recorder.on_execution(&spec.name, t, wait);
+            if let Some(fg) = self.fork_map.get(&cur).cloned() {
+                for &ei in &fg.edges {
+                    self.plane.on_edge(ei, cur);
+                }
+                for &entry in &fg.targets {
+                    total +=
+                        self.monolith_chain(req, entry, Some(fg.join), active, hops, first_wait);
+                }
+                cur = fg.join;
+            } else {
+                cur = self.sample_next(req, 0, cur).0;
+            }
         }
-        self.q.schedule(
-            now + total,
-            Ev::Finish { req, node: self.graph.source, inst: pick, service: total },
-        );
+        total
     }
 
     fn monolith_finish(&mut self, req: usize, inst: usize) {
@@ -1143,9 +1455,32 @@ impl SimWorld {
                     spec.base_instances.max(1)
                 };
                 let keep = target.max(floor);
-                let v = self.instances.get_mut(&node).unwrap();
-                for i in v.iter_mut().skip(keep) {
-                    i.up = false;
+                // Slot-leak fix (audit): a drained instance never pulls
+                // from its local queue again, so stateful-bound items
+                // parked there would starve forever. Displace them into
+                // the central component queue under fresh slack keys —
+                // statefulness is a routing preference in the sim, and a
+                // re-route beats a request that never completes.
+                let mut displaced: Vec<QueuedItem> = Vec::new();
+                {
+                    let v = self.instances.get_mut(&node).unwrap();
+                    for i in v.iter_mut().skip(keep) {
+                        i.up = false;
+                        while let Some(it) = i.queue.pop() {
+                            displaced.push(it);
+                        }
+                    }
+                }
+                if !displaced.is_empty() {
+                    let d = self.plane.discipline;
+                    for it in displaced {
+                        let r = &self.reqs[it.req];
+                        let key = self.plane.slack_value(node, &r.features, now, r.deadline);
+                        self.node_queues
+                            .entry(node)
+                            .or_insert_with(|| PrioQueue::new(d))
+                            .push(key, it);
+                    }
                 }
             }
         }
@@ -1166,6 +1501,11 @@ impl SimWorld {
                     .pop()
                     .or_else(|| self.node_queues.get_mut(&node).and_then(|q| q.pop()))
                 {
+                    Some(it) if self.cancelled.remove(&(it.req, it.branch)) => {
+                        self.branch_cell.remove(&(it.req, it.branch));
+                        self.branch_rngs.remove(&(it.req, it.branch));
+                        self.plane.on_cancelled(node);
+                    }
                     Some(it) => items.push(it),
                     None => break,
                 }
@@ -1481,6 +1821,217 @@ mod tests {
                 assert_eq!(r.report.completed, 150, "{app} under {mode:?}");
             }
         }
+    }
+
+    // ---- parallel dataflow (fork/join) ------------------------------------
+
+    #[test]
+    fn hybrid_fork_completes_and_beats_its_serialized_twin() {
+        // Same trace, same seed, equal resources: overlapping dense
+        // retrieval with web search must strictly cut p50 AND p99 over
+        // running them back to back — the critical path drops from
+        // retr + web to max(retr, web).
+        let par = run_point(SystemKind::Harmonia, apps::hybrid_rag(), 8.0, 300, Some(2.0), 17);
+        let seq = run_point(
+            SystemKind::Harmonia,
+            apps::hybrid_rag_sequential(),
+            8.0,
+            300,
+            Some(2.0),
+            17,
+        );
+        assert_eq!(par.report.completed, 300);
+        assert_eq!(seq.report.completed, 300);
+        assert!(
+            par.report.p50 < seq.report.p50,
+            "parallel p50 {} vs serial {}",
+            par.report.p50,
+            seq.report.p50
+        );
+        assert!(
+            par.report.p99 < seq.report.p99,
+            "parallel p99 {} vs serial {}",
+            par.report.p99,
+            seq.report.p99
+        );
+        // The join barrier records sibling stall on the generator.
+        let gen = &par.report.components["generator"];
+        assert!(gen.joins > 0, "join releases recorded");
+        assert!(gen.join_wait > 0.0, "some branch always waits");
+        // Both branches executed once per request.
+        assert_eq!(par.report.components["retriever"].executions, 300);
+        assert_eq!(par.report.components["websearch"].executions, 300);
+        // No fork: no join stats anywhere in the serialized run.
+        assert!(seq.report.components.values().all(|c| c.joins == 0));
+    }
+
+    #[test]
+    fn multiquery_fork_completes_and_beats_its_serialized_twin() {
+        let par = run_point(SystemKind::Harmonia, apps::multiquery_rag(3), 8.0, 250, Some(2.0), 19);
+        let seq = run_point(
+            SystemKind::Harmonia,
+            apps::multiquery_rag_sequential(3),
+            8.0,
+            250,
+            Some(2.0),
+            19,
+        );
+        assert_eq!(par.report.completed, 250);
+        assert_eq!(seq.report.completed, 250);
+        assert!(par.report.p50 < seq.report.p50, "{} vs {}", par.report.p50, seq.report.p50);
+        assert!(par.report.p99 < seq.report.p99, "{} vs {}", par.report.p99, seq.report.p99);
+        // All three variants do full work in both shapes.
+        for i in 0..3 {
+            let name = format!("retriever_q{i}");
+            assert_eq!(par.report.components[&name].executions, 250, "{name}");
+            assert_eq!(seq.report.components[&name].executions, 250, "{name}");
+        }
+    }
+
+    #[test]
+    fn fork_runs_are_deterministic() {
+        for app in ["hybrid-rag", "mq-rag"] {
+            let a = quick(SystemKind::Harmonia, app, 12.0, 150);
+            let b = quick(SystemKind::Harmonia, app, 12.0, 150);
+            assert_eq!(a.report.completed, b.report.completed, "{app}");
+            assert_eq!(
+                a.report.mean_latency.to_bits(),
+                b.report.mean_latency.to_bits(),
+                "{app}"
+            );
+            assert_eq!(a.report.p99.to_bits(), b.report.p99.to_bits(), "{app}");
+        }
+    }
+
+    /// Racing fixture: source →fork→ {retriever ∥ websearch} with a
+    /// FirstK(1) join at the generator — winner takes all, loser
+    /// cancelled.
+    fn racing_rag() -> crate::spec::PipelineGraph {
+        use crate::spec::{ComponentKind, JoinSpec, PipelineBuilder, ResourceKind};
+        let mut b = PipelineBuilder::new("racing-rag");
+        let retr = b
+            .component("retriever", ComponentKind::Retriever)
+            .resources(&[(ResourceKind::Cpu, 8.0), (ResourceKind::Ram, 112.0)])
+            .add();
+        let web = b
+            .component("websearch", ComponentKind::WebSearch)
+            .resources(&[(ResourceKind::Cpu, 1.0)])
+            .add();
+        let gen = b
+            .component("generator", ComponentKind::Generator)
+            .resources(&[(ResourceKind::Gpu, 1.0)])
+            .join(JoinSpec::first_k(1))
+            .add();
+        b.fork(b.source(), &[retr, web]);
+        b.edge(retr, gen, 1.0);
+        b.edge(web, gen, 1.0);
+        b.edge_to_sink(gen, 1.0);
+        b.build().expect("racing-rag is valid")
+    }
+
+    #[test]
+    fn first_k_races_cancel_losers_without_corrupting_state() {
+        let r = run_point(SystemKind::Harmonia, racing_rag(), 12.0, 300, Some(2.0), 23);
+        assert_eq!(r.report.completed, 300, "every request completes despite cancellations");
+        // The race means the generator starts at the FASTER branch's
+        // finish: p50 must beat the All-join hybrid (which waits for the
+        // slower sibling) on the same trace.
+        let all = run_point(SystemKind::Harmonia, apps::hybrid_rag(), 12.0, 300, Some(2.0), 23);
+        assert!(
+            r.report.p50 < all.report.p50,
+            "FirstK(1) p50 {} vs All-join {}",
+            r.report.p50,
+            all.report.p50
+        );
+        // FirstK(1): the winner arrives alone — zero sibling stall.
+        assert!((r.report.components["generator"].join_wait - 0.0).abs() < 1e-12);
+        // Determinism under cancellation.
+        let r2 = run_point(SystemKind::Harmonia, racing_rag(), 12.0, 300, Some(2.0), 23);
+        assert_eq!(r.report.mean_latency.to_bits(), r2.report.mean_latency.to_bits());
+    }
+
+    #[test]
+    fn first_k_cancellation_is_safe_with_streaming_branches() {
+        // Regression for the streamed-zombie race: a cancelled branch
+        // whose streamable stage already pre-dispatched its next hop
+        // must stay cancelled when that in-flight event lands — the
+        // cancellation mark may only be consumed once no streamed
+        // dispatch is outstanding.
+        use crate::spec::{ComponentKind, JoinSpec, PipelineBuilder, ResourceKind};
+        let mut b = PipelineBuilder::new("racing-stream");
+        let retr = b
+            .component("retriever", ComponentKind::Retriever)
+            .resources(&[(ResourceKind::Cpu, 8.0), (ResourceKind::Ram, 112.0)])
+            .streamable(true)
+            .add();
+        let grader = b
+            .component("grader", ComponentKind::Grader)
+            .resources(&[(ResourceKind::Gpu, 1.0)])
+            .add();
+        let web = b
+            .component("websearch", ComponentKind::WebSearch)
+            .resources(&[(ResourceKind::Cpu, 1.0)])
+            .add();
+        let gen = b
+            .component("generator", ComponentKind::Generator)
+            .resources(&[(ResourceKind::Gpu, 1.0)])
+            .join(JoinSpec::first_k(1))
+            .add();
+        b.fork(b.source(), &[retr, web]);
+        b.edge(retr, grader, 1.0);
+        b.edge(grader, gen, 1.0);
+        b.edge(web, gen, 1.0);
+        b.edge_to_sink(gen, 1.0);
+        let g = b.build().expect("racing-stream is valid");
+        // The two-hop streamable branch usually loses to the single-hop
+        // web branch, so cancellations land mid-stream routinely.
+        let r = run_point(SystemKind::Harmonia, g.clone(), 12.0, 300, Some(2.0), 41);
+        assert_eq!(r.report.completed, 300);
+        assert_eq!(r.residual_bindings, 0);
+        let r2 = run_point(SystemKind::Harmonia, g, 12.0, 300, Some(2.0), 41);
+        assert_eq!(r.report.mean_latency.to_bits(), r2.report.mean_latency.to_bits());
+    }
+
+    #[test]
+    fn fork_apps_leak_no_router_bindings_or_slots() {
+        // Slot-leak audit: every terminal path — completion, shed,
+        // degraded completion, cancelled fork loser — must release its
+        // stateful bindings; nothing may be left bound once the run
+        // drains.
+        let cases: Vec<crate::sim::SimResult> = vec![
+            quick(SystemKind::Harmonia, "s-rag", 16.0, 150), // stateful loop
+            quick(SystemKind::Harmonia, "hybrid-rag", 12.0, 150),
+            run_point(SystemKind::Harmonia, racing_rag(), 12.0, 200, Some(2.0), 29),
+        ];
+        for r in cases {
+            assert_eq!(r.residual_bindings, 0, "router bindings leaked");
+        }
+        // Shed-at-admission and degraded completions (overload defense).
+        let trace = TraceConfig { rate: 1440.0, n: 800, slo: Some(2.0), ..TraceConfig::default() };
+        let mut cfg = SimConfig::new(SystemKind::Harmonia, trace, 0xA11);
+        cfg.sched = crate::sched::SchedConfig::overload_defense();
+        let r = SimWorld::simulate(apps::self_rag(), cfg);
+        assert_eq!(r.report.completed + r.report.shed, 800);
+        assert_eq!(r.residual_bindings, 0, "shed/degraded paths leaked bindings");
+    }
+
+    #[test]
+    fn fork_apps_work_under_batching_modes_and_monolith() {
+        use crate::profile::models::GenBatching;
+        // The generator-as-join composes with explicit batching modes.
+        for mode in [GenBatching::Static, GenBatching::Continuous] {
+            let trace = TraceConfig { rate: 8.0, n: 120, slo: Some(4.0), ..TraceConfig::default() };
+            let mut cfg = SimConfig::new(SystemKind::Harmonia, trace, 31);
+            cfg.gen_batching = mode;
+            let r = SimWorld::simulate(apps::hybrid_rag(), cfg);
+            assert_eq!(r.report.completed, 120, "{mode:?}");
+            assert!(r.report.gen.is_some(), "{mode:?} records TTFT");
+        }
+        // LangChain-style monolith serializes the fork inside the
+        // replica — still completes, and with no join stalls recorded.
+        let r = run_point(SystemKind::LangChain, apps::hybrid_rag(), 4.0, 100, Some(4.0), 37);
+        assert_eq!(r.report.completed, 100);
+        assert!(r.report.components.values().all(|c| c.joins == 0));
     }
 
     #[test]

@@ -1,11 +1,15 @@
-//! The four representative RAG applications of the paper (Table 1).
+//! The four representative RAG applications of the paper (Table 1), plus
+//! the parallel-dataflow extensions (hybrid retrieval and multi-query
+//! expansion — Modular RAG's branching/fusion patterns).
 //!
-//! | App   | Conditional | Recursive |
-//! |-------|-------------|-----------|
-//! | V-RAG | no          | no        |
-//! | C-RAG | yes         | no        |
-//! | S-RAG | yes         | yes       |
-//! | A-RAG | yes         | yes       |
+//! | App        | Conditional | Recursive | Parallel |
+//! |------------|-------------|-----------|----------|
+//! | V-RAG      | no          | no        | no       |
+//! | C-RAG      | yes         | no        | no       |
+//! | S-RAG      | yes         | yes       | no       |
+//! | A-RAG      | yes         | yes       | no       |
+//! | Hybrid-RAG | no          | no        | yes      |
+//! | MQ-RAG     | no          | no        | yes      |
 //!
 //! Branch probabilities are the *deploy-time priors* (the paper estimates
 //! them by profiling ~100 ShareGPT samples; the runtime layer re-estimates
@@ -13,7 +17,7 @@
 //! (retrievers: 8 CPU + 112 GiB RAM; LLM components: 1 GPU).
 
 use super::builder::PipelineBuilder;
-use super::graph::{ComponentKind, DegradeKnob, PipelineGraph, ResourceKind};
+use super::graph::{ComponentKind, DegradeKnob, JoinSpec, PipelineGraph, ResourceKind};
 
 const RETRIEVER_RES: [(ResourceKind, f64); 2] =
     [(ResourceKind::Cpu, 8.0), (ResourceKind::Ram, 112.0)];
@@ -122,6 +126,140 @@ pub fn cached_vanilla_rag(
     b.edge(retr, gen, 1.0);
     b.edge_to_sink(gen, 1.0);
     b.build().expect("v-rag-cached is valid")
+}
+
+/// Hybrid RAG (dense ∥ keyword/web retrieval): the entry forks into a
+/// vector retriever AND a web search running **in parallel**; the
+/// generator is the barrier ([`JoinSpec::all`]) that fuses both contexts
+/// (doc-id union with dedup) before decoding. The serialized equivalent
+/// ([`hybrid_rag_sequential`]) runs the same two stages back to back, so
+/// the fork saves `min(retriever, websearch)` of critical-path latency
+/// per request at identical resource demand — the RAGO-style overlap win.
+pub fn hybrid_rag() -> PipelineGraph {
+    let mut b = PipelineBuilder::new("hybrid-rag");
+    let retr = b
+        .component("retriever", ComponentKind::Retriever)
+        .resources(&RETRIEVER_RES)
+        .degrade(DegradeKnob::ShrinkTopK)
+        .add();
+    let web = b
+        .component("websearch", ComponentKind::WebSearch)
+        .resources(&WEB_RES)
+        .add();
+    let gen = b
+        .component("generator", ComponentKind::Generator)
+        .resources(&GPU_RES)
+        .join(JoinSpec::all())
+        .streamable(true)
+        .add();
+    b.fork(b.source(), &[retr, web]);
+    b.edge(retr, gen, 1.0);
+    b.edge(web, gen, 1.0);
+    b.edge_to_sink(gen, 1.0);
+    b.build().expect("hybrid-rag is valid")
+}
+
+/// The serialized control for [`hybrid_rag`]: identical nodes and
+/// resources, but dense retrieval and web search chained end to end.
+/// `benches/fig07_parallel_dataflow.rs` pits the two against each other
+/// at equal allocation.
+pub fn hybrid_rag_sequential() -> PipelineGraph {
+    let mut b = PipelineBuilder::new("hybrid-rag-seq");
+    let retr = b
+        .component("retriever", ComponentKind::Retriever)
+        .resources(&RETRIEVER_RES)
+        .degrade(DegradeKnob::ShrinkTopK)
+        .add();
+    let web = b
+        .component("websearch", ComponentKind::WebSearch)
+        .resources(&WEB_RES)
+        .add();
+    let gen = b
+        .component("generator", ComponentKind::Generator)
+        .resources(&GPU_RES)
+        .streamable(true)
+        .add();
+    b.edge_from_source(retr, 1.0);
+    b.edge(retr, web, 1.0);
+    b.edge(web, gen, 1.0);
+    b.edge_to_sink(gen, 1.0);
+    b.build().expect("hybrid-rag-seq is valid")
+}
+
+/// Multi-query RAG (query expansion): a rewriter fans out into `n`
+/// parallel branches, each rewriting one query variant and retrieving
+/// with it; the generator joins all branches ([`JoinSpec::all`]) on the
+/// fused, deduplicated context. Every branch carries full flow through
+/// the allocator — expansion multiplies retrieval *work*, but the fork
+/// keeps it off the *critical path* (one variant's latency, not `n`).
+pub fn multiquery_rag(n: usize) -> PipelineGraph {
+    let n = n.clamp(2, 8);
+    let mut b = PipelineBuilder::new("mq-rag");
+    let mut entries = Vec::with_capacity(n);
+    let mut retrs = Vec::with_capacity(n);
+    for i in 0..n {
+        let rw = b
+            .component(&format!("rewriter_q{i}"), ComponentKind::Rewriter)
+            .resources(&GPU_RES)
+            .add();
+        let r = b
+            .component(&format!("retriever_q{i}"), ComponentKind::Retriever)
+            .resources(&RETRIEVER_RES)
+            .degrade(DegradeKnob::ShrinkTopK)
+            .add();
+        b.edge(rw, r, 1.0);
+        entries.push(rw);
+        retrs.push(r);
+    }
+    let gen = b
+        .component("generator", ComponentKind::Generator)
+        .resources(&GPU_RES)
+        .join(JoinSpec::all())
+        .streamable(true)
+        .add();
+    b.fork(b.source(), &entries);
+    for r in retrs {
+        b.edge(r, gen, 1.0);
+    }
+    b.edge_to_sink(gen, 1.0);
+    b.build().expect("mq-rag is valid")
+}
+
+/// The serialized control for [`multiquery_rag`]: the same `n`
+/// rewrite→retrieve pairs chained end to end before the generator.
+pub fn multiquery_rag_sequential(n: usize) -> PipelineGraph {
+    let n = n.clamp(2, 8);
+    let mut b = PipelineBuilder::new("mq-rag-seq");
+    let mut prev: Option<super::graph::NodeId> = None;
+    for i in 0..n {
+        let rw = b
+            .component(&format!("rewriter_q{i}"), ComponentKind::Rewriter)
+            .resources(&GPU_RES)
+            .add();
+        let r = b
+            .component(&format!("retriever_q{i}"), ComponentKind::Retriever)
+            .resources(&RETRIEVER_RES)
+            .degrade(DegradeKnob::ShrinkTopK)
+            .add();
+        match prev {
+            None => {
+                b.edge_from_source(rw, 1.0);
+            }
+            Some(p) => {
+                b.edge(p, rw, 1.0);
+            }
+        }
+        b.edge(rw, r, 1.0);
+        prev = Some(r);
+    }
+    let gen = b
+        .component("generator", ComponentKind::Generator)
+        .resources(&GPU_RES)
+        .streamable(true)
+        .add();
+    b.edge(prev.expect("n >= 2"), gen, 1.0);
+    b.edge_to_sink(gen, 1.0);
+    b.build().expect("mq-rag-seq is valid")
 }
 
 /// Corrective RAG [Yan et al.]: retrieve → grade → {generate | rewrite →
@@ -255,8 +393,9 @@ pub fn all() -> Vec<PipelineGraph> {
 }
 
 /// Look up an app by its short name (v-rag, c-rag, s-rag, a-rag, plus
-/// the sharded-retrieval variant v-rag-sharded and the request-cache
-/// variant v-rag-cached).
+/// the sharded-retrieval variant v-rag-sharded, the request-cache
+/// variant v-rag-cached, and the parallel-dataflow apps hybrid-rag /
+/// mq-rag with their serialized `-seq` controls).
 pub fn by_name(name: &str) -> Option<PipelineGraph> {
     match name {
         "v-rag" => Some(vanilla_rag()),
@@ -265,6 +404,10 @@ pub fn by_name(name: &str) -> Option<PipelineGraph> {
         "c-rag" => Some(corrective_rag()),
         "s-rag" => Some(self_rag()),
         "a-rag" => Some(adaptive_rag()),
+        "hybrid-rag" => Some(hybrid_rag()),
+        "hybrid-rag-seq" => Some(hybrid_rag_sequential()),
+        "mq-rag" => Some(multiquery_rag(3)),
+        "mq-rag-seq" => Some(multiquery_rag_sequential(3)),
         _ => None,
     }
 }
@@ -375,6 +518,69 @@ mod tests {
             a.node_by_name("iter_critic").unwrap().degrade,
             DegradeKnob::CapIterations
         );
+    }
+
+    #[test]
+    fn parallel_apps_validate_and_fork() {
+        for name in ["hybrid-rag", "mq-rag"] {
+            let g = by_name(name).unwrap();
+            g.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(g.has_forks(), "{name} must contain fork edges");
+            assert!(!g.has_conditionals(), "{name} forks are not conditionals");
+            assert!(!g.has_recursion(), "{name}");
+        }
+        for name in ["hybrid-rag-seq", "mq-rag-seq"] {
+            let g = by_name(name).unwrap();
+            g.validate().unwrap();
+            assert!(!g.has_forks(), "{name} is the serialized control");
+        }
+    }
+
+    #[test]
+    fn pre_existing_apps_have_zero_fork_edges() {
+        // Acceptance criterion: the legacy apps are untouched by the
+        // fork/join refactor — no Fork edges, no join annotations.
+        for name in ["v-rag", "v-rag-sharded", "v-rag-cached", "c-rag", "s-rag", "a-rag"] {
+            let g = by_name(name).unwrap();
+            assert!(!g.has_forks(), "{name} grew a fork edge");
+            assert!(g.nodes.iter().all(|n| n.join.is_none()), "{name} grew a join");
+        }
+    }
+
+    #[test]
+    fn serialized_controls_mirror_the_parallel_apps() {
+        // Equal resources: the fig07 comparison is latency-shape only.
+        let (p, s) = (hybrid_rag(), hybrid_rag_sequential());
+        assert_eq!(p.work_nodes().count(), s.work_nodes().count());
+        for n in p.work_nodes() {
+            let m = s.node_by_name(&n.name).expect("same node set");
+            assert_eq!(n.resources, m.resources, "{}", n.name);
+        }
+        let (p, s) = (multiquery_rag(3), multiquery_rag_sequential(3));
+        assert_eq!(p.work_nodes().count(), s.work_nodes().count());
+        // Visit rates: every branch carries full flow in BOTH shapes —
+        // the fork buys latency overlap, not less work.
+        let vp = p.visit_rates();
+        let vs = s.visit_rates();
+        for n in p.work_nodes() {
+            let m = s.node_by_name(&n.name).unwrap();
+            assert!(
+                (vp[n.id.0] - vs[m.id.0]).abs() < 1e-9,
+                "{}: parallel {} vs serial {}",
+                n.name,
+                vp[n.id.0],
+                vs[m.id.0]
+            );
+        }
+    }
+
+    #[test]
+    fn multiquery_branch_count_is_clamped() {
+        assert_eq!(multiquery_rag(1).fork_groups()[&multiquery_rag(1).source].targets.len(), 2);
+        let g = multiquery_rag(3);
+        let fg = &g.fork_groups()[&g.source];
+        assert_eq!(fg.targets.len(), 3);
+        assert_eq!(fg.need, 3);
     }
 
     #[test]

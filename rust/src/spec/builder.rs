@@ -21,8 +21,8 @@
 //! ```
 
 use super::graph::{
-    ComponentKind, DegradeKnob, EdgeSpec, NodeId, NodeSpec, PipelineGraph, ResourceKind,
-    ValidationError,
+    ComponentKind, DegradeKnob, EdgeKind, EdgeSpec, JoinSpec, NodeId, NodeSpec, PipelineGraph,
+    ResourceKind, ValidationError,
 };
 
 /// Fluent per-component configuration (the `@harmonia.make(...)` decorator
@@ -68,6 +68,15 @@ impl<'a> ComponentBuilder<'a> {
     /// when the control plane's `sched::DegradePolicy` is enabled.
     pub fn degrade(mut self, knob: DegradeKnob) -> Self {
         self.spec.degrade = knob;
+        self
+    }
+
+    /// Mark this component as a **join**: the barrier where the branches
+    /// of an upstream [`PipelineBuilder::fork`] reconverge. The component
+    /// runs once per request, after the barrier releases, on the merged
+    /// branch state (see [`JoinSpec`]).
+    pub fn join(mut self, spec: JoinSpec) -> Self {
+        self.spec.join = Some(spec);
         self
     }
 
@@ -124,6 +133,7 @@ impl PipelineBuilder {
             shards: 1,
             cache_hit_rate: 0.0,
             degrade: DegradeKnob::None,
+            join: None,
             resources: vec![],
             alpha: vec![],
             gamma: 1.0,
@@ -165,6 +175,7 @@ impl PipelineBuilder {
             shards: 1,
             cache_hit_rate: 0.0,
             degrade: DegradeKnob::None,
+            join: None,
             resources: default_res,
             alpha: vec![],
             gamma: 1.0,
@@ -175,7 +186,7 @@ impl PipelineBuilder {
 
     /// Add a forward edge with routing probability `p`.
     pub fn edge(&mut self, from: NodeId, to: NodeId, p: f64) -> &mut Self {
-        self.edges.push(EdgeSpec { from, to, prob: p, back_edge: false });
+        self.edges.push(EdgeSpec { from, to, kind: EdgeKind::Route(p), back_edge: false });
         self
     }
 
@@ -195,10 +206,21 @@ impl PipelineBuilder {
         self
     }
 
+    /// Parallel fan-out from `from`: every target runs concurrently as a
+    /// sibling subtask ([`EdgeKind::Fork`]; full flow per branch). The
+    /// branches must reconverge at a downstream component marked with
+    /// [`ComponentBuilder::join`] — validation enforces balance.
+    pub fn fork(&mut self, from: NodeId, targets: &[NodeId]) -> &mut Self {
+        for &to in targets {
+            self.edges.push(EdgeSpec { from, to, kind: EdgeKind::Fork, back_edge: false });
+        }
+        self
+    }
+
     /// Recursion: a back edge re-entering an upstream component with
     /// probability `p` (e.g. Self-RAG's rewrite→retrieve loop).
     pub fn recurse(&mut self, from: NodeId, to: NodeId, p: f64) -> &mut Self {
-        self.edges.push(EdgeSpec { from, to, prob: p, back_edge: true });
+        self.edges.push(EdgeSpec { from, to, kind: EdgeKind::Route(p), back_edge: true });
         self
     }
 
@@ -250,6 +272,27 @@ mod tests {
         assert!(graph.node(r).demand_for(ResourceKind::Cpu) > 0.0);
         assert_eq!(graph.node(r).demand_for(ResourceKind::Gpu), 0.0);
         assert!(graph.node(g).demand_for(ResourceKind::Gpu) > 0.0);
+    }
+
+    #[test]
+    fn fork_and_join_build_a_valid_parallel_pipeline() {
+        let mut b = PipelineBuilder::new("t");
+        let r = b.component("r", ComponentKind::Retriever).add();
+        let w = b.component("w", ComponentKind::WebSearch).add();
+        let g = b
+            .component("g", ComponentKind::Generator)
+            .join(JoinSpec::all())
+            .add();
+        b.fork(b.source(), &[r, w]);
+        b.edge(r, g, 1.0);
+        b.edge(w, g, 1.0);
+        b.edge_to_sink(g, 1.0);
+        let graph = b.build().unwrap();
+        assert!(graph.has_forks());
+        assert_eq!(graph.edges.iter().filter(|e| e.is_fork()).count(), 2);
+        assert_eq!(graph.node(g).join, Some(JoinSpec::all()));
+        let groups = graph.fork_groups();
+        assert_eq!(groups[&graph.source].join, g);
     }
 
     #[test]

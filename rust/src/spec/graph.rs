@@ -3,9 +3,11 @@
 //!
 //! Mirrors the paper's model (§3.2): nodes are components with
 //! per-resource throughput coefficients α_{i,k} and amplification factors
-//! γ_i; edges carry routing probabilities p_{i,j}. Back edges (recursion)
-//! are first-class and folded into effective visit rates for the
-//! allocation LP.
+//! γ_i; edges carry typed routing semantics ([`EdgeKind`]): probabilistic
+//! `Route(p)` edges (exactly one successor per visit) or parallel `Fork`
+//! edges (every successor runs as a sibling subtask, reconverging at a
+//! [`JoinSpec`]-annotated node). Back edges (recursion) are first-class
+//! and folded into effective visit rates for the allocation LP.
 
 use std::collections::HashMap;
 
@@ -120,6 +122,100 @@ pub enum DegradeKnob {
     CapIterations,
 }
 
+/// How an edge moves a request to its successor(s) — the typed-edge core
+/// of the parallel-dataflow model.
+///
+/// * [`EdgeKind::Route`] — probabilistic routing p_{i,j}: exactly ONE
+///   outgoing `Route` edge is taken per visit (the pre-fork semantics;
+///   per-node `Route` probabilities must sum to 1).
+/// * [`EdgeKind::Fork`] — parallel fan-out: EVERY outgoing `Fork` edge
+///   fires, spawning one sibling subtask per branch. Fork edges carry
+///   **full flow** (prob = 1 per branch) through the visit-rate fixed
+///   point and the allocation LP — every branch must be provisioned.
+///   Branches reconverge at a downstream node annotated with a
+///   [`JoinSpec`]; a node's outgoing edges must be all-`Route` or
+///   all-`Fork`, never mixed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EdgeKind {
+    /// Probabilistic routing with probability p (existing semantics).
+    Route(f64),
+    /// Parallel fan-out: this branch always runs.
+    Fork,
+}
+
+impl EdgeKind {
+    /// Flow fraction this edge carries per visit of its source: the
+    /// routing probability for [`EdgeKind::Route`], and 1.0 for
+    /// [`EdgeKind::Fork`] (every branch sees the full request stream).
+    pub fn prob(&self) -> f64 {
+        match self {
+            EdgeKind::Route(p) => *p,
+            EdgeKind::Fork => 1.0,
+        }
+    }
+
+    pub fn is_fork(&self) -> bool {
+        matches!(self, EdgeKind::Fork)
+    }
+}
+
+/// When a join node releases its barrier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JoinPolicy {
+    /// Wait for every branch (barrier join).
+    All,
+    /// Release when the first `k` branches arrive; the losing branches
+    /// are cancelled (racing / speculative execution). `k` must satisfy
+    /// `1 ≤ k ≤ branches`.
+    FirstK(usize),
+}
+
+/// How the join combines the branch results ([`crate::exec::RagState`]s
+/// on the live path; the DES carries no payload and ignores it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MergePolicy {
+    /// Union the branch retrieval results: doc ids deduplicated across
+    /// branches (first occurrence wins), contexts concatenated
+    /// branch-major with per-branch score order preserved; scalar fields
+    /// take the first populated value.
+    #[default]
+    Union,
+    /// Winner-takes-all: the first arriving branch's state is used
+    /// verbatim (the natural pairing for `FirstK(1)` races).
+    First,
+}
+
+/// Join annotation on a node: the barrier where fork branches reconverge.
+/// The annotated node executes once per request, after the barrier
+/// releases, on the merged state.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JoinSpec {
+    pub policy: JoinPolicy,
+    pub merge: MergePolicy,
+}
+
+impl JoinSpec {
+    /// Barrier join over every branch with [`MergePolicy::Union`].
+    pub fn all() -> JoinSpec {
+        JoinSpec { policy: JoinPolicy::All, merge: MergePolicy::Union }
+    }
+
+    /// Racing join: release after `k` arrivals, cancel the rest, keep
+    /// the winner's state ([`MergePolicy::First`]).
+    pub fn first_k(k: usize) -> JoinSpec {
+        JoinSpec { policy: JoinPolicy::FirstK(k), merge: MergePolicy::First }
+    }
+
+    /// Branch arrivals needed to release the barrier, for a fork with
+    /// `branches` branches.
+    pub fn need(&self, branches: usize) -> usize {
+        match self.policy {
+            JoinPolicy::All => branches,
+            JoinPolicy::FirstK(k) => k.min(branches),
+        }
+    }
+}
+
 /// One pipeline component plus its declarative constraints (§3.1
 /// "Specifying workflow constraints").
 #[derive(Clone, Debug)]
@@ -147,6 +243,9 @@ pub struct NodeSpec {
     /// Overload-degradation knob (see [`DegradeKnob`]); `None` for
     /// components that must always run at full fidelity.
     pub degrade: DegradeKnob,
+    /// Barrier annotation: fork branches reconverge here (see
+    /// [`JoinSpec`]). `None` for every ordinary node.
+    pub join: Option<JoinSpec>,
     /// Per-instance resource demand (r constraint granularity).
     pub resources: Vec<(ResourceKind, f64)>,
     /// Throughput coefficient α_{i,k}: requests/sec per unit of resource k
@@ -176,14 +275,84 @@ impl NodeSpec {
     }
 }
 
-/// Directed edge with routing probability p_{i,j}; `back_edge` marks
-/// recursion (loops back toward an ancestor in the DAG backbone).
+/// Directed edge with typed routing semantics ([`EdgeKind`]); `back_edge`
+/// marks recursion (loops back toward an ancestor in the DAG backbone).
 #[derive(Clone, Debug)]
 pub struct EdgeSpec {
     pub from: NodeId,
     pub to: NodeId,
-    pub prob: f64,
+    pub kind: EdgeKind,
     pub back_edge: bool,
+}
+
+impl EdgeSpec {
+    /// Convenience constructor for a forward `Route(p)` edge.
+    pub fn route(from: NodeId, to: NodeId, p: f64) -> EdgeSpec {
+        EdgeSpec { from, to, kind: EdgeKind::Route(p), back_edge: false }
+    }
+
+    /// Flow fraction carried per source visit (see [`EdgeKind::prob`]).
+    pub fn prob(&self) -> f64 {
+        self.kind.prob()
+    }
+
+    pub fn is_fork(&self) -> bool {
+        self.kind.is_fork()
+    }
+}
+
+/// Cached adjacency index over a [`PipelineGraph`]'s edge list: outgoing /
+/// incoming edge indices per node, in edge-declaration order. Built once
+/// (O(V+E)) and consulted by the hot loops that previously re-scanned the
+/// whole edge list per step (DES branch sampling, the profiler's graph
+/// walk, validation reachability). The graph's `nodes`/`edges` are public
+/// and test code mutates them, so the index is an explicit snapshot the
+/// caller owns rather than an embedded cache that could go stale.
+#[derive(Clone, Debug)]
+pub struct Adjacency {
+    succ: Vec<Vec<usize>>,
+    pred: Vec<Vec<usize>>,
+}
+
+impl Adjacency {
+    pub fn new(g: &PipelineGraph) -> Adjacency {
+        let n = g.nodes.len();
+        let mut succ = vec![Vec::new(); n];
+        let mut pred = vec![Vec::new(); n];
+        for (i, e) in g.edges.iter().enumerate() {
+            succ[e.from.0].push(i);
+            pred[e.to.0].push(i);
+        }
+        Adjacency { succ, pred }
+    }
+
+    /// Outgoing edge indices of `node`, in edge-declaration order.
+    pub fn out_edges(&self, node: NodeId) -> &[usize] {
+        &self.succ[node.0]
+    }
+
+    /// Incoming edge indices of `node`, in edge-declaration order.
+    pub fn in_edges(&self, node: NodeId) -> &[usize] {
+        &self.pred[node.0]
+    }
+}
+
+/// One fork region, resolved from a validated graph: the fork node, its
+/// branch entry nodes (fork-edge order), and the join that reconverges
+/// them. The DES and the live controller both drive their barrier
+/// bookkeeping off this.
+#[derive(Clone, Debug)]
+pub struct ForkGroup {
+    pub fork: NodeId,
+    pub join: NodeId,
+    /// Branch entry nodes, in fork-edge declaration order.
+    pub targets: Vec<NodeId>,
+    /// Fork edge indices, parallel to `targets`.
+    pub edges: Vec<usize>,
+    pub policy: JoinPolicy,
+    pub merge: MergePolicy,
+    /// Branch arrivals that release the barrier.
+    pub need: usize,
 }
 
 /// The captured pipeline graph.
@@ -206,6 +375,37 @@ pub enum ValidationError {
     BadCacheHitRate { node: String, rate: f64 },
     SelfLoopWithoutBackEdge { node: String },
     DuplicateName(String),
+    /// A node mixes `Fork` and `Route` outgoing edges.
+    MixedEdgeKinds { node: String },
+    /// A `Fork` edge is marked as a back edge (speculative re-entry into
+    /// the past is not a defined dataflow).
+    ForkIntoBackEdge { node: String },
+    /// A fork edge points directly at a join node — a branch with no
+    /// work in it.
+    EmptyForkBranch { node: String },
+    /// Fewer than two branches, or the branches never reconverge on a
+    /// single join-annotated node.
+    UnbalancedFork { node: String },
+    /// A join was found, but the named branch never reaches it.
+    JoinMissingBranch { join: String, branch: String },
+    /// A node inside a fork region has an edge escaping the region
+    /// (e.g. a branch path that bypasses the join toward the sink).
+    ForkBranchEscapes { node: String, via: String },
+    /// Two branches of the same fork share an intermediate node — the
+    /// sibling subtasks would collide on per-(request, node) state.
+    OverlappingForkBranches { node: String },
+    /// A back edge enters or leaves the interior of a fork region;
+    /// recursion must wrap the whole fork/join, not cut into it.
+    BackEdgeInForkRegion { node: String },
+    /// `FirstK(k)` with k = 0 or k greater than the branch count.
+    BadFirstK { node: String, k: usize, branches: usize },
+    /// A `JoinSpec`-annotated node no fork resolves to, or a join with a
+    /// forward in-edge arriving from outside its fork region.
+    JoinWithoutFork { node: String },
+    /// Two different forks resolve to the same join node — the barrier's
+    /// branch count (and with it the LP's inflow scale) would be
+    /// ambiguous.
+    SharedJoin { node: String },
 }
 
 impl std::fmt::Display for ValidationError {
@@ -229,6 +429,39 @@ impl std::fmt::Display for ValidationError {
                 write!(f, "'{node}' has a self loop not marked as back edge")
             }
             ValidationError::DuplicateName(n) => write!(f, "duplicate component name '{n}'"),
+            ValidationError::MixedEdgeKinds { node } => {
+                write!(f, "'{node}' mixes Fork and Route outgoing edges")
+            }
+            ValidationError::ForkIntoBackEdge { node } => {
+                write!(f, "'{node}' has a Fork edge marked as a back edge")
+            }
+            ValidationError::EmptyForkBranch { node } => {
+                write!(f, "'{node}' forks directly into a join node (empty branch)")
+            }
+            ValidationError::UnbalancedFork { node } => {
+                write!(f, "fork at '{node}' is unbalanced: branches do not reconverge on one join")
+            }
+            ValidationError::JoinMissingBranch { join, branch } => {
+                write!(f, "join '{join}' is not reachable from fork branch '{branch}'")
+            }
+            ValidationError::ForkBranchEscapes { node, via } => {
+                write!(f, "fork region of '{node}' leaks: '{via}' has an edge bypassing the join")
+            }
+            ValidationError::OverlappingForkBranches { node } => {
+                write!(f, "branches of fork '{node}' overlap on shared nodes")
+            }
+            ValidationError::BackEdgeInForkRegion { node } => {
+                write!(f, "back edge touches the interior of the fork region at '{node}'")
+            }
+            ValidationError::BadFirstK { node, k, branches } => {
+                write!(f, "join '{node}' wants FirstK({k}) but the fork has {branches} branches")
+            }
+            ValidationError::JoinWithoutFork { node } => {
+                write!(f, "join '{node}' is not the reconvergence point of any fork")
+            }
+            ValidationError::SharedJoin { node } => {
+                write!(f, "join '{node}' reconverges more than one fork (ambiguous barrier)")
+            }
         }
     }
 }
@@ -240,6 +473,13 @@ impl PipelineGraph {
 
     pub fn node_by_name(&self, name: &str) -> Option<&NodeSpec> {
         self.nodes.iter().find(|n| n.name == name)
+    }
+
+    /// Build the adjacency index for this graph's current edge list (see
+    /// [`Adjacency`]). Hot loops should build this once and reuse it
+    /// instead of calling [`PipelineGraph::successors`] per step.
+    pub fn adjacency(&self) -> Adjacency {
+        Adjacency::new(self)
     }
 
     pub fn successors(&self, id: NodeId) -> impl Iterator<Item = &EdgeSpec> {
@@ -257,10 +497,12 @@ impl PipelineGraph {
             .filter(|n| !matches!(n.kind, ComponentKind::Source | ComponentKind::Sink))
     }
 
-    /// Does the workflow contain conditional branching (Table 1)?
+    /// Does the workflow contain conditional branching (Table 1)? Only
+    /// `Route` fan-out counts — a fork is parallel dataflow, not a
+    /// conditional.
     pub fn has_conditionals(&self) -> bool {
         let mut out: HashMap<NodeId, usize> = HashMap::new();
-        for e in &self.edges {
+        for e in self.edges.iter().filter(|e| !e.is_fork()) {
             *out.entry(e.from).or_insert(0) += 1;
         }
         out.values().any(|&c| c > 1)
@@ -269,6 +511,157 @@ impl PipelineGraph {
     /// Does the workflow contain recursion (Table 1)?
     pub fn has_recursion(&self) -> bool {
         self.edges.iter().any(|e| e.back_edge)
+    }
+
+    /// Does the workflow contain parallel (fork/join) dataflow?
+    pub fn has_forks(&self) -> bool {
+        self.edges.iter().any(|e| e.is_fork())
+    }
+
+    /// Is `id` a fork node (its outgoing edges are `Fork` edges)?
+    pub fn is_fork_node(&self, id: NodeId) -> bool {
+        self.successors(id).any(|e| e.is_fork())
+    }
+
+    /// Per-node inflow scales for the visit-rate fixed point and the
+    /// allocation LP: a join's branch-completion edges each carry full
+    /// flow, but the barrier merges them back into ONE request — so the
+    /// join's effective workload is the summed inflow divided by the
+    /// resolved fork's **branch count** (NOT its in-edge count: a branch
+    /// that routes probabilistically may reach the join over several
+    /// edges whose flows already sum to one branch's worth). 1.0 for
+    /// every ordinary node; validation guarantees each join resolves to
+    /// exactly one fork ([`ValidationError::SharedJoin`]), keeping the
+    /// static scale well-defined.
+    pub fn join_scales(&self) -> Vec<f64> {
+        let mut s = vec![1.0; self.nodes.len()];
+        for fg in self.fork_groups().into_values() {
+            s[fg.join.0] = 1.0 / fg.targets.len().max(1) as f64;
+        }
+        s
+    }
+
+    /// Convenience single-node accessor for [`PipelineGraph::join_scales`]
+    /// (callers iterating many nodes should compute the vector once).
+    pub fn join_in_scale(&self, id: NodeId) -> f64 {
+        self.join_scales()[id.0]
+    }
+
+    /// Resolve every fork node to its [`ForkGroup`] (branch entries +
+    /// join + barrier policy). Best-effort on unvalidated graphs: forks
+    /// whose join cannot be resolved are omitted — `validate` rejects
+    /// such graphs with a precise error.
+    pub fn fork_groups(&self) -> HashMap<NodeId, ForkGroup> {
+        let adj = self.adjacency();
+        let mut groups = HashMap::new();
+        for n in &self.nodes {
+            let edges: Vec<usize> = adj
+                .out_edges(n.id)
+                .iter()
+                .copied()
+                .filter(|&i| self.edges[i].is_fork())
+                .collect();
+            if edges.is_empty() {
+                continue;
+            }
+            let targets: Vec<NodeId> = edges.iter().map(|&i| self.edges[i].to).collect();
+            let Some(join) = self.resolve_join(&adj, &targets) else { continue };
+            let spec = self.node(join).join.expect("resolved join is annotated");
+            groups.insert(
+                n.id,
+                ForkGroup {
+                    fork: n.id,
+                    join,
+                    need: spec.need(targets.len()),
+                    targets,
+                    edges,
+                    policy: spec.policy,
+                    merge: spec.merge,
+                },
+            );
+        }
+        groups
+    }
+
+    /// Nodes forward-reachable from `start` (inclusive), stopping at
+    /// `absorb` (the absorbing node is included but not expanded).
+    fn forward_reachable(
+        &self,
+        adj: &Adjacency,
+        start: NodeId,
+        absorb: Option<NodeId>,
+    ) -> Vec<bool> {
+        let mut reach = vec![false; self.nodes.len()];
+        let mut stack = vec![start];
+        reach[start.0] = true;
+        while let Some(u) = stack.pop() {
+            if Some(u) == absorb {
+                continue;
+            }
+            for &ei in adj.out_edges(u) {
+                let e = &self.edges[ei];
+                if !e.back_edge && !reach[e.to.0] {
+                    reach[e.to.0] = true;
+                    stack.push(e.to);
+                }
+            }
+        }
+        reach
+    }
+
+    /// The join node a fork's branches reconverge at: the join-annotated
+    /// node forward-reachable from the most branches, nearest to the fork
+    /// on ties. `None` when no branch reaches any join.
+    fn resolve_join(&self, adj: &Adjacency, targets: &[NodeId]) -> Option<NodeId> {
+        let reach: Vec<Vec<bool>> =
+            targets.iter().map(|&t| self.forward_reachable(adj, t, None)).collect();
+        let mut best: Option<(usize, usize, NodeId)> = None; // (branches, -depth proxy, id)
+        for n in &self.nodes {
+            if n.join.is_none() {
+                continue;
+            }
+            let hit = reach.iter().filter(|r| r[n.id.0]).count();
+            if hit == 0 {
+                continue;
+            }
+            // Depth proxy: min BFS depth from any branch target.
+            let depth = self.min_depth(adj, targets, n.id);
+            let cand = (hit, depth, n.id);
+            best = Some(match best {
+                None => cand,
+                Some(b) => {
+                    if cand.0 > b.0 || (cand.0 == b.0 && cand.1 < b.1) {
+                        cand
+                    } else {
+                        b
+                    }
+                }
+            });
+        }
+        best.map(|(_, _, id)| id)
+    }
+
+    fn min_depth(&self, adj: &Adjacency, starts: &[NodeId], goal: NodeId) -> usize {
+        use std::collections::VecDeque;
+        let mut dist = vec![usize::MAX; self.nodes.len()];
+        let mut q = VecDeque::new();
+        for &s in starts {
+            dist[s.0] = 0;
+            q.push_back(s);
+        }
+        while let Some(u) = q.pop_front() {
+            if u == goal {
+                return dist[u.0];
+            }
+            for &ei in adj.out_edges(u) {
+                let e = &self.edges[ei];
+                if !e.back_edge && dist[e.to.0] == usize::MAX {
+                    dist[e.to.0] = dist[u.0] + 1;
+                    q.push_back(e.to);
+                }
+            }
+        }
+        usize::MAX
     }
 
     /// Structural validation; run by the builder and unit tests.
@@ -292,14 +685,20 @@ impl PipelineGraph {
                 });
             }
         }
-        // Probability sums.
+        let adj = self.adjacency();
+        // Edge-kind discipline + probability sums (Route nodes only).
         for n in &self.nodes {
-            let succ: Vec<_> = self.successors(n.id).collect();
             if n.id == self.sink {
                 continue;
             }
-            if !succ.is_empty() {
-                let sum: f64 = succ.iter().map(|e| e.prob).sum();
+            let succ: Vec<&EdgeSpec> =
+                adj.out_edges(n.id).iter().map(|&i| &self.edges[i]).collect();
+            let forks = succ.iter().filter(|e| e.is_fork()).count();
+            if forks > 0 && forks < succ.len() {
+                return Err(ValidationError::MixedEdgeKinds { node: n.name.clone() });
+            }
+            if forks == 0 && !succ.is_empty() {
+                let sum: f64 = succ.iter().map(|e| e.prob()).sum();
                 if (sum - 1.0).abs() > 1e-6 {
                     return Err(ValidationError::BadProbabilitySum { node: n.name.clone(), sum });
                 }
@@ -312,12 +711,14 @@ impl PipelineGraph {
                 });
             }
         }
+        self.validate_forks(&adj)?;
         // Reachability from source (forward edges and back edges both count).
         let mut reach = vec![false; self.nodes.len()];
         let mut stack = vec![self.source];
         reach[self.source.0] = true;
         while let Some(u) = stack.pop() {
-            for e in self.successors(u) {
+            for &ei in adj.out_edges(u) {
+                let e = &self.edges[ei];
                 if !reach[e.to.0] {
                     reach[e.to.0] = true;
                     stack.push(e.to);
@@ -350,19 +751,158 @@ impl PipelineGraph {
         Ok(())
     }
 
-    /// Expected visits per admitted request for every node, accounting for
-    /// branch probabilities, amplification γ, and recursion. Solved by
-    /// fixed-point iteration of v_j = [j==source] + Σ_i v_i γ_i p_{i,j}
-    /// (converges for sub-stochastic loops, i.e. loop gain < 1).
+    /// Fork/join structural checks: balanced forks, joins reachable from
+    /// every branch, closed and disjoint branch regions, no back edges
+    /// cutting into a region, `FirstK` within bounds, no orphan joins.
+    fn validate_forks(&self, adj: &Adjacency) -> Result<(), ValidationError> {
+        let mut matched_joins: HashMap<NodeId, Vec<NodeId>> = HashMap::new(); // join → forks
+        let mut region_of: HashMap<NodeId, Vec<bool>> = HashMap::new(); // fork → region
+        for n in &self.nodes {
+            let fork_edges: Vec<&EdgeSpec> = adj
+                .out_edges(n.id)
+                .iter()
+                .map(|&i| &self.edges[i])
+                .filter(|e| e.is_fork())
+                .collect();
+            if fork_edges.is_empty() {
+                continue;
+            }
+            for e in &fork_edges {
+                if e.back_edge {
+                    return Err(ValidationError::ForkIntoBackEdge { node: n.name.clone() });
+                }
+                if self.node(e.to).join.is_some() {
+                    return Err(ValidationError::EmptyForkBranch { node: n.name.clone() });
+                }
+            }
+            let targets: Vec<NodeId> = fork_edges.iter().map(|e| e.to).collect();
+            if targets.len() < 2 {
+                return Err(ValidationError::UnbalancedFork { node: n.name.clone() });
+            }
+            let Some(join) = self.resolve_join(adj, &targets) else {
+                return Err(ValidationError::UnbalancedFork { node: n.name.clone() });
+            };
+            for &t in &targets {
+                if !self.forward_reachable(adj, t, None)[join.0] {
+                    return Err(ValidationError::JoinMissingBranch {
+                        join: self.node(join).name.clone(),
+                        branch: self.node(t).name.clone(),
+                    });
+                }
+            }
+            let spec = self.node(join).join.expect("resolved join is annotated");
+            if let JoinPolicy::FirstK(k) = spec.policy {
+                if k == 0 || k > targets.len() {
+                    return Err(ValidationError::BadFirstK {
+                        node: self.node(join).name.clone(),
+                        k,
+                        branches: targets.len(),
+                    });
+                }
+            }
+            // Branch regions: reachable from each target, absorbing at
+            // the join. Must be closed (no escape past the join), must
+            // not contain the sink, and must be pairwise disjoint.
+            let mut union = vec![false; self.nodes.len()];
+            for (bi, &t) in targets.iter().enumerate() {
+                let r = self.forward_reachable(adj, t, Some(join));
+                for (i, &in_r) in r.iter().enumerate() {
+                    if i == join.0 || !in_r {
+                        continue;
+                    }
+                    if NodeId(i) == self.sink {
+                        return Err(ValidationError::ForkBranchEscapes {
+                            node: n.name.clone(),
+                            via: self.node(targets[bi]).name.clone(),
+                        });
+                    }
+                    if union[i] {
+                        return Err(ValidationError::OverlappingForkBranches {
+                            node: n.name.clone(),
+                        });
+                    }
+                    union[i] = true;
+                }
+            }
+            // Region closure: every forward edge from a region node stays
+            // in the region or enters the join.
+            for e in &self.edges {
+                if !union[e.from.0] {
+                    continue;
+                }
+                if e.back_edge {
+                    return Err(ValidationError::BackEdgeInForkRegion {
+                        node: self.node(e.from).name.clone(),
+                    });
+                }
+                if !union[e.to.0] && e.to != join {
+                    return Err(ValidationError::ForkBranchEscapes {
+                        node: n.name.clone(),
+                        via: self.node(e.from).name.clone(),
+                    });
+                }
+            }
+            // Back edges may not jump INTO the region either.
+            for e in &self.edges {
+                if e.back_edge && union[e.to.0] {
+                    return Err(ValidationError::BackEdgeInForkRegion {
+                        node: self.node(e.to).name.clone(),
+                    });
+                }
+            }
+            matched_joins.entry(join).or_default().push(n.id);
+            region_of.insert(n.id, union);
+        }
+        // Every annotated join must be exactly ONE fork's reconvergence
+        // point (a shared join would make the barrier's branch count —
+        // and the LP's inflow scale — ambiguous), and its forward
+        // in-edges must all originate inside the matched fork's region.
+        for n in &self.nodes {
+            if n.join.is_none() {
+                continue;
+            }
+            let Some(forks) = matched_joins.get(&n.id) else {
+                return Err(ValidationError::JoinWithoutFork { node: n.name.clone() });
+            };
+            if forks.len() > 1 {
+                return Err(ValidationError::SharedJoin { node: n.name.clone() });
+            }
+            for &ei in adj.in_edges(n.id) {
+                let e = &self.edges[ei];
+                if e.back_edge {
+                    continue;
+                }
+                let ok = forks
+                    .iter()
+                    .any(|f| region_of.get(f).map(|r| r[e.from.0]).unwrap_or(false));
+                if !ok {
+                    return Err(ValidationError::JoinWithoutFork { node: n.name.clone() });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Expected visits per admitted request for every node, accounting
+    /// for branch probabilities, amplification γ, recursion, and parallel
+    /// dataflow. Solved by fixed-point iteration of
+    /// v_j = [j==source] + Σ_i v_i γ_i w_{i,j} (converges for
+    /// sub-stochastic loops, i.e. loop gain < 1). Fork edges carry full
+    /// flow (w = 1 per branch — every branch is real work the allocator
+    /// must provision); a join's inflow is scaled by 1/branches because
+    /// the barrier merges the siblings back into one request
+    /// ([`PipelineGraph::join_in_scale`]).
     pub fn visit_rates(&self) -> Vec<f64> {
         let n = self.nodes.len();
+        let scale = self.join_scales();
         let mut v = vec![0.0f64; n];
         v[self.source.0] = 1.0;
         for _ in 0..10_000 {
             let mut nv = vec![0.0f64; n];
             nv[self.source.0] = 1.0;
             for e in &self.edges {
-                nv[e.to.0] += v[e.from.0] * self.node(e.from).gamma * e.prob;
+                let s = if e.back_edge { 1.0 } else { scale[e.to.0] };
+                nv[e.to.0] += v[e.from.0] * self.node(e.from).gamma * e.prob() * s;
             }
             let diff: f64 = nv.iter().zip(&v).map(|(a, b)| (a - b).abs()).sum();
             v = nv;
@@ -374,13 +914,89 @@ impl PipelineGraph {
     }
 
     /// Edge flow fractions per admitted request (visit rate of `from` ×
-    /// γ × p). Used by the allocator and the DES.
+    /// γ × edge flow fraction). Used by the allocator and the DES.
     pub fn edge_flows(&self) -> Vec<f64> {
         let v = self.visit_rates();
         self.edges
             .iter()
-            .map(|e| v[e.from.0] * self.node(e.from).gamma * e.prob)
+            .map(|e| v[e.from.0] * self.node(e.from).gamma * e.prob())
             .collect()
+    }
+
+    /// Per-edge *latency* weights for critical-path analysis: `Route(p)`
+    /// edges keep their probability, but within each fork group exactly
+    /// one branch — the one on the critical path — carries weight 1 and
+    /// the siblings carry 0, because parallel branches overlap in time
+    /// instead of adding. For [`JoinPolicy::All`] the critical branch is
+    /// the one with the largest prior path cost (the barrier waits for
+    /// the slowest); for [`JoinPolicy::FirstK`]`(k)` it is the k-th
+    /// *fastest* branch (the barrier releases on the k-th arrival).
+    /// `node_cost` supplies the prior mean service per node; nested forks
+    /// inside a branch are costed conservatively (summed) when ranking.
+    ///
+    /// With these weights, the visits fixed point computes expected
+    /// critical-path time instead of summed parallel work — the model
+    /// behind `sched::SlackPredictor`'s remaining-time estimates and
+    /// `profile::graph_latency`.
+    pub fn latency_edge_weights(&self, node_cost: &HashMap<NodeId, f64>) -> Vec<f64> {
+        let adj = self.adjacency();
+        let mut w: Vec<f64> = self.edges.iter().map(|e| e.prob()).collect();
+        for fg in self.fork_groups().into_values() {
+            // Rank branches by prior path cost (entry → join).
+            let mut costs: Vec<(usize, f64)> = fg
+                .targets
+                .iter()
+                .enumerate()
+                .map(|(bi, &t)| (bi, self.branch_cost(&adj, t, fg.join, node_cost)))
+                .collect();
+            costs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+            let critical = match fg.policy {
+                JoinPolicy::All => costs.last().map(|&(bi, _)| bi).unwrap_or(0),
+                JoinPolicy::FirstK(k) => {
+                    costs.get(k.saturating_sub(1).min(costs.len().saturating_sub(1)))
+                        .map(|&(bi, _)| bi)
+                        .unwrap_or(0)
+                }
+            };
+            for (bi, &ei) in fg.edges.iter().enumerate() {
+                w[ei] = if bi == critical { 1.0 } else { 0.0 };
+            }
+        }
+        w
+    }
+
+    /// Expected prior cost of one branch: visits fixed point from the
+    /// branch entry with the join absorbing, dotted with `node_cost`.
+    fn branch_cost(
+        &self,
+        _adj: &Adjacency,
+        entry: NodeId,
+        join: NodeId,
+        node_cost: &HashMap<NodeId, f64>,
+    ) -> f64 {
+        let n = self.nodes.len();
+        let mut v = vec![0.0f64; n];
+        v[entry.0] = 1.0;
+        for _ in 0..10_000 {
+            let mut nv = vec![0.0f64; n];
+            nv[entry.0] = 1.0;
+            for e in &self.edges {
+                if e.from == join {
+                    continue; // absorb at the join
+                }
+                nv[e.to.0] += v[e.from.0] * self.node(e.from).gamma * e.prob();
+            }
+            let diff: f64 = nv.iter().zip(&v).map(|(a, b)| (a - b).abs()).sum();
+            v = nv;
+            if diff < 1e-12 {
+                break;
+            }
+        }
+        v.iter()
+            .enumerate()
+            .filter(|&(i, _)| NodeId(i) != join)
+            .map(|(i, &vi)| vi * node_cost.get(&NodeId(i)).copied().unwrap_or(0.0))
+            .sum()
     }
 }
 
@@ -395,6 +1011,7 @@ mod tests {
         g.validate().unwrap();
         assert!(!g.has_conditionals());
         assert!(!g.has_recursion());
+        assert!(!g.has_forks());
         // Table 1 row: V-RAG has neither.
         let v = g.visit_rates();
         // Every node visited exactly once.
@@ -448,7 +1065,7 @@ mod tests {
         let retr = g.node_by_name("retriever").unwrap().id;
         for e in g.edges.iter_mut() {
             if e.from == retr {
-                e.prob = 0.5;
+                e.kind = EdgeKind::Route(0.5);
             }
         }
         match g.validate() {
@@ -470,13 +1087,14 @@ mod tests {
             shards: 1,
             cache_hit_rate: 0.0,
             degrade: DegradeKnob::None,
+            join: None,
             resources: vec![(ResourceKind::Cpu, 1.0)],
             alpha: vec![(ResourceKind::Cpu, 1.0)],
             gamma: 1.0,
             streamable: false,
         });
         // orphan needs an edge to sink for NoPathToSink not to trigger first
-        g.edges.push(EdgeSpec { from: id, to: g.sink, prob: 1.0, back_edge: false });
+        g.edges.push(EdgeSpec::route(id, g.sink, 1.0));
         match g.validate() {
             Err(ValidationError::Unreachable { node }) => assert_eq!(node, "orphan"),
             other => panic!("expected Unreachable, got {other:?}"),
@@ -519,11 +1137,272 @@ mod tests {
         b.edge_from_source(a, 1.0);
         b.branch(a, &[]); // no forward branches; we add manually below
         let mut g = b.build_unvalidated();
-        g.edges.push(EdgeSpec { from: a, to: a, prob: 0.5, back_edge: true });
-        g.edges.push(EdgeSpec { from: a, to: g.sink, prob: 0.5, back_edge: false });
+        g.edges.push(EdgeSpec { from: a, to: a, kind: EdgeKind::Route(0.5), back_edge: true });
+        g.edges.push(EdgeSpec::route(a, g.sink, 0.5));
         g.validate().unwrap();
         let v = g.visit_rates();
         assert!((v[a.0] - 2.0).abs() < 1e-9, "visits {}", v[a.0]);
         assert!((v[g.sink.0] - 1.0).abs() < 1e-9);
+    }
+
+    // ---- fork/join -------------------------------------------------------
+
+    #[test]
+    fn hybrid_fork_visit_rates_give_full_flow_per_branch() {
+        let g = apps::hybrid_rag();
+        g.validate().unwrap();
+        assert!(g.has_forks());
+        assert!(!g.has_conditionals(), "a fork is not a conditional");
+        let v = g.visit_rates();
+        // Every branch carries full flow; the join merges back to one.
+        for name in ["retriever", "websearch", "generator"] {
+            let id = g.node_by_name(name).unwrap().id;
+            assert!((v[id.0] - 1.0).abs() < 1e-9, "{name}: {}", v[id.0]);
+        }
+        assert!((v[g.sink.0] - 1.0).abs() < 1e-9, "sink {}", v[g.sink.0]);
+    }
+
+    #[test]
+    fn fork_groups_resolve_targets_and_join() {
+        let g = apps::hybrid_rag();
+        let groups = g.fork_groups();
+        assert_eq!(groups.len(), 1);
+        let fg = groups.values().next().unwrap();
+        assert_eq!(fg.fork, g.source);
+        assert_eq!(fg.join, g.node_by_name("generator").unwrap().id);
+        assert_eq!(fg.targets.len(), 2);
+        assert_eq!(fg.need, 2);
+        assert_eq!(fg.policy, JoinPolicy::All);
+    }
+
+    #[test]
+    fn adjacency_matches_linear_scans() {
+        let g = apps::adaptive_rag();
+        let adj = g.adjacency();
+        for n in &g.nodes {
+            let scan: Vec<NodeId> = g.successors(n.id).map(|e| e.to).collect();
+            let idx: Vec<NodeId> =
+                adj.out_edges(n.id).iter().map(|&i| g.edges[i].to).collect();
+            assert_eq!(scan, idx, "{}", n.name);
+            let scan_in: Vec<NodeId> = g.predecessors(n.id).map(|e| e.from).collect();
+            let idx_in: Vec<NodeId> =
+                adj.in_edges(n.id).iter().map(|&i| g.edges[i].from).collect();
+            assert_eq!(scan_in, idx_in, "{}", n.name);
+        }
+    }
+
+    /// source →fork→ {a, b} →join(c)→ sink, with knobs for breaking it.
+    fn fork_fixture() -> PipelineGraph {
+        let mut b = crate::spec::PipelineBuilder::new("fork-fixture");
+        let a = b.component("a", ComponentKind::Retriever).add();
+        let w = b.component("b", ComponentKind::WebSearch).add();
+        let c = b
+            .component("c", ComponentKind::Generator)
+            .join(JoinSpec::all())
+            .add();
+        b.fork(b.source(), &[a, w]);
+        b.edge(a, c, 1.0);
+        b.edge(w, c, 1.0);
+        b.edge_to_sink(c, 1.0);
+        b.build_unvalidated()
+    }
+
+    #[test]
+    fn fixture_is_valid() {
+        fork_fixture().validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_unbalanced_fork() {
+        // No join annotation anywhere: the branches never reconverge.
+        let mut g = fork_fixture();
+        let c = g.node_by_name("c").unwrap().id;
+        g.nodes[c.0].join = None;
+        match g.validate() {
+            Err(ValidationError::UnbalancedFork { node }) => assert_eq!(node, "source"),
+            other => panic!("expected UnbalancedFork, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn validation_catches_join_with_missing_branch() {
+        // Branch `b` re-routed straight to the sink: the join never sees
+        // it (and the region leaks toward the sink).
+        let mut g = fork_fixture();
+        let w = g.node_by_name("b").unwrap().id;
+        let c = g.node_by_name("c").unwrap().id;
+        for e in g.edges.iter_mut() {
+            if e.from == w && e.to == c {
+                e.to = g.sink;
+            }
+        }
+        match g.validate() {
+            Err(ValidationError::JoinMissingBranch { join, branch }) => {
+                assert_eq!(join, "c");
+                assert_eq!(branch, "b");
+            }
+            other => panic!("expected JoinMissingBranch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn validation_catches_fork_into_back_edge() {
+        let mut g = fork_fixture();
+        for e in g.edges.iter_mut() {
+            if e.is_fork() {
+                e.back_edge = true;
+                break;
+            }
+        }
+        match g.validate() {
+            Err(ValidationError::ForkIntoBackEdge { node }) => assert_eq!(node, "source"),
+            other => panic!("expected ForkIntoBackEdge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn validation_catches_first_k_out_of_bounds() {
+        let mut g = fork_fixture();
+        let c = g.node_by_name("c").unwrap().id;
+        g.nodes[c.0].join = Some(JoinSpec::first_k(3)); // only 2 branches
+        match g.validate() {
+            Err(ValidationError::BadFirstK { node, k, branches }) => {
+                assert_eq!(node, "c");
+                assert_eq!(k, 3);
+                assert_eq!(branches, 2);
+            }
+            other => panic!("expected BadFirstK, got {other:?}"),
+        }
+        g.nodes[c.0].join = Some(JoinSpec::first_k(0));
+        assert!(matches!(g.validate(), Err(ValidationError::BadFirstK { .. })));
+        g.nodes[c.0].join = Some(JoinSpec::first_k(1));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_branch_escaping_the_region() {
+        // Give branch `a` a probabilistic side exit that bypasses the
+        // join toward the sink: the region is no longer closed.
+        let mut g = fork_fixture();
+        let a = g.node_by_name("a").unwrap().id;
+        let c = g.node_by_name("c").unwrap().id;
+        for e in g.edges.iter_mut() {
+            if e.from == a && e.to == c {
+                e.kind = EdgeKind::Route(0.5);
+            }
+        }
+        g.edges.push(EdgeSpec::route(a, g.sink, 0.5));
+        match g.validate() {
+            Err(ValidationError::ForkBranchEscapes { node, .. }) => assert_eq!(node, "source"),
+            other => panic!("expected ForkBranchEscapes, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn validation_catches_mixed_edge_kinds_and_orphan_join() {
+        let mut g = fork_fixture();
+        // Orphan join: annotate a node no fork resolves to.
+        let a = g.node_by_name("a").unwrap().id;
+        g.nodes[a.0].join = Some(JoinSpec::all());
+        // `a` is now a fork target with a JoinSpec → empty branch first.
+        assert!(matches!(g.validate(), Err(ValidationError::EmptyForkBranch { .. })));
+        let mut g = fork_fixture();
+        // Mixed kinds: add a Route edge next to the source's Fork edges.
+        let a = g.node_by_name("a").unwrap().id;
+        g.edges.push(EdgeSpec::route(g.source, a, 1.0));
+        match g.validate() {
+            Err(ValidationError::MixedEdgeKinds { node }) => assert_eq!(node, "source"),
+            other => panic!("expected MixedEdgeKinds, got {other:?}"),
+        }
+        // Orphan join with no fork at all.
+        let mut b = crate::spec::PipelineBuilder::new("orphan-join");
+        let r = b.component("r", ComponentKind::Retriever).join(JoinSpec::all()).add();
+        b.edge_from_source(r, 1.0);
+        b.edge_to_sink(r, 1.0);
+        let g = b.build_unvalidated();
+        match g.validate() {
+            Err(ValidationError::JoinWithoutFork { node }) => assert_eq!(node, "r"),
+            other => panic!("expected JoinWithoutFork, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn join_scale_uses_branch_count_not_in_edge_count() {
+        // Branch `a` reaches the join over TWO probabilistic edges (via
+        // x or y); branch `b` over one. The join has 3 forward in-edges
+        // but only 2 branches — its visit rate must still be exactly 1.
+        let mut b = crate::spec::PipelineBuilder::new("multi-edge-branch");
+        let a = b.component("a", ComponentKind::Retriever).add();
+        let x = b.component("x", ComponentKind::Grader).add();
+        let y = b.component("y", ComponentKind::Rewriter).add();
+        let w = b.component("b", ComponentKind::WebSearch).add();
+        let j = b
+            .component("j", ComponentKind::Generator)
+            .join(JoinSpec::all())
+            .add();
+        b.fork(b.source(), &[a, w]);
+        b.branch(a, &[(x, 0.5), (y, 0.5)]);
+        b.edge(x, j, 1.0);
+        b.edge(y, j, 1.0);
+        b.edge(w, j, 1.0);
+        b.edge_to_sink(j, 1.0);
+        let g = b.build().unwrap();
+        assert_eq!(g.join_in_scale(j), 0.5, "scale = 1/branches, not 1/in-edges");
+        let v = g.visit_rates();
+        assert!((v[j.0] - 1.0).abs() < 1e-9, "join visits {}", v[j.0]);
+        assert!((v[g.sink.0] - 1.0).abs() < 1e-9, "sink visits {}", v[g.sink.0]);
+        assert!((v[x.0] - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validation_rejects_a_join_shared_by_two_forks() {
+        // Two forks reconverging on one join node: the barrier's branch
+        // count would be ambiguous.
+        let mut b = crate::spec::PipelineBuilder::new("shared-join");
+        let a = b.component("a", ComponentKind::Retriever).add();
+        let c = b.component("c", ComponentKind::WebSearch).add();
+        let f2 = b.component("f2", ComponentKind::Classifier).add();
+        let d = b.component("d", ComponentKind::Grader).add();
+        let e = b.component("e", ComponentKind::Rewriter).add();
+        let j = b
+            .component("j", ComponentKind::Generator)
+            .join(JoinSpec::all())
+            .add();
+        b.fork(b.source(), &[a, c]);
+        b.edge(a, j, 1.0);
+        b.edge(c, f2, 1.0);
+        b.fork(f2, &[d, e]);
+        b.edge(d, j, 1.0);
+        b.edge(e, j, 1.0);
+        b.edge_to_sink(j, 1.0);
+        let g = b.build_unvalidated();
+        match g.validate() {
+            Err(ValidationError::SharedJoin { node }) => assert_eq!(node, "j"),
+            other => panic!("expected SharedJoin, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn latency_weights_pick_the_critical_branch() {
+        let g = apps::hybrid_rag();
+        // Priors: websearch much slower than the retriever.
+        let mut cost: HashMap<NodeId, f64> = HashMap::new();
+        for n in &g.nodes {
+            cost.insert(n.id, 0.0);
+        }
+        let retr = g.node_by_name("retriever").unwrap().id;
+        let web = g.node_by_name("websearch").unwrap().id;
+        cost.insert(retr, 0.1);
+        cost.insert(web, 0.15);
+        let w = g.latency_edge_weights(&cost);
+        let (wi, _) = g.edges.iter().enumerate().find(|(_, e)| e.to == web).unwrap();
+        let (ri, _) = g.edges.iter().enumerate().find(|(_, e)| e.to == retr).unwrap();
+        assert_eq!(w[wi], 1.0, "slow branch is the critical path");
+        assert_eq!(w[ri], 0.0, "fast branch overlaps under the slow one");
+        // Flip the costs: the critical branch flips with them.
+        cost.insert(retr, 0.3);
+        let w = g.latency_edge_weights(&cost);
+        assert_eq!(w[wi], 0.0);
+        assert_eq!(w[ri], 1.0);
     }
 }

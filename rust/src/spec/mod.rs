@@ -1,7 +1,13 @@
 //! The RAG **specification layer** (§3.1): pipelines as component graphs
-//! with conditional branches, recursion, request amplification, and
-//! declarative constraints (stateful routing, resource demands, base
-//! instances).
+//! with conditional branches, recursion, parallel (fork/join) dataflow,
+//! request amplification, and declarative constraints (stateful routing,
+//! resource demands, base instances).
+//!
+//! Edges are typed ([`EdgeKind`]): probabilistic `Route(p)` edges pick
+//! exactly one successor per visit, while `Fork` edges fan the request
+//! out to every successor as sibling subtasks that reconverge at a
+//! [`JoinSpec`]-annotated barrier (`All` or racing `FirstK(k)`, with a
+//! [`MergePolicy`] for the branch results).
 //!
 //! The paper captures this graph from idiomatic Python via AST analysis;
 //! here the same machine-readable representation is produced by an
@@ -14,6 +20,6 @@ pub mod graph;
 
 pub use builder::PipelineBuilder;
 pub use graph::{
-    ComponentKind, DegradeKnob, EdgeSpec, NodeId, NodeSpec, PipelineGraph, ResourceKind,
-    ValidationError,
+    Adjacency, ComponentKind, DegradeKnob, EdgeKind, EdgeSpec, ForkGroup, JoinPolicy, JoinSpec,
+    MergePolicy, NodeId, NodeSpec, PipelineGraph, ResourceKind, ValidationError,
 };

@@ -132,6 +132,49 @@ fn self_rag_loop_terminates() {
 }
 
 #[test]
+fn hybrid_rag_forks_and_joins_live() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let h = deploy(apps::hybrid_rag(), cfg()).unwrap();
+    let rx = h.submit(b"what does topic two say?");
+    let r = rx.recv_timeout(std::time::Duration::from_secs(240)).unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    // Branch completions count as hops: retriever + websearch + the
+    // joined generator.
+    assert_eq!(r.hops, 3, "hops {}", r.hops);
+    assert!(!r.answer.is_empty());
+    let report = h.report();
+    assert_eq!(report.completed, 1);
+    // Both branches executed once, and the barrier recorded a release.
+    assert_eq!(report.components["retriever"].executions, 1);
+    assert_eq!(report.components["websearch"].executions, 1);
+    assert_eq!(report.components["generator"].joins, 1);
+    h.shutdown();
+}
+
+#[test]
+fn multiquery_rag_fuses_variant_retrievals_live() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let h = deploy(apps::multiquery_rag(2), cfg()).unwrap();
+    let rx = h.submit(b"tell me about topic three");
+    let r = rx.recv_timeout(std::time::Duration::from_secs(240)).unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    // 2 × (rewriter + retriever) + generator.
+    assert_eq!(r.hops, 5, "hops {}", r.hops);
+    let report = h.report();
+    for comp in ["rewriter_q0", "retriever_q1", "generator"] {
+        assert!(report.components.contains_key(comp), "missing {comp}");
+    }
+    assert_eq!(report.components["generator"].joins, 1);
+    h.shutdown();
+}
+
+#[test]
 fn adaptive_rag_classifies_and_routes() {
     if !artifacts_available() {
         eprintln!("skipping: artifacts not built");
