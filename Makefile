@@ -6,7 +6,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test test-fast lint fmt clippy doc verify artifacts bench bench-shards bench-cache bench-overload bench-batching bench-parallel bench-smoke clean
+.PHONY: all build test test-fast lint fmt clippy doc verify artifacts bench bench-shards bench-cache bench-overload bench-batching bench-parallel bench-disagg bench-smoke clean
 
 all: build
 
@@ -65,6 +65,10 @@ bench-batching:
 bench-parallel:
 	$(CARGO) bench --bench fig07_parallel_dataflow
 
+# The prefill/decode disaggregation × KV prefix-cache bench only (fig08).
+bench-disagg:
+	$(CARGO) bench --bench fig08_disaggregation
+
 # Quick-iteration bench pass (CI): actually *execute* the bench binaries
 # with `--smoke`-shrunk workloads (see util::bench::smoke) instead of
 # only compiling them. Keeps the paper-figure harnesses from bit-rotting.
@@ -74,6 +78,7 @@ bench-smoke:
 	$(CARGO) bench --bench fig04c_cache_hit_curve -- --smoke
 	$(CARGO) bench --bench fig06_continuous_batching -- --smoke
 	$(CARGO) bench --bench fig07_parallel_dataflow -- --smoke
+	$(CARGO) bench --bench fig08_disaggregation -- --smoke
 
 clean:
 	$(CARGO) clean

@@ -23,6 +23,7 @@ use std::collections::HashMap;
 
 use crate::lp::{LpModel, Sense};
 use crate::lp::simplex::Status;
+use crate::profile::models::{kv_prefix_service_factor, GenPlacement, KvTransferModel};
 use crate::profile::Profile;
 use crate::spec::graph::{ComponentKind, NodeId, PipelineGraph, ResourceKind};
 
@@ -35,6 +36,18 @@ pub struct FlowProblem<'a> {
     pub profile: &'a Profile,
     /// Resource budgets C_k for the whole cluster.
     pub budgets: Vec<(ResourceKind, f64)>,
+    /// Generator task placement. `Collocated` (the default) builds
+    /// exactly the pre-split formulation; `Disaggregated` gives every
+    /// generator separate prefill/decode resource columns coupled by an
+    /// explicit KV-handoff flow variable, so each phase is sized by its
+    /// own α and the transfer cost is priced — the LP can refuse the
+    /// split when transfer dominates (RAGO's "where placement wins").
+    pub placement: GenPlacement,
+    /// KV-transfer cost model charged to disaggregated handoffs.
+    pub kv: KvTransferModel,
+    /// Expected KV prefix-cache hit rate discounting prefill work
+    /// (disaggregated only; 0 = no prefix cache).
+    pub kv_prefix_hit: f64,
 }
 
 #[derive(Debug)]
@@ -62,7 +75,36 @@ impl<'a> FlowProblem<'a> {
         profile: &'a Profile,
         budgets: Vec<(ResourceKind, f64)>,
     ) -> Self {
-        FlowProblem { graph, profile, budgets }
+        FlowProblem {
+            graph,
+            profile,
+            budgets,
+            placement: GenPlacement::Collocated,
+            kv: KvTransferModel::paper_interconnect(),
+            kv_prefix_hit: 0.0,
+        }
+    }
+
+    /// Price the generator under an explicit placement / interconnect /
+    /// prefix-cache operating point. `Collocated` is a no-op relative to
+    /// [`FlowProblem::new`].
+    pub fn with_placement(
+        mut self,
+        placement: GenPlacement,
+        kv: KvTransferModel,
+        kv_prefix_hit: f64,
+    ) -> Self {
+        self.placement = placement;
+        self.kv = kv;
+        self.kv_prefix_hit = kv_prefix_hit.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Does this node get split prefill/decode columns?
+    fn disagg(&self, id: NodeId, kind: &ComponentKind) -> bool {
+        self.placement == GenPlacement::Disaggregated
+            && matches!(kind, ComponentKind::Generator)
+            && self.profile.gen_split.get(&id).is_some_and(|s| s.total() > 0.0)
     }
 
     /// Build and solve the LP; returns the optimal plan.
@@ -89,20 +131,38 @@ impl<'a> FlowProblem<'a> {
         // applied to the index partitions.
         let mut r_vars: HashMap<(NodeId, ResourceKind), Vec<crate::lp::model::Var>> =
             HashMap::new();
+        // Disaggregated generators get a second column set: r_vars holds
+        // the prefill pool, r_dec_vars the decode pool. Both draw on the
+        // same budgets; everything else about the node (inflow,
+        // conservation) is shared.
+        let mut r_dec_vars: HashMap<(NodeId, ResourceKind), Vec<crate::lp::model::Var>> =
+            HashMap::new();
         for node in g.work_nodes() {
             let s_count = node.shards.max(1);
+            let split = self.disagg(node.id, &node.kind);
             for &(k, _) in &node.resources {
                 let vars: Vec<_> = (0..s_count)
-                    .map(|s| m.var(format!("r_{}_{}_{s}", node.name, k.name()), 0.0))
+                    .map(|s| {
+                        let tag = if split { "rpre" } else { "r" };
+                        m.var(format!("{tag}_{}_{}_{s}", node.name, k.name()), 0.0)
+                    })
                     .collect();
                 r_vars.insert((node.id, k), vars);
+                if split {
+                    let dvars: Vec<_> = (0..s_count)
+                        .map(|s| m.var(format!("rdec_{}_{}_{s}", node.name, k.name()), 0.0))
+                        .collect();
+                    r_dec_vars.insert((node.id, k), dvars);
+                }
             }
         }
 
-        // Budgets: Σ_{i,s} r_{i,k,s} ≤ C_k.
+        // Budgets: Σ_{i,s} r_{i,k,s} ≤ C_k (prefill and decode pools both
+        // bill the same budget line).
         for &(k, cap) in &self.budgets {
             let terms: Vec<_> = r_vars
                 .iter()
+                .chain(r_dec_vars.iter())
                 .filter(|((_, rk), _)| *rk == k)
                 .flat_map(|(_, vars)| vars.iter().map(|&v| (v, 1.0)))
                 .collect();
@@ -122,6 +182,7 @@ impl<'a> FlowProblem<'a> {
         // Join inflow scales (1/branches at barriers, 1 elsewhere),
         // resolved once for both the capacity and conservation rows.
         let join_scales = g.join_scales();
+        let mut h_vars: HashMap<NodeId, crate::lp::model::Var> = HashMap::new();
         for node in g.work_nodes() {
             // Join nodes: the barrier merges `branches` sibling arrivals
             // into one request, so the workload each unit of capacity
@@ -135,6 +196,54 @@ impl<'a> FlowProblem<'a> {
                 .map(|(i, _)| (f_vars[i], in_scale))
                 .collect();
             if inflow.is_empty() {
+                continue;
+            }
+            if self.disagg(node.id, &node.kind) {
+                // Disaggregated generator: the phases are serial per
+                // request but capacity-independent across requests, so
+                // each gets its own Leontief rows. An explicit handoff
+                // variable h carries the prefill→decode KV flow:
+                //
+                //   h = Σ_u f_{u,i} · in_scale        (every prefill ships)
+                //   Σ_u f_{u,i} · in_scale ≤ α_pre r_pre,k,s   ∀k,s
+                //   h ≤ α_dec r_dec,k,s                        ∀k,s
+                //
+                // α_pre prices effective prefill work — the profiled
+                // split's prefill mean discounted by the expected
+                // prefix-cache hit rate, plus the KV transfer the prefill
+                // instance is busy shipping. α_dec prices the decode mean
+                // alone. Both derive from the same profiled aggregate α,
+                // rescaled by total/phase, so Collocated and Disaggregated
+                // agree whenever transfer is free and the cache is cold.
+                let s = self.profile.gen_split[&node.id];
+                let p_eff = s.prefill * kv_prefix_service_factor(self.kv_prefix_hit)
+                    + self.kv.cost(s.prompt_tokens.round() as usize);
+                let h = m.var(format!("h_{}", node.name), 0.0);
+                h_vars.insert(node.id, h);
+                let mut conserve = inflow.clone();
+                conserve.push((h, -1.0));
+                // Σ inflow·in_scale − h = 0  (written h-major for clarity)
+                m.constrain(conserve, Sense::Eq, 0.0);
+                for &(k, _) in &node.resources {
+                    let a = self.profile.alpha_for(node.id, k);
+                    if a <= 0.0 {
+                        continue;
+                    }
+                    let a_pre = if p_eff > 0.0 { a * s.total() / p_eff } else { 0.0 };
+                    let a_dec = if s.decode > 0.0 { a * s.total() / s.decode } else { 0.0 };
+                    if a_pre > 0.0 {
+                        for &rv in &r_vars[&(node.id, k)] {
+                            let mut terms = inflow.clone();
+                            terms.push((rv, -a_pre));
+                            m.constrain(terms, Sense::Le, 0.0);
+                        }
+                    }
+                    if a_dec > 0.0 {
+                        for &rv in &r_dec_vars[&(node.id, k)] {
+                            m.constrain(vec![(h, 1.0), (rv, -a_dec)], Sense::Le, 0.0);
+                        }
+                    }
+                }
                 continue;
             }
             // For sharded nodes every request visits *all* shards, so each
@@ -192,13 +301,21 @@ impl<'a> FlowProblem<'a> {
         let mut resources = HashMap::new();
         let mut shard_resources = HashMap::new();
         for ((node, k), vars) in &r_vars {
-            let vals: Vec<f64> = vars.iter().map(|v| sol.x[v.0]).collect();
+            let mut vals: Vec<f64> = vars.iter().map(|v| sol.x[v.0]).collect();
+            // Fold the decode pool into the node totals so budget
+            // accounting and instance rounding see the full bill; the
+            // per-pool split is reported separately via `gen_pools`.
+            if let Some(dvars) = r_dec_vars.get(&(*node, *k)) {
+                for (slot, dv) in vals.iter_mut().zip(dvars) {
+                    *slot += sol.x[dv.0];
+                }
+            }
             let total: f64 = vals.iter().sum();
             resources.insert((*node, *k), total);
             shard_resources.insert((*node, *k), vals);
         }
         let edge_flows = f_vars.iter().map(|v| sol.x[v.0]).collect();
-        Ok(AllocationPlan::from_lp(
+        let mut plan = AllocationPlan::from_lp(
             g,
             self.profile,
             resources,
@@ -206,7 +323,28 @@ impl<'a> FlowProblem<'a> {
             edge_flows,
             sol.objective,
             sol.pivots,
-        ))
+        );
+        // Report the per-pool split: instances = max over resources of
+        // ceil(r_pool / demand), each pool staffed (≥ 1) whenever the node
+        // carries flow — an empty prefill or decode pool would deadlock
+        // the handoff chain.
+        for node in g.work_nodes() {
+            let Some(&h) = h_vars.get(&node.id) else { continue };
+            let mut n_pre = 0usize;
+            let mut n_dec = 0usize;
+            for &(k, demand) in &node.resources {
+                if demand <= 0.0 {
+                    continue;
+                }
+                let pre: f64 = r_vars[&(node.id, k)].iter().map(|v| sol.x[v.0]).sum();
+                let dec: f64 = r_dec_vars[&(node.id, k)].iter().map(|v| sol.x[v.0]).sum();
+                n_pre = n_pre.max((pre / demand).ceil() as usize);
+                n_dec = n_dec.max((dec / demand).ceil() as usize);
+            }
+            plan.gen_pools.insert(node.id, (n_pre.max(1), n_dec.max(1)));
+            plan.gen_handoff.insert(node.id, sol.x[h.0]);
+        }
+        Ok(plan)
     }
 }
 
@@ -394,6 +532,108 @@ mod tests {
             let id = g.node_by_name(&format!("retriever_q{i}")).unwrap().id;
             assert!(mq.instances(id) >= 1, "variant {i} unstaffed");
         }
+    }
+
+    #[test]
+    fn collocated_placement_is_the_identity_formulation() {
+        // `with_placement(Collocated, …)` must build the exact same LP as
+        // `new` — same columns, same rows — so the knob is inert by
+        // default, mirroring the DES's golden-trace discipline.
+        use crate::profile::models::{GenPlacement, KvTransferModel};
+        let g = apps::vanilla_rag();
+        let profile = profile_graph(&g, 2000, 11);
+        let budgets = paper_cluster_budgets();
+        let a = FlowProblem::new(&g, &profile, budgets.clone()).solve().unwrap();
+        let b = FlowProblem::new(&g, &profile, budgets)
+            .with_placement(GenPlacement::Collocated, KvTransferModel::paper_interconnect(), 0.0)
+            .solve()
+            .unwrap();
+        assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+        assert!(b.gen_pools.is_empty() && b.gen_handoff.is_empty());
+        for (key, v) in &a.resources {
+            assert_eq!(v.to_bits(), b.resources[key].to_bits());
+        }
+    }
+
+    #[test]
+    fn disagg_handoff_conserves_flow_under_forks() {
+        // The explicit KV-handoff variable must carry exactly the
+        // generator's scaled inflow — prefill-pool outflow equals
+        // decode-pool inflow — including at a join, where the barrier
+        // merges `branches` sibling arrivals into one request (hybrid
+        // RAG: 2 fork branches × λ inflow, handoff = λ).
+        use crate::profile::models::{GenPlacement, KvTransferModel};
+        let g = apps::hybrid_rag();
+        let profile = profile_graph(&g, 2000, 13);
+        let plan = FlowProblem::new(&g, &profile, paper_cluster_budgets())
+            .with_placement(GenPlacement::Disaggregated, KvTransferModel::paper_interconnect(), 0.0)
+            .solve()
+            .unwrap();
+        assert!(plan.throughput > 0.0);
+        let gen = g.node_by_name("generator").unwrap().id;
+        let h = plan.gen_handoff[&gen];
+        let sink_flow: f64 = g
+            .edges
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.to == g.sink)
+            .map(|(i, _)| plan.edge_flows[i])
+            .sum();
+        assert!(
+            (h - sink_flow).abs() < 1e-6 * sink_flow.max(1.0),
+            "handoff {h} vs λ {sink_flow}"
+        );
+        // Both pools staffed: an empty pool would deadlock the chain.
+        let (pre, dec) = plan.pools(gen).unwrap();
+        assert!(pre >= 1 && dec >= 1, "pools ({pre}, {dec})");
+        // Decode dominates the split at the trace's token mix.
+        assert!(dec >= pre, "decode pool {dec} should dominate prefill {pre}");
+    }
+
+    #[test]
+    fn lp_chooses_collocated_when_transfer_dominates() {
+        // The placement economics the LP must see (RAGO Fig. "where each
+        // placement wins"): on the reference fabric the split is
+        // near-free; on a pathologically slow fabric the prefill pool
+        // burns its capacity shipping KV and the disaggregated ceiling
+        // collapses below collocated — the signal a placement search
+        // needs to refuse the split.
+        use crate::profile::models::{GenPlacement, KvTransferModel};
+        let g = apps::vanilla_rag();
+        let profile = profile_graph(&g, 3000, 17);
+        let budgets = paper_cluster_budgets();
+        let col = FlowProblem::new(&g, &profile, budgets.clone()).solve().unwrap();
+        let fast = FlowProblem::new(&g, &profile, budgets.clone())
+            .with_placement(GenPlacement::Disaggregated, KvTransferModel::paper_interconnect(), 0.0)
+            .solve()
+            .unwrap();
+        // Free-ish fabric: phase α's rescale from the same aggregate, so
+        // the total resource bill per unit flow is preserved up to the
+        // (tiny) transfer term.
+        assert!(
+            fast.throughput > 0.97 * col.throughput,
+            "fast-fabric disagg {} vs collocated {}",
+            fast.throughput,
+            col.throughput
+        );
+        let slow_fabric = KvTransferModel { scale: 500.0, ..KvTransferModel::paper_interconnect() };
+        let slow = FlowProblem::new(&g, &profile, budgets.clone())
+            .with_placement(GenPlacement::Disaggregated, slow_fabric, 0.0)
+            .solve()
+            .unwrap();
+        assert!(
+            slow.throughput < 0.9 * col.throughput,
+            "slow-fabric disagg {} should fall below collocated {}",
+            slow.throughput,
+            col.throughput
+        );
+        // A hot prefix cache pulls the other way: prefill work shrinks,
+        // the ceiling meets or beats collocated on the reference fabric.
+        let hot = FlowProblem::new(&g, &profile, budgets)
+            .with_placement(GenPlacement::Disaggregated, KvTransferModel::paper_interconnect(), 0.9)
+            .solve()
+            .unwrap();
+        assert!(hot.throughput >= fast.throughput - 1e-6);
     }
 
     #[test]

@@ -24,6 +24,14 @@ pub struct AllocationPlan {
     pub throughput: f64,
     /// Simplex pivots (Fig. 12 diagnostics).
     pub pivots: usize,
+    /// Disaggregated generator pools — (prefill, decode) instance counts
+    /// per generator node. Empty unless the LP was solved with
+    /// `GenPlacement::Disaggregated` (`FlowProblem::with_placement`).
+    pub gen_pools: HashMap<NodeId, (usize, usize)>,
+    /// Optimal KV-handoff flow (req/s) per disaggregated generator: the
+    /// LP's explicit prefill→decode coupling variable. Conservation
+    /// demands it equal the node's scaled inflow — pinned by test.
+    pub gen_handoff: HashMap<NodeId, f64>,
 }
 
 impl AllocationPlan {
@@ -82,7 +90,15 @@ impl AllocationPlan {
             edge_flows,
             throughput,
             pivots,
+            gen_pools: HashMap::new(),
+            gen_handoff: HashMap::new(),
         }
+    }
+
+    /// Disaggregated (prefill, decode) pool sizes for a node, if the plan
+    /// split it.
+    pub fn pools(&self, node: NodeId) -> Option<(usize, usize)> {
+        self.gen_pools.get(&node).copied()
     }
 
     /// Continuous resource units assigned to a node.
@@ -172,6 +188,9 @@ impl AllocationPlan {
             edge_flows: vec![0.0; graph.edges.len()],
             throughput: 0.0,
             pivots: 0,
+            // Baselines are placement-blind: no pool split.
+            gen_pools: HashMap::new(),
+            gen_handoff: HashMap::new(),
         }
     }
 

@@ -1,0 +1,491 @@
+//! KV prefix cache — memoization of the generator's context prefill,
+//! keyed on the retrieved-context *segment chain*.
+//!
+//! A RAG prompt is assembled from retrieved documents in rank order
+//! (`RagState::doc_ids` with per-doc byte boundaries in
+//! `RagState::ctx_segments`), so two requests that retrieve the same
+//! leading documents share a KV-cache prefix even when their tails
+//! differ. [`KvPrefixCache`] exploits that: after a full prefill it
+//! memoizes every prefix of the request's segment chain; a later request
+//! probes **longest-prefix-first** and resumes prefill after the deepest
+//! cached chain instead of recomputing it — the RAGCache/CacheBlend idea
+//! specialized to Patchwork's per-doc segment boundaries.
+//!
+//! Keying discipline: a chain element is the pair `(doc_id, seg_bytes)`.
+//! Two requests whose `ctx_segments` differ — same documents, different
+//! truncation — must never share KV state, so the byte length is part of
+//! the key, and the match is over the *chain*, not the doc set (order
+//! matters: KV attention is positional). Pinned by property tests.
+//!
+//! Eviction reuses the `cache/` idioms: sharded `Mutex` maps, logical
+//! LRU ticks, TTL with expired-first eviction, counters exported through
+//! [`crate::metrics::cache`]. Partial-depth hits are recorded in the
+//! snapshot's `semantic_hits` slot (the "related entry served" tier);
+//! full-chain matches count as exact hits.
+//!
+//! The modeling side lives in `profile::models`
+//! (`kv_prefix_service_factor`, `KV_PREFIX_HIT_COST_FRAC`): the DES and
+//! the allocation LP price a hit as a fixed fraction of the prefill,
+//! while this structure gives the live path the real lookup — and its
+//! [`KvPrefixCache::fold`] digest lets tests prove a cached prefix
+//! resumes to exactly the state an uncached prefill would reach.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::metrics::cache::{CacheCounters, CacheSnapshot};
+
+/// One element of a context segment chain: (document id, segment bytes).
+pub type KvSegment = (usize, usize);
+
+/// Sizing and policy knobs for the KV prefix cache.
+#[derive(Clone, Copy, Debug)]
+pub struct KvCacheConfig {
+    /// Max cached prefix entries across all shards (each insert stores
+    /// one entry per chain depth, so a depth-k prefill costs k entries).
+    pub capacity: usize,
+    /// Seconds an entry stays servable; older entries are dropped on
+    /// probe and can never serve.
+    pub ttl: f64,
+    /// Lock shards (concurrency, not correctness; clamped to ≥1).
+    pub n_shards: usize,
+}
+
+impl Default for KvCacheConfig {
+    fn default() -> Self {
+        KvCacheConfig { capacity: 4096, ttl: 300.0, n_shards: 8 }
+    }
+}
+
+/// A successful prefix probe: resume prefill after `depth` chain
+/// elements (`bytes` of context already attended), with `state` the
+/// digest of the restored KV prefix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvPrefixHit {
+    /// Matched chain depth (count of leading segments covered).
+    pub depth: usize,
+    /// Context bytes covered by the cached prefix.
+    pub bytes: usize,
+    /// Digest of the restored prefix state — equals
+    /// [`KvPrefixCache::chain_state`] over the matched prefix, which is
+    /// what an uncached prefill of the same prefix computes.
+    pub state: u64,
+}
+
+struct Entry {
+    state: u64,
+    bytes: usize,
+    inserted_at: f64,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Shard {
+    entries: HashMap<Vec<u8>, Entry>,
+    tick: u64,
+}
+
+/// Sharded longest-prefix KV cache. See the module docs.
+pub struct KvPrefixCache {
+    cfg: KvCacheConfig,
+    shards: Vec<Mutex<Shard>>,
+    counters: CacheCounters,
+}
+
+/// Seed of the KV digest fold (arbitrary non-zero constant).
+const KV_FOLD_SEED: u64 = 0x9E37_79B9_7F4A_7C15;
+
+fn encode_prefix(chain: &[KvSegment], depth: usize) -> Vec<u8> {
+    let mut key = Vec::with_capacity(depth * 16);
+    for &(doc, seg) in &chain[..depth] {
+        key.extend_from_slice(&(doc as u64).to_le_bytes());
+        key.extend_from_slice(&(seg as u64).to_le_bytes());
+    }
+    key
+}
+
+fn key_hash(key: &[u8]) -> u64 {
+    // FNV-1a, as in `query_cache` — stable and dependency-free.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in key {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+impl KvPrefixCache {
+    pub fn new(cfg: KvCacheConfig) -> KvPrefixCache {
+        let n = cfg.n_shards.max(1);
+        KvPrefixCache {
+            cfg,
+            shards: (0..n).map(|_| Mutex::new(Shard::default())).collect(),
+            counters: CacheCounters::new(),
+        }
+    }
+
+    pub fn config(&self) -> &KvCacheConfig {
+        &self.cfg
+    }
+
+    /// Counter snapshot (exported into `RunReport::disagg.kv_prefix`).
+    pub fn snapshot(&self) -> CacheSnapshot {
+        self.counters.snapshot()
+    }
+
+    /// Fold one segment into a KV digest — the deterministic stand-in
+    /// for "attend over this segment given the prefix state". Prefix
+    /// property: the digest after segments `0..k` depends only on those
+    /// segments, so a cached depth-k state plus an uncached fold of the
+    /// tail reaches exactly the full-chain state.
+    pub fn fold(state: u64, seg: KvSegment) -> u64 {
+        let mut h = state ^ (seg.0 as u64).wrapping_mul(0xA076_1D64_78BD_642F);
+        h ^= (seg.1 as u64).wrapping_mul(0xE703_7ED1_A0B4_28DB);
+        h ^= h >> 32;
+        h.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Digest of a full chain from the cold-start state (the "uncached
+    /// oracle" of the property tests).
+    pub fn chain_state(chain: &[KvSegment]) -> u64 {
+        chain.iter().fold(KV_FOLD_SEED, |s, &seg| Self::fold(s, seg))
+    }
+
+    /// All prefixes of a chain share the hash of its first element, so a
+    /// longest-prefix probe takes a single shard lock.
+    fn shard_for(&self, chain: &[KvSegment]) -> usize {
+        let key = encode_prefix(chain, 1.min(chain.len()));
+        (key_hash(&key) % self.shards.len() as u64) as usize
+    }
+
+    fn per_shard_cap(&self) -> usize {
+        self.cfg.capacity.div_ceil(self.shards.len()).max(1)
+    }
+
+    /// Longest-prefix lookup: the deepest live cached prefix of `chain`,
+    /// or `None`. Expired prefixes encountered on the way down are
+    /// dropped (counted stale) and never served. A full-depth match is
+    /// an exact hit; a shorter one a partial (semantic-slot) hit.
+    pub fn lookup(&self, chain: &[KvSegment], now: f64) -> Option<KvPrefixHit> {
+        if chain.is_empty() || self.cfg.capacity == 0 {
+            self.counters.on_miss();
+            return None;
+        }
+        let si = self.shard_for(chain);
+        let mut shard = self.shards[si].lock().expect("kv cache shard poisoned");
+        shard.tick += 1;
+        let tick = shard.tick;
+        let ttl = self.cfg.ttl;
+        for depth in (1..=chain.len()).rev() {
+            let key = encode_prefix(chain, depth);
+            // Tri-state probe, then mutate (the scrutinee borrows the map).
+            let probe = match shard.entries.get_mut(&key) {
+                Some(e) if now - e.inserted_at <= ttl => {
+                    e.last_used = tick;
+                    Some(Some(KvPrefixHit { depth, bytes: e.bytes, state: e.state }))
+                }
+                Some(_) => Some(None), // present but expired
+                None => None,
+            };
+            match probe {
+                Some(Some(hit)) => {
+                    if depth == chain.len() {
+                        self.counters.on_exact_hit();
+                    } else {
+                        self.counters.on_semantic_hit();
+                    }
+                    return Some(hit);
+                }
+                Some(None) => {
+                    shard.entries.remove(&key);
+                    self.counters.on_stale();
+                }
+                None => {}
+            }
+        }
+        self.counters.on_miss();
+        None
+    }
+
+    /// Memoize a finished prefill: every prefix of the chain becomes
+    /// servable (prefix-closed storage is what makes longest-prefix
+    /// matching correct after partial evictions). One insertion is
+    /// counted per call.
+    pub fn insert(&self, chain: &[KvSegment], now: f64) {
+        if chain.is_empty() || self.cfg.capacity == 0 {
+            return;
+        }
+        let si = self.shard_for(chain);
+        let cap = self.per_shard_cap();
+        let mut shard = self.shards[si].lock().expect("kv cache shard poisoned");
+        shard.tick += 1;
+        let tick = shard.tick;
+        let mut state = KV_FOLD_SEED;
+        let mut bytes = 0usize;
+        for depth in 1..=chain.len() {
+            let seg = chain[depth - 1];
+            state = Self::fold(state, seg);
+            bytes += seg.1;
+            let key = encode_prefix(chain, depth);
+            if shard.entries.len() >= cap && !shard.entries.contains_key(&key) {
+                // Expired-first eviction (same rule as `query_cache`):
+                // dead entries pin capacity but can never serve.
+                let ttl = self.cfg.ttl;
+                let expired: Vec<Vec<u8>> = shard
+                    .entries
+                    .iter()
+                    .filter(|(_, e)| now - e.inserted_at > ttl)
+                    .map(|(k, _)| k.clone())
+                    .collect();
+                for k in expired {
+                    shard.entries.remove(&k);
+                    self.counters.on_stale();
+                }
+                // Still full of live entries: LRU eviction.
+                while shard.entries.len() >= cap {
+                    let Some(victim) = shard
+                        .entries
+                        .iter()
+                        .min_by_key(|(_, e)| e.last_used)
+                        .map(|(k, _)| k.clone())
+                    else {
+                        break;
+                    };
+                    shard.entries.remove(&victim);
+                    self.counters.on_eviction();
+                }
+            }
+            shard
+                .entries
+                .insert(key, Entry { state, bytes, inserted_at: now, last_used: tick });
+        }
+        self.counters.on_insertion();
+    }
+
+    /// Live entries across all shards (diagnostics).
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|m| m.lock().expect("kv cache shard poisoned").entries.len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Assemble a segment chain from the parallel `doc_ids` / `ctx_segments`
+/// vectors of `exec::RagState` (truncated to the shorter of the two; the
+/// state merge keeps them aligned).
+pub fn chain_of(doc_ids: &[usize], ctx_segments: &[usize]) -> Vec<KvSegment> {
+    doc_ids.iter().copied().zip(ctx_segments.iter().copied()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::property;
+    use crate::util::rng::Rng;
+
+    fn chain(rng: &mut Rng, len: usize) -> Vec<KvSegment> {
+        (0..len)
+            .map(|_| (rng.range_i64(0, 64) as usize, rng.range_i64(16, 512) as usize))
+            .collect()
+    }
+
+    #[test]
+    fn full_chain_hit_restores_the_oracle_state() {
+        let c = KvPrefixCache::new(KvCacheConfig::default());
+        let ch = vec![(3, 120), (7, 80), (1, 200)];
+        assert!(c.lookup(&ch, 0.0).is_none(), "cold cache misses");
+        c.insert(&ch, 0.0);
+        let hit = c.lookup(&ch, 1.0).expect("hit after insert");
+        assert_eq!(hit.depth, 3);
+        assert_eq!(hit.bytes, 400);
+        assert_eq!(hit.state, KvPrefixCache::chain_state(&ch));
+        let s = c.snapshot();
+        assert_eq!(s.exact_hits, 1);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.insertions, 1);
+    }
+
+    #[test]
+    fn longest_prefix_wins_and_matches_the_prefix_oracle() {
+        let c = KvPrefixCache::new(KvCacheConfig::default());
+        let cached = vec![(3, 120), (7, 80)];
+        c.insert(&cached, 0.0);
+        // A longer chain sharing the cached prefix: partial hit at the
+        // cached depth, with the state an uncached prefill of that
+        // prefix would reach — resuming the fold over the tail lands on
+        // the full-chain oracle.
+        let probe = vec![(3, 120), (7, 80), (9, 300)];
+        let hit = c.lookup(&probe, 1.0).expect("prefix hit");
+        assert_eq!(hit.depth, 2);
+        assert_eq!(hit.state, KvPrefixCache::chain_state(&cached));
+        let resumed = KvPrefixCache::fold(hit.state, probe[2]);
+        assert_eq!(resumed, KvPrefixCache::chain_state(&probe));
+        assert_eq!(c.snapshot().semantic_hits, 1, "partial depth counts in the partial slot");
+    }
+
+    #[test]
+    fn differing_segment_boundaries_never_share_state() {
+        // Same documents, different truncation: the byte length is part
+        // of the key, so no cross-request hit — serving KV computed over
+        // a longer segment to a shorter one would corrupt attention.
+        let c = KvPrefixCache::new(KvCacheConfig::default());
+        c.insert(&[(3, 120), (7, 80)], 0.0);
+        assert!(c.lookup(&[(3, 121), (7, 80)], 0.0).is_none());
+        // First element matches → depth-1 prefix serves, never deeper.
+        let hit = c.lookup(&[(3, 120), (7, 81)], 0.0).expect("depth-1 prefix");
+        assert_eq!(hit.depth, 1);
+        // Order matters: the same set in a different order is a miss.
+        assert!(c.lookup(&[(7, 80), (3, 120)], 0.0).is_none());
+    }
+
+    #[test]
+    fn cached_prefill_identical_to_uncached_oracle_property() {
+        // Satellite property #1: on an exact segment-chain match the
+        // cached state equals the uncached oracle's, at every depth.
+        property("kv cache == oracle on exact chains", 20, |g| {
+            let mut rng = Rng::new(g.i64(0, 1 << 30) as u64);
+            let c = KvPrefixCache::new(KvCacheConfig {
+                capacity: 4096,
+                ttl: 1e9,
+                n_shards: g.usize(1, 4),
+            });
+            let chains: Vec<Vec<KvSegment>> =
+                (0..12).map(|_| chain(&mut rng, 1 + (rng.range_i64(0, 5) as usize))).collect();
+            for (i, ch) in chains.iter().enumerate() {
+                c.insert(ch, i as f64);
+            }
+            for ch in &chains {
+                let hit = c.lookup(ch, 12.0).expect("inserted chain must hit");
+                assert_eq!(hit.depth, ch.len());
+                assert_eq!(hit.state, KvPrefixCache::chain_state(ch));
+                assert_eq!(hit.bytes, ch.iter().map(|s| s.1).sum::<usize>());
+            }
+        });
+    }
+
+    #[test]
+    fn never_a_cross_request_hit_when_segments_differ_property() {
+        // Satellite property #2: any hit's matched prefix must be a
+        // *verbatim* prefix of some inserted chain — mutating one
+        // segment length caps the servable depth strictly below the
+        // mutation point.
+        property("kv cache never crosses segment boundaries", 20, |g| {
+            let mut rng = Rng::new(g.i64(0, 1 << 30) as u64);
+            let c = KvPrefixCache::new(KvCacheConfig {
+                capacity: 4096,
+                ttl: 1e9,
+                n_shards: 2,
+            });
+            let ch = chain(&mut rng, 2 + (rng.range_i64(0, 4) as usize));
+            c.insert(&ch, 0.0);
+            let cut = rng.range_i64(0, ch.len() as i64) as usize;
+            let mut mutated = ch.clone();
+            mutated[cut].1 += 1; // same doc, different truncation
+            match c.lookup(&mutated, 1.0) {
+                None => assert_eq!(cut, 0, "a shared non-empty prefix must serve"),
+                Some(hit) => {
+                    assert!(hit.depth <= cut, "hit depth {} crosses mutation at {cut}", hit.depth);
+                    assert_eq!(hit.state, KvPrefixCache::chain_state(&mutated[..hit.depth]));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn ttl_and_capacity_never_serve_an_expired_chain_property() {
+        // Satellite property #3: whatever the insert/probe schedule, a
+        // hit never comes from an entry older than the TTL, and expired
+        // entries are dropped (stale) rather than capacity-evicted.
+        property("kv cache ttl safety", 16, |g| {
+            let ttl = g.f64(1.0, 40.0);
+            let c = KvPrefixCache::new(KvCacheConfig {
+                capacity: g.usize(4, 64),
+                ttl,
+                n_shards: g.usize(1, 4),
+            });
+            let mut rng = Rng::new(g.i64(0, 1 << 30) as u64);
+            let mut inserted: Vec<(Vec<KvSegment>, f64)> = Vec::new();
+            for _ in 0..16 {
+                let ch = chain(&mut rng, 1 + (rng.range_i64(0, 4) as usize));
+                let at = rng.range_i64(0, 100) as f64;
+                c.insert(&ch, at);
+                inserted.push((ch, at));
+            }
+            let now = rng.range_i64(0, 160) as f64;
+            for (ch, _) in &inserted {
+                if let Some(hit) = c.lookup(ch, now) {
+                    // A hit's prefix must have a live witness insertion:
+                    // some chain sharing that prefix, inserted within TTL.
+                    let witness = inserted.iter().any(|(c2, at2)| {
+                        now - at2 <= ttl
+                            && c2.len() >= hit.depth
+                            && c2[..hit.depth] == ch[..hit.depth]
+                    });
+                    assert!(witness, "hit at depth {} without a live insertion", hit.depth);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn ttl_expires_and_counts_stale() {
+        let c = KvPrefixCache::new(KvCacheConfig { ttl: 10.0, ..Default::default() });
+        let ch = vec![(1, 100), (2, 100)];
+        c.insert(&ch, 0.0);
+        assert!(c.lookup(&ch, 10.0).is_some(), "at TTL still live");
+        assert!(c.lookup(&ch, 10.1).is_none(), "past TTL stale");
+        assert!(c.snapshot().stale >= 2, "both prefix depths dropped as stale");
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn capacity_evicts_lru_prefixes() {
+        let c = KvPrefixCache::new(KvCacheConfig { capacity: 2, ttl: 1e9, n_shards: 1 });
+        let a = vec![(1, 10)];
+        let b = vec![(2, 10)];
+        c.insert(&a, 0.0);
+        c.insert(&b, 0.0);
+        // Touch `a` so `b` is the LRU victim.
+        assert!(c.lookup(&a, 0.0).is_some());
+        c.insert(&[(3, 10)], 0.0);
+        assert!(c.lookup(&a, 0.0).is_some(), "recently used survives");
+        assert!(c.lookup(&b, 0.0).is_none(), "LRU victim evicted");
+        assert!(c.snapshot().evictions >= 1);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn chain_of_zips_the_parallel_vectors() {
+        assert_eq!(chain_of(&[5, 9], &[120, 80]), vec![(5, 120), (9, 80)]);
+        // Misaligned vectors truncate to the shorter side.
+        assert_eq!(chain_of(&[5, 9, 11], &[120, 80]), vec![(5, 120), (9, 80)]);
+        assert!(chain_of(&[], &[1]).is_empty());
+    }
+
+    #[test]
+    fn concurrent_access_is_safe() {
+        let c = std::sync::Arc::new(KvPrefixCache::new(KvCacheConfig::default()));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..200u64 {
+                    let ch = vec![((t * 7 + i) as usize % 20, 64), (i as usize % 5, 32)];
+                    if c.lookup(&ch, i as f64).is_none() {
+                        c.insert(&ch, i as f64);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = c.snapshot();
+        assert!(s.insertions > 0 && s.exact_hits + s.semantic_hits > 0);
+    }
+}

@@ -24,7 +24,15 @@
 //! retrieval pool, making the cache the first component whose effective
 //! capacity *grows* with load skew — the per-component scaling
 //! heterogeneity the paper argues a unified serving layer must model.
+//!
+//! [`kv_prefix`] applies the same discipline one stage later: a KV
+//! prefix cache over the generator's retrieved-context segment chains
+//! (`RagState::ctx_segments`), collapsing repeat-heavy prefill the way
+//! the query cache collapses repeat retrieval. Its modeled twin is
+//! `profile::models::kv_prefix_service_factor`.
 
+pub mod kv_prefix;
 pub mod query_cache;
 
+pub use kv_prefix::{chain_of, KvCacheConfig, KvPrefixCache, KvPrefixHit, KvSegment};
 pub use query_cache::{normalize_query, CacheConfig, QueryCache};

@@ -47,6 +47,7 @@ impl Autoscaler {
     ) -> Profile {
         let mut mean_service = HashMap::new();
         let mut alpha = HashMap::new();
+        let mut gen_split = HashMap::new();
         for node in &graph.nodes {
             let prior_mean = prior.mean_service.get(&node.id).copied().unwrap_or(0.0);
             let mean = telemetry.mean_service(node.id, prior_mean);
@@ -59,12 +60,27 @@ impl Autoscaler {
                     }
                 }
             }
+            // Telemetry reports the aggregate only; keep the prior's
+            // prefill/decode *ratio* and rescale it to the observed mean
+            // so disaggregated re-solves track drift in either phase.
+            if let Some(s) = prior.gen_split.get(&node.id) {
+                let ratio = if prior_mean > 0.0 { mean / prior_mean } else { 1.0 };
+                gen_split.insert(
+                    node.id,
+                    crate::profile::profiler::GenSplit {
+                        prefill: s.prefill * ratio,
+                        decode: s.decode * ratio,
+                        prompt_tokens: s.prompt_tokens,
+                    },
+                );
+            }
         }
         Profile {
             mean_service,
             alpha,
             edge_probs: telemetry.edge_probs(graph),
             gamma: prior.gamma.clone(),
+            gen_split,
             samples: prior.samples,
         }
     }

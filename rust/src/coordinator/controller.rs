@@ -53,6 +53,11 @@ pub struct ControllerConfig {
     /// Request-cache knobs (tier capacities, TTL, similarity threshold);
     /// None serves every query through the full embed→retrieve pass.
     pub cache: Option<crate::cache::CacheConfig>,
+    /// Generator-side KV prefix cache over retrieved-context segment
+    /// chains (`cache::kv_prefix`); None — the default, matching the
+    /// DES's `kv_prefix_hit_rate: 0.0` — disables prefix tracking so the
+    /// stock deployment is byte-for-byte the pre-disaggregation path.
+    pub kv_cache: Option<crate::cache::KvCacheConfig>,
     pub seed: u64,
     /// Instances per component (None → the spec's base_instances).
     pub instances: Option<HashMap<String, usize>>,
@@ -80,6 +85,7 @@ impl ControllerConfig {
             n_topics: 8,
             n_shards: 4,
             cache: Some(crate::cache::CacheConfig::default()),
+            kv_cache: None,
             seed: 0,
             instances: None,
             slo: None,
@@ -193,6 +199,7 @@ pub fn deploy(graph: PipelineGraph, cfg: ControllerConfig) -> Result<ServingHand
         cfg.n_topics,
         cfg.n_shards,
         cfg.cache,
+        cfg.kv_cache,
         cfg.seed,
     )
     .context("building live shared state (corpus/index)")?;
@@ -260,6 +267,7 @@ pub fn deploy(graph: PipelineGraph, cfg: ControllerConfig) -> Result<ServingHand
 
     let slo = cfg.slo;
     let cache = shared.cache.clone();
+    let kv_cache = shared.kv_cache.clone();
     let k_docs = shared.k_docs;
     let max_new_tokens = shared.max_new_tokens;
     let join = std::thread::Builder::new()
@@ -272,6 +280,7 @@ pub fn deploy(graph: PipelineGraph, cfg: ControllerConfig) -> Result<ServingHand
                 done_tx,
                 slo,
                 cache,
+                kv_cache,
                 plane,
                 k_docs,
                 max_new_tokens,
@@ -290,6 +299,7 @@ struct ControllerLoop {
     done_tx: Sender<Done>,
     slo: Option<f64>,
     cache: Option<Arc<crate::cache::QueryCache>>,
+    kv_cache: Option<Arc<crate::cache::KvPrefixCache>>,
     plane: ControlPlane,
     k_docs: usize,
     max_new_tokens: usize,
@@ -303,6 +313,7 @@ fn controller_loop(lp: ControllerLoop) {
         done_tx,
         slo,
         cache,
+        kv_cache,
         mut plane,
         k_docs,
         max_new_tokens,
@@ -548,6 +559,9 @@ fn controller_loop(lp: ControllerLoop) {
             Msg::Report(tx) => {
                 if let Some(c) = &cache {
                     recorder.set_cache(c.snapshot());
+                }
+                if let Some(kc) = &kv_cache {
+                    recorder.set_kv_prefix(kc.snapshot());
                 }
                 if plane.cfg.enabled() {
                     recorder.set_sched(plane.counters.snapshot());

@@ -9,9 +9,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::cache::{CacheConfig, QueryCache};
+use crate::cache::{chain_of, CacheConfig, KvCacheConfig, KvPrefixCache, QueryCache};
 use crate::metrics::SchedCounters;
-use crate::profile::models::DecodeCostModel;
+use crate::profile::models::{DecodeCostModel, KV_PREFIX_HIT_COST_FRAC};
 use crate::retrieval::{IvfParams, SearchResult, ShardParams, ShardedIndex};
 use crate::runtime::classifier::Classifier;
 use crate::runtime::embedder::Embedder;
@@ -32,6 +32,14 @@ pub struct LiveShared {
     /// Request cache memoizing the embed→retrieve prefix (None = every
     /// query pays the full scatter-gather; see `cache::QueryCache`).
     pub cache: Option<Arc<QueryCache>>,
+    /// KV prefix cache over retrieved-context segment chains (None =
+    /// every prefill attends the full context; see `cache::kv_prefix`).
+    /// Generator workers probe it before prefill and memoize the chain
+    /// after; hits discount the prefill share of service attribution by
+    /// `KV_PREFIX_HIT_COST_FRAC` scaled to the covered bytes. Shared
+    /// across generator instances so a repeat hits regardless of which
+    /// replica prefilled the original.
+    pub kv_cache: Option<Arc<KvPrefixCache>>,
     /// Shared overload level published by the controller's control-plane
     /// tick; workers with a degrade knob poll it on their hot path
     /// (`Normal` forever unless `sched::DegradePolicy` is enabled).
@@ -257,6 +265,31 @@ struct PendingGen {
     queue_secs: f64,
 }
 
+/// Probe the KV prefix cache for this request's retrieved-context chain
+/// and memoize it. Returns the prefill *attribution* factor: 1.0 on a
+/// miss (or with no cache), shrinking toward `KV_PREFIX_HIT_COST_FRAC`
+/// as the cached prefix covers more of the context bytes. The engine
+/// still recomputes the prefill — restoring KV state inside the XLA
+/// engine is future work — so the factor adjusts the service-weight
+/// split (what a reuse-capable engine would charge this slot), while the
+/// DES's modeled twin (`SimConfig::kv_prefix_hit_rate`) carries the
+/// latency effect end-to-end. Hit/miss counters surface in
+/// `RunReport::kv_prefix`.
+fn kv_probe(shared: &LiveShared, state: &crate::exec::messages::RagState) -> f64 {
+    let Some(kc) = shared.kv_cache.as_ref() else { return 1.0 };
+    let now = shared.epoch.elapsed().as_secs_f64();
+    let chain = chain_of(&state.doc_ids, &state.ctx_segments);
+    let hit = kc.lookup(&chain, now);
+    kc.insert(&chain, now);
+    match hit {
+        Some(h) if !state.context.is_empty() => {
+            let frac = (h.bytes as f64 / state.context.len() as f64).min(1.0);
+            1.0 - frac * (1.0 - KV_PREFIX_HIT_COST_FRAC)
+        }
+        _ => 1.0,
+    }
+}
+
 fn build_prompt(state: &crate::exec::messages::RagState, max_len: usize) -> Vec<u8> {
     let mut p = Vec::with_capacity(max_len);
     p.extend_from_slice(b"C:");
@@ -283,8 +316,11 @@ impl StageLogic for GeneratorLogic {
                 // Per-slot attribution weight: this slot's prefill plus
                 // its own decode steps — not the batch-max the engine ran
                 // for. The worker splits the measured batch time by these.
+                // A KV prefix hit discounts the prefill share (the part a
+                // reuse-capable engine would have restored from cache).
+                let kv = kv_probe(&self.shared, &it.state);
                 it.service_weight =
-                    dcm.prefill(r.prompt_tokens) + r.generated_tokens as f64 * dcm.step(b);
+                    kv * dcm.prefill(r.prompt_tokens) + r.generated_tokens as f64 * dcm.step(b);
                 it.state.answer = r.output;
             }
         }
@@ -333,6 +369,17 @@ impl SteppedStage for GeneratorLogic {
         }
         let queue_secs = item.enqueued_at.elapsed().as_secs_f64();
         let budget = self.generator.max_seq() / 2;
+        // Probe the shared KV prefix cache before prefill (admission IS
+        // the prefill stage of the stepped split); the chain is memoized
+        // once the prefill lands in a slot. Continuous mode attributes
+        // measured per-slot seconds at retirement, so the probe here
+        // feeds the reuse counters rather than a weight.
+        let kv_chain = self.shared.kv_cache.as_ref().map(|kc| {
+            let now = self.shared.epoch.elapsed().as_secs_f64();
+            let chain = chain_of(&item.state.doc_ids, &item.state.ctx_segments);
+            kc.lookup(&chain, now);
+            chain
+        });
         let req = GenRequest::greedy(
             &build_prompt(&item.state, budget),
             self.shared.max_new_tokens,
@@ -341,6 +388,9 @@ impl SteppedStage for GeneratorLogic {
         item.state.answer.clear();
         match self.generator.inflight_admit(batch, &req) {
             Ok(slot) => {
+                if let (Some(kc), Some(chain)) = (self.shared.kv_cache.as_ref(), kv_chain) {
+                    kc.insert(&chain, self.shared.epoch.elapsed().as_secs_f64());
+                }
                 self.items[slot] = Some(PendingGen { item, queue_secs });
                 Vec::new()
             }
@@ -596,13 +646,15 @@ pub fn spawn_for_kind(
 /// Build the shared deployment state: generate the corpus, embed it with
 /// the real embedder, build the sharded IVF index (`n_shards` corpus
 /// partitions searched scatter-gather style), and stand up the request
-/// cache (`cache`: None disables memoization).
+/// cache (`cache`: None disables memoization) plus the generator-side KV
+/// prefix cache (`kv_cache`: None disables prefix tracking).
 pub fn build_live_shared(
     artifacts: PathBuf,
     corpus_size: usize,
     n_topics: usize,
     n_shards: usize,
     cache: Option<CacheConfig>,
+    kv_cache: Option<KvCacheConfig>,
     seed: u64,
 ) -> Result<LiveShared> {
     let corpus = Arc::new(Corpus::generate(corpus_size, n_topics, 64, seed));
@@ -626,6 +678,7 @@ pub fn build_live_shared(
         corpus,
         index,
         cache: cache.map(|cfg| Arc::new(QueryCache::new(cfg))),
+        kv_cache: kv_cache.map(|cfg| Arc::new(KvPrefixCache::new(cfg))),
         degrade: Arc::new(OverloadCell::new()),
         sched_counters: Arc::new(SchedCounters::new()),
         epoch: Instant::now(),

@@ -6,5 +6,5 @@ pub mod recorder;
 pub mod sched;
 
 pub use cache::{CacheCounters, CacheSnapshot};
-pub use recorder::{ComponentStats, GenStats, Recorder, RunReport};
+pub use recorder::{ComponentStats, DisaggStats, GenStats, Recorder, RunReport};
 pub use sched::{SchedCounters, SchedSnapshot};

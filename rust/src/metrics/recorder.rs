@@ -69,6 +69,36 @@ pub struct GenStats {
     pub tok_p99: f64,
 }
 
+/// Prefill/decode disaggregation statistics — present in
+/// [`RunReport::disagg`] only when the run served the generator under
+/// `GenPlacement::Disaggregated` (collocated runs, including every
+/// golden trace, must not grow this section).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DisaggStats {
+    /// KV handoffs completed (one per prefill that reached a decode pool).
+    pub handoffs: u64,
+    /// Total seconds spent in KV transfer across all handoffs.
+    pub transfer_total: f64,
+    /// Prefill-pool instances provisioned at run start.
+    pub prefill_instances: usize,
+    /// Decode-pool instances provisioned at run start.
+    pub decode_instances: usize,
+    /// KV prefix-cache counters (zeroed snapshot when the prefix cache
+    /// is off).
+    pub kv_prefix: CacheSnapshot,
+}
+
+impl DisaggStats {
+    /// Mean per-handoff transfer cost (0 when nothing handed off).
+    pub fn mean_transfer(&self) -> f64 {
+        if self.handoffs == 0 {
+            0.0
+        } else {
+            self.transfer_total / self.handoffs as f64
+        }
+    }
+}
+
 /// Collects per-request completions and per-component stats during a run.
 #[derive(Clone, Debug, Default)]
 pub struct Recorder {
@@ -87,8 +117,12 @@ pub struct Recorder {
     tok_lat: Vec<f64>,
     /// Cache counters captured at the end of the run (None = no cache).
     cache: Option<CacheSnapshot>,
+    /// Live KV prefix-cache counters (None = no prefix cache deployed).
+    kv_prefix: Option<CacheSnapshot>,
     /// Overload-control counters (None = stock control plane).
     sched: Option<SchedSnapshot>,
+    /// Disaggregation counters (None = collocated generator).
+    disagg: Option<DisaggStats>,
 }
 
 impl Recorder {
@@ -163,9 +197,23 @@ impl Recorder {
         self.cache = Some(snapshot);
     }
 
+    /// Attach the live KV prefix-cache counter snapshot (`cache::kv_prefix`
+    /// deployments only; the DES's modeled twin reports through
+    /// [`RunReport::disagg`] instead).
+    pub fn set_kv_prefix(&mut self, snapshot: CacheSnapshot) {
+        self.kv_prefix = Some(snapshot);
+    }
+
     /// Attach the run's overload-control counter snapshot.
     pub fn set_sched(&mut self, snapshot: SchedSnapshot) {
         self.sched = Some(snapshot);
+    }
+
+    /// Attach the run's disaggregation counters (disaggregated runs only;
+    /// collocated runs never call this, keeping the report section absent
+    /// by default).
+    pub fn set_disagg(&mut self, stats: DisaggStats) {
+        self.disagg = Some(stats);
     }
 
     /// Finalize into a report.
@@ -204,8 +252,10 @@ impl Recorder {
             components: self.components.clone(),
             gen,
             cache: self.cache,
+            kv_prefix: self.kv_prefix,
             shed: self.shed,
             sched: self.sched,
+            disagg: self.disagg,
         }
     }
 }
@@ -229,10 +279,18 @@ pub struct RunReport {
     pub gen: Option<GenStats>,
     /// Query-cache counters, if the run served through a cache.
     pub cache: Option<CacheSnapshot>,
+    /// Live KV prefix-cache counters, if the deployment ran one in front
+    /// of generator prefill (`cache::kv_prefix`); the DES's *modeled*
+    /// prefix cache reports under [`RunReport::disagg`] instead.
+    pub kv_prefix: Option<CacheSnapshot>,
     /// Requests shed at admission (0 with the stock control plane).
     pub shed: u64,
     /// Overload-control counters, if any sched policy was enabled.
     pub sched: Option<SchedSnapshot>,
+    /// Prefill/decode disaggregation counters, if the run served the
+    /// generator split (`None` for collocated runs — golden traces pin
+    /// the absence).
+    pub disagg: Option<DisaggStats>,
 }
 
 impl RunReport {
@@ -339,6 +397,25 @@ mod tests {
         assert_eq!(rep.shed, 0);
         assert!(rep.sched.is_none());
         assert!(rep.gen.is_none(), "no decode-step samples → no gen section");
+        assert!(rep.disagg.is_none(), "no handoffs → no disaggregation section");
+    }
+
+    #[test]
+    fn disagg_stats_travel_into_report() {
+        let mut r = Recorder::new();
+        let stats = DisaggStats {
+            handoffs: 4,
+            transfer_total: 0.02,
+            prefill_instances: 2,
+            decode_instances: 6,
+            kv_prefix: CacheSnapshot { exact_hits: 3, misses: 1, ..Default::default() },
+        };
+        r.set_disagg(stats);
+        let rep = r.report();
+        assert_eq!(rep.disagg, Some(stats));
+        assert!((rep.disagg.unwrap().mean_transfer() - 0.005).abs() < 1e-12);
+        assert!((rep.disagg.unwrap().kv_prefix.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(DisaggStats::default().mean_transfer(), 0.0);
     }
 
     #[test]

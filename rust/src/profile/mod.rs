@@ -12,7 +12,9 @@
 pub mod models;
 pub mod profiler;
 
-pub use models::{DecodeCostModel, GenBatching, LatencyModel, RequestFeatures};
+pub use models::{
+    DecodeCostModel, GenBatching, GenPlacement, KvTransferModel, LatencyModel, RequestFeatures,
+};
 pub use profiler::{
-    graph_latency, profile_graph, profile_graph_gen, profile_graph_gen_at, Profile,
+    graph_latency, profile_graph, profile_graph_gen, profile_graph_gen_at, GenSplit, Profile,
 };

@@ -290,6 +290,86 @@ pub enum GenBatching {
     Continuous,
 }
 
+/// Where the generator's prefill and decode phases run — the RAGO-style
+/// task-placement knob threaded through `SimConfig` (DES), the allocation
+/// LP (`alloc::FlowProblem::with_placement`), and the live controller.
+///
+/// * [`GenPlacement::Collocated`] — one pool serves both phases (the
+///   pre-split behavior and the default: fixed-seed golden traces replay
+///   bit-identically).
+/// * [`GenPlacement::Disaggregated`] — prefill and decode run on separate
+///   pools; a finished prefill hands its KV cache to a decode instance,
+///   paying [`KvTransferModel::cost`] on the way. Each pool gets its own
+///   LP columns and autoscaling α, so a decode-bound workload buys decode
+///   capacity instead of over-provisioning monolithic replicas.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GenPlacement {
+    /// One pool runs prefill + decode back-to-back (golden-trace default).
+    #[default]
+    Collocated,
+    /// Separate prefill/decode pools with explicit KV handoff.
+    Disaggregated,
+}
+
+/// Cost of shipping a finished prefill's KV cache to a decode instance:
+/// a fixed handshake plus a per-token payload term. The `scale` knob is
+/// the experiment axis — 1.0 models the paper testbed's NVLink-class
+/// interconnect; inflating it (slow fabric, cross-node hop) is how the
+/// "collocated wins" regime is reached, and the LP sees the same term so
+/// it can refuse the split when transfer dominates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KvTransferModel {
+    /// Fixed per-handoff cost (seconds): connection + metadata handshake.
+    pub base: f64,
+    /// Per-token payload cost (seconds/token of prefilled context).
+    pub per_tok: f64,
+    /// Interconnect multiplier (1.0 = paper testbed; larger = slower).
+    pub scale: f64,
+}
+
+impl Default for KvTransferModel {
+    fn default() -> Self {
+        KvTransferModel::paper_interconnect()
+    }
+}
+
+impl KvTransferModel {
+    /// The calibrated testbed interconnect: ~0.5 ms handshake + 5 µs per
+    /// prefilled token — a 64-token prompt hands off in ~0.8 ms, well
+    /// under one decode step, so disaggregation is near-free on the
+    /// reference fabric.
+    pub fn paper_interconnect() -> KvTransferModel {
+        KvTransferModel { base: 5.0e-4, per_tok: 5.0e-6, scale: 1.0 }
+    }
+
+    /// Deterministic transfer cost for a KV cache of `tokens` prefilled
+    /// tokens (no noise: the payload size is known exactly).
+    pub fn cost(&self, tokens: usize) -> f64 {
+        self.scale * (self.base + self.per_tok * tokens as f64)
+    }
+}
+
+/// Cost of a KV-prefix-cache hit relative to a full prefill: the cached
+/// segment chain's KV blocks are remapped instead of recomputed, leaving
+/// only attention over the (short) uncached tail. Modeled at 15% — higher
+/// than a retrieval-cache hit because the generator still runs its
+/// prologue and must attend across the restored blocks.
+pub const KV_PREFIX_HIT_COST_FRAC: f64 = 0.15;
+
+/// Prefill service-time multiplier for a generator pool whose KV prefix
+/// cache hits a `h` fraction of requests:
+///
+/// `factor(h) = (1 - h) + h · KV_PREFIX_HIT_COST_FRAC`
+///
+/// `factor(0) == 1.0` exactly, so runs without the prefix cache are
+/// untouched. Same closed-form-vs-sampled split as
+/// [`cache_service_factor`]: the DES draws per-request hits, the
+/// profiler/LP apply the mean.
+pub fn kv_prefix_service_factor(hit_rate: f64) -> f64 {
+    let h = hit_rate.clamp(0.0, 1.0);
+    1.0 - h * (1.0 - KV_PREFIX_HIT_COST_FRAC)
+}
+
 /// Occupancy-aware decode cost model (the tentpole's pricing function):
 ///
 /// `service = prefill(prompt_tokens) + steps × step(batch_occupancy)`
@@ -571,6 +651,42 @@ mod tests {
     fn gen_batching_defaults_to_legacy() {
         // The inert default is what keeps golden traces bit-identical.
         assert_eq!(GenBatching::default(), GenBatching::Legacy);
+    }
+
+    #[test]
+    fn gen_placement_defaults_to_collocated() {
+        // Same discipline as the batching knob: the split is opt-in, and
+        // the default keeps golden traces bit-identical.
+        assert_eq!(GenPlacement::default(), GenPlacement::Collocated);
+        assert_eq!(KvTransferModel::default(), KvTransferModel::paper_interconnect());
+    }
+
+    #[test]
+    fn kv_transfer_cost_scales_linearly() {
+        let m = KvTransferModel::paper_interconnect();
+        // Base handshake with an empty payload.
+        assert!((m.cost(0) - m.base).abs() < 1e-15);
+        // 64-token prompt hands off well under one decode step on the
+        // reference fabric — disaggregation is near-free there.
+        assert!(m.cost(64) < DecodeCostModel::generator().step(1));
+        // The scale knob multiplies the whole term (the experiment axis).
+        let slow = KvTransferModel { scale: 200.0, ..m };
+        assert!((slow.cost(64) - 200.0 * m.cost(64)).abs() < 1e-12);
+        // Monotone in payload size.
+        assert!(m.cost(128) > m.cost(64));
+    }
+
+    #[test]
+    fn kv_prefix_factor_identity_when_uncached() {
+        assert_eq!(kv_prefix_service_factor(0.0), 1.0);
+        // Full hits cost exactly the hit fraction.
+        assert!((kv_prefix_service_factor(1.0) - KV_PREFIX_HIT_COST_FRAC).abs() < 1e-12);
+        // Monotone decreasing, clamped.
+        assert!(kv_prefix_service_factor(0.5) < 1.0);
+        assert_eq!(kv_prefix_service_factor(-1.0), 1.0);
+        // A KV-prefix hit is pricier than a retrieval-cache hit: the
+        // generator still attends over the restored blocks.
+        assert!(KV_PREFIX_HIT_COST_FRAC > CACHE_HIT_COST_FRAC);
     }
 
     #[test]

@@ -5,11 +5,33 @@
 use std::collections::HashMap;
 
 use crate::profile::models::{
-    instance_concurrency, DecodeCostModel, GenBatching, LatencyModel, RequestFeatures,
+    instance_concurrency, kv_prefix_service_factor, DecodeCostModel, GenBatching, GenPlacement,
+    KvTransferModel, LatencyModel, RequestFeatures,
 };
 use crate::spec::graph::{Adjacency, ComponentKind, ForkGroup, NodeId, PipelineGraph, ResourceKind};
 use crate::util::rng::Rng;
 use crate::workload::TraceConfig;
+
+/// Mean per-visit prefill/decode decomposition for a generator node —
+/// the quantity the disaggregated LP columns and placement-aware
+/// admission priors are built from. `prefill + decode` equals the node's
+/// `mean_service` exactly (same samples, split by the noise-free cost
+/// ratio, no extra rng draws).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GenSplit {
+    /// Mean prefill service per visit (seconds).
+    pub prefill: f64,
+    /// Mean decode service per visit (seconds).
+    pub decode: f64,
+    /// Mean prefilled prompt tokens per visit (sizes the KV handoff).
+    pub prompt_tokens: f64,
+}
+
+impl GenSplit {
+    pub fn total(&self) -> f64 {
+        self.prefill + self.decode
+    }
+}
 
 /// Estimated parameters for the allocation model.
 #[derive(Clone, Debug)]
@@ -22,6 +44,9 @@ pub struct Profile {
     pub edge_probs: Vec<f64>,
     /// Empirical amplification γ_i.
     pub gamma: HashMap<NodeId, f64>,
+    /// Prefill/decode decomposition for generator nodes (empty for
+    /// graphs without generators).
+    pub gen_split: HashMap<NodeId, GenSplit>,
     /// Number of samples profiled.
     pub samples: usize,
 }
@@ -29,6 +54,48 @@ pub struct Profile {
 impl Profile {
     pub fn alpha_for(&self, node: NodeId, k: ResourceKind) -> f64 {
         *self.alpha.get(&(node, k)).unwrap_or(&0.0)
+    }
+
+    /// Mean per-visit generator service under a placement. Collocated:
+    /// the profiled aggregate, untouched. Disaggregated: the critical
+    /// path through the split — prefill (discounted by the KV-prefix
+    /// cache's expected hit rate) + KV handoff + decode. Non-generator
+    /// nodes always return their plain mean.
+    pub fn placement_service(
+        &self,
+        node: NodeId,
+        placement: GenPlacement,
+        kv: &KvTransferModel,
+        kv_prefix_hit: f64,
+    ) -> f64 {
+        let base = self.mean_service.get(&node).copied().unwrap_or(0.0);
+        match (placement, self.gen_split.get(&node)) {
+            (GenPlacement::Disaggregated, Some(s)) => {
+                s.prefill * kv_prefix_service_factor(kv_prefix_hit)
+                    + kv.cost(s.prompt_tokens.round() as usize)
+                    + s.decode
+            }
+            _ => base,
+        }
+    }
+
+    /// Placement-aware `mean_service` priors for the admission control
+    /// plane (`sched::SlackPredictor` seeds). Under `Collocated` this is
+    /// the plain prior map; under `Disaggregated`, generator entries are
+    /// re-priced by [`Profile::placement_service`] so admission slack
+    /// sees the pool the request will actually wait on instead of the
+    /// monolithic aggregate — the over-shedding fix when only the decode
+    /// pool saturates.
+    pub fn placement_priors(
+        &self,
+        placement: GenPlacement,
+        kv: &KvTransferModel,
+        kv_prefix_hit: f64,
+    ) -> HashMap<NodeId, f64> {
+        self.mean_service
+            .keys()
+            .map(|&id| (id, self.placement_service(id, placement, kv, kv_prefix_hit)))
+            .collect()
     }
 }
 
@@ -44,6 +111,10 @@ struct ProfileWalk<'a> {
     gen: GenBatching,
     gen_occupancy: usize,
     service_sums: HashMap<NodeId, (f64, usize)>,
+    /// Generator-only (prefill, decode, prompt-token) sums — the same
+    /// sampled service split by the noise-free cost ratio, so the split
+    /// consumes no rng draws and sums exactly to `service_sums`.
+    split_sums: HashMap<NodeId, (f64, f64, f64)>,
     edge_counts: Vec<usize>,
     node_exits: HashMap<NodeId, usize>,
     hops: usize,
@@ -109,6 +180,30 @@ impl ProfileWalk<'_> {
             let e = self.service_sums.entry(cur).or_insert((0.0, 0));
             e.0 += t;
             e.1 += 1;
+            // Generator visits: attribute the sampled service to the
+            // prefill and decode phases by the noise-free cost ratio
+            // (multiplicative noise and the shard/cache multipliers scale
+            // both phases alike, so the ratio is exact). Pure arithmetic
+            // — no rng draws — keeping legacy profiles bit-identical.
+            if matches!(node.kind, ComponentKind::Generator) {
+                let prefill_mean = self.dcm.prefill(feats.prompt_len);
+                // Noise-free total for the ratio: continuous@B under the
+                // batched modes (static's batch-max inflation is decode-
+                // side, so this slightly over-weights prefill — fine for
+                // a prior), the legacy aggregate mean otherwise (equal to
+                // continuous@1 by the calibration identity).
+                let total = if batched_gen {
+                    self.dcm.continuous(feats, self.gen_occupancy.max(1))
+                } else {
+                    model.mean(feats)
+                };
+                let pf = (prefill_mean / total.max(1e-12)).clamp(0.0, 1.0);
+                let s = self.split_sums.entry(cur).or_insert((0.0, 0.0, 0.0));
+                let p_part = t * pf;
+                s.0 += p_part;
+                s.1 += t - p_part;
+                s.2 += feats.prompt_len as f64;
+            }
             // Parallel fan-out: traverse every branch, then resume at
             // the join. Each fork edge fires once per traversal while
             // the node exits once — the empirical branch "probability"
@@ -185,6 +280,7 @@ pub fn profile_graph_gen_at(
         gen,
         gen_occupancy,
         service_sums: HashMap::new(),
+        split_sums: HashMap::new(),
         edge_counts: vec![0usize; graph.edges.len()],
         node_exits: HashMap::new(),
         hops: 0,
@@ -198,14 +294,27 @@ pub fn profile_graph_gen_at(
         walk.hops = 0;
         walk.segment(&mut rng, &feats, graph.source, None);
     }
-    let ProfileWalk { service_sums, edge_counts, node_exits, .. } = walk;
+    let ProfileWalk { service_sums, split_sums, edge_counts, node_exits, .. } = walk;
 
     let mut mean_service = HashMap::new();
     let mut alpha = HashMap::new();
+    let mut gen_split = HashMap::new();
     for node in &graph.nodes {
         let (sum, cnt) = service_sums.get(&node.id).copied().unwrap_or((0.0, 0));
         let mean = if cnt > 0 { sum / cnt as f64 } else { 0.0 };
         mean_service.insert(node.id, mean);
+        if let Some(&(p, d, tok)) = split_sums.get(&node.id) {
+            if cnt > 0 {
+                gen_split.insert(
+                    node.id,
+                    GenSplit {
+                        prefill: p / cnt as f64,
+                        decode: d / cnt as f64,
+                        prompt_tokens: tok / cnt as f64,
+                    },
+                );
+            }
+        }
         if mean > 0.0 {
             let conc = instance_concurrency(&node.kind) as f64;
             // Per-instance throughput = concurrency / mean service time.
@@ -237,7 +346,7 @@ pub fn profile_graph_gen_at(
     // but expose the hook for amplifying components.
     let gamma = graph.nodes.iter().map(|n| (n.id, n.gamma)).collect();
 
-    Profile { mean_service, alpha, edge_probs, gamma, samples: n }
+    Profile { mean_service, alpha, edge_probs, gamma, gen_split, samples: n }
 }
 
 /// Expected end-to-end **latency** of one request under `mean_service`
@@ -450,6 +559,69 @@ mod tests {
             .sum();
         let cp = graph_latency(&g, &p.mean_service);
         assert!((cp - direct).abs() < 1e-9, "{cp} vs {direct}");
+    }
+
+    #[test]
+    fn gen_split_partitions_the_generator_mean_exactly() {
+        // The split is an exact decomposition of the same samples:
+        // prefill + decode == mean_service for every generator node, in
+        // every batching mode, and non-generators get no split entry.
+        use crate::profile::models::GenBatching;
+        let g = apps::vanilla_rag();
+        let gen = g.node_by_name("generator").unwrap().id;
+        let retr = g.node_by_name("retriever").unwrap().id;
+        for mode in [GenBatching::Legacy, GenBatching::Static, GenBatching::Continuous] {
+            let p = profile_graph_gen(&g, 2000, 31, mode);
+            let s = p.gen_split[&gen];
+            assert!(
+                (s.total() - p.mean_service[&gen]).abs() < 1e-9,
+                "{mode:?}: split {} + {} vs mean {}",
+                s.prefill,
+                s.decode,
+                p.mean_service[&gen]
+            );
+            // Decode dominates at the trace's token mix (~40 decode steps
+            // at 2 ms vs a ~60-token prefill at 0.1 ms/tok).
+            assert!(s.decode > 2.0 * s.prefill, "{mode:?}: {s:?}");
+            // Prompt-token mean sits inside the trace clamp [4, 127].
+            assert!((4.0..=127.0).contains(&s.prompt_tokens), "{mode:?}: {s:?}");
+            assert!(!p.gen_split.contains_key(&retr));
+        }
+    }
+
+    #[test]
+    fn placement_priors_collocated_identity_and_disagg_reprice() {
+        use crate::profile::models::{GenPlacement, KvTransferModel};
+        let g = apps::corrective_rag();
+        let p = profile_graph(&g, 2000, 37);
+        let kv = KvTransferModel::paper_interconnect();
+        // Collocated: bit-identical to the plain priors (the knob is
+        // inert by default, like GenBatching::Legacy).
+        let col = p.placement_priors(GenPlacement::Collocated, &kv, 0.0);
+        for (id, m) in &p.mean_service {
+            assert_eq!(m.to_bits(), col[id].to_bits());
+        }
+        // Disaggregated, no prefix cache: generator prior = split total +
+        // KV handoff (a small, strictly positive premium); everything
+        // else untouched.
+        let dis = p.placement_priors(GenPlacement::Disaggregated, &kv, 0.0);
+        let gen = g.node_by_name("generator").unwrap().id;
+        let grader = g.node_by_name("grader").unwrap().id;
+        assert!(dis[&gen] > p.mean_service[&gen]);
+        assert!(dis[&gen] < p.mean_service[&gen] + 0.01, "handoff must be small: {}", dis[&gen]);
+        assert_eq!(dis[&grader].to_bits(), p.mean_service[&grader].to_bits());
+        // A hot prefix cache discounts the prefill share: the prior falls
+        // below the collocated aggregate once the saved prefill exceeds
+        // the transfer cost.
+        let hot = p.placement_priors(GenPlacement::Disaggregated, &kv, 0.9);
+        assert!(hot[&gen] < dis[&gen]);
+        let s = p.gen_split[&gen];
+        let saved = s.prefill * 0.9 * (1.0 - crate::profile::models::KV_PREFIX_HIT_COST_FRAC);
+        assert!(
+            (dis[&gen] - hot[&gen] - saved).abs() < 1e-9,
+            "cache discount {} vs expected {saved}",
+            dis[&gen] - hot[&gen]
+        );
     }
 
     #[test]

@@ -6,6 +6,20 @@
 //! (`prefill → (logits, kv)`, `decode(kv, token, pos) → (logits, kv)`), so
 //! the Rust side owns scheduling while XLA owns math.
 //!
+//! **Prefill/decode split.** Prefill and decode are separate compiled
+//! artifacts (`generator_prefill_b{b}` / `generator_decode_b{b}`) joined
+//! only by the host-side KV tensor — exactly the seam a disaggregated
+//! deployment cuts. The live stepped stage already runs them as distinct
+//! phases ([`Generator::inflight_admit`] = the prefill stage,
+//! [`Generator::inflight_step`] = the decode stage, wired through the
+//! controller's worker loop), and [`BatchTiming`] /
+//! [`InflightDone::service_secs`] attribute their costs separately. This
+//! process keeps both phases on one engine (collocated); moving the KV
+//! tensor across a pool boundary instead is what
+//! `SimConfig::gen_placement = Disaggregated` models, with
+//! `profile::models::KvTransferModel` pricing the handoff this tensor
+//! would pay.
+//!
 //! Tokens are bytes (vocab 256); token 0 is PAD/EOS.
 
 use std::path::Path;

@@ -444,6 +444,82 @@ mod tests {
         assert!(snap.degraded > 0, "overload should trigger the degrade ladder");
     }
 
+    /// Decode-side overload fixture: a generator-only pipeline, so the
+    /// admission gate sits directly on the pool the placement splits.
+    fn gen_only() -> PipelineGraph {
+        use crate::spec::{ComponentKind, PipelineBuilder, ResourceKind};
+        let mut b = PipelineBuilder::new("gen-only");
+        let gen = b
+            .component("generator", ComponentKind::Generator)
+            .resources(&[(ResourceKind::Gpu, 1.0)])
+            .add();
+        b.edge_from_source(gen, 1.0);
+        b.edge_to_sink(gen, 1.0);
+        b.build().expect("gen-only is valid")
+    }
+
+    #[test]
+    fn placement_aware_admission_does_not_overshed_at_decode_side_overload() {
+        use crate::profile::models::{GenBatching, GenPlacement, KvTransferModel};
+        use crate::profile::profile_graph_gen;
+
+        // Unit half: placement-aware priors reprice the generator (cached
+        // prefill + transfer + decode < the collocated aggregate), so the
+        // slack predictor promises MORE slack at the same queue depth —
+        // the over-shedding a placement-blind prior would cause is the
+        // regression this pins.
+        let g = gen_only();
+        let prior = profile_graph_gen(&g, 400, 0xBEEF, GenBatching::Continuous);
+        let kv = KvTransferModel::default();
+        let blind = prior.mean_service.clone();
+        let aware = prior.placement_priors(GenPlacement::Disaggregated, &kv, 0.9);
+        let entry = g.node_by_name("generator").unwrap().id;
+        let mk_plane = |priors: &HashMap<NodeId, f64>| {
+            ControlPlane::new(
+                &g,
+                priors,
+                RoutingPolicy::LoadStateAware,
+                QueueDiscipline::LeastSlack,
+                SchedConfig::overload_defense(),
+                10.0,
+            )
+        };
+        let f = feats();
+        let s_blind = mk_plane(&blind).admission_slack(entry, &f, 0.0, 2.0, 600, 128);
+        let s_aware = mk_plane(&aware).admission_slack(entry, &f, 0.0, 2.0, 600, 128);
+        assert!(
+            s_aware > s_blind,
+            "repriced generator must leave more predicted slack: {s_aware} vs {s_blind}"
+        );
+
+        // DES half: at ~2× the collocated generator capacity, the
+        // disaggregated + prefix-cached arm (more effective capacity,
+        // placement-aware slack keys via `SimWorld::new`) must shed
+        // strictly less than the collocated arm on the same trace.
+        let mk_cfg = |placement: GenPlacement, hit: f64| {
+            let trace =
+                TraceConfig { rate: 2000.0, n: 5000, slo: Some(2.0), ..TraceConfig::default() };
+            let mut cfg = SimConfig::new(SystemKind::Harmonia, trace, 0xDEC0);
+            cfg.sched = SchedConfig::overload_defense();
+            cfg.gen_batching = GenBatching::Continuous;
+            cfg.gen_placement = placement;
+            cfg.kv_prefix_hit_rate = hit;
+            cfg
+        };
+        let col = SimWorld::simulate(gen_only(), mk_cfg(GenPlacement::Collocated, 0.0));
+        let dis = SimWorld::simulate(gen_only(), mk_cfg(GenPlacement::Disaggregated, 0.9));
+        assert_eq!(col.report.completed + col.report.shed, 5000);
+        assert_eq!(dis.report.completed + dis.report.shed, 5000);
+        assert!(col.report.shed > 0, "2× decode-side overload must shed");
+        assert!(dis.report.shed > 0, "the split arm is still overloaded at this rate");
+        assert!(
+            dis.report.shed < col.report.shed,
+            "placement-aware admission must not over-shed: disagg {} vs collocated {}",
+            dis.report.shed,
+            col.report.shed
+        );
+    }
+
     #[test]
     fn overload_regression_is_deterministic() {
         let a = SimWorld::simulate(

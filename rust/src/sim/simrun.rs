@@ -16,10 +16,10 @@ use std::time::Instant;
 use crate::alloc::{AllocationPlan, FlowProblem};
 use crate::coordinator::router::{InstanceState, RoutingPolicy};
 use crate::coordinator::streaming::{StreamPolicy, StreamingMode, CHUNK_OVERHEAD, CHUNK_PREEMPT};
-use crate::metrics::{CacheCounters, Recorder, RunReport};
+use crate::metrics::{CacheCounters, DisaggStats, Recorder, RunReport};
 use crate::profile::models::{
-    concurrency_slowdown, instance_concurrency, DecodeCostModel, GenBatching, LatencyModel,
-    CACHE_HIT_COST_FRAC,
+    concurrency_slowdown, instance_concurrency, DecodeCostModel, GenBatching, GenPlacement,
+    KvTransferModel, LatencyModel, CACHE_HIT_COST_FRAC, KV_PREFIX_HIT_COST_FRAC,
 };
 use crate::profile::{profile_graph_gen, Profile};
 use crate::sched::{ControlPlane, PrioQueue, QueueDiscipline, SchedConfig};
@@ -107,6 +107,21 @@ pub struct SimConfig {
     /// per-token latency into [`RunReport::gen`], and the LP priors /
     /// admission slack predictions are re-profiled under the same model.
     pub gen_batching: GenBatching,
+    /// Generator placement. `Collocated` (the default) serves prefill
+    /// and decode from one pool and replays golden traces bit-identically;
+    /// `Disaggregated` splits every generator into a prefill pool and a
+    /// decode pool joined by an explicit KV-transfer handoff event (the
+    /// RAGO-style split), with the LP choosing the pool sizes.
+    pub gen_placement: GenPlacement,
+    /// KV-transfer fabric between the pools (Disaggregated only).
+    pub kv_transfer: KvTransferModel,
+    /// Modeled KV prefix-cache hit probability over the workload's
+    /// retrieved-context segment chains (Disaggregated only; 0 = no
+    /// prefix cache, and no randomness is consumed). Use
+    /// [`crate::profile::models::zipf_hit_rate`] on the context pool to
+    /// derive it from a Zipf repeat distribution, mirroring how
+    /// `cached_vanilla_rag` prices the query cache.
+    pub kv_prefix_hit_rate: f64,
 }
 
 impl SimConfig {
@@ -126,6 +141,9 @@ impl SimConfig {
             max_sim_time: 3600.0,
             sched: SchedConfig::default(),
             gen_batching: GenBatching::Legacy,
+            gen_placement: GenPlacement::Collocated,
+            kv_transfer: KvTransferModel::default(),
+            kv_prefix_hit_rate: 0.0,
         }
     }
 }
@@ -159,8 +177,43 @@ enum Ev {
     /// per-chunk preemption busy-time downstream.
     Dispatch { req: usize, node: NodeId, branch: u32, earliest_finish: f64, stream_chunks: f64 },
     Finish { req: usize, node: NodeId, inst: usize, service: f64, branch: u32 },
+    /// Disaggregated generator, phase boundary 1: the prefill pool
+    /// finished a request's prefill pass; its KV pages go on the wire.
+    /// `decode`/`transfer` were priced at prefill start; `total` is the
+    /// combined service attribution for the plane.
+    PrefillFinish {
+        req: usize,
+        node: NodeId,
+        inst: usize,
+        branch: u32,
+        decode: f64,
+        transfer: f64,
+        total: f64,
+        earliest_finish: f64,
+    },
+    /// Phase boundary 2: the KV transfer landed on the decode side; the
+    /// request is admitted to (or queued for) the decode pool.
+    KvHandoff { req: usize, node: NodeId, branch: u32, decode: f64, total: f64, earliest_finish: f64 },
+    /// Phase boundary 3: the decode pool emitted the request's last
+    /// token; the visit completes and the pipeline advances.
+    DecodeFinish { req: usize, node: NodeId, inst: usize, branch: u32, total: f64 },
     ControlTick,
     InstanceUp { node: NodeId, inst: usize },
+}
+
+/// One unit of decode-pool work under disaggregated placement: the
+/// request's own decode span (priced at prefill start), waiting for a
+/// decode slot after its KV handoff landed.
+#[derive(Clone, Debug)]
+struct DecodeItem {
+    req: usize,
+    branch: u32,
+    /// Decode-side service span.
+    decode: f64,
+    /// Combined prefill + transfer + decode attribution for the plane.
+    total: f64,
+    enqueued_at: f64,
+    earliest_finish: f64,
 }
 
 /// Barrier state of one in-flight fork: which sibling branches are still
@@ -266,6 +319,18 @@ pub struct SimWorld {
     /// Modeled query-cache hits/misses (components with
     /// `cache_hit_rate > 0`); surfaces in `RunReport::cache`.
     cache_counters: CacheCounters,
+    /// Decode-pool instances for disaggregated generator nodes
+    /// (`instances` then holds the prefill pool). Empty under Collocated.
+    decode_instances: HashMap<NodeId, Vec<SimInstance>>,
+    /// Central decode-pool queues: handed-off requests waiting for a
+    /// decode slot (FIFO — handoff order is arrival order at this stage).
+    decode_queues: HashMap<NodeId, PrioQueue<DecodeItem>>,
+    /// Modeled KV prefix-cache hits/misses (Disaggregated only);
+    /// surfaces in `RunReport::disagg.kv_prefix`.
+    kv_counters: CacheCounters,
+    /// KV handoff count and cumulative transfer seconds.
+    handoffs: u64,
+    transfer_total: f64,
 }
 
 impl SimWorld {
@@ -334,7 +399,11 @@ impl SimWorld {
 
         let monolithic = cfg.system == SystemKind::LangChain;
         let plan = match cfg.system {
+            // `with_placement` with the default Collocated placement is
+            // the identity formulation (pinned in `alloc::flow` tests),
+            // so this call is unconditional.
             SystemKind::Harmonia => FlowProblem::new(&graph, &prior, budgets)
+                .with_placement(cfg.gen_placement, cfg.kv_transfer, cfg.kv_prefix_hit_rate)
                 .solve()
                 .expect("allocation feasible"),
             _ => AllocationPlan::uniform(&graph, &cluster.budgets()),
@@ -352,9 +421,16 @@ impl SimWorld {
             QueueDiscipline::Fifo
         };
 
+        // Placement-aware slack priors: under disaggregation the
+        // generator's effective per-visit service is repriced (discounted
+        // prefill + KV transfer + decode), so admission doesn't over-shed
+        // when only the decode pool is saturated. Under Collocated this
+        // is exactly `prior.mean_service` — bit-identical slack keys.
+        let plane_priors =
+            prior.placement_priors(cfg.gen_placement, &cfg.kv_transfer, cfg.kv_prefix_hit_rate);
         let plane = ControlPlane::new(
             &graph,
-            &prior.mean_service,
+            &plane_priors,
             routing,
             discipline,
             cfg.sched,
@@ -383,6 +459,11 @@ impl SimWorld {
             completed: 0,
             shed: 0,
             cache_counters: CacheCounters::new(),
+            decode_instances: HashMap::new(),
+            decode_queues: HashMap::new(),
+            kv_counters: CacheCounters::new(),
+            handoffs: 0,
+            transfer_total: 0.0,
             prior,
             graph,
             cfg,
@@ -426,9 +507,43 @@ impl SimWorld {
             // of every shard); `units` counts those, matching what one
             // simulated instance actually serves.
             let count = plan.units(id).max(1);
-            let v = (0..count).map(|_| self.make_instance(id)).collect();
-            self.instances.insert(id, v);
+            if self.disagg_node(id) {
+                // Split the generator's deployable units between the
+                // prefill and decode pools: the LP's explicit split when
+                // it solved one, else the profile's prefill/decode time
+                // ratio. Each pool keeps ≥ 1 instance and the pair never
+                // exceeds the node's total allocation (the LP's per-pool
+                // ceils may otherwise sum one over).
+                let (lp_pre, lp_dec) = plan.pools(id).unwrap_or_else(|| {
+                    let pf = self
+                        .prior
+                        .gen_split
+                        .get(&id)
+                        .map(|s| (s.prefill / s.total().max(1e-12)).clamp(0.0, 1.0))
+                        .unwrap_or(0.2);
+                    let pre = (count as f64 * pf).round() as usize;
+                    (pre, count.saturating_sub(pre))
+                });
+                let n_pre = lp_pre.clamp(1, count.saturating_sub(1).max(1));
+                let n_dec = lp_dec.clamp(1, (count - n_pre).max(1));
+                let v = (0..n_pre).map(|_| self.make_instance(id)).collect();
+                self.instances.insert(id, v);
+                let d = (0..n_dec).map(|_| self.make_instance(id)).collect();
+                self.decode_instances.insert(id, d);
+            } else {
+                let v = (0..count).map(|_| self.make_instance(id)).collect();
+                self.instances.insert(id, v);
+            }
         }
+    }
+
+    /// Is `node` a generator served by split prefill/decode pools this
+    /// run? (Monolithic replicas inline the whole pipeline — placement
+    /// doesn't apply.)
+    fn disagg_node(&self, node: NodeId) -> bool {
+        !self.monolithic
+            && self.cfg.gen_placement == GenPlacement::Disaggregated
+            && matches!(self.graph.node(node).kind, ComponentKind::Generator)
     }
 
     fn make_instance(&mut self, node: NodeId) -> SimInstance {
@@ -495,6 +610,23 @@ impl SimWorld {
                 Ev::Finish { req, node, inst, service, branch } => {
                     self.on_finish(req, node, inst, service, branch)
                 }
+                Ev::PrefillFinish {
+                    req,
+                    node,
+                    inst,
+                    branch,
+                    decode,
+                    transfer,
+                    total,
+                    earliest_finish,
+                } => self
+                    .on_prefill_finish(req, node, inst, branch, decode, transfer, total, earliest_finish),
+                Ev::KvHandoff { req, node, branch, decode, total, earliest_finish } => {
+                    self.on_kv_handoff(req, node, branch, decode, total, earliest_finish)
+                }
+                Ev::DecodeFinish { req, node, inst, branch, total } => {
+                    self.on_decode_finish(req, node, inst, branch, total)
+                }
                 Ev::ControlTick => {
                     self.on_control_tick();
                     if self.completed + self.shed < self.reqs.len() {
@@ -515,6 +647,26 @@ impl SimWorld {
         }
         if self.cfg.sched.enabled() {
             self.recorder.set_sched(self.plane.counters.snapshot());
+        }
+        // Disaggregation section: only a run that actually split the
+        // generator attaches it — Collocated reports (and golden traces)
+        // carry no trace of the feature.
+        if !self.monolithic && self.cfg.gen_placement == GenPlacement::Disaggregated {
+            let mut prefill_instances = 0;
+            let mut decode_instances = 0;
+            for (id, v) in &self.decode_instances {
+                decode_instances += v.iter().filter(|i| i.up).count();
+                if let Some(p) = self.instances.get(id) {
+                    prefill_instances += p.iter().filter(|i| i.up).count();
+                }
+            }
+            self.recorder.set_disagg(DisaggStats {
+                handoffs: self.handoffs,
+                transfer_total: self.transfer_total,
+                prefill_instances,
+                decode_instances,
+                kv_prefix: self.kv_counters.snapshot(),
+            });
         }
         let final_instances = self
             .instances
@@ -669,14 +821,22 @@ impl SimWorld {
     /// instances + the central queue) — the admission gate's inputs.
     fn node_load(&self, node: NodeId) -> (usize, usize) {
         let central = self.node_queues.get(&node).map_or(0, |q| q.len());
-        match self.instances.get(&node) {
+        let (mut queued, mut capacity) = match self.instances.get(&node) {
             Some(v) => {
                 let queued: usize = v.iter().map(|i| i.queue.len()).sum::<usize>() + central;
                 let capacity: usize = v.iter().filter(|i| i.up).map(|i| i.slots).sum();
                 (queued, capacity)
             }
             None => (central, 0),
+        };
+        // Split generator: the decode pool's backlog and slots are part
+        // of the same logical component — admission must see a saturated
+        // decode side even when the prefill pool is idle.
+        if let Some(v) = self.decode_instances.get(&node) {
+            queued += self.decode_queues.get(&node).map_or(0, |q| q.len());
+            capacity += v.iter().filter(|i| i.up).map(|i| i.slots).sum::<usize>();
         }
+        (queued, capacity)
     }
 
     fn first_node(&self) -> NodeId {
@@ -753,6 +913,25 @@ impl SimWorld {
 
         self.plane.on_enqueue(node);
         let item = QueuedItem { req, branch, enqueued_at: now, earliest_finish, stream_chunks };
+        // Disaggregated placement owns the generator's engine model: the
+        // routed pick lands in the prefill pool, and the batching-mode
+        // branches below never see a split generator.
+        if self.disagg_node(node) {
+            let inst = &mut self.instances.get_mut(&node).unwrap()[pick];
+            if inst.up && inst.active < inst.slots {
+                inst.active += 1;
+                self.start_prefill(req, node, pick, item);
+            } else if spec_stateful {
+                inst.queue.push(slack_key, item);
+            } else {
+                let d = self.plane.discipline;
+                self.node_queues
+                    .entry(node)
+                    .or_insert_with(|| PrioQueue::new(d))
+                    .push(slack_key, item);
+            }
+            return;
+        }
         // Static run-to-completion batching: the generator engine serves
         // one batch at a time, so a request may only start when the
         // instance is idle — and then it drags queued work in with it up
@@ -1045,6 +1224,254 @@ impl SimWorld {
         }
     }
 
+    // ---- disaggregated generator (prefill → KV handoff → decode) -----------
+
+    /// Modeled KV prefix cache draw: `kv_prefix_hit_rate` is the expected
+    /// longest-prefix hit probability over the workload's retrieved-context
+    /// segment chains (`cache::kv_prefix` is the live twin; here the DES
+    /// prices it statistically, like `draw_cache_hit` prices the query
+    /// cache). A zero rate consumes no randomness. Misses count an
+    /// insertion too — every missed chain is written back.
+    fn draw_kv_prefix_hit(&mut self, req: usize, branch: u32) -> bool {
+        let rate = self.cfg.kv_prefix_hit_rate;
+        if rate <= 0.0 {
+            return false;
+        }
+        let hit = {
+            let rng = self.req_rng(req, branch);
+            rng.chance(rate)
+        };
+        if hit {
+            self.kv_counters.on_exact_hit();
+        } else {
+            self.kv_counters.on_miss();
+            self.kv_counters.on_insertion();
+        }
+        hit
+    }
+
+    /// Disaggregated generator, phase one: price the visit with the
+    /// continuous-batching anatomy (one noise draw, occupancy-aware step
+    /// cost, the same modifier order as `start_service`), split it into
+    /// the request's prefill and decode spans, apply the modeled KV
+    /// prefix cache to the prefill side, and schedule prefill completion.
+    /// The decode span and transfer cost ride along in the event — decode
+    /// capacity is committed only when the handoff lands. Managed
+    /// streaming out of a split generator is not modeled: the first-token
+    /// path is already pinned by the handoff chain.
+    fn start_prefill(&mut self, req: usize, node: NodeId, pick: usize, item: QueuedItem) {
+        let now = self.q.now();
+        let branch = item.branch;
+        let spec = self.graph.node(node).clone();
+        let (colocated, active) = {
+            let i = &self.instances[&node][pick];
+            (i.colocated, i.active)
+        };
+        let model = LatencyModel::for_kind(&spec.kind);
+        let features = self.reqs[req].features;
+        let dcm = DecodeCostModel::generator();
+        let base = dcm.continuous(&features, active);
+        let noise = {
+            let rng = self.req_rng(req, branch);
+            model.noise(rng)
+        };
+        let mut t = base * noise;
+        t *= super::cluster::shard_service_factor(spec.shards);
+        if self.draw_cache_hit(req, branch, spec.cache_hit_rate) {
+            t *= CACHE_HIT_COST_FRAC;
+        }
+        if self.plane.degrade_enabled() {
+            t *= self.plane.service_factor(spec.degrade);
+        }
+        if colocated {
+            t *= COLOCATION_SLOWDOWN;
+        }
+        t += item.stream_chunks * CHUNK_PREEMPT;
+        // Exact split: prefill share from the noise-free anatomy, decode
+        // is the remainder — the two spans always sum to the full sample,
+        // so placement moves time between pools without changing a
+        // visit's pre-transfer cost.
+        let pf = (dcm.prefill(features.prompt_len) / base.max(1e-12)).clamp(0.0, 1.0);
+        let mut prefill = t * pf;
+        let decode = t - prefill;
+        // A prefix-cache hit restores the shared context prefix and
+        // re-runs only the tail of prefill (per-request draw keeps the
+        // TTFT distribution bimodal, like the query cache's p50 story).
+        if self.draw_kv_prefix_hit(req, branch) {
+            prefill *= KV_PREFIX_HIT_COST_FRAC;
+        }
+        let transfer = self.cfg.kv_transfer.cost(features.prompt_len);
+        let total = prefill + transfer + decode;
+        let queue_wait = now - item.enqueued_at;
+        self.recorder
+            .on_execution(&format!("{}.prefill", spec.name), prefill, queue_wait);
+        self.plane.observe_service(node, &features, total);
+        self.q.schedule(
+            now + prefill,
+            Ev::PrefillFinish {
+                req,
+                node,
+                inst: pick,
+                branch,
+                decode,
+                transfer,
+                total,
+                earliest_finish: item.earliest_finish,
+            },
+        );
+    }
+
+    /// Phase two: the prefill pool frees its slot (pulling queued prefill
+    /// work in — the same bound-first, lazily-discarding pull as
+    /// `on_finish`), and the request's KV pages go on the wire. A
+    /// cancelled FirstK loser still rides the full handoff chain, exactly
+    /// as a cancelled collocated request runs its service to completion.
+    #[allow(clippy::too_many_arguments)]
+    fn on_prefill_finish(
+        &mut self,
+        req: usize,
+        node: NodeId,
+        inst: usize,
+        branch: u32,
+        decode: f64,
+        transfer: f64,
+        total: f64,
+        earliest_finish: f64,
+    ) {
+        let next_item = {
+            let v = self.instances.get_mut(&node).unwrap();
+            let i = &mut v[inst];
+            i.active = i.active.saturating_sub(1);
+            if i.up && i.active < i.slots {
+                loop {
+                    match i
+                        .queue
+                        .pop()
+                        .or_else(|| self.node_queues.get_mut(&node).and_then(|q| q.pop()))
+                    {
+                        Some(it) if self.cancelled.remove(&(it.req, it.branch)) => {
+                            self.branch_cell.remove(&(it.req, it.branch));
+                            self.branch_rngs.remove(&(it.req, it.branch));
+                            self.plane.on_cancelled(node);
+                        }
+                        other => break other,
+                    }
+                }
+            } else {
+                None
+            }
+        };
+        if let Some(item) = next_item {
+            self.instances.get_mut(&node).unwrap()[inst].active += 1;
+            let r = item.req;
+            self.start_prefill(r, node, inst, item);
+        }
+        self.handoffs += 1;
+        self.transfer_total += transfer;
+        self.q.schedule_in(
+            transfer,
+            Ev::KvHandoff { req, node, branch, decode, total, earliest_finish },
+        );
+    }
+
+    /// Phase three: the KV transfer landed; admit to the decode pool.
+    /// Decode admission is an engine decision, not a routed controller
+    /// decision: deterministic least-loaded pick, lowest index on ties.
+    fn on_kv_handoff(
+        &mut self,
+        req: usize,
+        node: NodeId,
+        branch: u32,
+        decode: f64,
+        total: f64,
+        earliest_finish: f64,
+    ) {
+        let now = self.q.now();
+        let item = DecodeItem { req, branch, decode, total, enqueued_at: now, earliest_finish };
+        let pick = self.decode_instances[&node]
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| i.up && i.active < i.slots)
+            .min_by_key(|&(idx, i)| (i.active, idx))
+            .map(|(idx, _)| idx);
+        match pick {
+            Some(p) => {
+                self.decode_instances.get_mut(&node).unwrap()[p].active += 1;
+                self.start_decode(node, p, item);
+            }
+            None => {
+                self.decode_queues
+                    .entry(node)
+                    .or_insert_with(|| PrioQueue::new(QueueDiscipline::Fifo))
+                    .push(now, item);
+            }
+        }
+    }
+
+    /// Phase four: the decode pool serves the request's own decode span.
+    /// The first token emerges one step into the span — TTFT under
+    /// disaggregation includes prefill, transfer, and decode-pool
+    /// queueing, which is exactly the tradeoff the placement sweep
+    /// measures.
+    fn start_decode(&mut self, node: NodeId, pick: usize, item: DecodeItem) {
+        let now = self.q.now();
+        let name = self.graph.node(node).name.clone();
+        let features = self.reqs[item.req].features;
+        self.recorder
+            .on_execution(&format!("{name}.decode"), item.decode, now - item.enqueued_at);
+        let steps = features.gen_len.max(1) as f64;
+        self.record_ttft(item.req, now + item.decode / steps);
+        self.recorder.on_token_latency(item.decode / steps);
+        let finish = (now + item.decode).max(item.earliest_finish);
+        self.q.schedule(
+            finish,
+            Ev::DecodeFinish {
+                req: item.req,
+                node,
+                inst: pick,
+                branch: item.branch,
+                total: item.total,
+            },
+        );
+    }
+
+    /// Phase five: last token out. The plane sees the generator as one
+    /// logical component — a single `on_complete` with the combined
+    /// prefill + transfer + decode attribution, paired with the single
+    /// `on_enqueue` at dispatch.
+    fn on_decode_finish(&mut self, req: usize, node: NodeId, inst: usize, branch: u32, total: f64) {
+        self.plane.on_complete(node, total);
+        let next_item = {
+            let v = self.decode_instances.get_mut(&node).unwrap();
+            let i = &mut v[inst];
+            i.active = i.active.saturating_sub(1);
+            if i.up && i.active < i.slots {
+                self.decode_queues.get_mut(&node).and_then(|q| q.pop())
+            } else {
+                None
+            }
+        };
+        if let Some(item) = next_item {
+            self.decode_instances.get_mut(&node).unwrap()[inst].active += 1;
+            self.start_decode(node, inst, item);
+        }
+        // Cancelled mid-flight (FirstK loser): the visit ends here. No
+        // streamed pre-dispatch exists out of a split generator, so the
+        // mark is always consumable at this point.
+        if self.cancelled.remove(&(req, branch)) {
+            self.purge_branch(req, branch);
+            return;
+        }
+        if self.fork_map.contains_key(&node) {
+            return self.do_fork(req, node, branch);
+        }
+        let next = self.sample_next(req, branch, node).0;
+        self.q.schedule_in(
+            self.cfg.controller_overhead,
+            Ev::Dispatch { req, node: next, branch, earliest_finish: 0.0, stream_chunks: 0.0 },
+        );
+    }
+
     fn on_finish(&mut self, req: usize, node: NodeId, inst: usize, service: f64, branch: u32) {
         if self.monolithic {
             return self.monolith_finish(req, inst);
@@ -1217,13 +1644,18 @@ impl SimWorld {
 
     fn utilization(&self, node: NodeId) -> f64 {
         let Some(v) = self.instances.get(&node) else { return 0.0 };
-        let cap: usize = v.iter().filter(|i| i.up).map(|i| i.slots).sum();
+        let mut cap: usize = v.iter().filter(|i| i.up).map(|i| i.slots).sum();
+        let queued_central = self.node_queues.get(&node).map_or(0, |q| q.len());
+        let mut load: usize =
+            v.iter().map(|i| i.active + i.queue.len()).sum::<usize>() + queued_central;
+        if let Some(d) = self.decode_instances.get(&node) {
+            cap += d.iter().filter(|i| i.up).map(|i| i.slots).sum::<usize>();
+            load += d.iter().map(|i| i.active).sum::<usize>()
+                + self.decode_queues.get(&node).map_or(0, |q| q.len());
+        }
         if cap == 0 {
             return 1.0;
         }
-        let queued_central = self.node_queues.get(&node).map_or(0, |q| q.len());
-        let load: usize =
-            v.iter().map(|i| i.active + i.queue.len()).sum::<usize>() + queued_central;
         load as f64 / cap as f64
     }
 
@@ -1400,6 +1832,11 @@ impl SimWorld {
             load += self.node_queues.get(node).map_or(0, |q| q.len());
             cap += v.iter().filter(|i| i.up).map(|i| i.slots).sum::<usize>();
         }
+        for (node, v) in &self.decode_instances {
+            load += v.iter().map(|i| i.active).sum::<usize>();
+            load += self.decode_queues.get(node).map_or(0, |q| q.len());
+            cap += v.iter().filter(|i| i.up).map(|i| i.slots).sum::<usize>();
+        }
         if cap == 0 {
             return 0.0;
         }
@@ -1434,6 +1871,13 @@ impl SimWorld {
         let now = self.q.now();
         let cold = self.cfg.cold_start;
         for (node, target) in plan {
+            // The autoscaler's targets are placement-blind (one pool per
+            // node); resizing a split generator from them would corrupt
+            // the LP-chosen prefill/decode balance. Pool sizes are fixed
+            // at provisioning for this run.
+            if self.disagg_node(node) {
+                continue;
+            }
             let have: usize = self.instances.get(&node).map(|v| v.len()).unwrap_or(0);
             if target > have {
                 for _ in have..target {
@@ -1516,7 +1960,15 @@ impl SimWorld {
         if popped.is_empty() {
             return;
         }
-        if self.gen_mode(node) == GenBatching::Static {
+        if self.disagg_node(node) {
+            // Defensive: `apply_plan` never resizes a split generator, so
+            // this only fires if that invariant changes — prefill work
+            // must then start on the prefill path.
+            for item in popped {
+                let r = item.req;
+                self.start_prefill(r, node, inst, item);
+            }
+        } else if self.gen_mode(node) == GenBatching::Static {
             // A cold-started static-batching engine starts its backlog as
             // one run-to-completion batch, not as independent slots.
             self.start_static_batch(node, inst, popped);
@@ -2048,5 +2500,152 @@ mod tests {
         let g = r.report.components["grader"].mean_service();
         let gen = r.report.components["generator"].mean_service();
         assert!(g > gen, "grader {g} vs generator {gen}");
+    }
+
+    // ---- prefill/decode disaggregation -------------------------------------
+
+    /// Generator-bound workload (light retrieval) under continuous
+    /// batching — the collocated arm of every placement comparison, so
+    /// both arms record TTFT through the same iteration-level engine.
+    fn place_cfg(rate: f64, n: usize, seed: u64) -> SimConfig {
+        let trace = TraceConfig {
+            rate,
+            n,
+            slo: Some(2.0),
+            k_lo: 50,
+            k_hi: 100,
+            ..TraceConfig::default()
+        };
+        let mut cfg = SimConfig::new(SystemKind::Harmonia, trace, seed);
+        cfg.gen_batching = GenBatching::Continuous;
+        cfg
+    }
+
+    fn disaggregated(mut cfg: SimConfig, kv: KvTransferModel, hit: f64) -> SimConfig {
+        cfg.gen_placement = GenPlacement::Disaggregated;
+        cfg.kv_transfer = kv;
+        cfg.kv_prefix_hit_rate = hit;
+        cfg
+    }
+
+    #[test]
+    fn disaggregation_with_prefix_cache_cuts_p99_ttft_on_repeat_heavy_load() {
+        // The tentpole's acceptance claim, pinned deterministically. The
+        // operating point sits between the two capacities: a repeat-heavy
+        // Zipf context pool gives the prefix cache a high longest-prefix
+        // hit rate, which lifts the disaggregated configuration's
+        // generator capacity above the collocated ceiling (~1000 req/s on
+        // this workload). At 1400 req/s the collocated pool's backlog
+        // grows without bound while the split pools shed prefill work
+        // into the cache — p99 TTFT must strictly separate.
+        let hit = crate::profile::models::zipf_hit_rate(1.3, 0.9, 4096, 2048);
+        assert!(hit > 0.8, "workload should be repeat-heavy, got {hit}");
+        let (rate, n, seed) = (1400.0, 3000, 0xD15A);
+        let col = SimWorld::simulate(apps::vanilla_rag(), place_cfg(rate, n, seed));
+        let dis = SimWorld::simulate(
+            apps::vanilla_rag(),
+            disaggregated(place_cfg(rate, n, seed), KvTransferModel::default(), hit),
+        );
+        assert_eq!(col.report.completed, n as u64);
+        assert_eq!(dis.report.completed, n as u64);
+        assert!(col.report.disagg.is_none(), "collocated runs carry no disagg section");
+        let gc = col.report.gen.expect("collocated continuous records TTFT");
+        let gd = dis.report.gen.expect("disaggregated records TTFT");
+        assert!(
+            gd.ttft_p99 < gc.ttft_p99,
+            "disagg + prefix cache p99 TTFT {} must beat collocated {}",
+            gd.ttft_p99,
+            gc.ttft_p99
+        );
+        let d = dis.report.disagg.expect("disaggregated run reports the section");
+        assert_eq!(d.handoffs, n as u64, "one handoff per generator visit");
+        assert!(d.prefill_instances >= 1 && d.decode_instances >= 1);
+        assert!(
+            d.decode_instances > d.prefill_instances,
+            "decode dominates the split: {} vs {}",
+            d.decode_instances,
+            d.prefill_instances
+        );
+        assert!(
+            (d.kv_prefix.hit_rate() - hit).abs() < 0.05,
+            "observed prefix hit rate {} vs modeled {hit}",
+            d.kv_prefix.hit_rate()
+        );
+        assert!(d.mean_transfer() > 0.0);
+    }
+
+    #[test]
+    fn collocated_wins_when_kv_transfer_dominates() {
+        // The other direction of the RAGO figure: on a slow fabric
+        // (scale ×200 ≈ 170 ms per handoff) every disaggregated visit
+        // pays a transfer tax no cache can refund — collocated must win
+        // both TTFT and end-to-end latency at a load both can carry.
+        let slow = KvTransferModel { scale: 200.0, ..KvTransferModel::default() };
+        let (rate, n, seed) = (400.0, 800, 0xD15A);
+        let col = SimWorld::simulate(apps::vanilla_rag(), place_cfg(rate, n, seed));
+        let dis =
+            SimWorld::simulate(apps::vanilla_rag(), disaggregated(place_cfg(rate, n, seed), slow, 0.0));
+        assert_eq!(col.report.completed, n as u64);
+        assert_eq!(dis.report.completed, n as u64);
+        let gc = col.report.gen.unwrap();
+        let gd = dis.report.gen.unwrap();
+        assert!(
+            gc.ttft_p99 < gd.ttft_p99,
+            "collocated p99 TTFT {} must beat slow-fabric disagg {}",
+            gc.ttft_p99,
+            gd.ttft_p99
+        );
+        assert!(
+            col.report.mean_latency < dis.report.mean_latency,
+            "collocated mean {} vs disagg {}",
+            col.report.mean_latency,
+            dis.report.mean_latency
+        );
+        let d = dis.report.disagg.unwrap();
+        assert!(
+            d.mean_transfer() > 0.1 && d.mean_transfer() < 0.25,
+            "mean transfer {} should sit near scale × (base + per_tok · prompt)",
+            d.mean_transfer()
+        );
+        // No prefix cache: the counters never moved and no rng was drawn.
+        assert_eq!(d.kv_prefix.lookups(), 0);
+    }
+
+    #[test]
+    fn disaggregated_runs_are_deterministic() {
+        let run = || {
+            SimWorld::simulate(
+                apps::vanilla_rag(),
+                disaggregated(place_cfg(700.0, 600, 0xD15A), KvTransferModel::default(), 0.5),
+            )
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.report.completed, b.report.completed);
+        assert_eq!(a.report.mean_latency.to_bits(), b.report.mean_latency.to_bits());
+        assert_eq!(a.report.p99.to_bits(), b.report.p99.to_bits());
+        let (ga, gb) = (a.report.gen.unwrap(), b.report.gen.unwrap());
+        assert_eq!(ga.ttft_p99.to_bits(), gb.ttft_p99.to_bits());
+        let (da, db) = (a.report.disagg.unwrap(), b.report.disagg.unwrap());
+        assert_eq!(da.handoffs, db.handoffs);
+        assert_eq!(da.transfer_total.to_bits(), db.transfer_total.to_bits());
+    }
+
+    #[test]
+    fn disaggregation_composes_with_forks_loops_and_races() {
+        // The handoff chain must survive every control-flow shape:
+        // conditional branches, stateful rewrite loops re-entering the
+        // generator, All-joins landing *on* the generator, and FirstK
+        // losers cancelled mid-handoff.
+        for app in ["c-rag", "s-rag", "hybrid-rag"] {
+            let cfg = disaggregated(place_cfg(8.0, 150, 0xD15A), KvTransferModel::default(), 0.3);
+            let r = SimWorld::simulate(apps::by_name(app).unwrap(), cfg);
+            assert_eq!(r.report.completed, 150, "{app}");
+            assert_eq!(r.residual_bindings, 0, "{app} leaked bindings");
+            assert!(r.report.disagg.is_some(), "{app} reports the section");
+        }
+        let cfg = disaggregated(place_cfg(12.0, 200, 0xD15A), KvTransferModel::default(), 0.3);
+        let r = SimWorld::simulate(racing_rag(), cfg);
+        assert_eq!(r.report.completed, 200, "FirstK race under disaggregation");
+        assert_eq!(r.residual_bindings, 0);
     }
 }

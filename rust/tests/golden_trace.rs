@@ -79,6 +79,11 @@ fn golden_vrag_summary_stats_within_bands() {
     // section — the golden workload is untouched by the sched refactor.
     assert_eq!(rep.shed, 0);
     assert!(rep.sched.is_none());
+    // The generator defaults collocated: no disaggregation section and
+    // no KV prefix counters — the golden trace predates the split and
+    // must stay byte-for-byte oblivious to it.
+    assert!(rep.disagg.is_none());
+    assert!(rep.kv_prefix.is_none());
 }
 
 #[test]
@@ -118,6 +123,28 @@ fn golden_run_identical_under_explicitly_legacy_gen_batching() {
     assert_eq!(a.report.throughput.to_bits(), b.report.throughput.to_bits());
     assert!(a.report.gen.is_none(), "legacy batching records no gen section");
     assert!(b.report.gen.is_none());
+}
+
+#[test]
+fn golden_run_identical_under_explicitly_collocated_placement() {
+    // The disaggregation knobs must be *inert* at their defaults: setting
+    // `gen_placement: Collocated` (with the transfer model and prefix-hit
+    // rate spelled out) by hand must replay the default run bit-identically
+    // — same event order, same rng draws, same floats — and must emit no
+    // disaggregation metrics section.
+    let a = golden_run();
+    let trace = TraceConfig { rate: RATE, n: N, slo: Some(SLO), ..TraceConfig::default() };
+    let mut cfg = SimConfig::new(SystemKind::Harmonia, trace, SEED);
+    cfg.gen_placement = harmonia::profile::GenPlacement::Collocated;
+    cfg.kv_transfer = harmonia::profile::models::KvTransferModel::default();
+    cfg.kv_prefix_hit_rate = 0.0;
+    let b = SimWorld::simulate(apps::vanilla_rag(), cfg);
+    assert_eq!(a.report.completed, b.report.completed);
+    assert_eq!(a.report.mean_latency.to_bits(), b.report.mean_latency.to_bits());
+    assert_eq!(a.report.p99.to_bits(), b.report.p99.to_bits());
+    assert_eq!(a.report.throughput.to_bits(), b.report.throughput.to_bits());
+    assert!(a.report.disagg.is_none(), "collocated default emits no disagg section");
+    assert!(b.report.disagg.is_none(), "explicit Collocated emits no disagg section");
 }
 
 #[test]

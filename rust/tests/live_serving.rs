@@ -31,6 +31,9 @@ fn vanilla_rag_serves_end_to_end() {
     assert_eq!(report.completed, 1);
     assert!(report.components.contains_key("retriever"));
     assert!(report.components.contains_key("generator"));
+    // No KV prefix cache configured → no counters section (the stock
+    // deployment stays byte-for-byte the pre-disaggregation path).
+    assert!(report.kv_prefix.is_none());
     h.shutdown();
 }
 
@@ -83,6 +86,40 @@ fn repeat_query_hits_the_request_cache() {
     let snap = report.cache.expect("cache counters in the live report");
     assert!(snap.exact_hits >= 1, "repeat did not hit: {snap:?}");
     assert!(snap.insertions >= 1);
+    h.shutdown();
+}
+
+#[test]
+fn kv_prefix_cache_tracks_repeat_context_chains() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut c = cfg();
+    c.kv_cache = Some(harmonia::cache::KvCacheConfig::default());
+    // Disable the request cache so the repeat re-retrieves from scratch:
+    // the generator then sees the identical context segment chain twice
+    // and the second prefill must probe into an exact prefix hit.
+    c.cache = None;
+    let h = deploy(apps::vanilla_rag(), c).unwrap();
+    let q: &[u8] = b"prefix cache probe for topic zero";
+    let first = h
+        .submit(q)
+        .recv_timeout(std::time::Duration::from_secs(120))
+        .unwrap();
+    assert!(first.error.is_none(), "{:?}", first.error);
+    let second = h
+        .submit(q)
+        .recv_timeout(std::time::Duration::from_secs(120))
+        .unwrap();
+    assert!(second.error.is_none(), "{:?}", second.error);
+    // The prefix cache is bookkeeping in front of prefill — it must never
+    // change what the engine generates.
+    assert_eq!(first.answer, second.answer, "kv prefix cache must not change the answer");
+    let report = h.report();
+    let snap = report.kv_prefix.expect("kv prefix counters in the live report");
+    assert!(snap.insertions >= 2, "each prefill memoizes its chain: {snap:?}");
+    assert!(snap.exact_hits >= 1, "repeat context chain did not hit: {snap:?}");
     h.shutdown();
 }
 
