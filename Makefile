@@ -6,7 +6,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test test-fast lint fmt clippy doc verify artifacts bench bench-shards bench-cache bench-overload bench-batching bench-parallel bench-disagg bench-smoke clean
+.PHONY: all build test test-fast lint fmt clippy doc verify artifacts bench bench-shards bench-cache bench-overload bench-batching bench-parallel bench-disagg bench-perf bench-perf-smoke bench-smoke clean
 
 all: build
 
@@ -68,6 +68,15 @@ bench-parallel:
 # The prefill/decode disaggregation × KV prefix-cache bench only (fig08).
 bench-disagg:
 	$(CARGO) bench --bench fig08_disaggregation
+
+# DES core perf: 10M simulated requests through the calendar-queue event
+# loop; writes BENCH_des.json and gates against benches/baselines/.
+bench-perf:
+	$(CARGO) bench --bench perf_des
+
+# CI variant: ~40k requests, same code paths and artifact shape.
+bench-perf-smoke:
+	$(CARGO) bench --bench perf_des -- --smoke
 
 # Quick-iteration bench pass (CI): actually *execute* the bench binaries
 # with `--smoke`-shrunk workloads (see util::bench::smoke) instead of

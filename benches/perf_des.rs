@@ -1,0 +1,273 @@
+//! DES core performance — the first *measured* number in the repo.
+//!
+//! Drives ≥10M simulated requests through the calendar-queue event loop
+//! across three representative apps (ROADMAP item 4):
+//!
+//!   - `v-rag-cached` — the high-rate single-path workload: cache-
+//!     adjusted retrieval keeps service short, so the event loop itself
+//!     dominates (5M requests at 600 req/s).
+//!   - `hybrid-rag`   — fork/join dataflow: every request exercises the
+//!     branch arena (fork, join cells, loser cancellation) that replaced
+//!     the `(req, branch)`-keyed HashMap swarm (2M at 64 req/s).
+//!   - `disagg-zipf`  — prefill/decode disaggregation with a Zipf KV
+//!     prefix cache: continuous batching, KV handoff events, and the
+//!     decode pool's dense per-node queues (3M at 600 req/s).
+//!
+//! Emits `BENCH_des.json` (events/sec, wall time, plus the headline
+//! fig09 goodput and fig11b violation numbers) via `util::bench::
+//! emit_json`, and gates against `benches/baselines/` when a checked-in
+//! baseline exists: >20% events/sec regression fails the run (CI runs
+//! `--smoke`; see `make bench-perf`).
+//!
+//! Accepts `--smoke` (see `util::bench::smoke`): ~40k requests instead
+//! of 10M, same code paths, same artifact shape.
+
+use std::time::Instant;
+
+use harmonia::profile::models::zipf_hit_rate;
+use harmonia::profile::{GenBatching, GenPlacement};
+use harmonia::sched::SchedConfig;
+use harmonia::sim::{run_point, SimConfig, SimResult, SimWorld, SystemKind};
+use harmonia::spec::{apps, PipelineGraph};
+use harmonia::util::bench::{emit_json, json_number_field, smoke, Json};
+use harmonia::util::table::{f, Table};
+use harmonia::workload::TraceConfig;
+
+const SEED: u64 = 0xDE5_BE;
+const SLO: f64 = 2.0;
+/// Regression gate: fail when events/sec drops below this fraction of
+/// the checked-in baseline.
+const GATE_FRAC: f64 = 0.8;
+
+struct WorkloadRun {
+    name: &'static str,
+    requests: usize,
+    result: SimResult,
+    wall_secs: f64,
+}
+
+fn timed(name: &'static str, requests: usize, graph: PipelineGraph, cfg: SimConfig) -> WorkloadRun {
+    let t0 = Instant::now();
+    let result = SimWorld::simulate(graph, cfg);
+    let wall_secs = t0.elapsed().as_secs_f64();
+    WorkloadRun { name, requests, result, wall_secs }
+}
+
+fn cfg_for(rate: f64, n: usize) -> SimConfig {
+    let trace = TraceConfig { rate, n, slo: Some(SLO), ..TraceConfig::default() };
+    let mut cfg = SimConfig::new(SystemKind::Harmonia, trace, SEED);
+    // The full traces span days of simulated time; don't let the
+    // default 1-hour horizon truncate them.
+    cfg.max_sim_time = 1e9;
+    cfg
+}
+
+fn workloads(smoke: bool) -> Vec<WorkloadRun> {
+    let scale = |full: usize, quick: usize| if smoke { quick } else { full };
+
+    // 1. v-rag-cached: Zipf(1.1) request cache in front of retrieval.
+    let n1 = scale(5_000_000, 20_000);
+    let w1 = timed(
+        "v-rag-cached",
+        n1,
+        apps::cached_vanilla_rag(1.1, 0.8, 512, 1024),
+        cfg_for(600.0, n1),
+    );
+
+    // 2. hybrid-rag: sparse+dense fork/join on every request.
+    let n2 = scale(2_000_000, 8_000);
+    let w2 = timed("hybrid-rag", n2, apps::hybrid_rag(), cfg_for(64.0, n2));
+
+    // 3. disaggregated generator + Zipf KV prefix cache.
+    let n3 = scale(3_000_000, 12_000);
+    let mut cfg = cfg_for(600.0, n3);
+    cfg.trace.k_lo = 50;
+    cfg.trace.k_hi = 100;
+    cfg.gen_batching = GenBatching::Continuous;
+    cfg.gen_placement = GenPlacement::Disaggregated;
+    cfg.kv_prefix_hit_rate = zipf_hit_rate(1.3, 0.9, 4096, 2048);
+    let w3 = timed("disagg-zipf", n3, apps::vanilla_rag(), cfg);
+
+    vec![w1, w2, w3]
+}
+
+/// Headline fig09 point: Harmonia vs baselines on c-rag at one
+/// operating rate (the paper's throughput claim, pinned by
+/// `harmonia_beats_baselines_on_complex_pipeline_at_load`).
+fn fig09_headline(smoke: bool) -> Json {
+    let rate = 48.0;
+    let n = if smoke { 600 } else { 5_000 };
+    let h = run_point(SystemKind::Harmonia, apps::corrective_rag(), rate, n, None, 7);
+    let l = run_point(SystemKind::LangChain, apps::corrective_rag(), rate, n, None, 7);
+    let y = run_point(SystemKind::Haystack, apps::corrective_rag(), rate, n, None, 7);
+    let best = l.report.goodput().max(y.report.goodput());
+    Json::obj(vec![
+        ("app", Json::Str("c-rag".into())),
+        ("rate", Json::Num(rate)),
+        ("requests", Json::Int(n as i64)),
+        ("harmonia_goodput", Json::Num(h.report.goodput())),
+        ("langchain_goodput", Json::Num(l.report.goodput())),
+        ("haystack_goodput", Json::Num(y.report.goodput())),
+        ("speedup_vs_best_baseline", Json::Num(h.report.goodput() / best.max(1e-9))),
+    ])
+}
+
+/// Headline fig11b point: v-rag at 2x capacity, EDF alone vs the full
+/// overload defense (admission + degradation) — SLO violations and
+/// goodput for both arms.
+fn fig11b_headline(smoke: bool) -> Json {
+    let capacity = 730.0;
+    let rate = capacity * 2.0;
+    let n = if smoke { 2_000 } else { 8_000 };
+    let run = |sched: SchedConfig| {
+        let trace = TraceConfig { rate, n, slo: Some(SLO), ..TraceConfig::default() };
+        let mut cfg = SimConfig::new(SystemKind::Harmonia, trace, SEED);
+        cfg.ablation.slo_sched = true;
+        cfg.sched = sched;
+        SimWorld::simulate(apps::vanilla_rag(), cfg)
+    };
+    let edf = run(SchedConfig::default());
+    let def = run(SchedConfig::overload_defense());
+    Json::obj(vec![
+        ("app", Json::Str("v-rag".into())),
+        ("rate", Json::Num(rate)),
+        ("slo_s", Json::Num(SLO)),
+        ("requests", Json::Int(n as i64)),
+        ("edf_violation_pct", Json::Num(edf.report.slo_violation_rate * 100.0)),
+        ("edf_goodput", Json::Num(edf.report.goodput())),
+        ("defense_violation_pct", Json::Num(def.report.slo_violation_rate * 100.0)),
+        ("defense_goodput", Json::Num(def.report.goodput())),
+        ("defense_shed", Json::Int(def.report.shed as i64)),
+    ])
+}
+
+/// `BENCH_des.json` lands next to the manifest (or `$BENCH_OUT_DIR`);
+/// the smoke baseline lives under `benches/baselines/`.
+fn out_path() -> std::path::PathBuf {
+    let dir = std::env::var("BENCH_OUT_DIR")
+        .unwrap_or_else(|_| env!("CARGO_MANIFEST_DIR").to_string());
+    std::path::Path::new(&dir).join("BENCH_des.json")
+}
+
+fn baseline_path(smoke: bool) -> std::path::PathBuf {
+    let file = if smoke { "BENCH_des.smoke.json" } else { "BENCH_des.json" };
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("benches/baselines").join(file)
+}
+
+fn main() {
+    let smoke = smoke();
+    println!(
+        "DES core perf: calendar-queue event loop, {} requests total{}\n",
+        if smoke { "~40k" } else { "10M" },
+        if smoke { " (--smoke)" } else { "" }
+    );
+
+    let runs = workloads(smoke);
+
+    let mut t = Table::new(
+        "per-workload event-loop throughput",
+        &["workload", "requests", "events", "wall (s)", "events/sec", "goodput/s", "p99 (s)"],
+    );
+    let mut total_events = 0u64;
+    let mut total_requests = 0usize;
+    let mut total_wall = 0.0f64;
+    let mut total_clamped = 0u64;
+    let mut workload_rows = Vec::new();
+    for w in &runs {
+        let r = &w.result;
+        let eps = r.events as f64 / w.wall_secs.max(1e-9);
+        total_events += r.events;
+        total_requests += w.requests;
+        total_wall += w.wall_secs;
+        total_clamped += r.clamped;
+        t.row(&[
+            w.name.to_string(),
+            w.requests.to_string(),
+            r.events.to_string(),
+            f(w.wall_secs, 3),
+            f(eps, 0),
+            f(r.report.goodput(), 1),
+            f(r.report.p99, 3),
+        ]);
+        workload_rows.push(Json::obj(vec![
+            ("name", Json::Str(w.name.into())),
+            ("requests", Json::Int(w.requests as i64)),
+            ("completed", Json::Int(r.report.completed as i64)),
+            ("events", Json::Int(r.events as i64)),
+            ("wall_secs", Json::Num(w.wall_secs)),
+            ("events_per_sec", Json::Num(eps)),
+            ("throughput", Json::Num(r.report.throughput)),
+            ("goodput", Json::Num(r.report.goodput())),
+            ("p99_s", Json::Num(r.report.p99)),
+            ("clamped", Json::Int(r.clamped as i64)),
+        ]));
+        // Hard invariants, not shape checks: every request completes
+        // and no healthy model ever schedules into the past.
+        assert_eq!(r.report.completed as usize, w.requests, "{}: dropped requests", w.name);
+        assert_eq!(r.clamped, 0, "{}: model scheduled into the past", w.name);
+    }
+    t.print();
+    let total_eps = total_events as f64 / total_wall.max(1e-9);
+    println!(
+        "\ntotal: {total_requests} requests, {total_events} events in {} — {} events/sec\n",
+        f(total_wall, 2),
+        f(total_eps, 0)
+    );
+
+    println!("headline metrics (fig09 / fig11b operating points)...");
+    let fig09 = fig09_headline(smoke);
+    let fig11b = fig11b_headline(smoke);
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("perf_des".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("total_requests", Json::Int(total_requests as i64)),
+        ("total_events", Json::Int(total_events as i64)),
+        ("total_wall_secs", Json::Num(total_wall)),
+        ("total_events_per_sec", Json::Num(total_eps)),
+        ("total_clamped", Json::Int(total_clamped as i64)),
+        ("workloads", Json::Arr(workload_rows)),
+        ("fig09", fig09),
+        ("fig11b", fig11b),
+    ]);
+    let path = out_path();
+    emit_json(&path, &doc).expect("write BENCH_des.json");
+    // Self-check: the artifact must be machine-readable by the same
+    // parser the regression gate uses.
+    let text = std::fs::read_to_string(&path).expect("re-read artifact");
+    for key in ["total_events_per_sec", "speedup_vs_best_baseline", "defense_violation_pct"] {
+        assert!(
+            json_number_field(&text, key).is_some(),
+            "emitted BENCH_des.json is missing a readable {key}"
+        );
+    }
+    println!("wrote {}", path.display());
+
+    // Regression gate: only once a baseline is checked in.
+    let base = baseline_path(smoke);
+    match std::fs::read_to_string(&base) {
+        Ok(btext) => match json_number_field(&btext, "total_events_per_sec") {
+            Some(bline) if bline > 0.0 => {
+                let ratio = total_eps / bline;
+                println!(
+                    "baseline {}: {} events/sec -> ratio {}",
+                    base.display(),
+                    f(bline, 0),
+                    f(ratio, 3)
+                );
+                if ratio < GATE_FRAC {
+                    eprintln!(
+                        "REGRESSION: events/sec fell to {}x of baseline (gate {GATE_FRAC}x)",
+                        f(ratio, 3)
+                    );
+                    std::process::exit(1);
+                }
+            }
+            _ => println!("baseline {} unreadable; gate skipped", base.display()),
+        },
+        Err(_) => println!(
+            "no checked-in baseline at {} yet; gate skipped (record one in a cargo-equipped env)",
+            base.display()
+        ),
+    }
+}

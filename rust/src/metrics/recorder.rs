@@ -150,9 +150,20 @@ impl Recorder {
         }
     }
 
+    /// Per-component stats entry by name, allocating the `String` key
+    /// only on the component's first visit. `on_execution` fires once
+    /// per simulated stage execution (tens of millions of times in a
+    /// perf-bench run), so the steady-state path must not allocate.
+    fn comp_mut(&mut self, component: &str) -> &mut ComponentStats {
+        if !self.components.contains_key(component) {
+            self.components.insert(component.to_string(), ComponentStats::default());
+        }
+        self.components.get_mut(component).expect("just inserted")
+    }
+
     /// Record one component execution.
     pub fn on_execution(&mut self, component: &str, service: f64, queued: f64) {
-        let e = self.components.entry(component.to_string()).or_default();
+        let e = self.comp_mut(component);
         e.busy_time += service;
         e.executions += 1;
         e.queue_time += queued;
@@ -163,7 +174,7 @@ impl Recorder {
     /// that released the barrier.
     pub fn on_join_wait(&mut self, component: &str, stall: f64) {
         debug_assert!(stall >= 0.0);
-        let e = self.components.entry(component.to_string()).or_default();
+        let e = self.comp_mut(component);
         e.join_wait += stall;
         e.joins += 1;
     }
@@ -218,16 +229,20 @@ impl Recorder {
 
     /// Finalize into a report.
     pub fn report(&self) -> RunReport {
+        // `total_cmp` sorts: a NaN latency sample (a model bug) lands at
+        // the end of the order instead of panicking mid-report — the DES
+        // rejects non-finite event times at the source, and the report
+        // stays diagnosable either way.
         let mut lats = self.latencies.clone();
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        lats.sort_by(f64::total_cmp);
         let horizon = self.last_completion - self.first_arrival.unwrap_or(0.0);
         let gen = if self.ttft.is_empty() && self.tok_lat.is_empty() {
             None
         } else {
             let mut ttft = self.ttft.clone();
-            ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            ttft.sort_by(f64::total_cmp);
             let mut tok = self.tok_lat.clone();
-            tok.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            tok.sort_by(f64::total_cmp);
             let pct = |v: &[f64], p: f64| if v.is_empty() { 0.0 } else { percentile(v, p) };
             Some(GenStats {
                 samples: (ttft.len().max(tok.len())) as u64,

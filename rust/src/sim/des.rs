@@ -1,5 +1,25 @@
-//! Discrete-event core: a time-ordered event queue with stable FIFO
+//! Discrete-event core: a time-ordered event list with stable FIFO
 //! tie-breaking (deterministic runs for fixed seeds).
+//!
+//! The event list is a calendar queue (R. Brown, "Calendar Queues: A
+//! Fast O(1) Priority Queue Implementation", CACM 1988): a ring of
+//! fixed-width time buckets, each holding a small binary heap. Inserts
+//! hash the event time to its bucket in O(1); pops walk the ring one
+//! virtual "day" at a time, taking only events whose day matches the
+//! cursor. With the bucket count tracking the population (rebuilds on
+//! 4x growth / shrink), buckets stay tiny and both operations run in
+//! amortized near-constant time — the per-event `O(log n)` of a single
+//! global `BinaryHeap` was the DES's hottest edge once scenarios
+//! reached tens of millions of events (ROADMAP item 4).
+//!
+//! Ordering is `f64::total_cmp` over `(time, seq)`, and `schedule`
+//! rejects non-finite times loudly: a NaN service sample now surfaces
+//! as a diagnosable panic at the insertion site instead of silently
+//! scrambling pop order (the old `partial_cmp(..).unwrap_or(Equal)`
+//! hazard). For the finite times that remain, `total_cmp` agrees with
+//! `partial_cmp` exactly, and equal times always land in the same
+//! bucket — so the monotone `seq` reproduces the old global heap's
+//! FIFO tie order bit-for-bit and golden traces replay unchanged.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -13,7 +33,7 @@ struct Scheduled<E> {
 
 impl<E> PartialEq for Scheduled<E> {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+        self.time.total_cmp(&other.time) == Ordering::Equal && self.seq == other.seq
     }
 }
 impl<E> Eq for Scheduled<E> {}
@@ -24,26 +44,49 @@ impl<E> PartialOrd for Scheduled<E> {
 }
 impl<E> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap; invert for earliest-first.
-        other
-            .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| other.seq.cmp(&self.seq))
+        // BinaryHeap is a max-heap; invert for earliest-first. Total
+        // order: non-finite times never get past `schedule`.
+        other.time.total_cmp(&self.time).then_with(|| other.seq.cmp(&self.seq))
     }
 }
 
-/// Event queue with a virtual clock.
+/// Ring size bounds: small enough to stay cache-friendly when nearly
+/// empty, capped so a 10M-event backlog doesn't allocate a bucket per
+/// event.
+const MIN_BUCKETS: usize = 16;
+const MAX_BUCKETS: usize = 1 << 20;
+
+/// Event queue with a virtual clock (calendar-queue event list).
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Scheduled<E>>,
+    /// Ring of day buckets; bucket `(vday % len)` holds the events of
+    /// that virtual day (and of days a whole lap ahead, filtered on pop).
+    buckets: Vec<BinaryHeap<Scheduled<E>>>,
+    /// Bucket width in seconds of virtual time.
+    width: f64,
+    /// Cursor: the virtual day currently being drained. Invariant:
+    /// `day <= vday(t)` for every stored event (times are clamped to
+    /// `now`, and `now` never runs ahead of the cursor's day).
+    day: u64,
+    /// Total stored events across all buckets.
+    len: usize,
     now: f64,
     seq: u64,
     processed: u64,
+    clamped: u64,
 }
 
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+        EventQueue {
+            buckets: (0..MIN_BUCKETS).map(|_| BinaryHeap::new()).collect(),
+            width: 1.0,
+            day: 0,
+            len: 0,
+            now: 0.0,
+            seq: 0,
+            processed: 0,
+            clamped: 0,
+        }
     }
 
     pub fn now(&self) -> f64 {
@@ -54,19 +97,50 @@ impl<E> EventQueue<E> {
         self.processed
     }
 
+    /// How many schedules asked for a time in the past and were clamped
+    /// to `now`. Healthy models never do; a nonzero count is the
+    /// tell-tale of a latency model emitting negative durations.
+    pub fn clamped(&self) -> u64 {
+        self.clamped
+    }
+
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
 
-    /// Schedule `event` at absolute time `t` (clamped to now).
+    /// The virtual day a time falls in. The same division is used at
+    /// insert and pop so membership tests can never drift; the cast
+    /// saturates for times far beyond any simulated horizon.
+    #[inline]
+    fn vday(&self, t: f64) -> u64 {
+        (t / self.width) as u64
+    }
+
+    /// Schedule `event` at absolute time `t`.
+    ///
+    /// Panics on non-finite `t`: a NaN/inf event time is always an
+    /// upstream model bug, and letting it into the ordering would
+    /// corrupt pop order silently. Past times are clamped to `now`
+    /// (and counted — see [`EventQueue::clamped`]).
     pub fn schedule(&mut self, t: f64, event: E) {
-        let t = t.max(self.now);
+        assert!(t.is_finite(), "non-finite event time {t}: bad model input");
+        let t = if t < self.now {
+            self.clamped += 1;
+            self.now
+        } else {
+            t
+        };
         self.seq += 1;
-        self.heap.push(Scheduled { time: t, seq: self.seq, event });
+        let b = (self.vday(t) % self.buckets.len() as u64) as usize;
+        self.buckets[b].push(Scheduled { time: t, seq: self.seq, event });
+        self.len += 1;
+        if self.len > 2 * self.buckets.len() && self.buckets.len() < MAX_BUCKETS {
+            self.rebuild();
+        }
     }
 
     /// Schedule after a delay.
@@ -77,11 +151,92 @@ impl<E> EventQueue<E> {
 
     /// Pop the next event, advancing the clock.
     pub fn next(&mut self) -> Option<(f64, E)> {
-        let s = self.heap.pop()?;
+        if self.len == 0 {
+            return None;
+        }
+        let n = self.buckets.len();
+        // Walk the ring from the cursor's day: an event in the cursor
+        // bucket belongs to the current day only if its own virtual day
+        // matches (the bucket also holds events a full lap ahead).
+        for _ in 0..n {
+            let b = (self.day % n as u64) as usize;
+            if let Some(head) = self.buckets[b].peek() {
+                if self.vday(head.time) == self.day {
+                    return Some(self.take(b));
+                }
+            }
+            self.day = self.day.saturating_add(1);
+        }
+        // A whole fruitless lap: the next event is more than one lap
+        // ahead (sparse gap). Find the earliest head directly and jump
+        // the cursor to its day. Equal times share a bucket, so the
+        // per-bucket heads are strictly ordered by time here.
+        let mut best: Option<(usize, f64, u64)> = None;
+        for (b, heap) in self.buckets.iter().enumerate() {
+            if let Some(head) = heap.peek() {
+                let better = match &best {
+                    None => true,
+                    Some(&(_, t, s)) => {
+                        head.time.total_cmp(&t).then_with(|| head.seq.cmp(&s)) == Ordering::Less
+                    }
+                };
+                if better {
+                    best = Some((b, head.time, head.seq));
+                }
+            }
+        }
+        let (b, t, _) = best.expect("len > 0 but no bucket head");
+        self.day = self.vday(t);
+        Some(self.take(b))
+    }
+
+    /// Pop the head of bucket `b`, advance the clock, and shrink the
+    /// ring if the population has collapsed.
+    fn take(&mut self, b: usize) -> (f64, E) {
+        let s = self.buckets[b].pop().expect("take from empty bucket");
         debug_assert!(s.time >= self.now);
         self.now = s.time;
+        self.len -= 1;
         self.processed += 1;
-        Some((s.time, s.event))
+        if self.buckets.len() > MIN_BUCKETS && self.len < self.buckets.len() / 4 {
+            self.rebuild();
+        }
+        (s.time, s.event)
+    }
+
+    /// Resize the ring to track the population and re-fit the bucket
+    /// width to the current event-time span, then re-insert everything.
+    /// O(n log) but amortized away by the 4x growth/shrink thresholds.
+    fn rebuild(&mut self) {
+        let mut all: Vec<Scheduled<E>> = Vec::with_capacity(self.len);
+        for heap in &mut self.buckets {
+            all.extend(heap.drain());
+        }
+        debug_assert_eq!(all.len(), self.len);
+        if all.len() >= 2 {
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for s in &all {
+                lo = lo.min(s.time);
+                hi = hi.max(s.time);
+            }
+            if hi > lo {
+                // Aim for ~1 event per bucket across the live span.
+                self.width = ((hi - lo) / all.len() as f64).max(1e-9);
+            }
+        }
+        let n = all.len().next_power_of_two().clamp(MIN_BUCKETS, MAX_BUCKETS);
+        if n != self.buckets.len() {
+            self.buckets = (0..n).map(|_| BinaryHeap::new()).collect();
+        }
+        // The cursor restarts at the *clock's* day, not the min event's:
+        // future inserts land anywhere in `[now, ..)` and the invariant
+        // `day <= vday(t)` must keep holding for them too.
+        self.day = (self.now / self.width) as u64;
+        for s in all {
+            let b = (self.vday(s.time) % n as u64) as usize;
+            self.buckets[b].push(s);
+        }
     }
 }
 
@@ -94,6 +249,7 @@ impl<E> Default for EventQueue<E> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::property;
 
     #[test]
     fn events_pop_in_time_order() {
@@ -140,5 +296,159 @@ mod tests {
         q.schedule_in(0.5, "y");
         let (t, _) = q.next().unwrap();
         assert!((t - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn past_schedules_are_clamped_and_counted() {
+        let mut q = EventQueue::new();
+        q.schedule(2.0, "a");
+        assert_eq!(q.clamped(), 0);
+        q.next();
+        q.schedule(0.5, "late");
+        q.schedule(1.9, "also late");
+        q.schedule(2.0, "on time");
+        assert_eq!(q.clamped(), 2);
+        // Clamped events still pop, at `now`, in FIFO order.
+        assert_eq!(q.next(), Some((2.0, "late")));
+        assert_eq!(q.next(), Some((2.0, "also late")));
+        assert_eq!(q.next(), Some((2.0, "on time")));
+    }
+
+    #[test]
+    fn non_finite_times_are_rejected() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let caught = std::panic::catch_unwind(|| {
+                let mut q = EventQueue::new();
+                q.schedule(bad, ());
+            });
+            assert!(caught.is_err(), "schedule({bad}) must panic");
+        }
+    }
+
+    /// The pre-calendar event list, kept verbatim as the test oracle:
+    /// one global `BinaryHeap` with the old comparator. Only finite
+    /// times reach it, where `partial_cmp` and `total_cmp` agree — the
+    /// oracle match below *is* the bit-identity argument for the golden
+    /// traces.
+    struct HeapOracle {
+        heap: BinaryHeap<Scheduled<u32>>,
+        now: f64,
+        seq: u64,
+    }
+
+    impl HeapOracle {
+        fn new() -> Self {
+            HeapOracle { heap: BinaryHeap::new(), now: 0.0, seq: 0 }
+        }
+        fn schedule(&mut self, t: f64, event: u32) {
+            let t = t.max(self.now);
+            self.seq += 1;
+            self.heap.push(Scheduled { time: t, seq: self.seq, event });
+        }
+        fn next(&mut self) -> Option<(f64, u32)> {
+            let s = self.heap.pop()?;
+            self.now = s.time;
+            Some((s.time, s.event))
+        }
+    }
+
+    /// Random interleavings of schedules and pops, with time profiles
+    /// chosen to stress every calendar path: dense ties (FIFO order
+    /// across rebuilds), bucket-boundary clusters, sparse multi-lap
+    /// jumps (ring rollover + cursor jump), and enough volume to force
+    /// both grow and shrink rebuilds.
+    #[test]
+    fn matches_binary_heap_oracle_on_random_workloads() {
+        property("calendar queue == BinaryHeap oracle", 60, |g| {
+            let mut q = EventQueue::new();
+            let mut oracle = HeapOracle::new();
+            let mut id = 0u32;
+            let profile = g.usize(0, 3);
+            let ops = g.usize(50, 400);
+            for _ in 0..ops {
+                let burst = g.usize(1, 12);
+                for _ in 0..burst {
+                    let dt = match profile {
+                        // Dense ties on a coarse grid.
+                        0 => g.usize(0, 3) as f64 * 0.5,
+                        // Bucket-boundary clusters around integer days.
+                        1 => g.usize(0, 8) as f64 + if g.bool() { 1e-12 } else { -1e-12 },
+                        // Sparse: long dead gaps between events.
+                        2 => g.usize(0, 5) as f64 * 1000.0,
+                        // Mixed magnitudes.
+                        _ => g.f64(0.0, 50.0),
+                    };
+                    let t = oracle.now + dt.max(0.0);
+                    q.schedule(t, id);
+                    oracle.schedule(t, id);
+                    id += 1;
+                }
+                let pops = g.usize(0, burst + 2);
+                for _ in 0..pops {
+                    let got = q.next();
+                    let want = oracle.next();
+                    match (got, want) {
+                        (None, None) => {}
+                        (Some((tg, eg)), Some((tw, ew))) => {
+                            assert_eq!(tg.to_bits(), tw.to_bits(), "time diverged from oracle");
+                            assert_eq!(eg, ew, "payload diverged from oracle at t={tg}");
+                        }
+                        (got, want) => panic!("presence diverged: {got:?} vs {want:?}"),
+                    }
+                }
+            }
+            // Drain both to the end.
+            loop {
+                match (q.next(), oracle.next()) {
+                    (None, None) => break,
+                    (Some((tg, eg)), Some((tw, ew))) => {
+                        assert_eq!(tg.to_bits(), tw.to_bits());
+                        assert_eq!(eg, ew);
+                    }
+                    (got, want) => panic!("drain diverged: {got:?} vs {want:?}"),
+                }
+            }
+            assert_eq!(q.len(), 0);
+            assert!(q.is_empty());
+        });
+    }
+
+    #[test]
+    fn mass_ties_stay_fifo_across_rebuilds() {
+        let mut q = EventQueue::new();
+        // Enough spread events to trigger grow rebuilds, interleaved
+        // with a large tied cohort whose FIFO order must survive them.
+        for i in 0..200u32 {
+            q.schedule(10.0, 1000 + i); // the tied cohort
+            q.schedule(i as f64 * 0.01, i); // spread filler (all < 10.0)
+        }
+        // Filler pops first, in time order.
+        for i in 0..200u32 {
+            let (_, e) = q.next().unwrap();
+            assert_eq!(e, i);
+        }
+        // Then the cohort, in exact insertion order.
+        for i in 0..200u32 {
+            let (t, e) = q.next().unwrap();
+            assert_eq!(t, 10.0);
+            assert_eq!(e, 1000 + i, "tie order broke after rebuilds");
+        }
+        assert!(q.next().is_none());
+    }
+
+    #[test]
+    fn sparse_gaps_jump_the_cursor() {
+        let mut q = EventQueue::new();
+        // Events many laps apart with interleaved pops: exercises the
+        // fruitless-lap fallback that jumps the cursor directly.
+        q.schedule(0.5, "a");
+        q.schedule(1.0e6, "b");
+        assert_eq!(q.next(), Some((0.5, "a")));
+        q.schedule(2.0e6, "c");
+        assert_eq!(q.next(), Some((1.0e6, "b")));
+        assert_eq!(q.next(), Some((2.0e6, "c")));
+        // The clock keeps working after the jumps.
+        q.schedule_in(1.0, "d");
+        assert_eq!(q.next(), Some((2.0e6 + 1.0, "d")));
     }
 }

@@ -10,7 +10,7 @@
 //! `SimWorld` itself holds only execution state (event queue, instances,
 //! queues); every scheduling decision is delegated to the plane.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::alloc::{AllocationPlan, FlowProblem};
@@ -166,6 +166,13 @@ pub struct SimResult {
     /// slot-leak audit's probe: 0 whenever every request reached a
     /// terminal path (completion, shed, or cancelled fork loser).
     pub residual_bindings: usize,
+    /// Total events popped by the DES core — the perf bench's
+    /// events/sec numerator.
+    pub events: u64,
+    /// Schedules that asked for a past time and were clamped to the
+    /// clock (see [`super::des::EventQueue::clamped`]). A healthy model
+    /// never produces one; tests pin this at 0.
+    pub clamped: u64,
 }
 
 #[derive(Clone, Debug)]
@@ -255,6 +262,25 @@ struct QueuedItem {
     stream_chunks: f64,
 }
 
+/// Arena entry for one live fork-branch subtask: its rng stream, the
+/// join cell it reports to, and its cancellation mark. Lives inside the
+/// owning [`SimReq`] — forks are shallow (a handful of branches per
+/// request), so linear scans over this small vec replace what used to
+/// be four `(req, branch)`-keyed global `HashMap`s rehashing on every
+/// hot-path event.
+struct BranchState {
+    id: u32,
+    /// The join cell this branch reports to (index into `SimReq::cells`).
+    cell: u32,
+    /// Deterministic per-branch rng stream (forked from the parent
+    /// stream in declaration order at fork time).
+    rng: Rng,
+    /// FirstK loser cancelled by a released barrier. Queued items are
+    /// discarded lazily when popped; in-service ones free their slot at
+    /// Finish and go no further.
+    cancelled: bool,
+}
+
 struct SimReq {
     arrival: f64,
     deadline: Option<f64>,
@@ -267,6 +293,98 @@ struct SimReq {
     next_branch: u32,
     /// Join-cell allocator (one per executed fork).
     next_cell: u32,
+    /// Live fork-branch subtasks (empty outside forks).
+    branches: Vec<BranchState>,
+    /// In-flight fork barriers, keyed by cell id.
+    cells: Vec<(u32, JoinCell)>,
+    /// Hops already dispatched downstream via streaming.
+    pending_stream: Vec<NodeId>,
+    /// Branches pre-sampled at service start (streamable node, hop not
+    /// streamed): Finish must honor the already-decided control flow.
+    pre_sampled: Vec<(NodeId, NodeId)>,
+}
+
+impl SimReq {
+    /// Per-branch rng stream: the trunk uses the request's own stream,
+    /// fork subtasks use theirs (forked deterministically at fork time)
+    /// so sibling branches never perturb each other's draws regardless
+    /// of event interleaving.
+    fn rng_mut(&mut self, branch: u32) -> &mut Rng {
+        if branch == 0 {
+            &mut self.rng
+        } else {
+            let b =
+                self.branches.iter_mut().find(|b| b.id == branch).expect("live branch rng");
+            &mut b.rng
+        }
+    }
+
+    /// Drop a subtask's branch bookkeeping (join arrival, cancellation,
+    /// or lazy discard of a queued loser). No-op for the trunk or an
+    /// already-purged branch.
+    fn purge_branch(&mut self, branch: u32) {
+        if let Some(i) = self.branches.iter().position(|b| b.id == branch) {
+            self.branches.swap_remove(i);
+        }
+    }
+
+    fn is_cancelled(&self, branch: u32) -> bool {
+        self.branches.iter().any(|b| b.id == branch && b.cancelled)
+    }
+
+    /// Consume a cancellation: when `branch` is a marked FirstK loser,
+    /// drop its whole arena entry (mark, cell link, rng) and report
+    /// true. The trunk is never cancelled.
+    fn take_cancelled(&mut self, branch: u32) -> bool {
+        if let Some(i) = self.branches.iter().position(|b| b.id == branch && b.cancelled) {
+            self.branches.swap_remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn cancel_branch(&mut self, branch: u32) {
+        if let Some(b) = self.branches.iter_mut().find(|b| b.id == branch) {
+            b.cancelled = true;
+        }
+    }
+
+    /// The join cell `branch` reports to, if it is a live fork subtask.
+    fn cell_of(&self, branch: u32) -> Option<u32> {
+        self.branches.iter().find(|b| b.id == branch).map(|b| b.cell)
+    }
+
+    fn cell(&self, cell: u32) -> Option<&JoinCell> {
+        self.cells.iter().find(|(id, _)| *id == cell).map(|(_, c)| c)
+    }
+
+    fn cell_mut(&mut self, cell: u32) -> Option<&mut JoinCell> {
+        self.cells.iter_mut().find(|(id, _)| *id == cell).map(|(_, c)| c)
+    }
+
+    fn take_cell(&mut self, cell: u32) -> Option<JoinCell> {
+        self.cells
+            .iter()
+            .position(|(id, _)| *id == cell)
+            .map(|i| self.cells.swap_remove(i).1)
+    }
+
+    fn remove_pending_stream(&mut self, node: NodeId) -> bool {
+        if let Some(i) = self.pending_stream.iter().position(|&n| n == node) {
+            self.pending_stream.swap_remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn remove_pre_sampled(&mut self, node: NodeId) -> Option<NodeId> {
+        self.pre_sampled
+            .iter()
+            .position(|&(n, _)| n == node)
+            .map(|i| self.pre_sampled.swap_remove(i).1)
+    }
 }
 
 /// The simulation world. Execution state only — policy lives in `plane`.
@@ -275,7 +393,10 @@ pub struct SimWorld {
     graph: PipelineGraph,
     q: EventQueue<Ev>,
     reqs: Vec<SimReq>,
-    instances: HashMap<NodeId, Vec<SimInstance>>,
+    /// Instance pools, indexed by `NodeId.0` (dense: every node has an
+    /// entry, non-work nodes simply stay empty). Node ids are vec
+    /// indices by construction, so the hot path never hashes.
+    instances: Vec<Vec<SimInstance>>,
     /// The shared scheduling control plane (routing, slack, admission,
     /// degradation, telemetry, autoscaling) — the same object the live
     /// controller drives, here ticked by the virtual clock.
@@ -287,29 +408,21 @@ pub struct SimWorld {
     /// Central per-component queues (the controller holds queued work;
     /// instances pull — EDF reorders across the whole component, like the
     /// paper's centralized scheduler). Stateful-bound items still use the
-    /// bound instance's local queue.
-    node_queues: HashMap<NodeId, PrioQueue<QueuedItem>>,
-    /// Hops already dispatched downstream via streaming.
-    pending_stream: HashSet<(usize, NodeId)>,
-    /// Branches pre-sampled at service start (streamable node, hop not
-    /// streamed): Finish must honor the already-decided control flow.
-    pre_sampled: HashMap<(usize, NodeId), NodeId>,
+    /// bound instance's local queue. Indexed by `NodeId.0`.
+    node_queues: Vec<PrioQueue<QueuedItem>>,
     /// Cached adjacency index (edge ids per node, edge order) — the DES
     /// samples branches every hop; no per-hop O(E) scans.
     adj: Adjacency,
-    /// Fork node → resolved fork group (branch entries, join, policy).
-    fork_map: HashMap<NodeId, ForkGroup>,
-    /// (req, cell id) → barrier state of an in-flight fork.
-    join_cells: HashMap<(usize, u32), JoinCell>,
-    /// (req, branch) → the join cell the branch reports to.
-    branch_cell: HashMap<(usize, u32), u32>,
-    /// Deterministic per-branch rng streams (forked from the parent
-    /// stream in declaration order at fork time).
-    branch_rngs: HashMap<(usize, u32), Rng>,
-    /// FirstK losers: subtasks cancelled by a released barrier. Queued
-    /// items are discarded lazily when popped; in-service ones free
-    /// their slot at Finish and go no further.
-    cancelled: HashSet<(usize, u32)>,
+    /// Fork node → resolved fork group, indexed by `NodeId.0`.
+    fork_map: Vec<Option<ForkGroup>>,
+    /// Scratch buffer for the router's per-dispatch instance snapshot
+    /// (reused across dispatches; the hot path allocates nothing).
+    route_states: Vec<InstanceState>,
+    /// Pre-rendered "<name>.prefill" / "<name>.decode" component labels,
+    /// indexed by `NodeId.0` (built only under Disaggregated placement —
+    /// the recorder used to pay a `format!` per visit for these).
+    prefill_names: Vec<String>,
+    decode_names: Vec<String>,
     decision_time: f64,
     decisions: u64,
     monolithic: bool,
@@ -320,11 +433,13 @@ pub struct SimWorld {
     /// `cache_hit_rate > 0`); surfaces in `RunReport::cache`.
     cache_counters: CacheCounters,
     /// Decode-pool instances for disaggregated generator nodes
-    /// (`instances` then holds the prefill pool). Empty under Collocated.
-    decode_instances: HashMap<NodeId, Vec<SimInstance>>,
+    /// (`instances` then holds the prefill pool). All empty under
+    /// Collocated. Indexed by `NodeId.0`.
+    decode_instances: Vec<Vec<SimInstance>>,
     /// Central decode-pool queues: handed-off requests waiting for a
-    /// decode slot (FIFO — handoff order is arrival order at this stage).
-    decode_queues: HashMap<NodeId, PrioQueue<DecodeItem>>,
+    /// decode slot (FIFO — handoff order is arrival order at this
+    /// stage). Indexed by `NodeId.0`.
+    decode_queues: Vec<PrioQueue<DecodeItem>>,
     /// Modeled KV prefix-cache hits/misses (Disaggregated only);
     /// surfaces in `RunReport::disagg.kv_prefix`.
     kv_counters: CacheCounters,
@@ -349,6 +464,10 @@ impl SimWorld {
                 ttft_done: false,
                 next_branch: 0,
                 next_cell: 0,
+                branches: Vec::new(),
+                cells: Vec::new(),
+                pending_stream: Vec::new(),
+                pre_sampled: Vec::new(),
             })
             .collect();
 
@@ -381,9 +500,7 @@ impl SimWorld {
                 }
                 let primary = *out
                     .iter()
-                    .max_by(|&&a, &&b| {
-                        prior.edge_probs[a].partial_cmp(&prior.edge_probs[b]).unwrap()
-                    })
+                    .max_by(|&&a, &&b| prior.edge_probs[a].total_cmp(&prior.edge_probs[b]))
                     .unwrap();
                 for &i in &out {
                     if i != primary {
@@ -436,31 +553,45 @@ impl SimWorld {
             cfg.sched,
             10.0,
         );
+        let n_nodes = graph.nodes.len();
+        let mut fork_map: Vec<Option<ForkGroup>> = vec![None; n_nodes];
+        for (id, fg) in graph.fork_groups() {
+            fork_map[id.0] = Some(fg);
+        }
+        let (prefill_names, decode_names) = if cfg.gen_placement == GenPlacement::Disaggregated
+        {
+            (
+                graph.nodes.iter().map(|n| format!("{}.prefill", n.name)).collect(),
+                graph.nodes.iter().map(|n| format!("{}.decode", n.name)).collect(),
+            )
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        let discipline = plane.discipline;
         let mut world = SimWorld {
             plane,
-            instances: HashMap::new(),
+            instances: (0..n_nodes).map(|_| Vec::new()).collect(),
             q: EventQueue::new(),
             reqs,
             recorder: Recorder::new(),
             cluster,
             stream_policy: StreamPolicy::default(),
-            node_queues: HashMap::new(),
-            pending_stream: HashSet::new(),
-            pre_sampled: HashMap::new(),
+            node_queues: (0..n_nodes).map(|_| PrioQueue::new(discipline)).collect(),
             adj: graph.adjacency(),
-            fork_map: graph.fork_groups(),
-            join_cells: HashMap::new(),
-            branch_cell: HashMap::new(),
-            branch_rngs: HashMap::new(),
-            cancelled: HashSet::new(),
+            fork_map,
+            route_states: Vec::new(),
+            prefill_names,
+            decode_names,
             decision_time: 0.0,
             decisions: 0,
             monolithic,
             completed: 0,
             shed: 0,
             cache_counters: CacheCounters::new(),
-            decode_instances: HashMap::new(),
-            decode_queues: HashMap::new(),
+            decode_instances: (0..n_nodes).map(|_| Vec::new()).collect(),
+            decode_queues: (0..n_nodes)
+                .map(|_| PrioQueue::new(QueueDiscipline::Fifo))
+                .collect(),
             kv_counters: CacheCounters::new(),
             handoffs: 0,
             transfer_total: 0.0,
@@ -498,7 +629,7 @@ impl SimWorld {
                 }
             }
             assert!(!replicas.is_empty(), "cluster hosts at least one replica");
-            self.instances.insert(self.graph.source, replicas);
+            self.instances[self.graph.source.0] = replicas;
             return;
         }
         let node_ids: Vec<NodeId> = self.graph.work_nodes().map(|n| n.id).collect();
@@ -526,13 +657,11 @@ impl SimWorld {
                 });
                 let n_pre = lp_pre.clamp(1, count.saturating_sub(1).max(1));
                 let n_dec = lp_dec.clamp(1, (count - n_pre).max(1));
-                let v = (0..n_pre).map(|_| self.make_instance(id)).collect();
-                self.instances.insert(id, v);
-                let d = (0..n_dec).map(|_| self.make_instance(id)).collect();
-                self.decode_instances.insert(id, d);
+                self.instances[id.0] = (0..n_pre).map(|_| self.make_instance(id)).collect();
+                self.decode_instances[id.0] =
+                    (0..n_dec).map(|_| self.make_instance(id)).collect();
             } else {
-                let v = (0..count).map(|_| self.make_instance(id)).collect();
-                self.instances.insert(id, v);
+                self.instances[id.0] = (0..count).map(|_| self.make_instance(id)).collect();
             }
         }
     }
@@ -588,7 +717,7 @@ impl SimWorld {
                         // A fork at the pipeline entry fans the request
                         // out immediately (hybrid retrieval: dense ∥ web
                         // from the first hop).
-                        if !self.monolithic && self.fork_map.contains_key(&self.graph.source) {
+                        if !self.monolithic && self.fork_map[self.graph.source.0].is_some() {
                             self.do_fork(i, self.graph.source, 0);
                         } else {
                             self.q.schedule_in(
@@ -654,11 +783,12 @@ impl SimWorld {
         if !self.monolithic && self.cfg.gen_placement == GenPlacement::Disaggregated {
             let mut prefill_instances = 0;
             let mut decode_instances = 0;
-            for (id, v) in &self.decode_instances {
-                decode_instances += v.iter().filter(|i| i.up).count();
-                if let Some(p) = self.instances.get(id) {
-                    prefill_instances += p.iter().filter(|i| i.up).count();
+            for (idx, v) in self.decode_instances.iter().enumerate() {
+                if v.is_empty() {
+                    continue;
                 }
+                decode_instances += v.iter().filter(|i| i.up).count();
+                prefill_instances += self.instances[idx].iter().filter(|i| i.up).count();
             }
             self.recorder.set_disagg(DisaggStats {
                 handoffs: self.handoffs,
@@ -671,8 +801,10 @@ impl SimWorld {
         let final_instances = self
             .instances
             .iter()
-            .map(|(id, v)| {
-                (self.graph.node(*id).name.clone(), v.iter().filter(|i| i.up).count())
+            .enumerate()
+            .filter(|(_, v)| !v.is_empty())
+            .map(|(idx, v)| {
+                (self.graph.node(NodeId(idx)).name.clone(), v.iter().filter(|i| i.up).count())
             })
             .collect();
         SimResult {
@@ -687,55 +819,41 @@ impl SimWorld {
             reallocations: self.plane.autoscaler.commits.len(),
             final_instances,
             residual_bindings: self.plane.router.total_bindings(),
-        }
-    }
-
-    /// Per-request/per-branch rng stream: the trunk uses the request's
-    /// own stream, fork subtasks use theirs (forked deterministically at
-    /// fork time) so sibling branches never perturb each other's draws
-    /// regardless of event interleaving.
-    fn req_rng(&mut self, req: usize, branch: u32) -> &mut Rng {
-        if branch == 0 {
-            &mut self.reqs[req].rng
-        } else {
-            self.branch_rngs.get_mut(&(req, branch)).expect("live branch rng")
+            events: self.q.processed(),
+            clamped: self.q.clamped(),
         }
     }
 
     /// Fan a request out across a fork's branches: one sibling subtask
     /// per branch, each with its own rng stream and a shared join cell.
     fn do_fork(&mut self, req: usize, node: NodeId, parent: u32) {
-        let fg = self.fork_map.get(&node).expect("fork node").clone();
-        let cell_id = {
-            let r = &mut self.reqs[req];
-            r.next_cell += 1;
-            r.next_cell
-        };
+        let fg = self.fork_map[node.0].clone().expect("fork node");
         for &ei in &fg.edges {
             self.plane.on_edge(ei, node);
         }
         let mut spawned = Vec::with_capacity(fg.targets.len());
-        for &target in &fg.targets {
-            let b = {
-                let r = &mut self.reqs[req];
+        {
+            let r = &mut self.reqs[req];
+            r.next_cell += 1;
+            let cell_id = r.next_cell;
+            for &target in &fg.targets {
                 r.next_branch += 1;
-                r.next_branch
-            };
-            let child = self.req_rng(req, parent).fork();
-            self.branch_rngs.insert((req, b), child);
-            self.branch_cell.insert((req, b), cell_id);
-            spawned.push((b, target));
+                let b = r.next_branch;
+                let child = r.rng_mut(parent).fork();
+                r.branches.push(BranchState { id: b, cell: cell_id, rng: child, cancelled: false });
+                spawned.push((b, target));
+            }
+            r.cells.push((
+                cell_id,
+                JoinCell {
+                    join: fg.join,
+                    need: fg.need,
+                    parent,
+                    outstanding: spawned.iter().map(|&(b, _)| b).collect(),
+                    arrivals: Vec::new(),
+                },
+            ));
         }
-        self.join_cells.insert(
-            (req, cell_id),
-            JoinCell {
-                join: fg.join,
-                need: fg.need,
-                parent,
-                outstanding: spawned.iter().map(|&(b, _)| b).collect(),
-                arrivals: Vec::new(),
-            },
-        );
         for (b, target) in spawned {
             self.q.schedule_in(
                 self.cfg.controller_overhead,
@@ -750,41 +868,39 @@ impl SimWorld {
         }
     }
 
-    /// Drop a subtask's branch bookkeeping (join arrival, cancellation,
-    /// or lazy discard of a queued loser).
-    fn purge_branch(&mut self, req: usize, branch: u32) {
-        self.branch_cell.remove(&(req, branch));
-        self.branch_rngs.remove(&(req, branch));
-    }
-
     /// One fork branch reached its join barrier. Returns control-flow to
     /// the caller: when the barrier releases, the join node is dispatched
     /// exactly once on the fork's parent branch context; FirstK losers
     /// are cancelled without touching queue or engine state directly.
     fn on_join_arrival(&mut self, req: usize, branch: u32, cell_id: u32, node: NodeId) {
-        self.purge_branch(req, branch);
         let now = self.q.now();
-        let released = {
-            let cell = self.join_cells.get_mut(&(req, cell_id)).expect("join cell");
+        let (released, cell) = {
+            let r = &mut self.reqs[req];
+            r.purge_branch(branch);
+            let cell = r.cell_mut(cell_id).expect("join cell");
             debug_assert_eq!(cell.join, node, "branch arrived at a foreign join");
             cell.outstanding.retain(|&b| b != branch);
             cell.arrivals.push(now);
-            cell.arrivals.len() >= cell.need
+            if cell.arrivals.len() < cell.need {
+                (false, None)
+            } else {
+                let cell = r.take_cell(cell_id).expect("join cell");
+                for &loser in &cell.outstanding {
+                    r.cancel_branch(loser);
+                }
+                (true, Some(cell))
+            }
         };
         if !released {
             return;
         }
-        let cell = self.join_cells.remove(&(req, cell_id)).expect("join cell");
-        for &loser in &cell.outstanding {
-            self.cancelled.insert((req, loser));
-        }
+        let cell = cell.expect("released cell");
         // Join-wait: time the earlier arrivals stalled at the barrier
         // waiting for the release — fork slack the breakdown table
         // surfaces instead of folding into end-to-end latency.
         let stall: f64 =
             cell.arrivals[..cell.arrivals.len() - 1].iter().map(|t| now - t).sum();
-        let name = self.graph.node(node).name.clone();
-        self.recorder.on_join_wait(&name, stall);
+        self.recorder.on_join_wait(&self.graph.node(node).name, stall);
         self.dispatch_work(req, node, cell.parent, 0.0, 0.0);
     }
 
@@ -820,21 +936,17 @@ impl SimWorld {
     /// Queued work and concurrent capacity of one component (all
     /// instances + the central queue) — the admission gate's inputs.
     fn node_load(&self, node: NodeId) -> (usize, usize) {
-        let central = self.node_queues.get(&node).map_or(0, |q| q.len());
-        let (mut queued, mut capacity) = match self.instances.get(&node) {
-            Some(v) => {
-                let queued: usize = v.iter().map(|i| i.queue.len()).sum::<usize>() + central;
-                let capacity: usize = v.iter().filter(|i| i.up).map(|i| i.slots).sum();
-                (queued, capacity)
-            }
-            None => (central, 0),
-        };
+        let central = self.node_queues[node.0].len();
+        let v = &self.instances[node.0];
+        let mut queued: usize = v.iter().map(|i| i.queue.len()).sum::<usize>() + central;
+        let mut capacity: usize = v.iter().filter(|i| i.up).map(|i| i.slots).sum();
         // Split generator: the decode pool's backlog and slots are part
         // of the same logical component — admission must see a saturated
         // decode side even when the prefill pool is idle.
-        if let Some(v) = self.decode_instances.get(&node) {
-            queued += self.decode_queues.get(&node).map_or(0, |q| q.len());
-            capacity += v.iter().filter(|i| i.up).map(|i| i.slots).sum::<usize>();
+        let d = &self.decode_instances[node.0];
+        if !d.is_empty() {
+            queued += self.decode_queues[node.0].len();
+            capacity += d.iter().filter(|i| i.up).map(|i| i.slots).sum::<usize>();
         }
         (queued, capacity)
     }
@@ -859,8 +971,7 @@ impl SimWorld {
     ) {
         // Cancelled FirstK loser: dropped before it touches any queue or
         // slot (it was still between stages when the barrier released).
-        if self.cancelled.remove(&(req, branch)) {
-            self.purge_branch(req, branch);
+        if self.reqs[req].take_cancelled(branch) {
             return;
         }
         if node == self.graph.sink {
@@ -871,9 +982,12 @@ impl SimWorld {
         }
         // A branch arriving at its fork's join barrier reports there
         // instead of executing the join directly.
-        if let Some(&cell_id) = self.branch_cell.get(&(req, branch)) {
-            if self.join_cells.get(&(req, cell_id)).map(|c| c.join) == Some(node) {
-                return self.on_join_arrival(req, branch, cell_id, node);
+        if branch != 0 {
+            let r = &self.reqs[req];
+            if let Some(cell_id) = r.cell_of(branch) {
+                if r.cell(cell_id).map(|c| c.join) == Some(node) {
+                    return self.on_join_arrival(req, branch, cell_id, node);
+                }
             }
         }
         self.dispatch_work(req, node, branch, earliest_finish, stream_chunks);
@@ -892,19 +1006,21 @@ impl SimWorld {
     ) {
         let now = self.q.now();
         // Controller decision (routing + priority) — timed for Fig. 13.
+        // The route snapshot reuses one scratch buffer across every
+        // dispatch (`route_states`) instead of allocating per hop.
         let t0 = Instant::now();
         let spec_stateful = self.graph.node(node).stateful;
-        let states: Vec<InstanceState> = self.instances[&node]
-            .iter()
-            .map(|i| InstanceState {
-                active: i.active,
-                queued: i.queue.len(),
-                slots: i.slots,
-                expected_reentries: i.expected_reentries,
-                up: i.up,
-            })
-            .collect();
+        let mut states = std::mem::take(&mut self.route_states);
+        states.clear();
+        states.extend(self.instances[node.0].iter().map(|i| InstanceState {
+            active: i.active,
+            queued: i.queue.len(),
+            slots: i.slots,
+            expected_reentries: i.expected_reentries,
+            up: i.up,
+        }));
         let pick = self.plane.route(req as u64, node, spec_stateful, &states);
+        self.route_states = states;
         let slack_key =
             self.plane
                 .enqueue_key(node, &self.reqs[req].features, now, self.reqs[req].deadline);
@@ -917,18 +1033,14 @@ impl SimWorld {
         // routed pick lands in the prefill pool, and the batching-mode
         // branches below never see a split generator.
         if self.disagg_node(node) {
-            let inst = &mut self.instances.get_mut(&node).unwrap()[pick];
+            let inst = &mut self.instances[node.0][pick];
             if inst.up && inst.active < inst.slots {
                 inst.active += 1;
                 self.start_prefill(req, node, pick, item);
             } else if spec_stateful {
                 inst.queue.push(slack_key, item);
             } else {
-                let d = self.plane.discipline;
-                self.node_queues
-                    .entry(node)
-                    .or_insert_with(|| PrioQueue::new(d))
-                    .push(slack_key, item);
+                self.node_queues[node.0].push(slack_key, item);
             }
             return;
         }
@@ -940,24 +1052,20 @@ impl SimWorld {
         // what `GenBatching::Continuous` removes.
         if self.gen_mode(node) == GenBatching::Static {
             let idle = {
-                let i = &self.instances[&node][pick];
+                let i = &self.instances[node.0][pick];
                 i.up && i.active == 0
             };
             if idle {
                 let batch = self.fill_static_batch(node, pick, Some(item));
                 self.start_static_batch(node, pick, batch);
             } else if spec_stateful {
-                self.instances.get_mut(&node).unwrap()[pick].queue.push(slack_key, item);
+                self.instances[node.0][pick].queue.push(slack_key, item);
             } else {
-                let d = self.plane.discipline;
-                self.node_queues
-                    .entry(node)
-                    .or_insert_with(|| PrioQueue::new(d))
-                    .push(slack_key, item);
+                self.node_queues[node.0].push(slack_key, item);
             }
             return;
         }
-        let inst = &mut self.instances.get_mut(&node).unwrap()[pick];
+        let inst = &mut self.instances[node.0][pick];
         if inst.up && inst.active < inst.slots {
             inst.active += 1;
             self.start_service(req, node, pick, item);
@@ -966,11 +1074,7 @@ impl SimWorld {
             inst.queue.push(slack_key, item);
         } else {
             // Central component queue: any instance of `node` may pull it.
-            let d = self.plane.discipline;
-            self.node_queues
-                .entry(node)
-                .or_insert_with(|| PrioQueue::new(d))
-                .push(slack_key, item);
+            self.node_queues[node.0].push(slack_key, item);
         }
     }
 
@@ -995,20 +1099,13 @@ impl SimWorld {
         pick: usize,
         seed: Option<QueuedItem>,
     ) -> Vec<QueuedItem> {
-        let v = self.instances.get_mut(&node).unwrap();
-        let i = &mut v[pick];
+        let i = &mut self.instances[node.0][pick];
         let mut batch: Vec<QueuedItem> = seed.into_iter().collect();
         while batch.len() < i.slots {
-            match i
-                .queue
-                .pop()
-                .or_else(|| self.node_queues.get_mut(&node).and_then(|q| q.pop()))
-            {
+            match i.queue.pop().or_else(|| self.node_queues[node.0].pop()) {
                 // Lazy discard: a queued FirstK loser never enters the
                 // batch (its slot was never held, nothing to release).
-                Some(it) if self.cancelled.remove(&(it.req, it.branch)) => {
-                    self.branch_cell.remove(&(it.req, it.branch));
-                    self.branch_rngs.remove(&(it.req, it.branch));
+                Some(it) if self.reqs[it.req].take_cancelled(it.branch) => {
                     self.plane.on_cancelled(node);
                 }
                 Some(it) => batch.push(it),
@@ -1040,9 +1137,14 @@ impl SimWorld {
     fn start_static_batch(&mut self, node: NodeId, pick: usize, items: Vec<QueuedItem>) {
         debug_assert!(!items.is_empty());
         let now = self.q.now();
-        let spec = self.graph.node(node).clone();
-        let colocated = self.instances[&node][pick].colocated;
-        let model = LatencyModel::for_kind(&spec.kind);
+        // Copy the per-visit scalars out of the spec instead of cloning
+        // the whole `NodeSpec` (name + resource vec) on every batch.
+        let (shards, cache_hit_rate, degrade) = {
+            let spec = self.graph.node(node);
+            (spec.shards, spec.cache_hit_rate, spec.degrade)
+        };
+        let colocated = self.instances[node.0][pick].colocated;
+        let model = LatencyModel::for_kind(&self.graph.node(node).kind);
         let dcm = DecodeCostModel::generator();
         let b = items.len();
         let max_steps = items
@@ -1059,17 +1161,14 @@ impl SimWorld {
         let mut batch_t = 0.0f64;
         for it in &items {
             let features = self.reqs[it.req].features;
-            let noise = {
-                let rng = self.req_rng(it.req, it.branch);
-                model.noise(rng)
-            };
+            let noise = model.noise(self.reqs[it.req].rng_mut(it.branch));
             let mut t = dcm.static_batch(&features, max_steps, b) * noise;
-            t *= super::cluster::shard_service_factor(spec.shards);
-            if self.draw_cache_hit(it.req, it.branch, spec.cache_hit_rate) {
+            t *= super::cluster::shard_service_factor(shards);
+            if self.draw_cache_hit(it.req, it.branch, cache_hit_rate) {
                 t *= CACHE_HIT_COST_FRAC;
             }
             if self.plane.degrade_enabled() {
-                t *= self.plane.service_factor(spec.degrade);
+                t *= self.plane.service_factor(degrade);
             }
             if colocated {
                 t *= COLOCATION_SLOWDOWN;
@@ -1095,7 +1194,7 @@ impl SimWorld {
         for it in items {
             let features = self.reqs[it.req].features;
             let queue_wait = now - it.enqueued_at;
-            self.recorder.on_execution(&spec.name, batch_t, queue_wait);
+            self.recorder.on_execution(&self.graph.node(node).name, batch_t, queue_wait);
             self.plane.observe_service(node, &features, batch_t);
             self.record_ttft(it.req, first);
             // Per-output-token pace: completion waits out max_steps even
@@ -1121,12 +1220,15 @@ impl SimWorld {
     fn start_service(&mut self, req: usize, node: NodeId, pick: usize, item: QueuedItem) {
         let now = self.q.now();
         let branch = item.branch;
-        let spec = self.graph.node(node).clone();
+        let (shards, cache_hit_rate, degrade, streamable) = {
+            let spec = self.graph.node(node);
+            (spec.shards, spec.cache_hit_rate, spec.degrade, spec.streamable)
+        };
         let (colocated, active) = {
-            let i = &self.instances[&node][pick];
+            let i = &self.instances[node.0][pick];
             (i.colocated, i.active)
         };
-        let model = LatencyModel::for_kind(&spec.kind);
+        let model = LatencyModel::for_kind(&self.graph.node(node).kind);
         let features = self.reqs[req].features;
         let continuous = self.gen_mode(node) == GenBatching::Continuous;
         // Continuous batching: iteration-level pricing — the request pays
@@ -1140,25 +1242,18 @@ impl SimWorld {
             let dcm = DecodeCostModel::generator();
             let base = dcm.continuous(&features, active);
             let first = dcm.prefill(features.prompt_len) + dcm.step(active);
-            let noise = {
-                let rng = self.req_rng(req, branch);
-                model.noise(rng)
-            };
+            let noise = model.noise(self.reqs[req].rng_mut(branch));
             (base * noise, first / base)
         } else {
-            let sample = {
-                let rng = self.req_rng(req, branch);
-                model.sample(&features, rng)
-            };
-            (sample, 0.0)
+            (model.sample(&features, self.reqs[req].rng_mut(branch)), 0.0)
         };
         // Sharded components scatter-gather across parallel partitions.
-        t *= super::cluster::shard_service_factor(spec.shards);
+        t *= super::cluster::shard_service_factor(shards);
         // Modeled request cache: a `cache_hit_rate` fraction of visits is
         // served from the memoized embed→retrieve prefix at the hit cost.
         // Per-request sampling (not the mean factor) keeps the latency
         // distribution bimodal — the p50 collapse at high hit rates.
-        if self.draw_cache_hit(req, branch, spec.cache_hit_rate) {
+        if self.draw_cache_hit(req, branch, cache_hit_rate) {
             t *= CACHE_HIT_COST_FRAC;
         }
         // Overload degradation: visits to annotated components shrink
@@ -1166,7 +1261,7 @@ impl SimWorld {
         // consumed and the factor is exactly 1.0 when the policy is off,
         // so default traces replay bit-identically.
         if self.plane.degrade_enabled() {
-            t *= self.plane.service_factor(spec.degrade);
+            t *= self.plane.service_factor(degrade);
         }
         if !continuous {
             t *= concurrency_slowdown(active);
@@ -1178,7 +1273,7 @@ impl SimWorld {
         // (§2.2 / Fig. 5) — fine granularity inflates busy time.
         t += item.stream_chunks * CHUNK_PREEMPT;
         let queue_wait = now - item.enqueued_at;
-        self.recorder.on_execution(&spec.name, t, queue_wait);
+        self.recorder.on_execution(&self.graph.node(node).name, t, queue_wait);
         self.plane.observe_service(node, &features, t);
         if continuous {
             // TTFT = queueing already elapsed + prefill + the first step;
@@ -1196,7 +1291,7 @@ impl SimWorld {
         // Fork nodes never pre-route (all branches dispatch at Finish),
         // and nothing streams INTO a join barrier — the join needs every
         // branch's complete output before it can start.
-        if spec.streamable && !self.fork_map.contains_key(&node) {
+        if streamable && self.fork_map[node.0].is_none() {
             let (next_node, _) = self.sample_next(req, branch, node);
             if next_node != self.graph.sink && self.graph.node(next_node).join.is_none() {
                 let util = self.utilization(next_node);
@@ -1216,11 +1311,11 @@ impl SimWorld {
                             stream_chunks: n_chunks,
                         },
                     );
-                    self.pending_stream.insert((req, node));
+                    self.reqs[req].pending_stream.push(node);
                     return;
                 }
             }
-            self.pre_sampled.insert((req, node), next_node);
+            self.reqs[req].pre_sampled.push((node, next_node));
         }
     }
 
@@ -1237,10 +1332,7 @@ impl SimWorld {
         if rate <= 0.0 {
             return false;
         }
-        let hit = {
-            let rng = self.req_rng(req, branch);
-            rng.chance(rate)
-        };
+        let hit = self.reqs[req].rng_mut(branch).chance(rate);
         if hit {
             self.kv_counters.on_exact_hit();
         } else {
@@ -1262,26 +1354,26 @@ impl SimWorld {
     fn start_prefill(&mut self, req: usize, node: NodeId, pick: usize, item: QueuedItem) {
         let now = self.q.now();
         let branch = item.branch;
-        let spec = self.graph.node(node).clone();
+        let (shards, cache_hit_rate, degrade) = {
+            let spec = self.graph.node(node);
+            (spec.shards, spec.cache_hit_rate, spec.degrade)
+        };
         let (colocated, active) = {
-            let i = &self.instances[&node][pick];
+            let i = &self.instances[node.0][pick];
             (i.colocated, i.active)
         };
-        let model = LatencyModel::for_kind(&spec.kind);
+        let model = LatencyModel::for_kind(&self.graph.node(node).kind);
         let features = self.reqs[req].features;
         let dcm = DecodeCostModel::generator();
         let base = dcm.continuous(&features, active);
-        let noise = {
-            let rng = self.req_rng(req, branch);
-            model.noise(rng)
-        };
+        let noise = model.noise(self.reqs[req].rng_mut(branch));
         let mut t = base * noise;
-        t *= super::cluster::shard_service_factor(spec.shards);
-        if self.draw_cache_hit(req, branch, spec.cache_hit_rate) {
+        t *= super::cluster::shard_service_factor(shards);
+        if self.draw_cache_hit(req, branch, cache_hit_rate) {
             t *= CACHE_HIT_COST_FRAC;
         }
         if self.plane.degrade_enabled() {
-            t *= self.plane.service_factor(spec.degrade);
+            t *= self.plane.service_factor(degrade);
         }
         if colocated {
             t *= COLOCATION_SLOWDOWN;
@@ -1303,8 +1395,7 @@ impl SimWorld {
         let transfer = self.cfg.kv_transfer.cost(features.prompt_len);
         let total = prefill + transfer + decode;
         let queue_wait = now - item.enqueued_at;
-        self.recorder
-            .on_execution(&format!("{}.prefill", spec.name), prefill, queue_wait);
+        self.recorder.on_execution(&self.prefill_names[node.0], prefill, queue_wait);
         self.plane.observe_service(node, &features, total);
         self.q.schedule(
             now + prefill,
@@ -1339,19 +1430,12 @@ impl SimWorld {
         earliest_finish: f64,
     ) {
         let next_item = {
-            let v = self.instances.get_mut(&node).unwrap();
-            let i = &mut v[inst];
+            let i = &mut self.instances[node.0][inst];
             i.active = i.active.saturating_sub(1);
             if i.up && i.active < i.slots {
                 loop {
-                    match i
-                        .queue
-                        .pop()
-                        .or_else(|| self.node_queues.get_mut(&node).and_then(|q| q.pop()))
-                    {
-                        Some(it) if self.cancelled.remove(&(it.req, it.branch)) => {
-                            self.branch_cell.remove(&(it.req, it.branch));
-                            self.branch_rngs.remove(&(it.req, it.branch));
+                    match i.queue.pop().or_else(|| self.node_queues[node.0].pop()) {
+                        Some(it) if self.reqs[it.req].take_cancelled(it.branch) => {
                             self.plane.on_cancelled(node);
                         }
                         other => break other,
@@ -1362,7 +1446,7 @@ impl SimWorld {
             }
         };
         if let Some(item) = next_item {
-            self.instances.get_mut(&node).unwrap()[inst].active += 1;
+            self.instances[node.0][inst].active += 1;
             let r = item.req;
             self.start_prefill(r, node, inst, item);
         }
@@ -1388,7 +1472,7 @@ impl SimWorld {
     ) {
         let now = self.q.now();
         let item = DecodeItem { req, branch, decode, total, enqueued_at: now, earliest_finish };
-        let pick = self.decode_instances[&node]
+        let pick = self.decode_instances[node.0]
             .iter()
             .enumerate()
             .filter(|(_, i)| i.up && i.active < i.slots)
@@ -1396,14 +1480,11 @@ impl SimWorld {
             .map(|(idx, _)| idx);
         match pick {
             Some(p) => {
-                self.decode_instances.get_mut(&node).unwrap()[p].active += 1;
+                self.decode_instances[node.0][p].active += 1;
                 self.start_decode(node, p, item);
             }
             None => {
-                self.decode_queues
-                    .entry(node)
-                    .or_insert_with(|| PrioQueue::new(QueueDiscipline::Fifo))
-                    .push(now, item);
+                self.decode_queues[node.0].push(now, item);
             }
         }
     }
@@ -1415,10 +1496,9 @@ impl SimWorld {
     /// measures.
     fn start_decode(&mut self, node: NodeId, pick: usize, item: DecodeItem) {
         let now = self.q.now();
-        let name = self.graph.node(node).name.clone();
         let features = self.reqs[item.req].features;
         self.recorder
-            .on_execution(&format!("{name}.decode"), item.decode, now - item.enqueued_at);
+            .on_execution(&self.decode_names[node.0], item.decode, now - item.enqueued_at);
         let steps = features.gen_len.max(1) as f64;
         self.record_ttft(item.req, now + item.decode / steps);
         self.recorder.on_token_latency(item.decode / steps);
@@ -1442,27 +1522,25 @@ impl SimWorld {
     fn on_decode_finish(&mut self, req: usize, node: NodeId, inst: usize, branch: u32, total: f64) {
         self.plane.on_complete(node, total);
         let next_item = {
-            let v = self.decode_instances.get_mut(&node).unwrap();
-            let i = &mut v[inst];
+            let i = &mut self.decode_instances[node.0][inst];
             i.active = i.active.saturating_sub(1);
             if i.up && i.active < i.slots {
-                self.decode_queues.get_mut(&node).and_then(|q| q.pop())
+                self.decode_queues[node.0].pop()
             } else {
                 None
             }
         };
         if let Some(item) = next_item {
-            self.decode_instances.get_mut(&node).unwrap()[inst].active += 1;
+            self.decode_instances[node.0][inst].active += 1;
             self.start_decode(node, inst, item);
         }
         // Cancelled mid-flight (FirstK loser): the visit ends here. No
         // streamed pre-dispatch exists out of a split generator, so the
         // mark is always consumable at this point.
-        if self.cancelled.remove(&(req, branch)) {
-            self.purge_branch(req, branch);
+        if self.reqs[req].take_cancelled(branch) {
             return;
         }
-        if self.fork_map.contains_key(&node) {
+        if self.fork_map[node.0].is_some() {
             return self.do_fork(req, node, branch);
         }
         let next = self.sample_next(req, branch, node).0;
@@ -1482,8 +1560,7 @@ impl SimWorld {
             // batch has finished; the last member out pulls the next
             // batch in.
             let idle = {
-                let v = self.instances.get_mut(&node).unwrap();
-                let i = &mut v[inst];
+                let i = &mut self.instances[node.0][inst];
                 i.active = i.active.saturating_sub(1);
                 i.up && i.active == 0
             };
@@ -1498,19 +1575,12 @@ impl SimWorld {
             // first, then the central component queue. Cancelled FirstK
             // losers are discarded on pop — they hold no slot.
             let next_item = {
-                let v = self.instances.get_mut(&node).unwrap();
-                let i = &mut v[inst];
+                let i = &mut self.instances[node.0][inst];
                 i.active = i.active.saturating_sub(1);
                 if i.up && i.active < i.slots {
                     loop {
-                        match i
-                            .queue
-                            .pop()
-                            .or_else(|| self.node_queues.get_mut(&node).and_then(|q| q.pop()))
-                        {
-                            Some(it) if self.cancelled.remove(&(it.req, it.branch)) => {
-                                self.branch_cell.remove(&(it.req, it.branch));
-                                self.branch_rngs.remove(&(it.req, it.branch));
+                        match i.queue.pop().or_else(|| self.node_queues[node.0].pop()) {
+                            Some(it) if self.reqs[it.req].take_cancelled(it.branch) => {
                                 self.plane.on_cancelled(node);
                             }
                             other => break other,
@@ -1521,7 +1591,7 @@ impl SimWorld {
                 }
             };
             if let Some(item) = next_item {
-                self.instances.get_mut(&node).unwrap()[inst].active += 1;
+                self.instances[node.0][inst].active += 1;
                 let r = item.req;
                 self.start_service(r, node, inst, item);
             }
@@ -1532,24 +1602,24 @@ impl SimWorld {
         // mark must survive until that in-flight event fires and is
         // dropped (consuming it here would revive the branch as a
         // zombie when the streamed hop lands).
-        if self.cancelled.contains(&(req, branch)) {
-            let streamed = self.pending_stream.remove(&(req, node));
-            self.pre_sampled.remove(&(req, node));
+        if self.reqs[req].is_cancelled(branch) {
+            let r = &mut self.reqs[req];
+            let streamed = r.remove_pending_stream(node);
+            r.remove_pre_sampled(node);
             if !streamed {
-                self.cancelled.remove(&(req, branch));
-                self.purge_branch(req, branch);
+                r.take_cancelled(branch);
             }
             return;
         }
         // If streaming already dispatched this hop, we're done here.
-        if self.pending_stream.remove(&(req, node)) {
+        if self.reqs[req].remove_pending_stream(node) {
             return;
         }
         // Parallel fan-out happens at Finish: every branch dispatches.
-        if self.fork_map.contains_key(&node) {
+        if self.fork_map[node.0].is_some() {
             return self.do_fork(req, node, branch);
         }
-        let next = match self.pre_sampled.remove(&(req, node)) {
+        let next = match self.reqs[req].remove_pre_sampled(node) {
             Some(n) => n,
             None => self.sample_next(req, branch, node).0,
         };
@@ -1563,22 +1633,23 @@ impl SimWorld {
     /// ground-truth workload), recording edge telemetry. Fork nodes never
     /// sample — [`SimWorld::do_fork`] dispatches every branch.
     fn sample_next(&mut self, req: usize, branch: u32, node: NodeId) -> (NodeId, bool) {
-        let edges: Vec<(usize, f64, NodeId, bool)> = self
-            .adj
-            .out_edges(node)
-            .iter()
-            .map(|&i| {
-                let e = &self.graph.edges[i];
-                (i, e.prob(), e.to, e.back_edge)
-            })
-            .collect();
-        debug_assert!(!edges.is_empty(), "work node must have successors");
-        let weights: Vec<f64> = edges.iter().map(|e| e.1).collect();
-        let pick = {
-            let rng = self.req_rng(req, branch);
-            rng.weighted(&weights)
-        };
-        let (mut idx, _, mut to, mut back) = edges[pick];
+        let out = self.adj.out_edges(node);
+        debug_assert!(!out.is_empty(), "work node must have successors");
+        // Inlined weighted draw over the adjacency slice — same arithmetic
+        // as [`Rng::weighted`] (one `f64()` draw, cumulative subtraction,
+        // last index on underflow) but with zero per-hop allocation.
+        let total: f64 = out.iter().map(|&i| self.graph.edges[i].prob()).sum();
+        let mut x = self.reqs[req].rng_mut(branch).f64() * total;
+        let mut pick = out.len() - 1;
+        for (k, &i) in out.iter().enumerate() {
+            x -= self.graph.edges[i].prob();
+            if x <= 0.0 {
+                pick = k;
+                break;
+            }
+        }
+        let picked = &self.graph.edges[out[pick]];
+        let (mut idx, mut to, mut back) = (out[pick], picked.to, picked.back_edge);
         // Degrade ladder, iteration capping: at severe overload a
         // CapIterations component (critic-style loop gate) takes its exit
         // branch — the edge toward the sink, else its best forward edge —
@@ -1588,18 +1659,19 @@ impl SimWorld {
         if self.plane.degrade_enabled()
             && self.plane.cap_iterations(self.graph.node(node).degrade)
         {
-            let exit = edges
+            let exit = out
                 .iter()
-                .find(|e| e.2 == self.graph.sink)
+                .map(|&i| (i, &self.graph.edges[i]))
+                .find(|(_, e)| e.to == self.graph.sink)
                 .or_else(|| {
-                    edges
-                        .iter()
-                        .filter(|e| !e.3)
-                        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-                })
-                .copied();
-            if let Some((eidx, _, eto, eback)) = exit {
+                    out.iter()
+                        .map(|&i| (i, &self.graph.edges[i]))
+                        .filter(|(_, e)| !e.back_edge)
+                        .max_by(|a, b| a.1.prob().total_cmp(&b.1.prob()))
+                });
+            if let Some((eidx, e)) = exit {
                 if eidx != idx {
+                    let (eto, eback) = (e.to, e.back_edge);
                     self.plane.counters.on_degraded();
                     idx = eidx;
                     to = eto;
@@ -1630,10 +1702,7 @@ impl SimWorld {
         if hit_rate <= 0.0 {
             return false;
         }
-        let hit = {
-            let rng = self.req_rng(req, branch);
-            rng.chance(hit_rate)
-        };
+        let hit = self.reqs[req].rng_mut(branch).chance(hit_rate);
         if hit {
             self.cache_counters.on_exact_hit();
         } else {
@@ -1643,15 +1712,20 @@ impl SimWorld {
     }
 
     fn utilization(&self, node: NodeId) -> f64 {
-        let Some(v) = self.instances.get(&node) else { return 0.0 };
+        let v = &self.instances[node.0];
+        // A node that was never provisioned reads as unloaded — the same
+        // answer the old map gave for a missing key.
+        if v.is_empty() {
+            return 0.0;
+        }
         let mut cap: usize = v.iter().filter(|i| i.up).map(|i| i.slots).sum();
-        let queued_central = self.node_queues.get(&node).map_or(0, |q| q.len());
+        let queued_central = self.node_queues[node.0].len();
         let mut load: usize =
             v.iter().map(|i| i.active + i.queue.len()).sum::<usize>() + queued_central;
-        if let Some(d) = self.decode_instances.get(&node) {
+        let d = &self.decode_instances[node.0];
+        if !d.is_empty() {
             cap += d.iter().filter(|i| i.up).map(|i| i.slots).sum::<usize>();
-            load += d.iter().map(|i| i.active).sum::<usize>()
-                + self.decode_queues.get(&node).map_or(0, |q| q.len());
+            load += d.iter().map(|i| i.active).sum::<usize>() + self.decode_queues[node.0].len();
         }
         if cap == 0 {
             return 1.0;
@@ -1671,17 +1745,17 @@ impl SimWorld {
     fn monolith_dispatch(&mut self, req: usize) {
         let now = self.q.now();
         let t0 = Instant::now();
-        let states: Vec<InstanceState> = self.instances[&self.graph.source]
-            .iter()
-            .map(|i| InstanceState {
-                active: i.active,
-                queued: i.queue.len(),
-                slots: i.slots,
-                expected_reentries: 0.0,
-                up: i.up,
-            })
-            .collect();
+        let mut states = std::mem::take(&mut self.route_states);
+        states.clear();
+        states.extend(self.instances[self.graph.source.0].iter().map(|i| InstanceState {
+            active: i.active,
+            queued: i.queue.len(),
+            slots: i.slots,
+            expected_reentries: 0.0,
+            up: i.up,
+        }));
         let pick = self.plane.route(req as u64, self.graph.source, false, &states);
+        self.route_states = states;
         self.decision_time += t0.elapsed().as_secs_f64();
         self.decisions += 1;
         let item = QueuedItem {
@@ -1691,7 +1765,7 @@ impl SimWorld {
             earliest_finish: 0.0,
             stream_chunks: 0.0,
         };
-        let inst = &mut self.instances.get_mut(&self.graph.source).unwrap()[pick];
+        let inst = &mut self.instances[self.graph.source.0][pick];
         if inst.active < inst.slots {
             inst.active += 1;
             self.monolith_start(req, pick, item);
@@ -1702,14 +1776,14 @@ impl SimWorld {
 
     fn monolith_start(&mut self, req: usize, pick: usize, item: QueuedItem) {
         let now = self.q.now();
-        let active = self.instances[&self.graph.source][pick].active;
+        let active = self.instances[self.graph.source.0][pick].active;
         // Walk the whole pipeline inside the replica, summing stage times
         // (function calls: no cross-component overhead, no overlap —
         // fork branches SERIALIZE here, which is exactly the contrast
         // the parallel-dataflow bench draws against the monolith).
         let mut hops = 0usize;
         let mut first_wait = Some(now - item.enqueued_at);
-        let total = if let Some(fg) = self.fork_map.get(&self.graph.source).cloned() {
+        let total = if let Some(fg) = self.fork_map[self.graph.source.0].clone() {
             let mut t = 0.0;
             for &entry in &fg.targets {
                 t += self
@@ -1743,21 +1817,21 @@ impl SimWorld {
         let mut total = 0.0;
         while cur != self.graph.sink && Some(cur) != stop && *hops < 1000 {
             *hops += 1;
-            let spec = self.graph.node(cur).clone();
-            let model = LatencyModel::for_kind(&spec.kind);
-            let mut t = {
-                let rng = self.req_rng(req, 0);
-                model.sample(&features, rng)
+            let (shards, cache_hit_rate) = {
+                let spec = self.graph.node(cur);
+                (spec.shards, spec.cache_hit_rate)
             };
-            t *= super::cluster::shard_service_factor(spec.shards);
-            if self.draw_cache_hit(req, 0, spec.cache_hit_rate) {
+            let model = LatencyModel::for_kind(&self.graph.node(cur).kind);
+            let mut t = model.sample(&features, self.reqs[req].rng_mut(0));
+            t *= super::cluster::shard_service_factor(shards);
+            if self.draw_cache_hit(req, 0, cache_hit_rate) {
                 t *= CACHE_HIT_COST_FRAC;
             }
             t *= concurrency_slowdown(active);
             total += t;
             let wait = first_wait.take().unwrap_or(0.0);
-            self.recorder.on_execution(&spec.name, t, wait);
-            if let Some(fg) = self.fork_map.get(&cur).cloned() {
+            self.recorder.on_execution(&self.graph.node(cur).name, t, wait);
+            if let Some(fg) = self.fork_map[cur.0].clone() {
                 for &ei in &fg.edges {
                     self.plane.on_edge(ei, cur);
                 }
@@ -1776,13 +1850,12 @@ impl SimWorld {
     fn monolith_finish(&mut self, req: usize, inst: usize) {
         self.complete(req);
         let next_item = {
-            let v = self.instances.get_mut(&self.graph.source).unwrap();
-            let i = &mut v[inst];
+            let i = &mut self.instances[self.graph.source.0][inst];
             i.active = i.active.saturating_sub(1);
             i.queue.pop()
         };
         if let Some(item) = next_item {
-            self.instances.get_mut(&self.graph.source).unwrap()[inst].active += 1;
+            self.instances[self.graph.source.0][inst].active += 1;
             let r = item.req;
             self.monolith_start(r, inst, item);
         }
@@ -1796,10 +1869,12 @@ impl SimWorld {
             return;
         }
         // Refresh expected re-entries for state-aware routing.
-        let node_ids: Vec<NodeId> = self.instances.keys().copied().collect();
-        for id in &node_ids {
-            let bound = self.plane.router.bindings_for(*id) as f64;
-            let v = self.instances.get_mut(id).unwrap();
+        for idx in 0..self.instances.len() {
+            if self.instances[idx].is_empty() {
+                continue;
+            }
+            let bound = self.plane.router.bindings_for(NodeId(idx)) as f64;
+            let v = &mut self.instances[idx];
             let n = v.len().max(1) as f64;
             for i in v.iter_mut() {
                 i.expected_reentries = bound / n;
@@ -1827,14 +1902,14 @@ impl SimWorld {
     fn global_utilization(&self) -> f64 {
         let mut load = 0usize;
         let mut cap = 0usize;
-        for (node, v) in &self.instances {
+        for (idx, v) in self.instances.iter().enumerate() {
             load += v.iter().map(|i| i.active + i.queue.len()).sum::<usize>();
-            load += self.node_queues.get(node).map_or(0, |q| q.len());
+            load += self.node_queues[idx].len();
             cap += v.iter().filter(|i| i.up).map(|i| i.slots).sum::<usize>();
         }
-        for (node, v) in &self.decode_instances {
+        for (idx, v) in self.decode_instances.iter().enumerate() {
             load += v.iter().map(|i| i.active).sum::<usize>();
-            load += self.decode_queues.get(node).map_or(0, |q| q.len());
+            load += self.decode_queues[idx].len();
             cap += v.iter().filter(|i| i.up).map(|i| i.slots).sum::<usize>();
         }
         if cap == 0 {
@@ -1849,15 +1924,15 @@ impl SimWorld {
     fn rekey_queues(&mut self, now: f64) {
         let reqs = &self.reqs;
         let plane = &self.plane;
-        for (node, q) in self.node_queues.iter_mut() {
-            let node = *node;
+        for (idx, q) in self.node_queues.iter_mut().enumerate() {
+            let node = NodeId(idx);
             q.rekey(|item| {
                 let r = &reqs[item.req];
                 plane.slack_value(node, &r.features, now, r.deadline)
             });
         }
-        for (node, v) in self.instances.iter_mut() {
-            let node = *node;
+        for (idx, v) in self.instances.iter_mut().enumerate() {
+            let node = NodeId(idx);
             for inst in v.iter_mut() {
                 inst.queue.rekey(|item| {
                     let r = &reqs[item.req];
@@ -1878,14 +1953,13 @@ impl SimWorld {
             if self.disagg_node(node) {
                 continue;
             }
-            let have: usize = self.instances.get(&node).map(|v| v.len()).unwrap_or(0);
+            let have = self.instances[node.0].len();
             if target > have {
                 for _ in have..target {
                     let mut inst = self.make_instance(node);
                     inst.up = false; // cold start
-                    let v = self.instances.get_mut(&node).unwrap();
-                    v.push(inst);
-                    let idx = v.len() - 1;
+                    self.instances[node.0].push(inst);
+                    let idx = self.instances[node.0].len() - 1;
                     self.q.schedule(now + cold, Ev::InstanceUp { node, inst: idx });
                 }
             } else if target < have {
@@ -1906,25 +1980,16 @@ impl SimWorld {
                 // statefulness is a routing preference in the sim, and a
                 // re-route beats a request that never completes.
                 let mut displaced: Vec<QueuedItem> = Vec::new();
-                {
-                    let v = self.instances.get_mut(&node).unwrap();
-                    for i in v.iter_mut().skip(keep) {
-                        i.up = false;
-                        while let Some(it) = i.queue.pop() {
-                            displaced.push(it);
-                        }
+                for i in self.instances[node.0].iter_mut().skip(keep) {
+                    i.up = false;
+                    while let Some(it) = i.queue.pop() {
+                        displaced.push(it);
                     }
                 }
-                if !displaced.is_empty() {
-                    let d = self.plane.discipline;
-                    for it in displaced {
-                        let r = &self.reqs[it.req];
-                        let key = self.plane.slack_value(node, &r.features, now, r.deadline);
-                        self.node_queues
-                            .entry(node)
-                            .or_insert_with(|| PrioQueue::new(d))
-                            .push(key, it);
-                    }
+                for it in displaced {
+                    let r = &self.reqs[it.req];
+                    let key = self.plane.slack_value(node, &r.features, now, r.deadline);
+                    self.node_queues[node.0].push(key, it);
                 }
             }
         }
@@ -1932,22 +1997,15 @@ impl SimWorld {
 
     fn on_instance_up(&mut self, node: NodeId, inst: usize) {
         let popped = {
-            let Some(v) = self.instances.get_mut(&node) else { return };
-            if inst >= v.len() {
+            if inst >= self.instances[node.0].len() {
                 return;
             }
-            v[inst].up = true;
-            let i = &mut v[inst];
+            let i = &mut self.instances[node.0][inst];
+            i.up = true;
             let mut items = Vec::new();
             while i.active + items.len() < i.slots {
-                match i
-                    .queue
-                    .pop()
-                    .or_else(|| self.node_queues.get_mut(&node).and_then(|q| q.pop()))
-                {
-                    Some(it) if self.cancelled.remove(&(it.req, it.branch)) => {
-                        self.branch_cell.remove(&(it.req, it.branch));
-                        self.branch_rngs.remove(&(it.req, it.branch));
+                match i.queue.pop().or_else(|| self.node_queues[node.0].pop()) {
+                    Some(it) if self.reqs[it.req].take_cancelled(it.branch) => {
                         self.plane.on_cancelled(node);
                     }
                     Some(it) => items.push(it),
@@ -2647,5 +2705,32 @@ mod tests {
         let r = SimWorld::simulate(racing_rag(), cfg);
         assert_eq!(r.report.completed, 200, "FirstK race under disaggregation");
         assert_eq!(r.residual_bindings, 0);
+    }
+
+    #[test]
+    fn runs_report_event_counts_and_never_clamp() {
+        // The perf bench's numerator must be populated, and a healthy
+        // model never schedules into the past — `clamped` staying at 0
+        // across every control-flow shape (forks, races, disaggregation,
+        // monoliths) is the satellite guarantee that makes the counter a
+        // usable tripwire.
+        let runs = vec![
+            quick(SystemKind::Harmonia, "v-rag", 8.0, 200),
+            quick(SystemKind::Harmonia, "hybrid-rag", 12.0, 150),
+            quick(SystemKind::LangChain, "v-rag", 4.0, 100),
+            run_point(SystemKind::Harmonia, racing_rag(), 12.0, 200, Some(2.0), 23),
+            SimWorld::simulate(
+                apps::vanilla_rag(),
+                disaggregated(place_cfg(700.0, 400, 0xD15A), KvTransferModel::default(), 0.5),
+            ),
+        ];
+        for r in runs {
+            assert!(r.events > 0, "event count must be recorded");
+            assert!(
+                r.events >= r.report.completed,
+                "at least one event per completed request"
+            );
+            assert_eq!(r.clamped, 0, "no schedule may ask for a past time");
+        }
     }
 }

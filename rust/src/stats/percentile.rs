@@ -130,7 +130,7 @@ mod tests {
         for &x in &xs {
             h.observe(x);
         }
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         for q in [0.5, 0.9, 0.99] {
             let exact = percentile(&xs, q * 100.0);
             let approx = h.quantile(q);

@@ -88,7 +88,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, min_iters: usize, min_secs: 
 /// Build stats from raw per-iteration samples.
 pub fn stats_from(name: &str, samples: &mut [f64]) -> BenchStats {
     assert!(!samples.is_empty());
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(f64::total_cmp);
     let n = samples.len();
     let mean = samples.iter().sum::<f64>() / n as f64;
     let q = |p: f64| samples[((n as f64 - 1.0) * p) as usize];
@@ -107,6 +107,142 @@ pub fn stats_from(name: &str, samples: &mut [f64]) -> BenchStats {
 #[inline]
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+// ---- BENCH_*.json emission ---------------------------------------------
+//
+// serde is not in the offline crate cache, so the perf benches render
+// their artifacts through this tiny value tree instead. Rendering is
+// deterministic: object keys keep insertion order, floats use Rust's
+// shortest-roundtrip `Display`, non-finite floats become `null` (JSON
+// has no representation for them and a bench metric should never
+// produce one anyway).
+
+/// A JSON value for bench artifacts ([`emit_json`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Int(i64),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Convenience: an object from key/value pairs.
+    pub fn obj(fields: Vec<(&str, Json)>) -> Json {
+        Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Render with two-space indentation and a trailing newline.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: usize) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(i) => out.push_str(&i.to_string()),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    let s = format!("{x}");
+                    out.push_str(&s);
+                    // `Display` omits the decimal point for integral
+                    // floats; keep them unambiguously floats for
+                    // downstream parsers.
+                    if !s.contains(['.', 'e', 'E']) {
+                        out.push_str(".0");
+                    }
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            out.push_str(&format!("\\u{:04x}", c as u32))
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                if items.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push_str("[\n");
+                for (i, item) in items.iter().enumerate() {
+                    pad(out, indent + 1);
+                    item.write(out, indent + 1);
+                    if i + 1 < items.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                pad(out, indent);
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                if fields.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push_str("{\n");
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    pad(out, indent + 1);
+                    Json::Str(k.clone()).write(out, indent + 1);
+                    out.push_str(": ");
+                    v.write(out, indent + 1);
+                    if i + 1 < fields.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                pad(out, indent);
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn pad(out: &mut String, indent: usize) {
+    for _ in 0..indent {
+        out.push_str("  ");
+    }
+}
+
+/// Write a bench artifact (`BENCH_*.json`) to `path`.
+pub fn emit_json(path: &std::path::Path, value: &Json) -> std::io::Result<()> {
+    std::fs::write(path, value.render())
+}
+
+/// Extract the first numeric value following `"key":` in a JSON text —
+/// enough of a parser for the perf bench's regression gate to read one
+/// scalar out of a checked-in baseline without serde. Returns `None` if
+/// the key is absent or its value does not parse as a number.
+pub fn json_number_field(text: &str, key: &str) -> Option<f64> {
+    let needle = format!("\"{key}\"");
+    let at = text.find(&needle)? + needle.len();
+    let rest = text[at..].trim_start().strip_prefix(':')?.trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || matches!(c, '.' | '-' | '+' | 'e' | 'E')))
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
 }
 
 #[cfg(test)]
@@ -130,5 +266,58 @@ mod tests {
         assert!(fmt_time(5e-6).ends_with("us"));
         assert!(fmt_time(5e-3).ends_with("ms"));
         assert!(fmt_time(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn json_renders_scalars_and_nesting() {
+        let v = Json::obj(vec![
+            ("name", Json::Str("des".into())),
+            ("events", Json::Int(10_000_000)),
+            ("events_per_sec", Json::Num(2.5e6)),
+            ("whole", Json::Num(3.0)),
+            ("ok", Json::Bool(true)),
+            ("bad", Json::Num(f64::NAN)),
+            ("empty", Json::Arr(vec![])),
+            ("runs", Json::Arr(vec![Json::Int(1), Json::Int(2)])),
+        ]);
+        let s = v.render();
+        assert!(s.contains("\"name\": \"des\""), "{s}");
+        assert!(s.contains("\"events\": 10000000"), "{s}");
+        assert!(s.contains("\"whole\": 3.0"), "{s}");
+        assert!(s.contains("\"bad\": null"), "{s}");
+        assert!(s.contains("\"empty\": []"), "{s}");
+        assert!(s.ends_with("}\n"), "{s}");
+    }
+
+    #[test]
+    fn json_escapes_strings() {
+        let s = Json::Str("a\"b\\c\nd".into()).render();
+        assert_eq!(s, "\"a\\\"b\\\\c\\nd\"\n");
+    }
+
+    #[test]
+    fn json_number_field_reads_back_emitted_values() {
+        let v = Json::obj(vec![
+            ("total_events_per_sec", Json::Num(1234567.89)),
+            ("wall_secs", Json::Num(12.5)),
+            ("neg", Json::Num(-3.5)),
+        ]);
+        let s = v.render();
+        let x = json_number_field(&s, "total_events_per_sec").unwrap();
+        assert!((x - 1234567.89).abs() < 1e-6, "{x}");
+        assert_eq!(json_number_field(&s, "wall_secs"), Some(12.5));
+        assert_eq!(json_number_field(&s, "neg"), Some(-3.5));
+        assert_eq!(json_number_field(&s, "absent"), None);
+    }
+
+    #[test]
+    fn emit_json_round_trips_through_a_file() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("harmonia_bench_json_{}.json", std::process::id()));
+        let v = Json::obj(vec![("x", Json::Num(2.0))]);
+        emit_json(&path, &v).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(json_number_field(&text, "x"), Some(2.0));
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -162,6 +162,14 @@ fn golden_vrag_is_bit_reproducible() {
         a.report.slo_violation_rate.to_bits(),
         b.report.slo_violation_rate.to_bits()
     );
+    // The calendar-queue event list must replay the exact same event
+    // schedule: same event count, same clock, and zero past-time clamps
+    // (a nonzero `clamped` would mean a model scheduled into the past —
+    // the silent-reorder hazard `EventQueue::clamped` exists to expose).
+    assert_eq!(a.events, b.events, "event count must be deterministic");
+    assert!(a.events >= a.report.completed, "each request takes >=1 event");
+    assert_eq!(a.clamped, 0, "golden models never schedule into the past");
+    assert_eq!(b.clamped, 0);
 }
 
 #[test]
