@@ -6,7 +6,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test test-fast lint fmt clippy doc verify artifacts bench bench-shards bench-cache bench-overload bench-batching bench-parallel bench-disagg bench-perf bench-perf-smoke bench-smoke clean
+.PHONY: all build test test-fast lint fmt clippy doc verify artifacts bench bench-shards bench-cache bench-overload bench-batching bench-parallel bench-disagg bench-perf bench-perf-smoke bench-retrieval bench-retrieval-smoke bench-smoke clean
 
 all: build
 
@@ -77,6 +77,16 @@ bench-perf:
 # CI variant: ~40k requests, same code paths and artifact shape.
 bench-perf-smoke:
 	$(CARGO) bench --bench perf_des -- --smoke
+
+# Retrieval data-plane perf: blocked f32 vs SQ8 scan kernels + bounded-
+# heap top-k; writes BENCH_retrieval.json and gates against
+# benches/baselines/.
+bench-retrieval:
+	$(CARGO) bench --bench perf_retrieval
+
+# CI variant: 20k-row corpus, same code paths and artifact shape.
+bench-retrieval-smoke:
+	$(CARGO) bench --bench perf_retrieval -- --smoke
 
 # Quick-iteration bench pass (CI): actually *execute* the bench binaries
 # with `--smoke`-shrunk workloads (see util::bench::smoke) instead of

@@ -20,7 +20,11 @@ fn main() {
     for p in &corpus.passages {
         vectors.extend(Corpus::hash_embed(&p.text, dim));
     }
-    let index = IvfIndex::build(vectors, dim, IvfParams { n_lists: 256, kmeans_iters: 6, seed: 1 });
+    let index = IvfIndex::build(
+        vectors,
+        dim,
+        IvfParams { n_lists: 256, kmeans_iters: 6, seed: 1, ..IvfParams::default() },
+    );
 
     let mut qg = QueryGen::new(&corpus, 7);
     let queries: Vec<Vec<f32>> =

@@ -40,7 +40,7 @@ fn main() {
         (0..batch).map(|_| Corpus::hash_embed(&qg.next().text, dim)).collect();
 
     // Baseline: one IVF index over the whole corpus, batched search.
-    let ivf = IvfParams { n_lists: 256, kmeans_iters: 6, seed: 1 };
+    let ivf = IvfParams { n_lists: 256, kmeans_iters: 6, seed: 1, ..IvfParams::default() };
     let single = IvfIndex::build(vectors.clone(), dim, ivf);
     let exact: Vec<_> = queries.iter().map(|q| single.search_exact(q, k)).collect();
 

@@ -124,7 +124,10 @@ fn main() {
     let index = ShardedIndex::build(
         vectors,
         DIM,
-        ShardParams { n_shards: 4, ivf: IvfParams { n_lists: 256, kmeans_iters: 6, seed: 1 } },
+        ShardParams {
+            n_shards: 4,
+            ivf: IvfParams { n_lists: 256, kmeans_iters: 6, seed: 1, ..IvfParams::default() },
+        },
     );
 
     // Uncached baseline: every query pays embed + scatter-gather.

@@ -1,0 +1,307 @@
+//! Retrieval data-plane performance — the second *measured* number in
+//! the repo (the retrieval counterpart of `perf_des.rs`).
+//!
+//! Exercises the three mechanisms of the quantized/blocked scoring hot
+//! path on one corpus:
+//!
+//!   - **f32 scan** — blocked 8-lane `dot_f32` kernels over the padded
+//!     row layout, streamed through the bounded-heap top-k;
+//!   - **SQ8 scan** — u8 codes at 1/4 the scan bandwidth, asymmetric
+//!     u8·f32 scoring, exact f32 rescoring over `rerank_factor × k`
+//!     survivors (recall@10 must stay within 0.02 of f32 — asserted);
+//!   - **kernel microbenches** — the raw `dot_f32` block scan, bounded-
+//!     heap selection, and the exact full-corpus scan in isolation.
+//!
+//! Emits `BENCH_retrieval.json` (scored-vectors/sec, per-query p50/p99,
+//! recall@10 vs exact for both modes, per-kernel breakdown) via
+//! `util::bench::emit_json`, and gates against `benches/baselines/`
+//! when a checked-in baseline exists: >20% scored-vectors/sec
+//! regression fails the run (CI runs `--smoke`; see
+//! `make bench-retrieval`).
+//!
+//! Accepts `--smoke` (see `util::bench::smoke`): a 20k-row corpus
+//! instead of 200k, same code paths, same artifact shape. The measured
+//! f32-vs-SQ8 per-query p50 ratio is the calibration source for
+//! `profile::models::QUANTIZED_SERVICE_FRAC` (re-fit it from
+//! `sq8_p50_ratio` once this has run on real hardware).
+
+use std::time::Instant;
+
+use harmonia::retrieval::{dot_f32, IvfIndex, IvfParams, Quantization, TopK};
+use harmonia::util::bench::{
+    bench, black_box, emit_json, json_number_field, smoke, smoke_scale, stats_from, Json,
+};
+use harmonia::util::table::{f, Table};
+use harmonia::workload::{Corpus, QueryGen};
+
+const SEED: u64 = 0x4E7_12E7;
+const DIM: usize = 64;
+const K: usize = 10;
+/// Regression gate: fail when scored-vectors/sec drops below this
+/// fraction of the checked-in baseline.
+const GATE_FRAC: f64 = 0.8;
+
+/// Sorted-sample percentile (nearest-rank on the sorted slice).
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    sorted[((sorted.len() as f64 - 1.0) * p) as usize]
+}
+
+struct ScanRun {
+    mode: &'static str,
+    scored_per_sec: f64,
+    p50_s: f64,
+    p99_s: f64,
+    recall_at_k: f64,
+    scan_bytes_per_vector: usize,
+}
+
+/// Time per-query searches over the whole query set until the clock
+/// budget is spent; `scanned_per_pass` is the true candidate count the
+/// probe covers (computed outside the timed region).
+fn scan_run(
+    mode: &'static str,
+    idx: &IvfIndex,
+    queries: &[Vec<f32>],
+    ef: usize,
+    exact: &[Vec<harmonia::retrieval::SearchResult>],
+    min_secs: f64,
+) -> ScanRun {
+    let scanned_per_pass: usize = queries.iter().map(|q| idx.candidates(q, ef).len()).sum();
+    let mut searcher = idx.searcher();
+    // Warmup pass (page in rows/codes, size the scratch).
+    for q in queries {
+        black_box(searcher.search(q, K, ef));
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let mut passes = 0usize;
+    let start = Instant::now();
+    while passes == 0 || start.elapsed().as_secs_f64() < min_secs {
+        for q in queries {
+            let t0 = Instant::now();
+            black_box(searcher.search(q, K, ef));
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        passes += 1;
+    }
+    let elapsed: f64 = samples.iter().sum();
+    samples.sort_by(f64::total_cmp);
+    let mut recall = 0.0;
+    for (q, ex) in queries.iter().zip(exact) {
+        recall += IvfIndex::recall(&idx.search(q, K, ef), ex);
+    }
+    ScanRun {
+        mode,
+        scored_per_sec: (scanned_per_pass * passes) as f64 / elapsed.max(1e-12),
+        p50_s: pct(&samples, 0.50),
+        p99_s: pct(&samples, 0.99),
+        recall_at_k: recall / queries.len() as f64,
+        scan_bytes_per_vector: idx.scan_bytes_per_vector(),
+    }
+}
+
+fn out_path() -> std::path::PathBuf {
+    let dir = std::env::var("BENCH_OUT_DIR")
+        .unwrap_or_else(|_| env!("CARGO_MANIFEST_DIR").to_string());
+    std::path::Path::new(&dir).join("BENCH_retrieval.json")
+}
+
+fn baseline_path(smoke: bool) -> std::path::PathBuf {
+    let file = if smoke { "BENCH_retrieval.smoke.json" } else { "BENCH_retrieval.json" };
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("benches/baselines").join(file)
+}
+
+fn main() {
+    let smoke = smoke();
+    let n = smoke_scale(200_000, 20_000);
+    let nq = smoke_scale(256, 64);
+    // Probe ~2% of the corpus per query — the operating regime where the
+    // scan kernel (not centroid scoring) dominates.
+    let ef = (n / 50).max(512);
+    let min_secs = if smoke { 0.5 } else { 3.0 };
+    println!(
+        "retrieval data-plane perf: n={n} dim={DIM} k={K} search_ef={ef}{}\n",
+        if smoke { " (--smoke)" } else { "" }
+    );
+
+    let corpus = Corpus::generate(n, 64, 64, SEED);
+    let mut vectors = Vec::with_capacity(n * DIM);
+    for p in &corpus.passages {
+        vectors.extend(Corpus::hash_embed(&p.text, DIM));
+    }
+    let params = IvfParams {
+        n_lists: (n / 256).max(16),
+        kmeans_iters: 4,
+        seed: SEED,
+        ..IvfParams::default()
+    };
+
+    let t0 = Instant::now();
+    let f32_idx = IvfIndex::build(vectors.clone(), DIM, params);
+    let build_f32_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let sq8_idx = IvfIndex::build(
+        vectors.clone(),
+        DIM,
+        IvfParams { quantization: Quantization::SQ8, ..params },
+    );
+    let build_sq8_s = t0.elapsed().as_secs_f64();
+    println!(
+        "built f32 index in {}, sq8 index in {} ({} lists)",
+        f(build_f32_s, 2),
+        f(build_sq8_s, 2),
+        f32_idx.n_lists()
+    );
+
+    let mut qg = QueryGen::new(&corpus, 7);
+    let queries: Vec<Vec<f32>> =
+        (0..nq).map(|_| Corpus::hash_embed(&qg.next().text, DIM)).collect();
+    // Ground truth is the exact f32 scan (identical rows in both modes).
+    let exact: Vec<_> = queries.iter().map(|q| f32_idx.search_exact(q, K)).collect();
+
+    let runs = [
+        scan_run("f32", &f32_idx, &queries, ef, &exact, min_secs),
+        scan_run("sq8", &sq8_idx, &queries, ef, &exact, min_secs),
+    ];
+    let mut t = Table::new(
+        "probe scan (per-query)",
+        &["mode", "scored-vec/s", "p50 (us)", "p99 (us)", "recall@10", "scan B/vec"],
+    );
+    for r in &runs {
+        t.row(&[
+            r.mode.to_string(),
+            f(r.scored_per_sec, 0),
+            f(r.p50_s * 1e6, 1),
+            f(r.p99_s * 1e6, 1),
+            f(r.recall_at_k, 4),
+            r.scan_bytes_per_vector.to_string(),
+        ]);
+    }
+    t.print();
+
+    let (f32_run, sq8_run) = (&runs[0], &runs[1]);
+    let sq8_p50_ratio = sq8_run.p50_s / f32_run.p50_s.max(1e-12);
+    println!(
+        "\nsq8/f32 p50 ratio: {} (calibration source for QUANTIZED_SERVICE_FRAC)",
+        f(sq8_p50_ratio, 3)
+    );
+    // The pinned recall band — the same invariant the property suite
+    // enforces, here on the bench corpus.
+    assert!(
+        sq8_run.recall_at_k >= f32_run.recall_at_k - 0.02,
+        "SQ8 recall@{K} {} fell more than 0.02 below f32 {}",
+        sq8_run.recall_at_k,
+        f32_run.recall_at_k
+    );
+
+    // Kernel microbenches: the raw pieces the scans are made of.
+    println!("\nkernel breakdown:");
+    let rows = 4096.min(n);
+    let q0 = &queries[0];
+    let dot_block = bench("dot_f32 x4096 rows", 3, 20, min_secs / 4.0, || {
+        let mut acc = 0f32;
+        for i in 0..rows {
+            acc += dot_f32(f32_idx.vector(i), q0);
+        }
+        black_box(acc);
+    });
+    println!("  {}", dot_block.summary());
+    let scores: Vec<f32> = (0..rows).map(|i| dot_f32(f32_idx.vector(i), q0)).collect();
+    let topk_sel = bench("topk(10) x4096 scores", 3, 20, min_secs / 4.0, || {
+        let mut top = TopK::new(K);
+        for (i, &s) in scores.iter().enumerate() {
+            top.push(i, s);
+        }
+        black_box(top.into_sorted());
+    });
+    println!("  {}", topk_sel.summary());
+    let mut exact_samples: Vec<f64> = Vec::new();
+    for q in queries.iter().take(16) {
+        let t0 = Instant::now();
+        black_box(f32_idx.search_exact(q, K));
+        exact_samples.push(t0.elapsed().as_secs_f64());
+    }
+    let exact_scan = stats_from("search_exact (full corpus)", &mut exact_samples);
+    println!("  {}", exact_scan.summary());
+
+    let kernel_json = |s: &harmonia::util::bench::BenchStats| {
+        Json::obj(vec![
+            ("name", Json::Str(s.name.clone())),
+            ("mean_s", Json::Num(s.mean)),
+            ("p50_s", Json::Num(s.p50)),
+        ])
+    };
+    let run_json = |r: &ScanRun| {
+        Json::obj(vec![
+            ("mode", Json::Str(r.mode.into())),
+            ("vectors_per_sec", Json::Num(r.scored_per_sec)),
+            ("p50_s", Json::Num(r.p50_s)),
+            ("p99_s", Json::Num(r.p99_s)),
+            ("recall_at_10", Json::Num(r.recall_at_k)),
+            ("scan_bytes_per_vector", Json::Int(r.scan_bytes_per_vector as i64)),
+        ])
+    };
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("perf_retrieval".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("corpus_n", Json::Int(n as i64)),
+        ("dim", Json::Int(DIM as i64)),
+        ("k", Json::Int(K as i64)),
+        ("search_ef", Json::Int(ef as i64)),
+        ("n_lists", Json::Int(f32_idx.n_lists() as i64)),
+        // Headline + gate key: the f32 scan's scored-vectors/sec.
+        ("scored_vectors_per_sec", Json::Num(f32_run.scored_per_sec)),
+        ("sq8_p50_ratio", Json::Num(sq8_p50_ratio)),
+        ("recall_delta_sq8_vs_f32", Json::Num(sq8_run.recall_at_k - f32_run.recall_at_k)),
+        ("build_f32_secs", Json::Num(build_f32_s)),
+        ("build_sq8_secs", Json::Num(build_sq8_s)),
+        ("scans", Json::Arr(runs.iter().map(run_json).collect())),
+        (
+            "kernels",
+            Json::Arr(vec![
+                kernel_json(&dot_block),
+                kernel_json(&topk_sel),
+                kernel_json(&exact_scan),
+            ]),
+        ),
+    ]);
+    let path = out_path();
+    emit_json(&path, &doc).expect("write BENCH_retrieval.json");
+    // Self-check: the artifact must be machine-readable by the same
+    // parser the regression gate uses.
+    let text = std::fs::read_to_string(&path).expect("re-read artifact");
+    for key in ["scored_vectors_per_sec", "sq8_p50_ratio", "recall_delta_sq8_vs_f32"] {
+        assert!(
+            json_number_field(&text, key).is_some(),
+            "emitted BENCH_retrieval.json is missing a readable {key}"
+        );
+    }
+    println!("\nwrote {}", path.display());
+
+    // Regression gate: only once a baseline is checked in.
+    let base = baseline_path(smoke);
+    match std::fs::read_to_string(&base) {
+        Ok(btext) => match json_number_field(&btext, "scored_vectors_per_sec") {
+            Some(bline) if bline > 0.0 => {
+                let ratio = f32_run.scored_per_sec / bline;
+                println!(
+                    "baseline {}: {} scored-vec/s -> ratio {}",
+                    base.display(),
+                    f(bline, 0),
+                    f(ratio, 3)
+                );
+                if ratio < GATE_FRAC {
+                    eprintln!(
+                        "REGRESSION: scored-vectors/sec fell to {}x of baseline (gate {GATE_FRAC}x)",
+                        f(ratio, 3)
+                    );
+                    std::process::exit(1);
+                }
+            }
+            _ => println!("baseline {} unreadable; gate skipped", base.display()),
+        },
+        Err(_) => println!(
+            "no checked-in baseline at {} yet; gate skipped (record one in a cargo-equipped env)",
+            base.display()
+        ),
+    }
+}

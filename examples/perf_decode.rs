@@ -77,7 +77,11 @@ fn main() -> anyhow::Result<()> {
     for p in &corpus.passages {
         vectors.extend(Corpus::hash_embed(&p.text, dim));
     }
-    let index = IvfIndex::build(vectors, dim, IvfParams { n_lists: 256, kmeans_iters: 6, seed: 1 });
+    let index = IvfIndex::build(
+        vectors,
+        dim,
+        IvfParams { n_lists: 256, kmeans_iters: 6, seed: 1, ..IvfParams::default() },
+    );
     let queries: Vec<Vec<f32>> =
         (0..256).map(|i| Corpus::hash_embed(format!("q{i}").as_bytes(), dim)).collect();
     let t0 = Instant::now();

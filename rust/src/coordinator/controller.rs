@@ -58,6 +58,11 @@ pub struct ControllerConfig {
     /// DES's `kv_prefix_hit_rate: 0.0` — disables prefix tracking so the
     /// stock deployment is byte-for-byte the pre-disaggregation path.
     pub kv_cache: Option<crate::cache::KvCacheConfig>,
+    /// Retrieval index storage mode: `Quantization::SQ8` scans u8 codes
+    /// (4× less bandwidth) with exact f32 rescoring; the default
+    /// `Quantization::None` keeps the stock deployment byte-for-byte the
+    /// pre-quantization f32 path.
+    pub quantization: crate::retrieval::Quantization,
     pub seed: u64,
     /// Instances per component (None → the spec's base_instances).
     pub instances: Option<HashMap<String, usize>>,
@@ -86,6 +91,7 @@ impl ControllerConfig {
             n_shards: 4,
             cache: Some(crate::cache::CacheConfig::default()),
             kv_cache: None,
+            quantization: crate::retrieval::Quantization::None,
             seed: 0,
             instances: None,
             slo: None,
@@ -200,6 +206,7 @@ pub fn deploy(graph: PipelineGraph, cfg: ControllerConfig) -> Result<ServingHand
         cfg.n_shards,
         cfg.cache,
         cfg.kv_cache,
+        cfg.quantization,
         cfg.seed,
     )
     .context("building live shared state (corpus/index)")?;

@@ -645,9 +645,11 @@ pub fn spawn_for_kind(
 
 /// Build the shared deployment state: generate the corpus, embed it with
 /// the real embedder, build the sharded IVF index (`n_shards` corpus
-/// partitions searched scatter-gather style), and stand up the request
-/// cache (`cache`: None disables memoization) plus the generator-side KV
-/// prefix cache (`kv_cache`: None disables prefix tracking).
+/// partitions searched scatter-gather style, stored f32 or SQ8 per
+/// `quantization`), and stand up the request cache (`cache`: None
+/// disables memoization) plus the generator-side KV prefix cache
+/// (`kv_cache`: None disables prefix tracking).
+#[allow(clippy::too_many_arguments)]
 pub fn build_live_shared(
     artifacts: PathBuf,
     corpus_size: usize,
@@ -655,6 +657,7 @@ pub fn build_live_shared(
     n_shards: usize,
     cache: Option<CacheConfig>,
     kv_cache: Option<KvCacheConfig>,
+    quantization: crate::retrieval::Quantization,
     seed: u64,
 ) -> Result<LiveShared> {
     let corpus = Arc::new(Corpus::generate(corpus_size, n_topics, 64, seed));
@@ -671,7 +674,13 @@ pub fn build_live_shared(
         dim,
         ShardParams {
             n_shards: n_shards.max(1),
-            ivf: IvfParams { n_lists: (corpus_size / 64).max(4), kmeans_iters: 6, seed },
+            ivf: IvfParams {
+                n_lists: (corpus_size / 64).max(4),
+                kmeans_iters: 6,
+                seed,
+                quantization,
+                ..IvfParams::default()
+            },
         },
     ));
     Ok(LiveShared {

@@ -209,6 +209,30 @@ pub fn cache_service_factor(hit_rate: f64) -> f64 {
     1.0 - h * (1.0 - CACHE_HIT_COST_FRAC)
 }
 
+/// Service-time multiplier for SQ8-quantized retrieval
+/// ([`crate::retrieval::Quantization::SQ8`]) relative to the f32 scan.
+/// The candidate scan streams 1 byte/dim instead of 4 (memory-bandwidth
+/// bound → ~4× faster), but centroid scoring, the probe sort, and the
+/// exact rescoring pass over `rerank_factor × k` survivors stay at f32,
+/// so the end-to-end retrieval service time lands well above 0.25×.
+/// Modeled at 0.45; `benches/perf_retrieval.rs` is the calibration
+/// target — re-fit from its measured f32 vs SQ8 per-query p50 once the
+/// bench has run on real hardware (see EXPERIMENTS.md).
+pub const QUANTIZED_SERVICE_FRAC: f64 = 0.45;
+
+/// Quantization-adjusted service-time multiplier for a retrieval
+/// component. `factor(false) == 1.0` exactly — unquantized deployments
+/// (the default) are untouched, which is what keeps the golden traces
+/// bit-identical. Applied consistently by the deploy-time profiler and
+/// the DES, so LP priors and simulated telemetry agree.
+pub fn quantized_service_factor(quantized: bool) -> f64 {
+    if quantized {
+        QUANTIZED_SERVICE_FRAC
+    } else {
+        1.0
+    }
+}
+
 /// Steady-state hit-rate estimate for a Zipf(s) repeat-query workload
 /// (`workload::queries::QueryMix`): a `repeat_frac` fraction of requests
 /// re-draw from a pool of `pool` known queries with rank popularity
@@ -537,6 +561,18 @@ mod tests {
             assert!(f < prev, "factor must fall with hit rate: {f} vs {prev}");
             prev = f;
         }
+    }
+
+    #[test]
+    fn quantized_factor_identity_when_unquantized() {
+        // Exact identity at the default: unquantized deployments replay
+        // golden traces bit-identically.
+        assert_eq!(quantized_service_factor(false), 1.0);
+        assert_eq!(quantized_service_factor(true), QUANTIZED_SERVICE_FRAC);
+        // A speedup, but not the raw 4× bandwidth win: rescoring and
+        // centroid scoring stay f32.
+        assert!(QUANTIZED_SERVICE_FRAC < 1.0);
+        assert!(QUANTIZED_SERVICE_FRAC > 0.25);
     }
 
     #[test]

@@ -168,6 +168,10 @@ impl ProfileWalk<'_> {
                 model.sample(feats, rng)
             };
             t *= crate::profile::models::shard_service_factor(node.shards);
+            // Quantized index scans (SQ8) run at the calibrated fraction
+            // of the f32 scan. Pure multiply, no rng draw — profiles of
+            // unquantized graphs (factor exactly 1.0) stay bit-identical.
+            t *= crate::profile::models::quantized_service_factor(node.quantized);
             // Cached components: a `cache_hit_rate` fraction of visits
             // costs only the hit fraction (sampled, same model the DES
             // uses), so the profiled α — and with it the LP priors and

@@ -54,6 +54,19 @@
 //! batch, and the scatter fan-out costs one thread spawn per shard per
 //! batch instead of per query.
 //!
+//! # Kernels, quantization, and top-k selection
+//!
+//! The scoring hot path (see [`store`]) is built from blocked 8-lane
+//! kernels over a padded row-major layout ([`dot_f32`], autovectorizable
+//! on stable Rust), an opt-in SQ8 scalar-quantized storage mode
+//! ([`Quantization::SQ8`]: u8 codes + per-dim min/scale, 4× less scan
+//! bandwidth, exact f32 rescoring over the top `rerank_factor × k`
+//! survivors), and a bounded-heap streaming top-k ([`TopK`]) with one
+//! deterministic total order (score desc, ties to the lower id, NaN via
+//! `total_cmp`). The default mode is unquantized f32, which replays
+//! golden traces bit-identically; `benches/perf_retrieval.rs` measures
+//! all three mechanisms and gates regressions.
+//!
 //! Scoring runs either in pure Rust (`score_block`) or through the Pallas
 //! `retrieval_score` artifact (live mode; see `runtime::scorer`).
 
@@ -61,4 +74,4 @@ pub mod sharded;
 pub mod store;
 
 pub use sharded::{ShardParams, ShardedIndex};
-pub use store::{IvfIndex, IvfParams, SearchResult};
+pub use store::{dot_f32, IvfIndex, IvfParams, Quantization, SearchResult, Searcher, TopK, LANES};

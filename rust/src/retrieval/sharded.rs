@@ -122,11 +122,14 @@ impl ShardedIndex {
                         dim,
                         IvfParams {
                             n_lists: per_shard_lists,
-                            kmeans_iters: params.ivf.kmeans_iters,
                             // Decorrelate shard k-means runs while keeping
                             // the whole build a pure function of the seed.
                             seed: params.ivf.seed
                                 ^ (s as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                            // Quantization mode (and rerank factor) apply
+                            // per shard — each shard quantizes on its own
+                            // slice's per-dim min/max.
+                            ..params.ivf
                         },
                     ))
                 };
@@ -260,11 +263,12 @@ impl PartialOrd for HeapEntry {
 impl Ord for HeapEntry {
     fn cmp(&self, other: &Self) -> Ordering {
         // BinaryHeap is a max-heap: greater = popped first. Higher score
-        // wins; on ties the lower id wins.
-        self.score
-            .partial_cmp(&other.score)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| other.id.cmp(&self.id))
+        // wins; on ties the lower id wins. `total_cmp` keeps the order
+        // total under NaN scores (the old `partial_cmp().unwrap_or(Equal)`
+        // silently collapsed NaN entries into spurious "ties", scrambling
+        // the merge instead of ranking NaN deterministically above +inf
+        // like the per-shard bounded heap does).
+        self.score.total_cmp(&other.score).then_with(|| other.id.cmp(&self.id))
     }
 }
 
@@ -293,6 +297,7 @@ fn merge_topk(lists: &[&[SearchResult]], k: usize) -> Vec<SearchResult> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::retrieval::store::{dot_f32, Quantization};
     use crate::workload::corpus::Corpus;
 
     const DIM: usize = 32;
@@ -318,9 +323,7 @@ mod tests {
     /// Canonical ordering for comparison: (score desc, id asc). The
     /// single-index path may order equal scores arbitrarily.
     fn canon(mut r: Vec<SearchResult>) -> Vec<(usize, f32)> {
-        r.sort_by(|a, b| {
-            b.score.partial_cmp(&a.score).unwrap().then_with(|| a.id.cmp(&b.id))
-        });
+        r.sort_by(|a, b| b.score.total_cmp(&a.score).then_with(|| a.id.cmp(&b.id)));
         r.into_iter().map(|h| (h.id, h.score)).collect()
     }
 
@@ -372,7 +375,12 @@ mod tests {
                     b[..DIM].copy_from_slice(&a[src * DIM..(src + 1) * DIM]);
                 }
             }
-            let ivf = IvfParams { n_lists: g.usize(2, 32), kmeans_iters: 4, seed };
+            let ivf = IvfParams {
+                n_lists: g.usize(2, 32),
+                kmeans_iters: 4,
+                seed,
+                ..IvfParams::default()
+            };
             let single = IvfIndex::build(vectors.clone(), DIM, ivf);
             let sharded =
                 ShardedIndex::build(vectors.clone(), DIM, ShardParams { n_shards, ivf });
@@ -391,13 +399,12 @@ mod tests {
                     assert_eq!(a.1.to_bits(), b.1.to_bits(), "score mismatch at n={n} S={n_shards}");
                 }
                 // The id multisets must agree up to tie groups: every
-                // returned id must score exactly its returned score.
+                // returned id must score exactly its returned score
+                // (recomputed through the same blocked kernel the index
+                // uses — DIM is a LANES multiple, so the padded internal
+                // rows and these raw slices share one summation shape).
                 for &(id, score) in &got {
-                    let s: f32 = vectors[id * DIM..(id + 1) * DIM]
-                        .iter()
-                        .zip(&q)
-                        .map(|(x, y)| x * y)
-                        .sum();
+                    let s = dot_f32(&vectors[id * DIM..(id + 1) * DIM], &q);
                     assert_eq!(s.to_bits(), score.to_bits(), "stale id→score pair");
                 }
             }
@@ -504,6 +511,65 @@ mod tests {
         let sizes: Vec<usize> = (0..4).map(|s| idx.shard_len(s)).collect();
         assert_eq!(sizes.iter().sum::<usize>(), 101);
         assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1, "{sizes:?}");
+    }
+
+    #[test]
+    fn sq8_sharded_search_is_deterministic_and_sane() {
+        // Quantization threads through ShardParams: the sharded path must
+        // stay deterministic, and with a full budget + wide shortlist the
+        // exact rescoring pass makes it equal the f32 sharded search.
+        let n = 600;
+        let vectors = corpus_vectors(n, 0x5108);
+        let ivf = IvfParams {
+            quantization: Quantization::SQ8,
+            rerank_factor: n, // shortlist ⊇ candidates → exact
+            ..IvfParams::default()
+        };
+        let f32_idx = ShardedIndex::build(
+            vectors.clone(),
+            DIM,
+            ShardParams { n_shards: 4, ivf: IvfParams::default() },
+        );
+        let sq8_idx = ShardedIndex::build(vectors.clone(), DIM, ShardParams { n_shards: 4, ivf });
+        for q in queries_from(&vectors, 6) {
+            let want = f32_idx.search(&q, 8, n);
+            let got = sq8_idx.search(&q, 8, n);
+            assert_eq!(want.len(), got.len());
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.score.to_bits(), b.score.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn nan_scores_merge_without_panic_or_scramble() {
+        // A NaN query used to panic the merge comparator (or collapse NaN
+        // into fake ties under `unwrap_or(Equal)`). With total_cmp, NaN
+        // entries rank deterministically above all finite scores and the
+        // finite suffix keeps its order.
+        let vectors = corpus_vectors(300, 17);
+        let idx = ShardedIndex::build(
+            vectors.clone(),
+            DIM,
+            ShardParams { n_shards: 4, ivf: IvfParams::default() },
+        );
+        let mut q = vectors[..DIM].to_vec();
+        q[0] = f32::NAN;
+        let hits = idx.search(&q, 10, 300);
+        assert_eq!(hits.len(), 10, "NaN must not shrink the merged result set");
+        let ids: std::collections::HashSet<usize> = hits.iter().map(|h| h.id).collect();
+        assert_eq!(ids.len(), 10, "duplicate ids in merged NaN results");
+        let hits2 = idx.search(&q, 10, 300);
+        for (a, b) in hits.iter().zip(&hits2) {
+            assert_eq!(a.id, b.id, "NaN merge must be deterministic");
+        }
+        // Direct merge-level check: one NaN entry among finite lists.
+        let a = [SearchResult { id: 2, score: f32::NAN }, SearchResult { id: 5, score: 0.4 }];
+        let b = [SearchResult { id: 1, score: 0.9 }, SearchResult { id: 7, score: 0.1 }];
+        let merged = merge_topk(&[a.as_slice(), b.as_slice()], 4);
+        let ids: Vec<usize> = merged.iter().map(|h| h.id).collect();
+        assert_eq!(ids, vec![2, 1, 5, 7], "NaN ranks first, finite order preserved");
     }
 
     #[test]

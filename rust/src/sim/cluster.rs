@@ -51,8 +51,8 @@ pub const COLOCATION_SLOWDOWN: f64 = 1.005;
 /// deploy-time profiler does not depend on the simulator; re-exported
 /// here because the DES applies them to every sampled service time.
 pub use crate::profile::models::{
-    cache_service_factor, shard_service_factor, zipf_hit_rate, CACHE_HIT_COST_FRAC,
-    SHARD_MERGE_FRAC, SHARD_SERIAL_FRAC,
+    cache_service_factor, quantized_service_factor, shard_service_factor, zipf_hit_rate,
+    CACHE_HIT_COST_FRAC, QUANTIZED_SERVICE_FRAC, SHARD_MERGE_FRAC, SHARD_SERIAL_FRAC,
 };
 
 /// The cluster: a bag of machines plus placement bookkeeping.

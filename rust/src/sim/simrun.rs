@@ -1139,9 +1139,9 @@ impl SimWorld {
         let now = self.q.now();
         // Copy the per-visit scalars out of the spec instead of cloning
         // the whole `NodeSpec` (name + resource vec) on every batch.
-        let (shards, cache_hit_rate, degrade) = {
+        let (shards, cache_hit_rate, quantized, degrade) = {
             let spec = self.graph.node(node);
-            (spec.shards, spec.cache_hit_rate, spec.degrade)
+            (spec.shards, spec.cache_hit_rate, spec.quantized, spec.degrade)
         };
         let colocated = self.instances[node.0][pick].colocated;
         let model = LatencyModel::for_kind(&self.graph.node(node).kind);
@@ -1164,6 +1164,7 @@ impl SimWorld {
             let noise = model.noise(self.reqs[it.req].rng_mut(it.branch));
             let mut t = dcm.static_batch(&features, max_steps, b) * noise;
             t *= super::cluster::shard_service_factor(shards);
+            t *= super::cluster::quantized_service_factor(quantized);
             if self.draw_cache_hit(it.req, it.branch, cache_hit_rate) {
                 t *= CACHE_HIT_COST_FRAC;
             }
@@ -1220,9 +1221,9 @@ impl SimWorld {
     fn start_service(&mut self, req: usize, node: NodeId, pick: usize, item: QueuedItem) {
         let now = self.q.now();
         let branch = item.branch;
-        let (shards, cache_hit_rate, degrade, streamable) = {
+        let (shards, cache_hit_rate, quantized, degrade, streamable) = {
             let spec = self.graph.node(node);
-            (spec.shards, spec.cache_hit_rate, spec.degrade, spec.streamable)
+            (spec.shards, spec.cache_hit_rate, spec.quantized, spec.degrade, spec.streamable)
         };
         let (colocated, active) = {
             let i = &self.instances[node.0][pick];
@@ -1249,6 +1250,9 @@ impl SimWorld {
         };
         // Sharded components scatter-gather across parallel partitions.
         t *= super::cluster::shard_service_factor(shards);
+        // SQ8-quantized index scans run at the calibrated fraction of the
+        // f32 scan (factor exactly 1.0 when unquantized — the default).
+        t *= super::cluster::quantized_service_factor(quantized);
         // Modeled request cache: a `cache_hit_rate` fraction of visits is
         // served from the memoized embed→retrieve prefix at the hit cost.
         // Per-request sampling (not the mean factor) keeps the latency
@@ -1354,9 +1358,9 @@ impl SimWorld {
     fn start_prefill(&mut self, req: usize, node: NodeId, pick: usize, item: QueuedItem) {
         let now = self.q.now();
         let branch = item.branch;
-        let (shards, cache_hit_rate, degrade) = {
+        let (shards, cache_hit_rate, quantized, degrade) = {
             let spec = self.graph.node(node);
-            (spec.shards, spec.cache_hit_rate, spec.degrade)
+            (spec.shards, spec.cache_hit_rate, spec.quantized, spec.degrade)
         };
         let (colocated, active) = {
             let i = &self.instances[node.0][pick];
@@ -1369,6 +1373,7 @@ impl SimWorld {
         let noise = model.noise(self.reqs[req].rng_mut(branch));
         let mut t = base * noise;
         t *= super::cluster::shard_service_factor(shards);
+        t *= super::cluster::quantized_service_factor(quantized);
         if self.draw_cache_hit(req, branch, cache_hit_rate) {
             t *= CACHE_HIT_COST_FRAC;
         }
@@ -1817,13 +1822,14 @@ impl SimWorld {
         let mut total = 0.0;
         while cur != self.graph.sink && Some(cur) != stop && *hops < 1000 {
             *hops += 1;
-            let (shards, cache_hit_rate) = {
+            let (shards, cache_hit_rate, quantized) = {
                 let spec = self.graph.node(cur);
-                (spec.shards, spec.cache_hit_rate)
+                (spec.shards, spec.cache_hit_rate, spec.quantized)
             };
             let model = LatencyModel::for_kind(&self.graph.node(cur).kind);
             let mut t = model.sample(&features, self.reqs[req].rng_mut(0));
             t *= super::cluster::shard_service_factor(shards);
+            t *= super::cluster::quantized_service_factor(quantized);
             if self.draw_cache_hit(req, 0, cache_hit_rate) {
                 t *= CACHE_HIT_COST_FRAC;
             }

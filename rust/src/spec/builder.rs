@@ -63,6 +63,16 @@ impl<'a> ComponentBuilder<'a> {
         self
     }
 
+    /// Run the component's index scan scalar-quantized
+    /// (`retrieval::Quantization::SQ8`): u8 codes + exact rescoring in
+    /// place of the f32 scan. The DES and the profiler shrink its
+    /// service time by `profile::models::quantized_service_factor`;
+    /// the default `false` is an exact identity.
+    pub fn quantized(mut self, yes: bool) -> Self {
+        self.spec.quantized = yes;
+        self
+    }
+
     /// Declare which overload-degradation knob this component exposes
     /// (default: [`DegradeKnob::None`], never degraded). Acted on only
     /// when the control plane's `sched::DegradePolicy` is enabled.
@@ -132,6 +142,7 @@ impl PipelineBuilder {
             base_instances: 0,
             shards: 1,
             cache_hit_rate: 0.0,
+            quantized: false,
             degrade: DegradeKnob::None,
             join: None,
             resources: vec![],
@@ -174,6 +185,7 @@ impl PipelineBuilder {
             base_instances: 1,
             shards: 1,
             cache_hit_rate: 0.0,
+            quantized: false,
             degrade: DegradeKnob::None,
             join: None,
             resources: default_res,
@@ -304,6 +316,7 @@ mod tests {
             .base_instances(3)
             .shards(2)
             .cache_hit_rate(0.4)
+            .quantized(true)
             .degrade(DegradeKnob::CapIterations)
             .gamma(1.5)
             .streamable(true)
@@ -316,6 +329,7 @@ mod tests {
         assert_eq!(n.base_instances, 3);
         assert_eq!(n.shards, 2);
         assert_eq!(n.cache_hit_rate, 0.4);
+        assert!(n.quantized);
         assert_eq!(n.degrade, DegradeKnob::CapIterations);
         assert_eq!(n.gamma, 1.5);
         assert!(n.streamable);

@@ -240,6 +240,14 @@ pub struct NodeSpec {
     /// `profile::models::cache_service_factor`, so the LP priors and the
     /// autoscaler see cache-adjusted α.
     pub cache_hit_rate: f64,
+    /// Whether this component's index scan runs scalar-quantized
+    /// (`retrieval::Quantization::SQ8`: u8 codes + exact rescoring)
+    /// instead of full f32. Applied by the profiler and the DES through
+    /// `profile::models::quantized_service_factor`, so LP priors and
+    /// simulated telemetry price the cheaper scan consistently. `false`
+    /// (the default) is an exact identity — golden traces replay
+    /// bit-identically.
+    pub quantized: bool,
     /// Overload-degradation knob (see [`DegradeKnob`]); `None` for
     /// components that must always run at full fidelity.
     pub degrade: DegradeKnob,
@@ -1086,6 +1094,7 @@ mod tests {
             base_instances: 1,
             shards: 1,
             cache_hit_rate: 0.0,
+            quantized: false,
             degrade: DegradeKnob::None,
             join: None,
             resources: vec![(ResourceKind::Cpu, 1.0)],
