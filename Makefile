@@ -6,7 +6,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test test-fast lint fmt clippy doc verify artifacts bench bench-shards bench-cache bench-overload bench-batching bench-parallel bench-disagg bench-perf bench-perf-smoke bench-retrieval bench-retrieval-smoke bench-smoke clean
+.PHONY: all build test test-fast lint fmt clippy doc verify artifacts bench bench-shards bench-cache bench-overload bench-batching bench-parallel bench-disagg bench-perf bench-perf-smoke bench-retrieval bench-retrieval-smoke bench-smoke bench-passes graph-dot clean
 
 all: build
 
@@ -69,6 +69,11 @@ bench-parallel:
 bench-disagg:
 	$(CARGO) bench --bench fig08_disaggregation
 
+# The spec-compiler rewrite-pass bench only (fig10 extension):
+# speculative prefetch vs the serial hybrid chain at equal allocation.
+bench-passes:
+	$(CARGO) bench --bench fig10_rewrite_passes
+
 # DES core perf: 10M simulated requests through the calendar-queue event
 # loop; writes BENCH_des.json and gates against benches/baselines/.
 bench-perf:
@@ -98,6 +103,12 @@ bench-smoke:
 	$(CARGO) bench --bench fig06_continuous_batching -- --smoke
 	$(CARGO) bench --bench fig07_parallel_dataflow -- --smoke
 	$(CARGO) bench --bench fig08_disaggregation -- --smoke
+	$(CARGO) bench --bench fig10_rewrite_passes -- --smoke
+
+# Render every registered app spec to Graphviz DOT under target/dot/,
+# with LP instance counts and modeled per-stage latencies overlaid.
+graph-dot:
+	$(CARGO) run --release -- dot target/dot
 
 clean:
 	$(CARGO) clean

@@ -179,21 +179,24 @@ impl<'a> FlowProblem<'a> {
         // instances. We use the Leontief form instead: one constraint per
         // demanded resource, Σ_u f_{u,i} ≤ α_{i,k} r_{i,k} ∀k, which
         // keeps the model linear and forces proportional bundles.
-        // Join inflow scales (1/branches at barriers, 1 elsewhere),
-        // resolved once for both the capacity and conservation rows.
-        let join_scales = g.join_scales();
+        // Join inflow scales (1/branches at barriers, 1 elsewhere) and
+        // the in-edge index both come from the shared analysis bundle,
+        // resolved once for the capacity and conservation rows.
+        // `Adjacency` returns edge indices in declaration order — the
+        // same order the old per-row edge scans produced — so the LP it
+        // builds is bit-identical to the pre-analysis formulation.
+        let az = g.analyze();
         let mut h_vars: HashMap<NodeId, crate::lp::model::Var> = HashMap::new();
         for node in g.work_nodes() {
             // Join nodes: the barrier merges `branches` sibling arrivals
             // into one request, so the workload each unit of capacity
             // must absorb is the scaled inflow.
-            let in_scale = join_scales[node.id.0];
-            let inflow: Vec<_> = g
-                .edges
+            let in_scale = az.join_scales[node.id.0];
+            let inflow: Vec<_> = az
+                .adj
+                .in_edges(node.id)
                 .iter()
-                .enumerate()
-                .filter(|(_, e)| e.to == node.id)
-                .map(|(i, _)| (f_vars[i], in_scale))
+                .map(|&i| (f_vars[i], in_scale))
                 .collect();
             if inflow.is_empty() {
                 continue;
@@ -280,12 +283,10 @@ impl<'a> FlowProblem<'a> {
                 m.constrain(vec![(f_vars[i], 1.0), (lambda, -p)], Sense::Eq, 0.0);
             } else {
                 let gamma = self.profile.gamma.get(&e.from).copied().unwrap_or(1.0);
-                let in_scale = join_scales[e.from.0];
+                let in_scale = az.join_scales[e.from.0];
                 let mut terms = vec![(f_vars[i], 1.0)];
-                for (j, e2) in g.edges.iter().enumerate() {
-                    if e2.to == e.from {
-                        terms.push((f_vars[j], -p * gamma * in_scale));
-                    }
+                for &j in az.adj.in_edges(e.from) {
+                    terms.push((f_vars[j], -p * gamma * in_scale));
                 }
                 m.constrain(terms, Sense::Eq, 0.0);
             }
@@ -706,6 +707,29 @@ mod tests {
             .map(|(i, _)| plan.edge_flows[i])
             .sum();
         assert!((inflow - outflow).abs() < 1e-6 * inflow.max(1.0));
+    }
+
+    #[test]
+    fn lp_edge_flows_match_the_analysis_flow_table() {
+        // One flow computation, two consumers: the LP's per-edge optimum
+        // must equal λ × the analysis layer's unit edge flows wherever
+        // the profiled edge probabilities are exact (no conditionals —
+        // fork and unit-probability edges profile to exactly 1.0, so the
+        // two derivations share identical inputs).
+        for name in ["v-rag", "hybrid-rag", "mq-rag"] {
+            let g = apps::by_name(name).unwrap();
+            let az = g.analyze();
+            let plan = plan_for(&g, 2000, 21);
+            let lambda = plan.throughput;
+            assert!(lambda > 0.0, "{name}");
+            for (i, f) in plan.edge_flows.iter().enumerate() {
+                let want = lambda * az.edge_flows[i];
+                assert!(
+                    (f - want).abs() < 1e-6 * lambda,
+                    "{name} edge {i}: LP {f} vs λ·analysis {want}"
+                );
+            }
+        }
     }
 
     #[test]

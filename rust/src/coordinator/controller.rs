@@ -335,10 +335,10 @@ fn controller_loop(lp: ControllerLoop) {
     let total_slots: usize = workers.values().map(|v| v.len() * WORKER_SLOTS).sum();
     let stateful_map: HashMap<NodeId, bool> =
         graph.nodes.iter().map(|n| (n.id, n.stateful)).collect();
-    // Fork node → resolved group (branch entries + join + barrier
-    // policy); the controller dispatches ALL fork successors at once and
-    // merges their `Done`s at the join cell.
-    let fork_map = graph.fork_groups();
+    // Dense fork index from the spec compiler (branch entries + join +
+    // barrier policy per fork node); the controller dispatches ALL fork
+    // successors at once and merges their `Done`s at the join cell.
+    let fork_map = graph.analyze().fork_map;
     let dispatch = |req: u64,
                     node: NodeId,
                     branch: u32,
@@ -443,7 +443,7 @@ fn controller_loop(lp: ControllerLoop) {
                 );
                 // A fork at the pipeline entry fans out immediately
                 // (hybrid retrieval: dense ∥ web from the first hop).
-                if let Some(fg) = fork_map.get(&graph.source) {
+                if let Some(fg) = fork_map[graph.source.0].as_ref() {
                     let fl = inflight.get_mut(&req).expect("just inserted");
                     let mut cell = LiveJoin::new(fg);
                     let mut spawned = Vec::with_capacity(fg.targets.len());
@@ -487,7 +487,7 @@ fn controller_loop(lp: ControllerLoop) {
                 // Parallel fan-out: a fork node's completion dispatches
                 // EVERY branch at once, each tagged with its own branch
                 // id and reporting to a fresh join cell.
-                if let Some(fg) = fork_map.get(&d.node) {
+                if let Some(fg) = fork_map[d.node.0].as_ref() {
                     let mut cell = LiveJoin::new(fg);
                     let mut spawned = Vec::with_capacity(fg.targets.len());
                     for &target in &fg.targets {

@@ -6,20 +6,38 @@
 //!   sim <app> <system> ...   paper-scale cluster simulation
 //!   plan <app>               print the LP allocation plan (§3.2)
 //!   apps                     list the reference RAG applications
+//!   dot [out-dir]            render every registered app to Graphviz DOT
+//!                            with LP allocations + modeled latencies
 
 use std::io::BufRead;
 
 use harmonia::alloc::flow::{paper_cluster_budgets, plan_for};
 use harmonia::coordinator::controller::{deploy, ControllerConfig};
+use harmonia::profile::profile_graph;
 use harmonia::runtime::{artifacts_available, default_artifacts_dir};
 use harmonia::sim::{run_point, SystemKind};
-use harmonia::spec::apps;
+use harmonia::spec::{apps, to_dot_with, DotOverlay};
+
+/// Every app registered in `apps::by_name`, in presentation order.
+const REGISTERED_APPS: [&str; 10] = [
+    "v-rag",
+    "v-rag-sharded",
+    "v-rag-cached",
+    "c-rag",
+    "s-rag",
+    "a-rag",
+    "hybrid-rag",
+    "hybrid-rag-seq",
+    "mq-rag",
+    "mq-rag-seq",
+];
 
 const USAGE: &str = "usage:
   harmonia apps
   harmonia plan  <v-rag|c-rag|s-rag|a-rag|hybrid-rag|mq-rag|...>
   harmonia sim   <app> <harmonia|langchain|haystack> [rate] [n]
-  harmonia serve <app>            (requires `make artifacts`)";
+  harmonia serve <app>            (requires `make artifacts`)
+  harmonia dot   [out-dir]        (default target/dot)";
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -97,6 +115,45 @@ fn main() -> anyhow::Result<()> {
                 }
             }
             h.shutdown();
+        }
+        Some("dot") => {
+            let out = args.get(1).map(|s| s.as_str()).unwrap_or("target/dot");
+            std::fs::create_dir_all(out)?;
+            for name in REGISTERED_APPS {
+                let g = apps::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown app {name}"))?;
+                let plan = plan_for(&g, 2000, 0);
+                let profile = profile_graph(&g, 2000, 0);
+                let overlay = DotOverlay {
+                    instances: g
+                        .nodes
+                        .iter()
+                        .map(|n| {
+                            if n.id == g.source || n.id == g.sink {
+                                None
+                            } else {
+                                Some(plan.instances(n.id))
+                            }
+                        })
+                        .collect(),
+                    modeled_ms: g
+                        .nodes
+                        .iter()
+                        .map(|n| {
+                            profile
+                                .mean_service
+                                .get(&n.id)
+                                .copied()
+                                .filter(|&m| m > 0.0)
+                                .map(|m| m * 1000.0)
+                        })
+                        .collect(),
+                    measured_ms: vec![None; g.nodes.len()],
+                };
+                let path = format!("{out}/{name}.dot");
+                std::fs::write(&path, to_dot_with(&g, &overlay))?;
+                println!("wrote {path}");
+            }
+            println!("render with: dot -Tsvg {out}/<app>.dot -o <app>.svg");
         }
         _ => println!("{USAGE}"),
     }

@@ -99,24 +99,25 @@ impl Profile {
     }
 }
 
-/// The sampling walk's shared state: graph indexes (adjacency + resolved
-/// fork groups, built once per profile instead of per hop) and the
-/// accumulators the walk fills.
+/// The sampling walk's shared state: graph indexes from the spec
+/// compiler's `AnalyzedGraph` (adjacency + dense fork map, built once
+/// per profile instead of per hop) and the accumulators the walk fills.
+/// Everything is `NodeId.0`-indexed — no hashing on the per-hop path.
 struct ProfileWalk<'a> {
     graph: &'a PipelineGraph,
     adj: Adjacency,
-    fork_groups: HashMap<NodeId, ForkGroup>,
+    fork_map: Vec<Option<ForkGroup>>,
     trace_cfg: TraceConfig,
     dcm: DecodeCostModel,
     gen: GenBatching,
     gen_occupancy: usize,
-    service_sums: HashMap<NodeId, (f64, usize)>,
+    service_sums: Vec<(f64, usize)>,
     /// Generator-only (prefill, decode, prompt-token) sums — the same
     /// sampled service split by the noise-free cost ratio, so the split
     /// consumes no rng draws and sums exactly to `service_sums`.
-    split_sums: HashMap<NodeId, (f64, f64, f64)>,
+    split_sums: Vec<(f64, f64, f64)>,
     edge_counts: Vec<usize>,
-    node_exits: HashMap<NodeId, usize>,
+    node_exits: Vec<usize>,
     hops: usize,
 }
 
@@ -181,7 +182,7 @@ impl ProfileWalk<'_> {
             if node.cache_hit_rate > 0.0 && rng.chance(node.cache_hit_rate) {
                 t *= crate::profile::models::CACHE_HIT_COST_FRAC;
             }
-            let e = self.service_sums.entry(cur).or_insert((0.0, 0));
+            let e = &mut self.service_sums[cur.0];
             e.0 += t;
             e.1 += 1;
             // Generator visits: attribute the sampled service to the
@@ -202,7 +203,7 @@ impl ProfileWalk<'_> {
                     model.mean(feats)
                 };
                 let pf = (prefill_mean / total.max(1e-12)).clamp(0.0, 1.0);
-                let s = self.split_sums.entry(cur).or_insert((0.0, 0.0, 0.0));
+                let s = &mut self.split_sums[cur.0];
                 let p_part = t * pf;
                 s.0 += p_part;
                 s.1 += t - p_part;
@@ -212,12 +213,12 @@ impl ProfileWalk<'_> {
             // the join. Each fork edge fires once per traversal while
             // the node exits once — the empirical branch "probability"
             // the LP sees is exactly 1 per branch (full flow).
-            if let Some(fg) = self.fork_groups.get(&cur) {
+            if let Some(fg) = self.fork_map[cur.0].as_ref() {
                 let fg = fg.clone();
                 for &ei in &fg.edges {
                     self.edge_counts[ei] += 1;
                 }
-                *self.node_exits.entry(cur).or_insert(0) += 1;
+                self.node_exits[cur.0] += 1;
                 for &entry in &fg.targets {
                     self.segment(rng, feats, entry, Some(fg.join));
                 }
@@ -232,7 +233,7 @@ impl ProfileWalk<'_> {
             let weights: Vec<f64> = edges.iter().map(|&i| self.graph.edges[i].prob()).collect();
             let pick = edges[rng.weighted(&weights)];
             self.edge_counts[pick] += 1;
-            *self.node_exits.entry(cur).or_insert(0) += 1;
+            self.node_exits[cur.0] += 1;
             cur = self.graph.edges[pick].to;
         }
     }
@@ -275,18 +276,21 @@ pub fn profile_graph_gen_at(
     gen_occupancy: usize,
 ) -> Profile {
     let mut rng = Rng::new(seed);
+    // One analysis pass supplies both the adjacency index and the dense
+    // fork map; the walk itself allocates its accumulators per node id.
+    let az = graph.analyze();
     let mut walk = ProfileWalk {
         graph,
-        adj: graph.adjacency(),
-        fork_groups: graph.fork_groups(),
+        adj: az.adj,
+        fork_map: az.fork_map,
         trace_cfg: TraceConfig::default(),
         dcm: DecodeCostModel::generator(),
         gen,
         gen_occupancy,
-        service_sums: HashMap::new(),
-        split_sums: HashMap::new(),
+        service_sums: vec![(0.0, 0); graph.nodes.len()],
+        split_sums: vec![(0.0, 0.0, 0.0); graph.nodes.len()],
         edge_counts: vec![0usize; graph.edges.len()],
-        node_exits: HashMap::new(),
+        node_exits: vec![0usize; graph.nodes.len()],
         hops: 0,
     };
 
@@ -304,20 +308,19 @@ pub fn profile_graph_gen_at(
     let mut alpha = HashMap::new();
     let mut gen_split = HashMap::new();
     for node in &graph.nodes {
-        let (sum, cnt) = service_sums.get(&node.id).copied().unwrap_or((0.0, 0));
+        let (sum, cnt) = service_sums[node.id.0];
         let mean = if cnt > 0 { sum / cnt as f64 } else { 0.0 };
         mean_service.insert(node.id, mean);
-        if let Some(&(p, d, tok)) = split_sums.get(&node.id) {
-            if cnt > 0 {
-                gen_split.insert(
-                    node.id,
-                    GenSplit {
-                        prefill: p / cnt as f64,
-                        decode: d / cnt as f64,
-                        prompt_tokens: tok / cnt as f64,
-                    },
-                );
-            }
+        if matches!(node.kind, ComponentKind::Generator) && cnt > 0 {
+            let (p, d, tok) = split_sums[node.id.0];
+            gen_split.insert(
+                node.id,
+                GenSplit {
+                    prefill: p / cnt as f64,
+                    decode: d / cnt as f64,
+                    prompt_tokens: tok / cnt as f64,
+                },
+            );
         }
         if mean > 0.0 {
             let conc = instance_concurrency(&node.kind) as f64;
@@ -337,7 +340,7 @@ pub fn profile_graph_gen_at(
         .iter()
         .enumerate()
         .map(|(i, e)| {
-            let exits = node_exits.get(&e.from).copied().unwrap_or(0);
+            let exits = node_exits[e.from.0];
             if exits == 0 {
                 e.prob() // unvisited: keep prior (1.0 for fork edges)
             } else {

@@ -50,8 +50,10 @@ impl SlackPredictor {
     pub fn new(graph: &PipelineGraph, priors: &HashMap<NodeId, f64>) -> Self {
         let n = graph.nodes.len();
         // Critical-branch edge weights under the deploy-time priors
-        // (identical to raw probabilities for fork-free graphs).
-        let weights = graph.latency_edge_weights(priors);
+        // (identical to raw probabilities for fork-free graphs), computed
+        // on the shared analysis bundle's fork index.
+        let az = graph.analyze();
+        let weights = az.latency_edge_weights(graph, priors);
         let mut expected_visits = vec![vec![0.0; n]; n];
         for start in 0..n {
             expected_visits[start] = visits_from(graph, &weights, NodeId(start));

@@ -554,10 +554,10 @@ impl SimWorld {
             10.0,
         );
         let n_nodes = graph.nodes.len();
-        let mut fork_map: Vec<Option<ForkGroup>> = vec![None; n_nodes];
-        for (id, fg) in graph.fork_groups() {
-            fork_map[id.0] = Some(fg);
-        }
+        // One analysis pass supplies the DES's dispatch indices: the
+        // adjacency (per-hop branch sampling) and the dense fork map.
+        let az = graph.analyze();
+        let (adj, fork_map) = (az.adj, az.fork_map);
         let (prefill_names, decode_names) = if cfg.gen_placement == GenPlacement::Disaggregated
         {
             (
@@ -577,7 +577,7 @@ impl SimWorld {
             cluster,
             stream_policy: StreamPolicy::default(),
             node_queues: (0..n_nodes).map(|_| PrioQueue::new(discipline)).collect(),
-            adj: graph.adjacency(),
+            adj,
             fork_map,
             route_states: Vec::new(),
             prefill_names,

@@ -1,0 +1,731 @@
+//! Index-first analysis core: the compiler layer over [`PipelineGraph`].
+//!
+//! `spec::graph` accumulated ad-hoc traversals — `fork_groups()` rebuilt
+//! as a `HashMap` on demand, `visit_rates`/`latency_edge_weights`
+//! re-walking the edge list, validation re-deriving reachability — and
+//! every downstream layer (LP construction, profiler walks, DES
+//! dispatch, the live controller) paid for its own copy. This module
+//! builds, **once per graph**, an [`AnalyzedGraph`] bundle of dense
+//! `Vec`-indexed tables that all of them share:
+//!
+//! * cached [`Adjacency`] (out/in edge indices, declaration order),
+//! * a topological order over the forward (non-back) edges,
+//! * dominator and post-dominator trees of the DAG backbone,
+//! * a fork-**region tree** ([`ForkRegion`]) replacing the on-demand
+//!   `fork_groups()` HashMap with node-indexed regions,
+//! * per-node join scales and visit rates, per-edge flow fractions.
+//!
+//! The numeric kernels (`visit_rates_with`, `edge_flows_from`,
+//! `latency_edge_weights_from`) are the *same* fixed points the graph
+//! methods used to own — `PipelineGraph::visit_rates()` et al. now
+//! delegate here, so legacy callers and `AnalyzedGraph` consumers read
+//! literally the same table and golden traces replay bit-identically.
+
+use std::collections::HashMap;
+
+use super::graph::{Adjacency, ForkGroup, JoinPolicy, NodeId, PipelineGraph};
+
+/// One fork/join region resolved on the DAG backbone: the fork node, its
+/// join, and the set of branch-interior nodes (the join itself is
+/// excluded — it runs once, after the barrier). Regions form a tree:
+/// `parent` points at the innermost enclosing region when forks nest.
+#[derive(Clone, Debug)]
+pub struct ForkRegion {
+    pub fork: NodeId,
+    pub join: NodeId,
+    /// Node-indexed membership of the branch interiors (union over all
+    /// branches; join excluded).
+    pub members: Vec<bool>,
+    /// Index (into [`AnalyzedGraph::regions`]) of the innermost region
+    /// that contains this region's fork node, if any.
+    pub parent: Option<usize>,
+}
+
+/// Dense per-graph analysis bundle, built once by
+/// [`PipelineGraph::analyze`] and shared by every consumer that used to
+/// re-derive its own traversal state:
+///
+/// * `alloc::flow` reads `join_scales` and the adjacency for its
+///   capacity/conservation rows,
+/// * the profiler's sampling walk indexes `fork_map` per hop,
+/// * `sched::SlackPredictor` prices remaining work off the critical-path
+///   edge weights,
+/// * the DES and the live controller drive fork dispatch / join barriers
+///   off `fork_map`,
+/// * `spec::passes` rewrites consult the region tree, and
+/// * `spec::export` overlays the tables onto DOT output.
+///
+/// All tables are indexed by `NodeId.0` (nodes) or edge-declaration
+/// index (edges). Construction is best-effort on unvalidated graphs,
+/// mirroring `fork_groups()`: forks whose join cannot be resolved are
+/// simply absent from `fork_map` — `validate()` rejects such graphs with
+/// a precise error.
+#[derive(Clone, Debug)]
+pub struct AnalyzedGraph {
+    /// Out/in edge indices per node, edge-declaration order.
+    pub adj: Adjacency,
+    /// Topological order over forward (non-back) edges. On graphs whose
+    /// forward edges contain a cycle (invalid; caught by `validate()`)
+    /// the stranded nodes are appended in id order.
+    pub topo: Vec<NodeId>,
+    /// Immediate dominator per node on the forward-edge DAG from
+    /// `source` (`None` for the source itself and for nodes not
+    /// forward-reachable from it).
+    pub idom: Vec<Option<NodeId>>,
+    /// Immediate post-dominator per node (forward-edge DAG walked
+    /// backwards from `sink`).
+    pub ipdom: Vec<Option<NodeId>>,
+    /// Dense fork index: `fork_map[n]` is the [`ForkGroup`] whose fork
+    /// node is `n`, if any. Replaces `fork_groups()`'s on-demand
+    /// `HashMap` in every hot path.
+    pub fork_map: Vec<Option<ForkGroup>>,
+    /// The fork-region tree (one entry per resolved fork, node order).
+    pub regions: Vec<ForkRegion>,
+    /// Region index owned by a fork node, if it is one.
+    pub fork_region_of: Vec<Option<usize>>,
+    /// Region index a join node reconverges, if it is one.
+    pub join_region_of: Vec<Option<usize>>,
+    /// Per-node inflow scale: 1/branches at joins, 1.0 elsewhere (see
+    /// `PipelineGraph::join_scales`).
+    pub join_scales: Vec<f64>,
+    /// Expected visits per admitted request, per node.
+    pub visit_rates: Vec<f64>,
+    /// Flow fraction per edge (visit rate of `from` × γ × edge prob).
+    pub edge_flows: Vec<f64>,
+}
+
+impl AnalyzedGraph {
+    /// Build every index for `g`. O(V·E) worst case, run once per
+    /// deploy/plan/simulation — never per request.
+    pub fn new(g: &PipelineGraph) -> AnalyzedGraph {
+        let n = g.nodes.len();
+        let adj = Adjacency::new(g);
+        let fork_map = fork_groups_dense(g, &adj);
+        let join_scales = join_scales_from(g, &fork_map);
+        let visit_rates = visit_rates_with(g, &join_scales);
+        let edge_flows = edge_flows_from(g, &visit_rates);
+        let topo = topo_order(g, &adj);
+        let idom = dominator_tree(g, &adj, g.source, false);
+        let ipdom = dominator_tree(g, &adj, g.sink, true);
+
+        let mut regions: Vec<ForkRegion> = Vec::new();
+        let mut fork_region_of = vec![None; n];
+        let mut join_region_of = vec![None; n];
+        for fg in fork_map.iter().flatten() {
+            let mut members = vec![false; n];
+            for &t in &fg.targets {
+                let r = forward_reachable(g, &adj, t, Some(fg.join));
+                for (i, &in_r) in r.iter().enumerate() {
+                    if in_r && i != fg.join.0 {
+                        members[i] = true;
+                    }
+                }
+            }
+            let idx = regions.len();
+            fork_region_of[fg.fork.0] = Some(idx);
+            join_region_of[fg.join.0] = Some(idx);
+            regions.push(ForkRegion { fork: fg.fork, join: fg.join, members, parent: None });
+        }
+        // Parent links: the innermost (smallest) region whose interior
+        // contains this region's fork node.
+        for i in 0..regions.len() {
+            let mut best: Option<usize> = None;
+            for j in 0..regions.len() {
+                if i == j || !regions[j].members[regions[i].fork.0] {
+                    continue;
+                }
+                best = Some(match best {
+                    None => j,
+                    Some(b) => {
+                        let cb = regions[b].members.iter().filter(|&&x| x).count();
+                        let cj = regions[j].members.iter().filter(|&&x| x).count();
+                        if cj < cb {
+                            j
+                        } else {
+                            b
+                        }
+                    }
+                });
+            }
+            regions[i].parent = best;
+        }
+
+        AnalyzedGraph {
+            adj,
+            topo,
+            idom,
+            ipdom,
+            fork_map,
+            regions,
+            fork_region_of,
+            join_region_of,
+            join_scales,
+            visit_rates,
+            edge_flows,
+        }
+    }
+
+    /// The fork group rooted at `id`, if `id` is a resolved fork node.
+    pub fn fork_group(&self, id: NodeId) -> Option<&ForkGroup> {
+        self.fork_map[id.0].as_ref()
+    }
+
+    /// Inflow scale of `id` (1/branches at a join, 1.0 elsewhere).
+    pub fn join_scale(&self, id: NodeId) -> f64 {
+        self.join_scales[id.0]
+    }
+
+    /// Critical-path latency weights over this graph's fork index (see
+    /// `PipelineGraph::latency_edge_weights`).
+    pub fn latency_edge_weights(
+        &self,
+        g: &PipelineGraph,
+        node_cost: &HashMap<NodeId, f64>,
+    ) -> Vec<f64> {
+        latency_edge_weights_from(g, &self.fork_map, node_cost)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared traversal kernels. These are the former `PipelineGraph` private
+// helpers and numeric methods, moved here verbatim so the delegating
+// graph methods and the dense tables compute bit-identical values.
+// ---------------------------------------------------------------------------
+
+/// Nodes forward-reachable from `start` (inclusive), stopping at
+/// `absorb` (the absorbing node is included but not expanded). Back
+/// edges are never followed.
+pub(crate) fn forward_reachable(
+    g: &PipelineGraph,
+    adj: &Adjacency,
+    start: NodeId,
+    absorb: Option<NodeId>,
+) -> Vec<bool> {
+    let mut reach = vec![false; g.nodes.len()];
+    let mut stack = vec![start];
+    reach[start.0] = true;
+    while let Some(u) = stack.pop() {
+        if Some(u) == absorb {
+            continue;
+        }
+        for &ei in adj.out_edges(u) {
+            let e = &g.edges[ei];
+            if !e.back_edge && !reach[e.to.0] {
+                reach[e.to.0] = true;
+                stack.push(e.to);
+            }
+        }
+    }
+    reach
+}
+
+/// The join node a fork's branches reconverge at: the join-annotated
+/// node forward-reachable from the most branches, nearest to the fork
+/// on ties. `None` when no branch reaches any join.
+pub(crate) fn resolve_join(
+    g: &PipelineGraph,
+    adj: &Adjacency,
+    targets: &[NodeId],
+) -> Option<NodeId> {
+    let reach: Vec<Vec<bool>> =
+        targets.iter().map(|&t| forward_reachable(g, adj, t, None)).collect();
+    let mut best: Option<(usize, usize, NodeId)> = None; // (branches, -depth proxy, id)
+    for n in &g.nodes {
+        if n.join.is_none() {
+            continue;
+        }
+        let hit = reach.iter().filter(|r| r[n.id.0]).count();
+        if hit == 0 {
+            continue;
+        }
+        // Depth proxy: min BFS depth from any branch target.
+        let depth = min_depth(g, adj, targets, n.id);
+        let cand = (hit, depth, n.id);
+        best = Some(match best {
+            None => cand,
+            Some(b) => {
+                if cand.0 > b.0 || (cand.0 == b.0 && cand.1 < b.1) {
+                    cand
+                } else {
+                    b
+                }
+            }
+        });
+    }
+    best.map(|(_, _, id)| id)
+}
+
+fn min_depth(g: &PipelineGraph, adj: &Adjacency, starts: &[NodeId], goal: NodeId) -> usize {
+    use std::collections::VecDeque;
+    let mut dist = vec![usize::MAX; g.nodes.len()];
+    let mut q = VecDeque::new();
+    for &s in starts {
+        dist[s.0] = 0;
+        q.push_back(s);
+    }
+    while let Some(u) = q.pop_front() {
+        if u == goal {
+            return dist[u.0];
+        }
+        for &ei in adj.out_edges(u) {
+            let e = &g.edges[ei];
+            if !e.back_edge && dist[e.to.0] == usize::MAX {
+                dist[e.to.0] = dist[u.0] + 1;
+                q.push_back(e.to);
+            }
+        }
+    }
+    usize::MAX
+}
+
+/// Resolve every fork node to its [`ForkGroup`], dense by fork node id.
+/// Same best-effort semantics as the legacy `fork_groups()` HashMap:
+/// forks whose join cannot be resolved are left `None`.
+pub fn fork_groups_dense(g: &PipelineGraph, adj: &Adjacency) -> Vec<Option<ForkGroup>> {
+    let mut groups: Vec<Option<ForkGroup>> = vec![None; g.nodes.len()];
+    for n in &g.nodes {
+        let edges: Vec<usize> = adj
+            .out_edges(n.id)
+            .iter()
+            .copied()
+            .filter(|&i| g.edges[i].is_fork())
+            .collect();
+        if edges.is_empty() {
+            continue;
+        }
+        let targets: Vec<NodeId> = edges.iter().map(|&i| g.edges[i].to).collect();
+        let Some(join) = resolve_join(g, adj, &targets) else { continue };
+        let spec = g.node(join).join.expect("resolved join is annotated");
+        groups[n.id.0] = Some(ForkGroup {
+            fork: n.id,
+            join,
+            need: spec.need(targets.len()),
+            targets,
+            edges,
+            policy: spec.policy,
+            merge: spec.merge,
+        });
+    }
+    groups
+}
+
+/// Per-node inflow scales from a dense fork index: 1/branches at each
+/// resolved join, 1.0 everywhere else.
+pub fn join_scales_from(g: &PipelineGraph, fork_map: &[Option<ForkGroup>]) -> Vec<f64> {
+    let mut s = vec![1.0; g.nodes.len()];
+    for fg in fork_map.iter().flatten() {
+        s[fg.join.0] = 1.0 / fg.targets.len().max(1) as f64;
+    }
+    s
+}
+
+/// The visits fixed point v_j = [j==source] + Σ_i v_i γ_i w_{i,j} s_j
+/// with per-node inflow scales `scale` (see
+/// `PipelineGraph::visit_rates`). Edges are folded in declaration
+/// order; converges for sub-stochastic loops.
+pub fn visit_rates_with(g: &PipelineGraph, scale: &[f64]) -> Vec<f64> {
+    let n = g.nodes.len();
+    let mut v = vec![0.0f64; n];
+    v[g.source.0] = 1.0;
+    for _ in 0..10_000 {
+        let mut nv = vec![0.0f64; n];
+        nv[g.source.0] = 1.0;
+        for e in &g.edges {
+            let s = if e.back_edge { 1.0 } else { scale[e.to.0] };
+            nv[e.to.0] += v[e.from.0] * g.node(e.from).gamma * e.prob() * s;
+        }
+        let diff: f64 = nv.iter().zip(&v).map(|(a, b)| (a - b).abs()).sum();
+        v = nv;
+        if diff < 1e-12 {
+            break;
+        }
+    }
+    v
+}
+
+/// Per-edge flow fractions from a visit-rate table: visit rate of
+/// `from` × γ × edge flow fraction, edge-declaration order. This is THE
+/// flow table — `PipelineGraph::edge_flows()`, the LP's conservation
+/// rows, and the DES all consume it (directly or via delegation).
+pub fn edge_flows_from(g: &PipelineGraph, visit_rates: &[f64]) -> Vec<f64> {
+    g.edges
+        .iter()
+        .map(|e| visit_rates[e.from.0] * g.node(e.from).gamma * e.prob())
+        .collect()
+}
+
+/// Expected prior cost of one branch: visits fixed point from the
+/// branch entry with the join absorbing, dotted with `node_cost`.
+pub(crate) fn branch_cost(
+    g: &PipelineGraph,
+    entry: NodeId,
+    join: NodeId,
+    node_cost: &HashMap<NodeId, f64>,
+) -> f64 {
+    let n = g.nodes.len();
+    let mut v = vec![0.0f64; n];
+    v[entry.0] = 1.0;
+    for _ in 0..10_000 {
+        let mut nv = vec![0.0f64; n];
+        nv[entry.0] = 1.0;
+        for e in &g.edges {
+            if e.from == join {
+                continue; // absorb at the join
+            }
+            nv[e.to.0] += v[e.from.0] * g.node(e.from).gamma * e.prob();
+        }
+        let diff: f64 = nv.iter().zip(&v).map(|(a, b)| (a - b).abs()).sum();
+        v = nv;
+        if diff < 1e-12 {
+            break;
+        }
+    }
+    v.iter()
+        .enumerate()
+        .filter(|&(i, _)| NodeId(i) != join)
+        .map(|(i, &vi)| vi * node_cost.get(&NodeId(i)).copied().unwrap_or(0.0))
+        .sum()
+}
+
+/// Critical-path latency weights from a dense fork index: `Route(p)`
+/// edges keep p; within each fork group the critical branch (costliest
+/// for `All`, k-th fastest for `FirstK(k)`) carries 1 and siblings 0
+/// (see `PipelineGraph::latency_edge_weights`).
+pub fn latency_edge_weights_from(
+    g: &PipelineGraph,
+    fork_map: &[Option<ForkGroup>],
+    node_cost: &HashMap<NodeId, f64>,
+) -> Vec<f64> {
+    let mut w: Vec<f64> = g.edges.iter().map(|e| e.prob()).collect();
+    for fg in fork_map.iter().flatten() {
+        // Rank branches by prior path cost (entry → join).
+        let mut costs: Vec<(usize, f64)> = fg
+            .targets
+            .iter()
+            .enumerate()
+            .map(|(bi, &t)| (bi, branch_cost(g, t, fg.join, node_cost)))
+            .collect();
+        costs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+        let critical = match fg.policy {
+            JoinPolicy::All => costs.last().map(|&(bi, _)| bi).unwrap_or(0),
+            JoinPolicy::FirstK(k) => costs
+                .get(k.saturating_sub(1).min(costs.len().saturating_sub(1)))
+                .map(|&(bi, _)| bi)
+                .unwrap_or(0),
+        };
+        for (bi, &ei) in fg.edges.iter().enumerate() {
+            w[ei] = if bi == critical { 1.0 } else { 0.0 };
+        }
+    }
+    w
+}
+
+/// Topological order over the forward (non-back) edges. Deterministic:
+/// repeated id-order sweeps, placing every ready node per sweep. Nodes
+/// stranded by a forward cycle (invalid graphs) are appended in id
+/// order so the result always permutes all nodes.
+fn topo_order(g: &PipelineGraph, adj: &Adjacency) -> Vec<NodeId> {
+    let n = g.nodes.len();
+    let mut indeg = vec![0usize; n];
+    for e in &g.edges {
+        if !e.back_edge {
+            indeg[e.to.0] += 1;
+        }
+    }
+    let mut placed = vec![false; n];
+    let mut order = Vec::with_capacity(n);
+    loop {
+        let mut advanced = false;
+        for i in 0..n {
+            if !placed[i] && indeg[i] == 0 {
+                placed[i] = true;
+                order.push(NodeId(i));
+                for &ei in adj.out_edges(NodeId(i)) {
+                    let e = &g.edges[ei];
+                    if !e.back_edge {
+                        indeg[e.to.0] -= 1;
+                    }
+                }
+                advanced = true;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    for i in 0..n {
+        if !placed[i] {
+            order.push(NodeId(i));
+        }
+    }
+    order
+}
+
+/// Immediate-dominator tree on the forward-edge DAG. `reversed = false`
+/// walks from `root` along edge direction (dominators from the source);
+/// `reversed = true` walks against it (post-dominators from the sink).
+/// Iterative set-intersection dataflow — graphs here are tiny (tens of
+/// nodes), so the dense formulation beats the classic
+/// Lengauer–Tarjan bookkeeping on clarity at no observable cost.
+fn dominator_tree(
+    g: &PipelineGraph,
+    adj: &Adjacency,
+    root: NodeId,
+    reversed: bool,
+) -> Vec<Option<NodeId>> {
+    let n = g.nodes.len();
+    let walk_preds = |v: usize| -> Vec<usize> {
+        if reversed {
+            adj.out_edges(NodeId(v))
+                .iter()
+                .filter(|&&ei| !g.edges[ei].back_edge)
+                .map(|&ei| g.edges[ei].to.0)
+                .collect()
+        } else {
+            adj.in_edges(NodeId(v))
+                .iter()
+                .filter(|&&ei| !g.edges[ei].back_edge)
+                .map(|&ei| g.edges[ei].from.0)
+                .collect()
+        }
+    };
+    // Reachability from the root in the walk direction.
+    let mut reach = vec![false; n];
+    let mut stack = vec![root.0];
+    reach[root.0] = true;
+    while let Some(u) = stack.pop() {
+        let nexts: Vec<usize> = if reversed {
+            adj.in_edges(NodeId(u))
+                .iter()
+                .filter(|&&ei| !g.edges[ei].back_edge)
+                .map(|&ei| g.edges[ei].from.0)
+                .collect()
+        } else {
+            adj.out_edges(NodeId(u))
+                .iter()
+                .filter(|&&ei| !g.edges[ei].back_edge)
+                .map(|&ei| g.edges[ei].to.0)
+                .collect()
+        };
+        for v in nexts {
+            if !reach[v] {
+                reach[v] = true;
+                stack.push(v);
+            }
+        }
+    }
+    // dom(root) = {root}; dom(v) = {v} ∪ ⋂_{p ∈ preds(v)} dom(p).
+    let mut dom: Vec<Vec<bool>> = (0..n)
+        .map(|v| {
+            if v == root.0 {
+                let mut d = vec![false; n];
+                d[v] = true;
+                d
+            } else {
+                vec![true; n]
+            }
+        })
+        .collect();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for v in 0..n {
+            if v == root.0 || !reach[v] {
+                continue;
+            }
+            let mut nd = vec![true; n];
+            let mut any_pred = false;
+            for p in walk_preds(v) {
+                if !reach[p] {
+                    continue;
+                }
+                any_pred = true;
+                for i in 0..n {
+                    nd[i] = nd[i] && dom[p][i];
+                }
+            }
+            if !any_pred {
+                nd = vec![false; n];
+            }
+            nd[v] = true;
+            if nd != dom[v] {
+                dom[v] = nd;
+                changed = true;
+            }
+        }
+    }
+    // Strict dominators are totally ordered; the immediate one is the
+    // strict dominator with the largest dominator set of its own.
+    let mut idom = vec![None; n];
+    for v in 0..n {
+        if v == root.0 || !reach[v] {
+            continue;
+        }
+        let mut best: Option<usize> = None;
+        for d in 0..n {
+            if d == v || !dom[v][d] {
+                continue;
+            }
+            best = Some(match best {
+                None => d,
+                Some(b) => {
+                    let cb = dom[b].iter().filter(|&&x| x).count();
+                    let cd = dom[d].iter().filter(|&&x| x).count();
+                    if cd > cb {
+                        d
+                    } else {
+                        b
+                    }
+                }
+            });
+        }
+        idom[v] = best.map(NodeId);
+    }
+    idom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::apps;
+
+    /// Every registered app, including the fork/join and `-seq` shapes.
+    fn registry() -> Vec<PipelineGraph> {
+        [
+            "v-rag",
+            "v-rag-sharded",
+            "v-rag-cached",
+            "c-rag",
+            "s-rag",
+            "a-rag",
+            "hybrid-rag",
+            "hybrid-rag-seq",
+            "mq-rag",
+            "mq-rag-seq",
+        ]
+        .iter()
+        .map(|n| apps::by_name(n).unwrap())
+        .collect()
+    }
+
+    #[test]
+    fn analyzed_tables_match_the_legacy_graph_methods_bitwise() {
+        for g in registry() {
+            let az = g.analyze();
+            assert_eq!(az.visit_rates, g.visit_rates(), "{} visit rates", g.name);
+            assert_eq!(az.edge_flows, g.edge_flows(), "{} edge flows", g.name);
+            assert_eq!(az.join_scales, g.join_scales(), "{} join scales", g.name);
+            let legacy = g.fork_groups();
+            let dense: Vec<&ForkGroup> = az.fork_map.iter().flatten().collect();
+            assert_eq!(dense.len(), legacy.len(), "{} fork count", g.name);
+            for fg in dense {
+                let l = &legacy[&fg.fork];
+                assert_eq!(fg.join, l.join, "{}", g.name);
+                assert_eq!(fg.targets, l.targets, "{}", g.name);
+                assert_eq!(fg.edges, l.edges, "{}", g.name);
+                assert_eq!(fg.need, l.need, "{}", g.name);
+                assert_eq!(fg.policy, l.policy, "{}", g.name);
+            }
+        }
+    }
+
+    #[test]
+    fn topo_order_is_topological_on_the_forward_edges() {
+        for g in registry() {
+            let az = g.analyze();
+            let mut pos = vec![0usize; g.nodes.len()];
+            assert_eq!(az.topo.len(), g.nodes.len(), "{} permutes all nodes", g.name);
+            for (i, &id) in az.topo.iter().enumerate() {
+                pos[id.0] = i;
+            }
+            for e in g.edges.iter().filter(|e| !e.back_edge) {
+                assert!(
+                    pos[e.from.0] < pos[e.to.0],
+                    "{}: edge {:?}->{:?} violates topo order",
+                    g.name,
+                    e.from,
+                    e.to
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dominators_and_post_dominators_on_hybrid_rag() {
+        let g = apps::hybrid_rag();
+        let az = g.analyze();
+        let retr = g.node_by_name("retriever").unwrap().id;
+        let web = g.node_by_name("websearch").unwrap().id;
+        let gen = g.node_by_name("generator").unwrap().id;
+        // The fork dominates both branches and the join.
+        assert_eq!(az.idom[retr.0], Some(g.source));
+        assert_eq!(az.idom[web.0], Some(g.source));
+        assert_eq!(az.idom[gen.0], Some(g.source), "neither branch dominates the join");
+        assert_eq!(az.idom[g.source.0], None);
+        // The join post-dominates both branches and the fork.
+        assert_eq!(az.ipdom[retr.0], Some(gen));
+        assert_eq!(az.ipdom[web.0], Some(gen));
+        assert_eq!(az.ipdom[g.source.0], Some(gen));
+        assert_eq!(az.ipdom[gen.0], Some(g.sink));
+        assert_eq!(az.ipdom[g.sink.0], None);
+    }
+
+    #[test]
+    fn dominators_are_a_chain_on_linear_pipelines() {
+        let g = apps::vanilla_rag();
+        let az = g.analyze();
+        let retr = g.node_by_name("retriever").unwrap().id;
+        let gen = g.node_by_name("generator").unwrap().id;
+        assert_eq!(az.idom[retr.0], Some(g.source));
+        assert_eq!(az.idom[gen.0], Some(retr));
+        assert_eq!(az.idom[g.sink.0], Some(gen));
+        assert_eq!(az.ipdom[retr.0], Some(gen));
+        assert_eq!(az.ipdom[g.source.0], Some(retr));
+    }
+
+    #[test]
+    fn fork_region_tree_captures_branch_interiors() {
+        let g = apps::hybrid_rag();
+        let az = g.analyze();
+        assert_eq!(az.regions.len(), 1);
+        let r = &az.regions[0];
+        assert_eq!(r.fork, g.source);
+        assert_eq!(r.join, g.node_by_name("generator").unwrap().id);
+        assert_eq!(r.parent, None);
+        let members: Vec<&str> = g
+            .nodes
+            .iter()
+            .filter(|n| r.members[n.id.0])
+            .map(|n| n.name.as_str())
+            .collect();
+        assert_eq!(members, vec!["retriever", "websearch"]);
+        assert_eq!(az.fork_region_of[g.source.0], Some(0));
+        assert_eq!(az.join_region_of[r.join.0], Some(0));
+        // Linear pipelines have no regions at all.
+        let lin = apps::vanilla_rag().analyze();
+        assert!(lin.regions.is_empty());
+        assert!(lin.fork_region_of.iter().all(|r| r.is_none()));
+    }
+
+    #[test]
+    fn analyzed_latency_weights_match_the_legacy_method() {
+        let g = apps::hybrid_rag();
+        let az = g.analyze();
+        let mut cost: HashMap<NodeId, f64> = HashMap::new();
+        cost.insert(g.node_by_name("retriever").unwrap().id, 0.1);
+        cost.insert(g.node_by_name("websearch").unwrap().id, 0.15);
+        cost.insert(g.node_by_name("generator").unwrap().id, 0.1);
+        assert_eq!(az.latency_edge_weights(&g, &cost), g.latency_edge_weights(&cost));
+    }
+
+    #[test]
+    fn fork_group_and_join_scale_accessors_index_densely() {
+        let g = apps::multiquery_rag(3);
+        let az = g.analyze();
+        let fg = az.fork_group(g.source).expect("source forks");
+        assert_eq!(fg.targets.len(), 3);
+        assert_eq!(az.join_scale(fg.join), 1.0 / 3.0);
+        assert_eq!(az.join_scale(g.source), 1.0);
+        assert!(az.fork_group(fg.join).is_none());
+    }
+}

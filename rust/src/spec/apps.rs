@@ -163,27 +163,19 @@ pub fn hybrid_rag() -> PipelineGraph {
 /// resources, but dense retrieval and web search chained end to end.
 /// `benches/fig07_parallel_dataflow.rs` pits the two against each other
 /// at equal allocation.
+///
+/// Generated mechanically from [`hybrid_rag`] by the
+/// [`super::passes::Sequentialize`] rewrite pass (and pinned
+/// bit-identical to the retired hand-written construction in this
+/// module's tests) — every forked app gets its equal-allocation control
+/// for free.
 pub fn hybrid_rag_sequential() -> PipelineGraph {
-    let mut b = PipelineBuilder::new("hybrid-rag-seq");
-    let retr = b
-        .component("retriever", ComponentKind::Retriever)
-        .resources(&RETRIEVER_RES)
-        .degrade(DegradeKnob::ShrinkTopK)
-        .add();
-    let web = b
-        .component("websearch", ComponentKind::WebSearch)
-        .resources(&WEB_RES)
-        .add();
-    let gen = b
-        .component("generator", ComponentKind::Generator)
-        .resources(&GPU_RES)
-        .streamable(true)
-        .add();
-    b.edge_from_source(retr, 1.0);
-    b.edge(retr, web, 1.0);
-    b.edge(web, gen, 1.0);
-    b.edge_to_sink(gen, 1.0);
-    b.build().expect("hybrid-rag-seq is valid")
+    use super::passes::Pass;
+    let g = super::passes::Sequentialize
+        .apply(&hybrid_rag())
+        .expect("hybrid-rag has exactly one fork region");
+    g.validate().expect("hybrid-rag-seq is valid");
+    g
 }
 
 /// Multi-query RAG (query expansion): a rewriter fans out into `n`
@@ -227,39 +219,18 @@ pub fn multiquery_rag(n: usize) -> PipelineGraph {
 
 /// The serialized control for [`multiquery_rag`]: the same `n`
 /// rewrite→retrieve pairs chained end to end before the generator.
+///
+/// Generated mechanically from [`multiquery_rag`] by the
+/// [`super::passes::Sequentialize`] rewrite pass (and pinned
+/// bit-identical to the retired hand-written construction in this
+/// module's tests).
 pub fn multiquery_rag_sequential(n: usize) -> PipelineGraph {
-    let n = n.clamp(2, 8);
-    let mut b = PipelineBuilder::new("mq-rag-seq");
-    let mut prev: Option<super::graph::NodeId> = None;
-    for i in 0..n {
-        let rw = b
-            .component(&format!("rewriter_q{i}"), ComponentKind::Rewriter)
-            .resources(&GPU_RES)
-            .add();
-        let r = b
-            .component(&format!("retriever_q{i}"), ComponentKind::Retriever)
-            .resources(&RETRIEVER_RES)
-            .degrade(DegradeKnob::ShrinkTopK)
-            .add();
-        match prev {
-            None => {
-                b.edge_from_source(rw, 1.0);
-            }
-            Some(p) => {
-                b.edge(p, rw, 1.0);
-            }
-        }
-        b.edge(rw, r, 1.0);
-        prev = Some(r);
-    }
-    let gen = b
-        .component("generator", ComponentKind::Generator)
-        .resources(&GPU_RES)
-        .streamable(true)
-        .add();
-    b.edge(prev.expect("n >= 2"), gen, 1.0);
-    b.edge_to_sink(gen, 1.0);
-    b.build().expect("mq-rag-seq is valid")
+    use super::passes::Pass;
+    let g = super::passes::Sequentialize
+        .apply(&multiquery_rag(n))
+        .expect("mq-rag has exactly one fork region");
+    g.validate().expect("mq-rag-seq is valid");
+    g
 }
 
 /// Corrective RAG [Yan et al.]: retrieve → grade → {generate | rewrite →
@@ -590,5 +561,84 @@ mod tests {
         let g = corrective_rag();
         assert!(g.node_by_name("grader").unwrap().stateful);
         assert_eq!(g.node_by_name("grader").unwrap().base_instances, 2);
+    }
+
+    /// The retired hand-written construction of `hybrid-rag-seq`, kept
+    /// only as the bit-identity oracle for the `Sequentialize` pass.
+    fn hand_written_hybrid_rag_sequential() -> PipelineGraph {
+        let mut b = PipelineBuilder::new("hybrid-rag-seq");
+        let retr = b
+            .component("retriever", ComponentKind::Retriever)
+            .resources(&RETRIEVER_RES)
+            .degrade(DegradeKnob::ShrinkTopK)
+            .add();
+        let web = b
+            .component("websearch", ComponentKind::WebSearch)
+            .resources(&WEB_RES)
+            .add();
+        let gen = b
+            .component("generator", ComponentKind::Generator)
+            .resources(&GPU_RES)
+            .streamable(true)
+            .add();
+        b.edge_from_source(retr, 1.0);
+        b.edge(retr, web, 1.0);
+        b.edge(web, gen, 1.0);
+        b.edge_to_sink(gen, 1.0);
+        b.build().expect("hybrid-rag-seq is valid")
+    }
+
+    /// The retired hand-written construction of `mq-rag-seq` (oracle).
+    fn hand_written_multiquery_rag_sequential(n: usize) -> PipelineGraph {
+        let n = n.clamp(2, 8);
+        let mut b = PipelineBuilder::new("mq-rag-seq");
+        let mut prev: Option<super::super::graph::NodeId> = None;
+        for i in 0..n {
+            let rw = b
+                .component(&format!("rewriter_q{i}"), ComponentKind::Rewriter)
+                .resources(&GPU_RES)
+                .add();
+            let r = b
+                .component(&format!("retriever_q{i}"), ComponentKind::Retriever)
+                .resources(&RETRIEVER_RES)
+                .degrade(DegradeKnob::ShrinkTopK)
+                .add();
+            match prev {
+                None => {
+                    b.edge_from_source(rw, 1.0);
+                }
+                Some(p) => {
+                    b.edge(p, rw, 1.0);
+                }
+            }
+            b.edge(rw, r, 1.0);
+            prev = Some(r);
+        }
+        let gen = b
+            .component("generator", ComponentKind::Generator)
+            .resources(&GPU_RES)
+            .streamable(true)
+            .add();
+        b.edge(prev.expect("n >= 2"), gen, 1.0);
+        b.edge_to_sink(gen, 1.0);
+        b.build().expect("mq-rag-seq is valid")
+    }
+
+    #[test]
+    fn generated_sequential_controls_are_bit_identical_to_the_hand_written_apps() {
+        // Acceptance criterion: auto-generated `*_sequential` controls
+        // reproduce the retired hand-written constructions exactly —
+        // same nodes, same fields, same edge declaration order.
+        assert_eq!(
+            format!("{:?}", hybrid_rag_sequential()),
+            format!("{:?}", hand_written_hybrid_rag_sequential())
+        );
+        for n in [2, 3, 5] {
+            assert_eq!(
+                format!("{:?}", multiquery_rag_sequential(n)),
+                format!("{:?}", hand_written_multiquery_rag_sequential(n)),
+                "mq-rag-seq with {n} branches"
+            );
+        }
     }
 }

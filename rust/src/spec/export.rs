@@ -1,0 +1,285 @@
+//! Graphviz DOT export — the spec compiler's inspection backend.
+//!
+//! [`to_dot`] renders the pipeline structure alone; [`to_dot_with`]
+//! overlays runtime data per node (LP instance counts, modeled and
+//! measured latencies) via a [`DotOverlay`]. Emission is fully
+//! deterministic — nodes in id order, edges in declaration order, fixed
+//! label-line order — so the output is snapshot-testable (three golden
+//! snapshots live below) and diffable across PRs: `make graph-dot`
+//! renders every registered app to `target/dot/`.
+//!
+//! Visual conventions: source/sink are ellipses, join barriers are
+//! double octagons, everything else a box; fork edges are bold, back
+//! (recursion) edges dashed, and probabilistic routes carry `p=…`
+//! labels.
+
+use super::graph::{
+    ComponentKind, DegradeKnob, JoinPolicy, MergePolicy, NodeSpec, PipelineGraph, ResourceKind,
+};
+
+/// Optional per-node runtime annotations for [`to_dot_with`], each
+/// indexed by `NodeId.0`. Short vectors (or `None` slots) simply omit
+/// the line — the empty overlay renders pure structure.
+#[derive(Clone, Debug, Default)]
+pub struct DotOverlay {
+    /// LP allocation: instances assigned to the node.
+    pub instances: Vec<Option<usize>>,
+    /// Modeled mean service time (ms) from the analytical model.
+    pub modeled_ms: Vec<Option<f64>>,
+    /// Measured mean service time (ms) from profiling or live telemetry.
+    pub measured_ms: Vec<Option<f64>>,
+}
+
+impl DotOverlay {
+    /// No annotations — structure only.
+    pub fn empty() -> DotOverlay {
+        DotOverlay::default()
+    }
+}
+
+/// Format a resource quantity: integers without a decimal point
+/// (`cpu=8`), everything else with one digit (`ram=0.5`).
+fn qty(v: f64) -> String {
+    if (v - v.round()).abs() < 1e-9 {
+        format!("{}", v.round() as i64)
+    } else {
+        format!("{v:.1}")
+    }
+}
+
+fn res_label(k: ResourceKind) -> &'static str {
+    match k {
+        ResourceKind::Cpu => "cpu",
+        ResourceKind::Gpu => "gpu",
+        ResourceKind::Ram => "ram",
+    }
+}
+
+fn degrade_label(d: DegradeKnob) -> &'static str {
+    match d {
+        DegradeKnob::None => "",
+        DegradeKnob::ShrinkTopK => "shrink-topk",
+        DegradeKnob::SkipHop => "skip-hop",
+        DegradeKnob::CapIterations => "cap-iters",
+    }
+}
+
+fn node_label(n: &NodeSpec, overlay: &DotOverlay) -> String {
+    let endpoint = matches!(n.kind, ComponentKind::Source | ComponentKind::Sink);
+    let mut parts = vec![n.name.clone()];
+    if !endpoint {
+        parts.push(format!("[{}]", n.kind.name()));
+    }
+    if !n.resources.is_empty() {
+        let res: Vec<String> =
+            n.resources.iter().map(|&(k, v)| format!("{}={}", res_label(k), qty(v))).collect();
+        parts.push(res.join(" "));
+    }
+    if n.shards > 1 {
+        parts.push(format!("shards={}", n.shards));
+    }
+    if n.cache_hit_rate > 0.0 {
+        parts.push(format!("cache={:.2}", n.cache_hit_rate));
+    }
+    if n.quantized {
+        parts.push("sq8".to_string());
+    }
+    if n.gamma != 1.0 {
+        parts.push(format!("gamma={}", n.gamma));
+    }
+    if n.stateful {
+        parts.push("stateful".to_string());
+    }
+    if n.degrade != DegradeKnob::None {
+        parts.push(format!("degrade={}", degrade_label(n.degrade)));
+    }
+    if let Some(j) = n.join {
+        let policy = match j.policy {
+            JoinPolicy::All => "all".to_string(),
+            JoinPolicy::FirstK(k) => format!("first{k}"),
+        };
+        let merge = match j.merge {
+            MergePolicy::Union => "union",
+            MergePolicy::First => "first",
+        };
+        parts.push(format!("join={policy}/{merge}"));
+    }
+    if n.streamable {
+        parts.push("stream".to_string());
+    }
+    let id = n.id.0;
+    if let Some(inst) = overlay.instances.get(id).copied().flatten() {
+        parts.push(format!("inst={inst}"));
+    }
+    if let Some(ms) = overlay.modeled_ms.get(id).copied().flatten() {
+        parts.push(format!("model={ms:.1}ms"));
+    }
+    if let Some(ms) = overlay.measured_ms.get(id).copied().flatten() {
+        parts.push(format!("meas={ms:.1}ms"));
+    }
+    parts.join("\\n")
+}
+
+/// Render the pipeline structure as Graphviz DOT (no overlay).
+pub fn to_dot(g: &PipelineGraph) -> String {
+    to_dot_with(g, &DotOverlay::empty())
+}
+
+/// Render the pipeline as Graphviz DOT with per-node runtime
+/// annotations (allocations, modeled/measured latencies) overlaid on
+/// the labels.
+pub fn to_dot_with(g: &PipelineGraph, overlay: &DotOverlay) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("digraph \"{}\" {{\n", g.name));
+    out.push_str("  rankdir=LR;\n");
+    out.push_str("  node [shape=box, fontname=\"Helvetica\"];\n");
+    for n in &g.nodes {
+        let shape = if matches!(n.kind, ComponentKind::Source | ComponentKind::Sink) {
+            "ellipse"
+        } else if n.join.is_some() {
+            "doubleoctagon"
+        } else {
+            "box"
+        };
+        out.push_str(&format!(
+            "  n{} [label=\"{}\", shape={}];\n",
+            n.id.0,
+            node_label(n, overlay),
+            shape
+        ));
+    }
+    for e in &g.edges {
+        let attrs = if e.is_fork() {
+            " [style=bold, label=\"fork\"]".to_string()
+        } else if e.back_edge {
+            if e.prob() != 1.0 {
+                format!(" [style=dashed, label=\"p={:.2}\"]", e.prob())
+            } else {
+                " [style=dashed]".to_string()
+            }
+        } else if e.prob() != 1.0 {
+            format!(" [label=\"p={:.2}\"]", e.prob())
+        } else {
+            String::new()
+        };
+        out.push_str(&format!("  n{} -> n{}{};\n", e.from.0, e.to.0, attrs));
+    }
+    out.push_str("}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::apps;
+
+    // Golden snapshots: emission is deterministic, so these pin the DOT
+    // backend byte-for-byte for a linear, a forked, and a conditional
+    // app. If a legitimate format change lands, update the goldens in
+    // the same PR.
+
+    #[test]
+    fn golden_dot_vanilla_rag() {
+        let want = r#"digraph "v-rag" {
+  rankdir=LR;
+  node [shape=box, fontname="Helvetica"];
+  n0 [label="source", shape=ellipse];
+  n1 [label="sink", shape=ellipse];
+  n2 [label="retriever\n[retriever]\ncpu=8 ram=112\ndegrade=shrink-topk\nstream", shape=box];
+  n3 [label="generator\n[generator]\ngpu=1\nstream", shape=box];
+  n0 -> n2;
+  n2 -> n3;
+  n3 -> n1;
+}
+"#;
+        assert_eq!(to_dot(&apps::vanilla_rag()), want);
+    }
+
+    #[test]
+    fn golden_dot_hybrid_rag() {
+        let want = r#"digraph "hybrid-rag" {
+  rankdir=LR;
+  node [shape=box, fontname="Helvetica"];
+  n0 [label="source", shape=ellipse];
+  n1 [label="sink", shape=ellipse];
+  n2 [label="retriever\n[retriever]\ncpu=8 ram=112\ndegrade=shrink-topk", shape=box];
+  n3 [label="websearch\n[websearch]\ncpu=1", shape=box];
+  n4 [label="generator\n[generator]\ngpu=1\njoin=all/union\nstream", shape=doubleoctagon];
+  n0 -> n2 [style=bold, label="fork"];
+  n0 -> n3 [style=bold, label="fork"];
+  n2 -> n4;
+  n3 -> n4;
+  n4 -> n1;
+}
+"#;
+        assert_eq!(to_dot(&apps::hybrid_rag()), want);
+    }
+
+    #[test]
+    fn golden_dot_corrective_rag() {
+        let want = r#"digraph "c-rag" {
+  rankdir=LR;
+  node [shape=box, fontname="Helvetica"];
+  n0 [label="source", shape=ellipse];
+  n1 [label="sink", shape=ellipse];
+  n2 [label="retriever\n[retriever]\ncpu=8 ram=112\ndegrade=shrink-topk\nstream", shape=box];
+  n3 [label="grader\n[grader]\ngpu=1\nstateful\ndegrade=skip-hop", shape=box];
+  n4 [label="rewriter\n[rewriter]\ngpu=1", shape=box];
+  n5 [label="websearch\n[websearch]\ncpu=1", shape=box];
+  n6 [label="generator\n[generator]\ngpu=1\nstream", shape=box];
+  n0 -> n2;
+  n2 -> n3;
+  n3 -> n6 [label="p=0.70"];
+  n3 -> n4 [label="p=0.30"];
+  n4 -> n5;
+  n5 -> n6;
+  n6 -> n1;
+}
+"#;
+        assert_eq!(to_dot(&apps::corrective_rag()), want);
+    }
+
+    #[test]
+    fn overlay_lines_append_in_fixed_order() {
+        let g = apps::vanilla_rag();
+        let mut ov = DotOverlay::empty();
+        ov.instances = vec![None, None, Some(3), Some(2)];
+        ov.modeled_ms = vec![None, None, Some(12.34), None];
+        ov.measured_ms = vec![None, None, None, Some(150.0)];
+        let dot = to_dot_with(&g, &ov);
+        assert!(dot.contains("degrade=shrink-topk\\nstream\\ninst=3\\nmodel=12.3ms"));
+        assert!(dot.contains("gpu=1\\nstream\\ninst=2\\nmeas=150.0ms"));
+    }
+
+    #[test]
+    fn recursion_renders_dashed_back_edges() {
+        let dot = to_dot(&apps::self_rag());
+        // s-rag: rewriter loops back to the retriever with p=1.
+        assert!(dot.contains("[style=dashed]"), "{dot}");
+        // critic's accept branch carries its probability.
+        assert!(dot.contains("[label=\"p=0.65\"]"), "{dot}");
+    }
+
+    #[test]
+    fn every_registered_app_renders_and_mentions_all_nodes() {
+        for name in [
+            "v-rag",
+            "v-rag-sharded",
+            "v-rag-cached",
+            "c-rag",
+            "s-rag",
+            "a-rag",
+            "hybrid-rag",
+            "hybrid-rag-seq",
+            "mq-rag",
+            "mq-rag-seq",
+        ] {
+            let g = apps::by_name(name).unwrap();
+            let dot = to_dot(&g);
+            for n in &g.nodes {
+                assert!(dot.contains(&format!("n{} [label=\"{}", n.id.0, n.name)), "{name}/{}", n.name);
+            }
+            assert_eq!(dot.matches(" -> ").count(), g.edges.len(), "{name}");
+        }
+    }
+}

@@ -490,6 +490,17 @@ impl PipelineGraph {
         Adjacency::new(self)
     }
 
+    /// Build the full dense analysis bundle — adjacency, topological
+    /// order, dominator/post-dominator trees, the fork-region tree,
+    /// join scales, visit rates, and edge flows — in one pass (see
+    /// [`super::analysis::AnalyzedGraph`]). Deploy-time consumers (LP
+    /// construction, the profiler, the DES, the live controller) call
+    /// this once per graph and index the shared tables instead of
+    /// re-deriving their own traversals.
+    pub fn analyze(&self) -> super::analysis::AnalyzedGraph {
+        super::analysis::AnalyzedGraph::new(self)
+    }
+
     pub fn successors(&self, id: NodeId) -> impl Iterator<Item = &EdgeSpec> {
         self.edges.iter().filter(move |e| e.from == id)
     }
@@ -542,11 +553,9 @@ impl PipelineGraph {
     /// exactly one fork ([`ValidationError::SharedJoin`]), keeping the
     /// static scale well-defined.
     pub fn join_scales(&self) -> Vec<f64> {
-        let mut s = vec![1.0; self.nodes.len()];
-        for fg in self.fork_groups().into_values() {
-            s[fg.join.0] = 1.0 / fg.targets.len().max(1) as f64;
-        }
-        s
+        let adj = self.adjacency();
+        let fork_map = super::analysis::fork_groups_dense(self, &adj);
+        super::analysis::join_scales_from(self, &fork_map)
     }
 
     /// Convenience single-node accessor for [`PipelineGraph::join_scales`]
@@ -559,117 +568,18 @@ impl PipelineGraph {
     /// join + barrier policy). Best-effort on unvalidated graphs: forks
     /// whose join cannot be resolved are omitted — `validate` rejects
     /// such graphs with a precise error.
+    ///
+    /// Compatibility wrapper over the dense index
+    /// (`super::analysis::fork_groups_dense`); hot paths should use
+    /// [`PipelineGraph::analyze`] and index `fork_map` by node id
+    /// instead of hashing.
     pub fn fork_groups(&self) -> HashMap<NodeId, ForkGroup> {
         let adj = self.adjacency();
-        let mut groups = HashMap::new();
-        for n in &self.nodes {
-            let edges: Vec<usize> = adj
-                .out_edges(n.id)
-                .iter()
-                .copied()
-                .filter(|&i| self.edges[i].is_fork())
-                .collect();
-            if edges.is_empty() {
-                continue;
-            }
-            let targets: Vec<NodeId> = edges.iter().map(|&i| self.edges[i].to).collect();
-            let Some(join) = self.resolve_join(&adj, &targets) else { continue };
-            let spec = self.node(join).join.expect("resolved join is annotated");
-            groups.insert(
-                n.id,
-                ForkGroup {
-                    fork: n.id,
-                    join,
-                    need: spec.need(targets.len()),
-                    targets,
-                    edges,
-                    policy: spec.policy,
-                    merge: spec.merge,
-                },
-            );
-        }
-        groups
-    }
-
-    /// Nodes forward-reachable from `start` (inclusive), stopping at
-    /// `absorb` (the absorbing node is included but not expanded).
-    fn forward_reachable(
-        &self,
-        adj: &Adjacency,
-        start: NodeId,
-        absorb: Option<NodeId>,
-    ) -> Vec<bool> {
-        let mut reach = vec![false; self.nodes.len()];
-        let mut stack = vec![start];
-        reach[start.0] = true;
-        while let Some(u) = stack.pop() {
-            if Some(u) == absorb {
-                continue;
-            }
-            for &ei in adj.out_edges(u) {
-                let e = &self.edges[ei];
-                if !e.back_edge && !reach[e.to.0] {
-                    reach[e.to.0] = true;
-                    stack.push(e.to);
-                }
-            }
-        }
-        reach
-    }
-
-    /// The join node a fork's branches reconverge at: the join-annotated
-    /// node forward-reachable from the most branches, nearest to the fork
-    /// on ties. `None` when no branch reaches any join.
-    fn resolve_join(&self, adj: &Adjacency, targets: &[NodeId]) -> Option<NodeId> {
-        let reach: Vec<Vec<bool>> =
-            targets.iter().map(|&t| self.forward_reachable(adj, t, None)).collect();
-        let mut best: Option<(usize, usize, NodeId)> = None; // (branches, -depth proxy, id)
-        for n in &self.nodes {
-            if n.join.is_none() {
-                continue;
-            }
-            let hit = reach.iter().filter(|r| r[n.id.0]).count();
-            if hit == 0 {
-                continue;
-            }
-            // Depth proxy: min BFS depth from any branch target.
-            let depth = self.min_depth(adj, targets, n.id);
-            let cand = (hit, depth, n.id);
-            best = Some(match best {
-                None => cand,
-                Some(b) => {
-                    if cand.0 > b.0 || (cand.0 == b.0 && cand.1 < b.1) {
-                        cand
-                    } else {
-                        b
-                    }
-                }
-            });
-        }
-        best.map(|(_, _, id)| id)
-    }
-
-    fn min_depth(&self, adj: &Adjacency, starts: &[NodeId], goal: NodeId) -> usize {
-        use std::collections::VecDeque;
-        let mut dist = vec![usize::MAX; self.nodes.len()];
-        let mut q = VecDeque::new();
-        for &s in starts {
-            dist[s.0] = 0;
-            q.push_back(s);
-        }
-        while let Some(u) = q.pop_front() {
-            if u == goal {
-                return dist[u.0];
-            }
-            for &ei in adj.out_edges(u) {
-                let e = &self.edges[ei];
-                if !e.back_edge && dist[e.to.0] == usize::MAX {
-                    dist[e.to.0] = dist[u.0] + 1;
-                    q.push_back(e.to);
-                }
-            }
-        }
-        usize::MAX
+        super::analysis::fork_groups_dense(self, &adj)
+            .into_iter()
+            .flatten()
+            .map(|fg| (fg.fork, fg))
+            .collect()
     }
 
     /// Structural validation; run by the builder and unit tests.
@@ -787,11 +697,11 @@ impl PipelineGraph {
             if targets.len() < 2 {
                 return Err(ValidationError::UnbalancedFork { node: n.name.clone() });
             }
-            let Some(join) = self.resolve_join(adj, &targets) else {
+            let Some(join) = super::analysis::resolve_join(self, adj, &targets) else {
                 return Err(ValidationError::UnbalancedFork { node: n.name.clone() });
             };
             for &t in &targets {
-                if !self.forward_reachable(adj, t, None)[join.0] {
+                if !super::analysis::forward_reachable(self, adj, t, None)[join.0] {
                     return Err(ValidationError::JoinMissingBranch {
                         join: self.node(join).name.clone(),
                         branch: self.node(t).name.clone(),
@@ -813,7 +723,7 @@ impl PipelineGraph {
             // not contain the sink, and must be pairwise disjoint.
             let mut union = vec![false; self.nodes.len()];
             for (bi, &t) in targets.iter().enumerate() {
-                let r = self.forward_reachable(adj, t, Some(join));
+                let r = super::analysis::forward_reachable(self, adj, t, Some(join));
                 for (i, &in_r) in r.iter().enumerate() {
                     if i == join.0 || !in_r {
                         continue;
@@ -901,34 +811,14 @@ impl PipelineGraph {
     /// the barrier merges the siblings back into one request
     /// ([`PipelineGraph::join_in_scale`]).
     pub fn visit_rates(&self) -> Vec<f64> {
-        let n = self.nodes.len();
-        let scale = self.join_scales();
-        let mut v = vec![0.0f64; n];
-        v[self.source.0] = 1.0;
-        for _ in 0..10_000 {
-            let mut nv = vec![0.0f64; n];
-            nv[self.source.0] = 1.0;
-            for e in &self.edges {
-                let s = if e.back_edge { 1.0 } else { scale[e.to.0] };
-                nv[e.to.0] += v[e.from.0] * self.node(e.from).gamma * e.prob() * s;
-            }
-            let diff: f64 = nv.iter().zip(&v).map(|(a, b)| (a - b).abs()).sum();
-            v = nv;
-            if diff < 1e-12 {
-                break;
-            }
-        }
-        v
+        super::analysis::visit_rates_with(self, &self.join_scales())
     }
 
     /// Edge flow fractions per admitted request (visit rate of `from` ×
-    /// γ × edge flow fraction). Used by the allocator and the DES.
+    /// γ × edge flow fraction). Used by the allocator and the DES —
+    /// both read the same `super::analysis::edge_flows_from` table.
     pub fn edge_flows(&self) -> Vec<f64> {
-        let v = self.visit_rates();
-        self.edges
-            .iter()
-            .map(|e| v[e.from.0] * self.node(e.from).gamma * e.prob())
-            .collect()
+        super::analysis::edge_flows_from(self, &self.visit_rates())
     }
 
     /// Per-edge *latency* weights for critical-path analysis: `Route(p)`
@@ -948,63 +838,8 @@ impl PipelineGraph {
     /// `profile::graph_latency`.
     pub fn latency_edge_weights(&self, node_cost: &HashMap<NodeId, f64>) -> Vec<f64> {
         let adj = self.adjacency();
-        let mut w: Vec<f64> = self.edges.iter().map(|e| e.prob()).collect();
-        for fg in self.fork_groups().into_values() {
-            // Rank branches by prior path cost (entry → join).
-            let mut costs: Vec<(usize, f64)> = fg
-                .targets
-                .iter()
-                .enumerate()
-                .map(|(bi, &t)| (bi, self.branch_cost(&adj, t, fg.join, node_cost)))
-                .collect();
-            costs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
-            let critical = match fg.policy {
-                JoinPolicy::All => costs.last().map(|&(bi, _)| bi).unwrap_or(0),
-                JoinPolicy::FirstK(k) => {
-                    costs.get(k.saturating_sub(1).min(costs.len().saturating_sub(1)))
-                        .map(|&(bi, _)| bi)
-                        .unwrap_or(0)
-                }
-            };
-            for (bi, &ei) in fg.edges.iter().enumerate() {
-                w[ei] = if bi == critical { 1.0 } else { 0.0 };
-            }
-        }
-        w
-    }
-
-    /// Expected prior cost of one branch: visits fixed point from the
-    /// branch entry with the join absorbing, dotted with `node_cost`.
-    fn branch_cost(
-        &self,
-        _adj: &Adjacency,
-        entry: NodeId,
-        join: NodeId,
-        node_cost: &HashMap<NodeId, f64>,
-    ) -> f64 {
-        let n = self.nodes.len();
-        let mut v = vec![0.0f64; n];
-        v[entry.0] = 1.0;
-        for _ in 0..10_000 {
-            let mut nv = vec![0.0f64; n];
-            nv[entry.0] = 1.0;
-            for e in &self.edges {
-                if e.from == join {
-                    continue; // absorb at the join
-                }
-                nv[e.to.0] += v[e.from.0] * self.node(e.from).gamma * e.prob();
-            }
-            let diff: f64 = nv.iter().zip(&v).map(|(a, b)| (a - b).abs()).sum();
-            v = nv;
-            if diff < 1e-12 {
-                break;
-            }
-        }
-        v.iter()
-            .enumerate()
-            .filter(|&(i, _)| NodeId(i) != join)
-            .map(|(i, &vi)| vi * node_cost.get(&NodeId(i)).copied().unwrap_or(0.0))
-            .sum()
+        let fork_map = super::analysis::fork_groups_dense(self, &adj);
+        super::analysis::latency_edge_weights_from(self, &fork_map, node_cost)
     }
 }
 

@@ -14,12 +14,26 @@
 //! imperative [`builder::PipelineBuilder`] (the capture substitute), and
 //! [`apps`] provides the four reference workflows of Table 1.
 
+//! The spec layer is structured as a small **compiler**:
+//! [`analysis::AnalyzedGraph`] builds dense indices (adjacency, topo
+//! order, dominators, fork regions, visit rates, edge flows) once per
+//! graph for every downstream consumer; [`passes`] hosts the opt-in
+//! rewrite pipeline (speculative prefetch, stage fusion, fork
+//! serialization — default OFF); [`export`] renders graphs to Graphviz
+//! DOT with allocation/latency overlays.
+
+pub mod analysis;
 pub mod apps;
 pub mod builder;
+pub mod export;
 pub mod graph;
+pub mod passes;
 
+pub use analysis::{AnalyzedGraph, ForkRegion};
 pub use builder::PipelineBuilder;
+pub use export::{to_dot, to_dot_with, DotOverlay};
 pub use graph::{
     Adjacency, ComponentKind, DegradeKnob, EdgeKind, EdgeSpec, ForkGroup, JoinPolicy, JoinSpec,
     MergePolicy, NodeId, NodeSpec, PipelineGraph, ResourceKind, ValidationError,
 };
+pub use passes::{Pass, PassPipeline, Sequentialize, SpeculativePrefetch, StageFusion};

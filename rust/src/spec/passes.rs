@@ -1,0 +1,622 @@
+//! Opt-in rewrite passes over the spec graph — the optimization half of
+//! the spec compiler.
+//!
+//! A [`Pass`] consumes a [`PipelineGraph`] and either returns a
+//! rewritten graph or `None` when it finds nothing to rewrite. Passes
+//! are **default OFF**: the empty [`PassPipeline`] is the identity, so
+//! every golden trace in the repo replays bit-identically unless a
+//! caller explicitly opts in (the RAGO-style schedule search the paper
+//! motivates, made mechanical).
+//!
+//! Three passes ship today:
+//!
+//! * [`SpeculativePrefetch`] — turns a *serial* chain of retrieval-class
+//!   stages into a fork/join: all retrievals launch the moment the
+//!   predecessor commits, and the consumer becomes the barrier. With
+//!   the default [`JoinSpec::all`] every branch's context is fused;
+//!   passing [`JoinSpec::first_k`] instead races the branches and
+//!   cancels the losers through the existing FirstK machinery in the
+//!   DES and the live controller.
+//! * [`StageFusion`] — merges co-located cheap adjacent stages (rewrite
+//!   → retrieve and similar) into one node, eliminating a queue/dispatch
+//!   hop; the fused stage re-profiles as a `Custom` component.
+//! * [`Sequentialize`] — the inverse of prefetch: mechanically derives
+//!   the `*_sequential` control apps from their forked originals, so the
+//!   hand-written `hybrid-rag-seq` / `mq-rag-seq` baselines are now
+//!   *generated* (and pinned bit-identical to the retired hand-written
+//!   constructions in `spec::apps` tests).
+
+use super::analysis::{fork_groups_dense, forward_reachable};
+use super::graph::{
+    ComponentKind, DegradeKnob, EdgeKind, EdgeSpec, JoinSpec, NodeId, NodeSpec, PipelineGraph,
+};
+
+/// One graph-to-graph rewrite. Implementations must be *structural*:
+/// they may add/remove/retarget nodes and edges but must preserve the
+/// pipeline's admitted-request semantics (visit rates of surviving
+/// stages, flow into the sink). `apply` returns `None` when the pass
+/// does not apply to `g` — callers treat that as "no change", never as
+/// an error.
+pub trait Pass {
+    /// Stable pass name, reported by [`PassPipeline::run`].
+    fn name(&self) -> &'static str;
+    /// Rewrite `g`, or `None` when nothing matched. Returned graphs are
+    /// structurally valid for every shipped pass; callers that compose
+    /// third-party passes should re-`validate()`.
+    fn apply(&self, g: &PipelineGraph) -> Option<PipelineGraph>;
+}
+
+/// An ordered pass list. The default pipeline is **empty** — running it
+/// returns the input unchanged, which is what keeps golden traces
+/// bit-identical with the compiler layer in place.
+#[derive(Default)]
+pub struct PassPipeline {
+    passes: Vec<Box<dyn Pass>>,
+}
+
+impl PassPipeline {
+    /// The empty (identity) pipeline.
+    pub fn new() -> PassPipeline {
+        PassPipeline::default()
+    }
+
+    /// Append a pass.
+    pub fn with(mut self, p: Box<dyn Pass>) -> PassPipeline {
+        self.passes.push(p);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.passes.is_empty()
+    }
+
+    /// Run every pass in order; inapplicable passes are skipped. Returns
+    /// the final graph plus the names of the passes that actually fired.
+    pub fn run(&self, g: &PipelineGraph) -> (PipelineGraph, Vec<&'static str>) {
+        let mut cur = g.clone();
+        let mut applied = Vec::new();
+        for p in &self.passes {
+            if let Some(next) = p.apply(&cur) {
+                applied.push(p.name());
+                cur = next;
+            }
+        }
+        (cur, applied)
+    }
+}
+
+/// Is this a retrieval-class stage a prefetch may hoist? Context
+/// *gathering* (vector retrieval, web search) commutes across the
+/// stages between gathers; LLM stages do not (their output feeds the
+/// next stage's input).
+fn retrieval_class(kind: &ComponentKind) -> bool {
+    matches!(kind, ComponentKind::Retriever | ComponentKind::WebSearch)
+}
+
+/// Speculative prefetch: rewrite a serial chain `P → X1 → … → Xm → C`
+/// (m ≥ 2, every `Xi` retrieval-class on unit-probability forward
+/// edges) into `P →fork→ {X1 … Xm} →join(C)`. All retrievals start the
+/// moment `P` commits instead of waiting on each other, cutting the
+/// chain's critical path from Σ(Xi) to max(Xi) at identical resource
+/// demand — each branch still carries full flow through the LP.
+///
+/// `join` is the barrier installed on `C`: [`JoinSpec::all`] (default)
+/// fuses every branch's context; [`JoinSpec::first_k`] races the
+/// branches and cancels the stragglers via the existing FirstK
+/// cancellation in the DES and the live controller.
+pub struct SpeculativePrefetch {
+    pub join: JoinSpec,
+}
+
+impl Default for SpeculativePrefetch {
+    fn default() -> Self {
+        SpeculativePrefetch { join: JoinSpec::all() }
+    }
+}
+
+impl SpeculativePrefetch {
+    fn apply_once(&self, g: &PipelineGraph) -> Option<PipelineGraph> {
+        let adj = g.adjacency();
+        let prefetchable = |id: NodeId| -> bool {
+            let n = g.node(id);
+            if !retrieval_class(&n.kind) || n.join.is_some() || n.stateful || n.gamma != 1.0 {
+                return false;
+            }
+            if adj.in_edges(id).len() != 1 || adj.out_edges(id).len() != 1 {
+                return false;
+            }
+            let e_in = &g.edges[adj.in_edges(id)[0]];
+            let e_out = &g.edges[adj.out_edges(id)[0]];
+            !e_in.back_edge
+                && !e_in.is_fork()
+                && e_in.prob() == 1.0
+                && !e_out.back_edge
+                && !e_out.is_fork()
+                && e_out.prob() == 1.0
+        };
+        for p in &g.nodes {
+            if p.id == g.sink || g.is_fork_node(p.id) {
+                continue;
+            }
+            for &ei0 in adj.out_edges(p.id) {
+                let e0 = &g.edges[ei0];
+                if e0.is_fork() || e0.back_edge || e0.prob() != 1.0 {
+                    continue;
+                }
+                // Maximal run of prefetchable stages after `p`.
+                let mut chain = Vec::new();
+                let mut cur = e0.to;
+                while prefetchable(cur) && chain.len() <= g.nodes.len() {
+                    chain.push(cur);
+                    cur = g.edges[adj.out_edges(cur)[0]].to;
+                }
+                if chain.len() < 2 {
+                    continue;
+                }
+                let c = cur; // the stage that commits on the gathered context
+                if c == g.sink || c == p.id || g.node(c).join.is_some() || g.is_fork_node(c) {
+                    continue;
+                }
+                // The barrier's forward inflow must be exactly the chain
+                // exit, or the join annotation would be ambiguous.
+                let fwd_in =
+                    adj.in_edges(c).iter().filter(|&&i| !g.edges[i].back_edge).count();
+                if fwd_in != 1 {
+                    continue;
+                }
+                return Some(self.rewrite(g, p.id, &chain, c, ei0, &adj));
+            }
+        }
+        None
+    }
+
+    fn rewrite(
+        &self,
+        g: &PipelineGraph,
+        p: NodeId,
+        chain: &[NodeId],
+        c: NodeId,
+        entry_edge: usize,
+        adj: &super::graph::Adjacency,
+    ) -> PipelineGraph {
+        let mut removed = vec![entry_edge];
+        for &x in chain {
+            removed.push(adj.out_edges(x)[0]);
+        }
+        let mut nodes = g.nodes.clone();
+        nodes[c.0].join = Some(self.join);
+        let mut edges: Vec<EdgeSpec> = Vec::with_capacity(g.edges.len() + chain.len());
+        for (i, e) in g.edges.iter().enumerate() {
+            if i == entry_edge {
+                // Fork edges in chain order, then the branch→barrier edges.
+                for &x in chain {
+                    edges.push(EdgeSpec { from: p, to: x, kind: EdgeKind::Fork, back_edge: false });
+                }
+                for &x in chain {
+                    edges.push(EdgeSpec::route(x, c, 1.0));
+                }
+                continue;
+            }
+            if removed.contains(&i) {
+                continue;
+            }
+            edges.push(e.clone());
+        }
+        PipelineGraph { name: g.name.clone(), nodes, edges, source: g.source, sink: g.sink }
+    }
+}
+
+impl Pass for SpeculativePrefetch {
+    fn name(&self) -> &'static str {
+        "speculative-prefetch"
+    }
+
+    fn apply(&self, g: &PipelineGraph) -> Option<PipelineGraph> {
+        let mut cur = g.clone();
+        let mut applied = false;
+        while let Some(next) = self.apply_once(&cur) {
+            cur = next;
+            applied = true;
+        }
+        if !applied {
+            return None;
+        }
+        cur.name = format!("{}+prefetch", g.name);
+        Some(cur)
+    }
+}
+
+/// Stage fusion: merge an adjacent pair `A → B` of cheap, co-locatable
+/// stages into one node, eliminating a queue + dispatch hop between
+/// them. Conservative by construction — a pair fuses only when `A`'s
+/// single `Route(1.0)` forward edge is `B`'s single in-edge, both kinds
+/// are in the `fusable` allowlist, neither is stateful/sharded/joined,
+/// and `A` carries no amplification, cache, quantization, or degrade
+/// knob (`B`'s knobs survive on the fused node). The fused node becomes
+/// a [`ComponentKind::Custom`] stage whose α is re-profiled, with the
+/// pair's resource demands summed so the LP still pays for both stages.
+pub struct StageFusion {
+    pub fusable: Vec<ComponentKind>,
+}
+
+impl Default for StageFusion {
+    fn default() -> Self {
+        StageFusion {
+            fusable: vec![
+                ComponentKind::Rewriter,
+                ComponentKind::Classifier,
+                ComponentKind::Grader,
+                ComponentKind::Critic,
+                ComponentKind::Retriever,
+            ],
+        }
+    }
+}
+
+impl StageFusion {
+    fn fuse_once(&self, g: &PipelineGraph) -> Option<PipelineGraph> {
+        let adj = g.adjacency();
+        for (ei, e) in g.edges.iter().enumerate() {
+            if e.is_fork() || e.back_edge || e.prob() != 1.0 {
+                continue;
+            }
+            let (a, b) = (e.from, e.to);
+            if a == b || a == g.source || a == g.sink || b == g.source || b == g.sink {
+                continue;
+            }
+            let (an, bn) = (g.node(a), g.node(b));
+            if adj.out_edges(a).len() != 1 || adj.in_edges(b).len() != 1 {
+                continue;
+            }
+            if !self.fusable.contains(&an.kind) || !self.fusable.contains(&bn.kind) {
+                continue;
+            }
+            if an.stateful || bn.stateful || an.join.is_some() || bn.join.is_some() {
+                continue;
+            }
+            if an.shards != 1 || bn.shards != 1 || an.gamma != 1.0 {
+                continue;
+            }
+            if an.cache_hit_rate != 0.0 || an.quantized || an.degrade != DegradeKnob::None {
+                continue;
+            }
+            return Some(fuse_pair(g, ei, a, b));
+        }
+        None
+    }
+}
+
+fn fuse_pair(g: &PipelineGraph, fused_edge: usize, a: NodeId, b: NodeId) -> PipelineGraph {
+    let (an, bn) = (g.node(a), g.node(b));
+    // Per-kind resource sum: one co-located instance hosts both stages.
+    let mut resources = an.resources.clone();
+    for &(k, v) in &bn.resources {
+        if let Some(slot) = resources.iter_mut().find(|(rk, _)| *rk == k) {
+            slot.1 += v;
+        } else {
+            resources.push((k, v));
+        }
+    }
+    let fused = NodeSpec {
+        id: a,
+        name: format!("{}+{}", an.name, bn.name),
+        kind: ComponentKind::Custom(format!("{}+{}", an.kind.name(), bn.kind.name())),
+        stateful: false,
+        base_instances: an.base_instances.max(bn.base_instances),
+        shards: 1,
+        cache_hit_rate: bn.cache_hit_rate,
+        quantized: bn.quantized,
+        degrade: bn.degrade,
+        join: None,
+        resources,
+        alpha: vec![], // the fused stage has a new cost profile — re-profiled
+        gamma: bn.gamma,
+        streamable: bn.streamable,
+    };
+    let a_final = if a.0 > b.0 { NodeId(a.0 - 1) } else { a };
+    let remap = |id: NodeId| -> NodeId {
+        if id == b {
+            a_final
+        } else if id.0 > b.0 {
+            NodeId(id.0 - 1)
+        } else {
+            id
+        }
+    };
+    let mut nodes: Vec<NodeSpec> = Vec::with_capacity(g.nodes.len() - 1);
+    for n in &g.nodes {
+        if n.id == b {
+            continue;
+        }
+        let mut n2 = if n.id == a { fused.clone() } else { n.clone() };
+        n2.id = remap(n.id);
+        nodes.push(n2);
+    }
+    let edges: Vec<EdgeSpec> = g
+        .edges
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| i != fused_edge)
+        .map(|(_, e)| EdgeSpec {
+            from: remap(e.from),
+            to: remap(e.to),
+            kind: e.kind,
+            back_edge: e.back_edge,
+        })
+        .collect();
+    PipelineGraph {
+        name: g.name.clone(),
+        nodes,
+        edges,
+        source: remap(g.source),
+        sink: remap(g.sink),
+    }
+}
+
+impl Pass for StageFusion {
+    fn name(&self) -> &'static str {
+        "stage-fusion"
+    }
+
+    fn apply(&self, g: &PipelineGraph) -> Option<PipelineGraph> {
+        let mut cur = g.clone();
+        let mut applied = false;
+        while let Some(next) = self.fuse_once(&cur) {
+            cur = next;
+            applied = true;
+        }
+        if !applied {
+            return None;
+        }
+        cur.name = format!("{}+fused", g.name);
+        Some(cur)
+    }
+}
+
+/// Automatic `*_sequential` control generation: rewrite a graph with
+/// exactly one fork region into its serialized equivalent — the same
+/// nodes, with the branches chained end to end in fork-edge order and
+/// the join annotation dropped. This mechanically derives the
+/// `hybrid-rag-seq` / `mq-rag-seq` baseline apps from their forked
+/// originals (pinned bit-identical to the retired hand-written
+/// constructions), so every future forked app gets its equal-allocation
+/// control for free.
+///
+/// Conservative: applies only to graphs with exactly one fork group
+/// whose every branch exits into the join over a single `Route(1.0)`
+/// edge; anything richer returns `None`.
+pub struct Sequentialize;
+
+impl Pass for Sequentialize {
+    fn name(&self) -> &'static str {
+        "sequentialize"
+    }
+
+    fn apply(&self, g: &PipelineGraph) -> Option<PipelineGraph> {
+        let adj = g.adjacency();
+        let fork_map = fork_groups_dense(g, &adj);
+        let mut groups = fork_map.iter().flatten();
+        let fg = groups.next()?.clone();
+        if groups.next().is_some() {
+            return None; // nested/multiple regions: out of scope
+        }
+        let n = g.nodes.len();
+        let mut branch_members: Vec<Vec<bool>> = Vec::with_capacity(fg.targets.len());
+        let mut exits: Vec<NodeId> = Vec::with_capacity(fg.targets.len());
+        for &t in &fg.targets {
+            let r = forward_reachable(g, &adj, t, Some(fg.join));
+            let mut members = vec![false; n];
+            for (i, &in_r) in r.iter().enumerate() {
+                if in_r && i != fg.join.0 {
+                    members[i] = true;
+                }
+            }
+            // The branch must drain into the join over ONE full-flow edge;
+            // that edge's source becomes the link to the next branch.
+            let mut exit: Option<NodeId> = None;
+            for e in &g.edges {
+                if e.to == fg.join && members[e.from.0] && !e.back_edge {
+                    if exit.is_some() || e.is_fork() || e.prob() != 1.0 {
+                        return None;
+                    }
+                    exit = Some(e.from);
+                }
+            }
+            exits.push(exit?);
+            branch_members.push(members);
+        }
+        let mut nodes = g.nodes.clone();
+        nodes[fg.join.0].join = None;
+        let mut used = vec![false; g.edges.len()];
+        for &ei in &fg.edges {
+            used[ei] = true;
+        }
+        let mut edges: Vec<EdgeSpec> = Vec::with_capacity(g.edges.len());
+        edges.push(EdgeSpec::route(fg.fork, fg.targets[0], 1.0));
+        for (bi, members) in branch_members.iter().enumerate() {
+            // Branch-interior edges keep their declaration order.
+            for (i, e) in g.edges.iter().enumerate() {
+                if !e.back_edge && members[e.from.0] && members[e.to.0] {
+                    edges.push(e.clone());
+                    used[i] = true;
+                }
+            }
+            for (i, e) in g.edges.iter().enumerate() {
+                if e.to == fg.join && members[e.from.0] {
+                    used[i] = true; // the old exit edge, replaced by the link
+                }
+            }
+            let next = if bi + 1 < fg.targets.len() { fg.targets[bi + 1] } else { fg.join };
+            edges.push(EdgeSpec::route(exits[bi], next, 1.0));
+        }
+        for (i, e) in g.edges.iter().enumerate() {
+            if !used[i] {
+                edges.push(e.clone());
+            }
+        }
+        Some(PipelineGraph {
+            name: format!("{}-seq", g.name),
+            nodes,
+            edges,
+            source: g.source,
+            sink: g.sink,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::apps;
+    use crate::spec::graph::ResourceKind;
+
+    #[test]
+    fn the_default_pipeline_is_empty_and_the_identity() {
+        let g = apps::hybrid_rag();
+        let pipe = PassPipeline::new();
+        assert!(pipe.is_empty());
+        let (out, applied) = pipe.run(&g);
+        assert!(applied.is_empty());
+        assert_eq!(format!("{out:?}"), format!("{g:?}"), "identity down to the bits");
+    }
+
+    #[test]
+    fn prefetch_reconstructs_the_hand_built_fork_from_the_serial_chain() {
+        let seq = apps::hybrid_rag_sequential();
+        let p = SpeculativePrefetch::default().apply(&seq).expect("retrieval chain found");
+        p.validate().unwrap();
+        assert_eq!(p.name, "hybrid-rag-seq+prefetch");
+        let hy = apps::hybrid_rag();
+        assert_eq!(format!("{:?}", p.nodes), format!("{:?}", hy.nodes));
+        assert_eq!(format!("{:?}", p.edges), format!("{:?}", hy.edges));
+    }
+
+    #[test]
+    fn prefetch_preserves_visit_rates() {
+        let seq = apps::hybrid_rag_sequential();
+        let p = SpeculativePrefetch::default().apply(&seq).unwrap();
+        let (vs, vp) = (seq.visit_rates(), p.visit_rates());
+        for n in &seq.nodes {
+            assert!(
+                (vs[n.id.0] - vp[n.id.0]).abs() < 1e-9,
+                "{}: serial {} vs prefetched {}",
+                n.name,
+                vs[n.id.0],
+                vp[n.id.0]
+            );
+        }
+    }
+
+    #[test]
+    fn prefetched_graph_profiles_identically_to_the_hand_built_fork() {
+        // Same structure + same seed → the profiler's RNG stream, and
+        // with it every sampled service time, is bit-identical.
+        let p = SpeculativePrefetch::default().apply(&apps::hybrid_rag_sequential()).unwrap();
+        let hy = apps::hybrid_rag();
+        let pa = crate::profile::profile_graph(&p, 400, 11);
+        let pb = crate::profile::profile_graph(&hy, 400, 11);
+        assert_eq!(pa.edge_probs, pb.edge_probs);
+        for n in hy.work_nodes() {
+            assert_eq!(
+                pa.mean_service[&n.id].to_bits(),
+                pb.mean_service[&n.id].to_bits(),
+                "{}",
+                n.name
+            );
+        }
+    }
+
+    #[test]
+    fn prefetch_preserves_the_lp_objective() {
+        // Structurally identical graphs profile identically (above), so
+        // the allocation LP — same columns, same rows, same priors —
+        // must land on the same objective to the bit. Against the chain
+        // as written the fork is a latency structure, not a capacity
+        // one: the throughput ceiling stays in the same band.
+        let p = SpeculativePrefetch::default().apply(&apps::hybrid_rag_sequential()).unwrap();
+        let a = crate::alloc::flow::plan_for(&p, 2000, 5);
+        let b = crate::alloc::flow::plan_for(&apps::hybrid_rag(), 2000, 5);
+        assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+        let seq = crate::alloc::flow::plan_for(&apps::hybrid_rag_sequential(), 2000, 5);
+        let ratio = a.throughput / seq.throughput;
+        assert!((0.8..1.25).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn prefetched_graph_simulates_identically_to_the_hand_built_fork() {
+        // DES output distributions: same structure + same seed → the
+        // event stream, and with it every latency sample, is
+        // bit-identical to the hand-built fork app.
+        use crate::sim::{run_point, SystemKind};
+        let p = SpeculativePrefetch::default().apply(&apps::hybrid_rag_sequential()).unwrap();
+        let a = run_point(SystemKind::Harmonia, p, 32.0, 300, Some(2.0), 9);
+        let b = run_point(SystemKind::Harmonia, apps::hybrid_rag(), 32.0, 300, Some(2.0), 9);
+        assert_eq!(a.report.p50.to_bits(), b.report.p50.to_bits());
+        assert_eq!(a.report.p99.to_bits(), b.report.p99.to_bits());
+        assert_eq!(a.report.mean_latency.to_bits(), b.report.mean_latency.to_bits());
+        assert_eq!(a.report.throughput.to_bits(), b.report.throughput.to_bits());
+    }
+
+    #[test]
+    fn prefetch_requires_an_adjacent_retrieval_chain() {
+        let pass = SpeculativePrefetch::default();
+        for name in ["v-rag", "c-rag", "s-rag", "a-rag", "mq-rag-seq"] {
+            let g = apps::by_name(name).unwrap();
+            assert!(pass.apply(&g).is_none(), "{name} has no 2-stage retrieval chain");
+        }
+    }
+
+    #[test]
+    fn fusion_fuses_the_rewrite_retrieve_pairs_of_mq_rag_seq() {
+        let seq = apps::multiquery_rag_sequential(3);
+        let f = StageFusion::default().apply(&seq).expect("three fusable pairs");
+        f.validate().unwrap();
+        assert_eq!(f.name, "mq-rag-seq+fused");
+        assert_eq!(f.work_nodes().count(), 4, "3 fused stages + generator");
+        let fused = f.node_by_name("rewriter_q0+retriever_q0").expect("fused name");
+        assert!(matches!(fused.kind, ComponentKind::Custom(_)));
+        // Resource demands are summed — the LP still pays for both stages.
+        assert_eq!(fused.demand_for(ResourceKind::Gpu), 1.0);
+        assert_eq!(fused.demand_for(ResourceKind::Cpu), 8.0);
+        assert_eq!(fused.demand_for(ResourceKind::Ram), 112.0);
+        // B's degrade knob survives on the fused stage.
+        assert_eq!(fused.degrade, DegradeKnob::ShrinkTopK);
+        // Flow is preserved: every surviving stage still runs once.
+        let v = f.visit_rates();
+        assert!((v[f.sink.0] - 1.0).abs() < 1e-9, "sink {}", v[f.sink.0]);
+        for n in f.work_nodes() {
+            assert!((v[n.id.0] - 1.0).abs() < 1e-9, "{}: {}", n.name, v[n.id.0]);
+        }
+    }
+
+    #[test]
+    fn fusion_never_crosses_generator_or_websearch_boundaries() {
+        let pass = StageFusion::default();
+        assert!(pass.apply(&apps::vanilla_rag()).is_none(), "retr→gen must not fuse");
+        assert!(
+            pass.apply(&apps::hybrid_rag_sequential()).is_none(),
+            "retr→web (external I/O) must not fuse"
+        );
+    }
+
+    #[test]
+    fn sequentialize_requires_exactly_one_fork_region() {
+        assert!(Sequentialize.apply(&apps::vanilla_rag()).is_none());
+        assert!(Sequentialize.apply(&apps::corrective_rag()).is_none());
+        assert!(Sequentialize.apply(&apps::hybrid_rag_sequential()).is_none());
+    }
+
+    #[test]
+    fn passes_compose_and_report_in_order() {
+        // Round trip: serialize the fork, then prefetch re-discovers it.
+        let (out, applied) = PassPipeline::new()
+            .with(Box::new(Sequentialize))
+            .with(Box::new(SpeculativePrefetch::default()))
+            .run(&apps::hybrid_rag());
+        assert_eq!(applied, vec!["sequentialize", "speculative-prefetch"]);
+        out.validate().unwrap();
+        assert!(out.has_forks(), "prefetch re-forked the serialized chain");
+        let v = out.visit_rates();
+        assert!((v[out.sink.0] - 1.0).abs() < 1e-9);
+    }
+}
