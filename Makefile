@@ -6,7 +6,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test test-fast lint fmt clippy doc verify artifacts bench bench-shards bench-cache bench-overload bench-batching bench-parallel bench-disagg bench-perf bench-perf-smoke bench-retrieval bench-retrieval-smoke bench-smoke bench-passes graph-dot clean
+.PHONY: all build test test-fast lint fmt clippy doc verify artifacts bench bench-shards bench-cache bench-overload bench-batching bench-parallel bench-disagg bench-perf bench-perf-smoke bench-retrieval bench-retrieval-smoke bench-live bench-live-smoke bench-live-alloc bench-smoke bench-passes graph-dot clean
 
 all: build
 
@@ -92,6 +92,22 @@ bench-retrieval:
 # CI variant: 20k-row corpus, same code paths and artifact shape.
 bench-retrieval-smoke:
 	$(CARGO) bench --bench perf_retrieval -- --smoke
+
+# Live serving-path perf: closed-loop echo-engine deployments of
+# v-rag-cached and hybrid-rag (real workers/index/router, deterministic
+# stages); writes BENCH_live.json and gates against benches/baselines/.
+bench-live:
+	$(CARGO) bench --bench perf_live
+
+# CI variant: smaller corpus and request count, same code paths and
+# artifact shape.
+bench-live-smoke:
+	$(CARGO) bench --bench perf_live -- --smoke
+
+# Allocation-counting variant: adds allocs-per-dispatch to the artifact.
+# Throughput from this build is NOT comparable with the stock bench.
+bench-live-alloc:
+	$(CARGO) bench --bench perf_live --features count-alloc -- --smoke
 
 # Quick-iteration bench pass (CI): actually *execute* the bench binaries
 # with `--smoke`-shrunk workloads (see util::bench::smoke) instead of

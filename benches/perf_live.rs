@@ -1,0 +1,314 @@
+//! Live serving-path performance — the first *measured* number for the
+//! controller hot loop (the live counterpart of `perf_des.rs`).
+//!
+//! Deploys real pipelines (`v-rag-cached`, `hybrid-rag`) onto real
+//! worker threads with the deterministic **echo engine**
+//! (`ControllerConfig::echo`): no XLA artifacts, no model weights, but
+//! the genuine retrieval index, caches, routing, admission plumbing,
+//! fork/join barriers, and the zero-copy `RagState` hand-off. A
+//! closed-loop driver (N client threads, one outstanding request each)
+//! pushes a fixed request count through each app and reports:
+//!
+//!   - requests/sec (headline + regression gate key, v-rag-cached);
+//!   - client-observed p50/p99 end-to-end latency;
+//!   - per-hop controller dispatch overhead and busy fraction, straight
+//!     from `RunReport::ctrl` (`metrics::CtrlStats`);
+//!   - allocations per dispatch when built with
+//!     `--features count-alloc` (a counting global allocator; `null` in
+//!     the artifact otherwise).
+//!
+//! Emits `BENCH_live.json` via `util::bench::emit_json` and gates
+//! against `benches/baselines/` when a baseline is checked in: >20%
+//! requests/sec regression fails the run (CI runs `--smoke`; see
+//! `make bench-live`).
+//!
+//! Accepts `--smoke` (see `util::bench::smoke`): a smaller corpus and
+//! request count, same code paths, same artifact shape.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+use harmonia::coordinator::controller::{deploy, ControllerConfig};
+use harmonia::spec::apps;
+use harmonia::spec::PipelineGraph;
+use harmonia::util::bench::{emit_json, json_number_field, smoke, smoke_scale, Json};
+use harmonia::util::table::{f, Table};
+
+/// Counting global allocator: every `alloc`/`realloc` bumps a counter,
+/// so the artifact can report allocations per dispatched hop. Opt-in
+/// (`--features count-alloc`) because counting taxes every allocation
+/// in the process — throughput numbers from a counting build are not
+/// comparable with a stock build.
+#[cfg(feature = "count-alloc")]
+mod count_alloc {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    pub static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+    pub struct Counting;
+
+    unsafe impl GlobalAlloc for Counting {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.alloc(layout)
+        }
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+            System.realloc(ptr, layout, new_size)
+        }
+    }
+
+    #[global_allocator]
+    static COUNTING: Counting = Counting;
+}
+
+fn alloc_count() -> Option<u64> {
+    #[cfg(feature = "count-alloc")]
+    {
+        Some(count_alloc::ALLOCS.load(std::sync::atomic::Ordering::Relaxed))
+    }
+    #[cfg(not(feature = "count-alloc"))]
+    {
+        None
+    }
+}
+
+const SEED: u64 = 0x11FE_2026;
+/// Regression gate: fail when requests/sec drops below this fraction of
+/// the checked-in baseline.
+const GATE_FRAC: f64 = 0.8;
+
+/// Sorted-sample percentile (nearest-rank on the sorted slice).
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    sorted[((sorted.len() as f64 - 1.0) * p) as usize]
+}
+
+struct AppRun {
+    name: &'static str,
+    requests: usize,
+    wall_secs: f64,
+    requests_per_sec: f64,
+    p50_s: f64,
+    p99_s: f64,
+    hops: u64,
+    dispatch_ns_per_hop: f64,
+    busy_frac: f64,
+    allocs_per_dispatch: Option<f64>,
+}
+
+/// Closed-loop run: `clients` driver threads share a work counter, each
+/// keeps exactly one request outstanding. Dispatch overhead and the
+/// alloc count are deltas across the timed window only (warmup and
+/// deploy excluded), read from two `RunReport::ctrl` snapshots.
+fn run_app(
+    name: &'static str,
+    graph: PipelineGraph,
+    corpus_size: usize,
+    total: usize,
+    clients: usize,
+    warmup: usize,
+) -> AppRun {
+    let mut cfg = ControllerConfig::echo(SEED);
+    cfg.corpus_size = corpus_size;
+    let h = deploy(graph, cfg).expect("deploy echo pipeline");
+
+    for i in 0..warmup {
+        let q = format!("warmup query {i} topic {}", i % 17);
+        let r = h.submit(q.as_bytes()).recv().expect("warmup response");
+        assert!(r.error.is_none(), "warmup request failed: {:?}", r.error);
+    }
+
+    let ctrl0 = h.report().ctrl.expect("live run attaches ctrl stats");
+    let allocs0 = alloc_count();
+    let next = AtomicUsize::new(0);
+    let t0 = Instant::now();
+    let mut latencies: Vec<f64> = Vec::with_capacity(total);
+    let mut hops: u64 = 0;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                let client = h.client();
+                let next = &next;
+                s.spawn(move || {
+                    let mut lats: Vec<f64> = Vec::new();
+                    let mut hops: u64 = 0;
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= total {
+                            break;
+                        }
+                        let q = format!("live bench query {i} topic {}", i % 17);
+                        let sent = Instant::now();
+                        let r = client.submit(q.as_bytes()).recv().expect("live response");
+                        lats.push(sent.elapsed().as_secs_f64());
+                        assert!(r.error.is_none(), "request {i} failed: {:?}", r.error);
+                        assert!(!r.answer.is_empty(), "request {i} returned an empty answer");
+                        hops += r.hops as u64;
+                    }
+                    (lats, hops)
+                })
+            })
+            .collect();
+        for handle in handles {
+            let (lats, h2) = handle.join().expect("client thread");
+            latencies.extend(lats);
+            hops += h2;
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let allocs1 = alloc_count();
+    let rep = h.report();
+    let ctrl1 = rep.ctrl.expect("live run attaches ctrl stats");
+    h.shutdown();
+
+    assert_eq!(latencies.len(), total, "{name}: every request must complete");
+    assert_eq!(rep.shed, 0, "{name}: default config admits everything");
+    latencies.sort_by(f64::total_cmp);
+    let dispatches = ctrl1.dispatches - ctrl0.dispatches;
+    let dispatch_secs = ctrl1.dispatch_secs - ctrl0.dispatch_secs;
+    AppRun {
+        name,
+        requests: total,
+        wall_secs: wall,
+        requests_per_sec: total as f64 / wall.max(1e-12),
+        p50_s: pct(&latencies, 0.50),
+        p99_s: pct(&latencies, 0.99),
+        hops,
+        dispatch_ns_per_hop: if dispatches == 0 {
+            0.0
+        } else {
+            dispatch_secs / dispatches as f64 * 1e9
+        },
+        busy_frac: ctrl1.busy_frac(),
+        allocs_per_dispatch: match (allocs0, allocs1) {
+            (Some(a0), Some(a1)) if dispatches > 0 => {
+                Some((a1 - a0) as f64 / dispatches as f64)
+            }
+            _ => None,
+        },
+    }
+}
+
+fn out_path() -> std::path::PathBuf {
+    let dir = std::env::var("BENCH_OUT_DIR")
+        .unwrap_or_else(|_| env!("CARGO_MANIFEST_DIR").to_string());
+    std::path::Path::new(&dir).join("BENCH_live.json")
+}
+
+fn baseline_path(smoke: bool) -> std::path::PathBuf {
+    let file = if smoke { "BENCH_live.smoke.json" } else { "BENCH_live.json" };
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("benches/baselines").join(file)
+}
+
+fn main() {
+    let smoke = smoke();
+    let corpus_size = smoke_scale(4096, 512);
+    let total = smoke_scale(2000, 200);
+    let clients = smoke_scale(8, 4);
+    let warmup = smoke_scale(64, 16);
+    println!(
+        "live serving-path perf (echo engine): corpus={corpus_size} requests={total} clients={clients}{}{}\n",
+        if smoke { " (--smoke)" } else { "" },
+        if alloc_count().is_some() { " [count-alloc]" } else { "" },
+    );
+
+    let runs = [
+        run_app("v-rag-cached", apps::vanilla_rag(), corpus_size, total, clients, warmup),
+        run_app("hybrid-rag", apps::hybrid_rag(), corpus_size, total, clients, warmup),
+    ];
+
+    let mut t = Table::new(
+        "closed-loop serving",
+        &["app", "req/s", "p50 (ms)", "p99 (ms)", "hops", "dispatch ns/hop", "busy", "allocs/hop"],
+    );
+    for r in &runs {
+        t.row(&[
+            r.name.to_string(),
+            f(r.requests_per_sec, 0),
+            f(r.p50_s * 1e3, 2),
+            f(r.p99_s * 1e3, 2),
+            r.hops.to_string(),
+            f(r.dispatch_ns_per_hop, 0),
+            f(r.busy_frac, 3),
+            r.allocs_per_dispatch.map(|a| f(a, 1)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.print();
+
+    let headline = &runs[0];
+    let run_json = |r: &AppRun| {
+        Json::obj(vec![
+            ("app", Json::Str(r.name.into())),
+            ("requests", Json::Int(r.requests as i64)),
+            ("wall_secs", Json::Num(r.wall_secs)),
+            ("requests_per_sec", Json::Num(r.requests_per_sec)),
+            ("p50_s", Json::Num(r.p50_s)),
+            ("p99_s", Json::Num(r.p99_s)),
+            ("hops", Json::Int(r.hops as i64)),
+            ("dispatch_ns_per_hop", Json::Num(r.dispatch_ns_per_hop)),
+            ("busy_frac", Json::Num(r.busy_frac)),
+            (
+                "allocs_per_dispatch",
+                r.allocs_per_dispatch.map(Json::Num).unwrap_or(Json::Null),
+            ),
+        ])
+    };
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("perf_live".into())),
+        ("smoke", Json::Bool(smoke)),
+        ("corpus_n", Json::Int(corpus_size as i64)),
+        ("requests", Json::Int(total as i64)),
+        ("clients", Json::Int(clients as i64)),
+        ("count_alloc", Json::Bool(alloc_count().is_some())),
+        // Headline + gate key: v-rag-cached closed-loop requests/sec.
+        ("requests_per_sec", Json::Num(headline.requests_per_sec)),
+        ("dispatch_ns_per_hop", Json::Num(headline.dispatch_ns_per_hop)),
+        ("p50_s", Json::Num(headline.p50_s)),
+        ("p99_s", Json::Num(headline.p99_s)),
+        ("apps", Json::Arr(runs.iter().map(run_json).collect())),
+    ]);
+    let path = out_path();
+    emit_json(&path, &doc).expect("write BENCH_live.json");
+    // Self-check: the artifact must be machine-readable by the same
+    // parser the regression gate uses.
+    let text = std::fs::read_to_string(&path).expect("re-read artifact");
+    for key in ["requests_per_sec", "dispatch_ns_per_hop", "p50_s", "p99_s"] {
+        assert!(
+            json_number_field(&text, key).is_some(),
+            "emitted BENCH_live.json is missing a readable {key}"
+        );
+    }
+    println!("\nwrote {}", path.display());
+
+    // Regression gate: only once a baseline is checked in.
+    let base = baseline_path(smoke);
+    match std::fs::read_to_string(&base) {
+        Ok(btext) => match json_number_field(&btext, "requests_per_sec") {
+            Some(bline) if bline > 0.0 => {
+                let ratio = headline.requests_per_sec / bline;
+                println!(
+                    "baseline {}: {} req/s -> ratio {}",
+                    base.display(),
+                    f(bline, 0),
+                    f(ratio, 3)
+                );
+                if ratio < GATE_FRAC {
+                    eprintln!(
+                        "REGRESSION: requests/sec fell to {}x of baseline (gate {GATE_FRAC}x)",
+                        f(ratio, 3)
+                    );
+                    std::process::exit(1);
+                }
+            }
+            _ => println!("baseline {} unreadable; gate skipped", base.display()),
+        },
+        Err(_) => println!(
+            "no checked-in baseline at {} yet; gate skipped (record one in a cargo-equipped env)",
+            base.display()
+        ),
+    }
+}

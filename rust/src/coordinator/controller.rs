@@ -14,6 +14,13 @@
 //! runs from the message loop (`recv_timeout` keeps it firing while
 //! idle). This module keeps only the execution mechanics: worker
 //! channels, in-flight bookkeeping, and control-flow decoding.
+//!
+//! The hot loop is allocation- and hash-free on the steady path: workers
+//! live in a dense `Vec` indexed by `NodeId`, in-flight requests in a
+//! generation-tagged slab keyed by a small recycled index, component
+//! names are interned once at deploy, and the routing scratch buffer is
+//! reused across dispatches. `CtrlStats` (attached to `RunReport`) makes
+//! the loop's own overhead measurable; `benches/perf_live.rs` gates it.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -23,10 +30,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::exec::components::{build_live_shared, spawn_for_kind};
+use crate::exec::components::{build_live_shared, spawn_for_kind, EngineMode};
 use crate::exec::messages::{Done, RagState, WorkItem};
 use crate::exec::worker::WorkerHandle;
-use crate::metrics::{Recorder, RunReport};
+use crate::metrics::{CtrlStats, Recorder, RunReport};
 use crate::profile::models::RequestFeatures;
 use crate::profile::profile_graph_gen_at;
 use crate::sched::{ControlPlane, QueueDiscipline, SchedConfig};
@@ -46,6 +53,12 @@ const TICK_INTERVAL: f64 = 1.0;
 #[derive(Clone, Debug)]
 pub struct ControllerConfig {
     pub artifacts: PathBuf,
+    /// Stage-engine selection: `Artifacts` (default) runs real XLA
+    /// engines from `artifacts`; `Echo` runs the deterministic in-process
+    /// engine (no artifacts, no model weights) over the SAME retrieval
+    /// index, caches, workers, and control plane — the live hot loop's
+    /// bench/test harness.
+    pub engine: EngineMode,
     pub corpus_size: usize,
     pub n_topics: usize,
     /// Retrieval index shards (scatter-gather fan-out; 1 = unsharded).
@@ -86,6 +99,7 @@ impl ControllerConfig {
     pub fn quick(artifacts: PathBuf) -> Self {
         ControllerConfig {
             artifacts,
+            engine: EngineMode::Artifacts,
             corpus_size: 512,
             n_topics: 8,
             n_shards: 4,
@@ -98,6 +112,16 @@ impl ControllerConfig {
             sched: SchedConfig::default(),
             continuous_batching: true,
         }
+    }
+
+    /// Echo-engine deployment: no artifacts required, deterministic
+    /// outputs, real retrieval/cache/scheduling path. This is what
+    /// `benches/perf_live.rs` and the artifact-free live tests deploy.
+    pub fn echo(seed: u64) -> Self {
+        let mut cfg = ControllerConfig::quick(PathBuf::new());
+        cfg.engine = EngineMode::Echo;
+        cfg.seed = seed;
+        cfg
     }
 }
 
@@ -124,12 +148,34 @@ pub struct ServingHandle {
     join: Option<std::thread::JoinHandle<()>>,
 }
 
+/// A cheap, cloneable submission handle (`ServingHandle::client`): load
+/// generators hand one to each driver thread while the orchestrator
+/// keeps the `ServingHandle` for `report`/`shutdown`.
+#[derive(Clone)]
+pub struct LiveClient {
+    tx: Sender<Msg>,
+}
+
+impl LiveClient {
+    /// Submit a query; the response arrives on the returned channel.
+    pub fn submit(&self, query: &[u8]) -> Receiver<LiveResponse> {
+        let (resp_tx, resp_rx) = channel();
+        let _ = self.tx.send(Msg::Submit { query: query.to_vec(), resp: resp_tx });
+        resp_rx
+    }
+}
+
 impl ServingHandle {
     /// Submit a query; the response arrives on the returned channel.
     pub fn submit(&self, query: &[u8]) -> Receiver<LiveResponse> {
         let (resp_tx, resp_rx) = channel();
         let _ = self.tx.send(Msg::Submit { query: query.to_vec(), resp: resp_tx });
         resp_rx
+    }
+
+    /// A cloneable submitter for multi-threaded load drivers.
+    pub fn client(&self) -> LiveClient {
+        LiveClient { tx: self.tx.clone() }
     }
 
     /// Fetch the run metrics so far.
@@ -149,6 +195,9 @@ impl ServingHandle {
 }
 
 struct InflightReq {
+    /// User-facing sequential request id (`LiveResponse::req`); the
+    /// wire-level key workers echo back is the slab key, which recycles.
+    ext_id: u64,
     resp: Sender<LiveResponse>,
     started: Instant,
     deadline: Option<f64>,
@@ -162,7 +211,9 @@ struct InflightReq {
     /// Shared join cells, one per in-flight fork, keyed by the join
     /// node: branch completions accumulate here until the barrier
     /// releases; the merged state then dispatches the join exactly once.
-    joins: HashMap<NodeId, LiveJoin>,
+    /// A Vec, not a map — real programs hold at most a couple of live
+    /// forks, and a linear scan beats hashing at that size.
+    joins: Vec<(NodeId, LiveJoin)>,
 }
 
 /// Barrier state of one in-flight fork on the live path.
@@ -171,7 +222,7 @@ struct LiveJoin {
     /// join node and recursion may wrap a fork (loop re-entering it), so
     /// a stale loser from a previous traversal must not be mistaken for
     /// a member of the fresh barrier — membership is explicit.
-    branches: std::collections::HashSet<u32>,
+    branches: Vec<u32>,
     /// Arrivals that release the barrier.
     need: usize,
     merge: MergePolicy,
@@ -187,13 +238,86 @@ struct LiveJoin {
 impl LiveJoin {
     fn new(fg: &ForkGroup) -> LiveJoin {
         LiveJoin {
-            branches: std::collections::HashSet::new(),
+            branches: Vec::new(),
             need: fg.need,
             merge: fg.merge,
             states: Vec::new(),
             arrivals: Vec::new(),
             fired: false,
         }
+    }
+}
+
+/// Install `cell` as the live barrier for `node`, replacing any stale
+/// cell left by a previous traversal of the same fork (loop wrap) — the
+/// replace-not-append semantics the old `HashMap::insert` had.
+fn set_join(joins: &mut Vec<(NodeId, LiveJoin)>, node: NodeId, cell: LiveJoin) {
+    if let Some(slot) = joins.iter_mut().find(|(n, _)| *n == node) {
+        slot.1 = cell;
+    } else {
+        joins.push((node, cell));
+    }
+}
+
+/// In-flight request table: a slab keyed by `(generation << 32) | slot`.
+///
+/// The slot index recycles (steady state touches the same few cache
+/// lines instead of growing a hash table), while the generation tag makes
+/// recycled keys unambiguous: a stale FirstK loser carrying a retired
+/// key misses the lookup instead of corrupting the slot's new tenant.
+struct InflightSlab {
+    slots: Vec<SlabSlot>,
+    free: Vec<u32>,
+    live: usize,
+}
+
+struct SlabSlot {
+    generation: u32,
+    req: Option<InflightReq>,
+}
+
+impl InflightSlab {
+    fn new() -> InflightSlab {
+        InflightSlab { slots: Vec::new(), free: Vec::new(), live: 0 }
+    }
+
+    fn insert(&mut self, req: InflightReq) -> u64 {
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.slots.push(SlabSlot { generation: 0, req: None });
+                (self.slots.len() - 1) as u32
+            }
+        };
+        let cell = &mut self.slots[slot as usize];
+        debug_assert!(cell.req.is_none(), "free list handed out an occupied slot");
+        cell.req = Some(req);
+        self.live += 1;
+        ((cell.generation as u64) << 32) | slot as u64
+    }
+
+    fn get_mut(&mut self, key: u64) -> Option<&mut InflightReq> {
+        let slot = (key & 0xffff_ffff) as usize;
+        let generation = (key >> 32) as u32;
+        let cell = self.slots.get_mut(slot)?;
+        if cell.generation != generation {
+            return None;
+        }
+        cell.req.as_mut()
+    }
+
+    fn remove(&mut self, key: u64) -> Option<InflightReq> {
+        let slot = (key & 0xffff_ffff) as usize;
+        let generation = (key >> 32) as u32;
+        let cell = self.slots.get_mut(slot)?;
+        if cell.generation != generation {
+            return None;
+        }
+        let req = cell.req.take()?;
+        cell.generation = cell.generation.wrapping_add(1);
+        self.free.push(slot as u32);
+        self.live -= 1;
+        Some(req)
     }
 }
 
@@ -208,6 +332,7 @@ pub fn deploy(graph: PipelineGraph, cfg: ControllerConfig) -> Result<ServingHand
         cfg.kv_cache,
         cfg.quantization,
         cfg.seed,
+        cfg.engine,
     )
     .context("building live shared state (corpus/index)")?;
     shared.continuous_batching = cfg.continuous_batching;
@@ -215,14 +340,15 @@ pub fn deploy(graph: PipelineGraph, cfg: ControllerConfig) -> Result<ServingHand
 
     // Spawn workers per component (each carries its node's degrade knob
     // so it can shed fidelity when the shared overload cell says so).
-    let mut workers: HashMap<NodeId, Vec<WorkerHandle>> = HashMap::new();
+    // Dense by NodeId: the dispatch path indexes, never hashes.
+    let mut workers: Vec<Vec<WorkerHandle>> = (0..graph.nodes.len()).map(|_| Vec::new()).collect();
     for node in graph.work_nodes() {
         let n = cfg
             .instances
             .as_ref()
             .and_then(|m| m.get(&node.name).copied())
             .unwrap_or_else(|| node.base_instances.max(1));
-        let v: Vec<WorkerHandle> = (0..n)
+        workers[node.id.0] = (0..n)
             .map(|i| {
                 spawn_for_kind(
                     format!("{}-{i}", node.name),
@@ -232,7 +358,6 @@ pub fn deploy(graph: PipelineGraph, cfg: ControllerConfig) -> Result<ServingHand
                 )
             })
             .collect();
-        workers.insert(node.id, v);
     }
 
     let (tx, rx) = channel::<Msg>();
@@ -301,7 +426,7 @@ pub fn deploy(graph: PipelineGraph, cfg: ControllerConfig) -> Result<ServingHand
 /// Everything the controller thread owns.
 struct ControllerLoop {
     graph: PipelineGraph,
-    workers: HashMap<NodeId, Vec<WorkerHandle>>,
+    workers: Vec<Vec<WorkerHandle>>,
     rx: Receiver<Msg>,
     done_tx: Sender<Done>,
     slo: Option<f64>,
@@ -310,6 +435,43 @@ struct ControllerLoop {
     plane: ControlPlane,
     k_docs: usize,
     max_new_tokens: usize,
+}
+
+/// One hop onto a worker: snapshot the pool's load into the reusable
+/// scratch buffer, route, hand over the (zero-copy) state. Every input
+/// is a dense index or a preresolved reference — no hash probes, no
+/// String clones, no per-dispatch Vec allocation.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_item(
+    req: u64,
+    node: NodeId,
+    branch: u32,
+    state: RagState,
+    plane: &mut ControlPlane,
+    workers: &[Vec<WorkerHandle>],
+    stateful: &[bool],
+    scratch: &mut Vec<InstanceState>,
+    done_tx: &Arc<Sender<Done>>,
+    ctrl: &mut CtrlStats,
+) {
+    let t0 = Instant::now();
+    let pool = &workers[node.0];
+    scratch.clear();
+    for w in pool {
+        let pending = w.pending();
+        scratch.push(InstanceState {
+            active: pending.min(WORKER_SLOTS),
+            queued: pending.saturating_sub(WORKER_SLOTS),
+            slots: WORKER_SLOTS,
+            expected_reentries: 0.0,
+            up: w.is_up(),
+        });
+    }
+    let pick = plane.route(req, node, stateful[node.0], scratch);
+    let item = WorkItem::for_branch(req, node, branch, state, done_tx.clone());
+    let _ = pool[pick].submit(item);
+    ctrl.dispatches += 1;
+    ctrl.dispatch_secs += t0.elapsed().as_secs_f64();
 }
 
 fn controller_loop(lp: ControllerLoop) {
@@ -325,44 +487,35 @@ fn controller_loop(lp: ControllerLoop) {
         k_docs,
         max_new_tokens,
     } = lp;
+    let done_tx = Arc::new(done_tx);
     let mut recorder = Recorder::new();
-    let mut inflight: HashMap<u64, InflightReq> = HashMap::new();
-    let mut next_req: u64 = 0;
+    let mut inflight = InflightSlab::new();
+    let mut next_ext: u64 = 0;
+    let mut ctrl = CtrlStats::default();
     let clock = WallClock::new();
     let mut last_tick = 0.0f64;
     let mut rng = crate::util::rng::Rng::new(0x11FE);
 
-    let total_slots: usize = workers.values().map(|v| v.len() * WORKER_SLOTS).sum();
-    let stateful_map: HashMap<NodeId, bool> =
-        graph.nodes.iter().map(|n| (n.id, n.stateful)).collect();
+    let total_slots: usize = workers.iter().map(|v| v.len() * WORKER_SLOTS).sum();
+    // Dense per-node tables, interned once: the completion path reads
+    // `node_names[id.0]` instead of cloning a String per Done, and the
+    // dispatch path reads `stateful[id.0]` instead of probing a map.
+    let mut stateful = vec![false; graph.nodes.len()];
+    let mut node_names = vec![String::new(); graph.nodes.len()];
+    for n in &graph.nodes {
+        stateful[n.id.0] = n.stateful;
+        node_names[n.id.0] = n.name.clone();
+    }
     // Dense fork index from the spec compiler (branch entries + join +
     // barrier policy per fork node); the controller dispatches ALL fork
     // successors at once and merges their `Done`s at the join cell.
     let fork_map = graph.analyze().fork_map;
-    let dispatch = |req: u64,
-                    node: NodeId,
-                    branch: u32,
-                    state: RagState,
-                    plane: &mut ControlPlane,
-                    workers: &HashMap<NodeId, Vec<WorkerHandle>>,
-                    done_tx: &Sender<Done>| {
-        let pool = &workers[&node];
-        let states: Vec<InstanceState> = pool
-            .iter()
-            .map(|w| InstanceState {
-                active: w.pending().min(WORKER_SLOTS),
-                queued: w.pending().saturating_sub(WORKER_SLOTS),
-                slots: WORKER_SLOTS,
-                expected_reentries: 0.0,
-                up: w.is_up(),
-            })
-            .collect();
-        let stateful = stateful_map.get(&node).copied().unwrap_or(false);
-        let pick = plane.route(req, node, stateful, &states);
-        let item = WorkItem::for_branch(req, node, branch, state, done_tx.clone());
-        let _ = pool[pick].submit(item);
-    };
+    // Routing scratch, reused across every dispatch.
+    let mut scratch: Vec<InstanceState> = Vec::new();
 
+    // Busy/idle split: `mark` is the instant the last blocking wait
+    // ended; everything between it and the next wait is processing time.
+    let mut mark = Instant::now();
     loop {
         // The unified control tick, wall-clock driven. Live queues are
         // worker channels (FIFO by construction), so the tick's rekey
@@ -371,20 +524,25 @@ fn controller_loop(lp: ControllerLoop) {
         let now = clock.now();
         if now - last_tick >= TICK_INTERVAL {
             last_tick = now;
-            let pending: usize = workers.values().flatten().map(|w| w.pending()).sum();
+            let pending: usize = workers.iter().flatten().map(|w| w.pending()).sum();
             let util = pending as f64 / total_slots.max(1) as f64;
             let _ = plane.tick(now, util, None);
         }
 
-        let msg = match rx.recv_timeout(Duration::from_millis(200)) {
+        let wait_start = Instant::now();
+        ctrl.busy_secs += wait_start.duration_since(mark).as_secs_f64();
+        let res = rx.recv_timeout(Duration::from_millis(200));
+        mark = Instant::now();
+        ctrl.idle_secs += mark.duration_since(wait_start).as_secs_f64();
+        let msg = match res {
             Ok(m) => m,
             Err(RecvTimeoutError::Timeout) => continue,
             Err(RecvTimeoutError::Disconnected) => break,
         };
         match msg {
             Msg::Submit { query, resp } => {
-                let req = next_req;
-                next_req += 1;
+                let ext = next_ext;
+                next_ext += 1;
                 let now = clock.now();
                 recorder.on_arrival(now);
                 let entry = graph
@@ -402,7 +560,7 @@ fn controller_loop(lp: ControllerLoop) {
                     complexity: 1,
                 };
                 if plane.admission_enabled() {
-                    let pool = &workers[&entry];
+                    let pool = &workers[entry.0];
                     // Queued work only (pending minus the slots actively
                     // executing), matching the DES's node_load semantics
                     // so one AdmissionConfig means the same thresholds on
@@ -418,7 +576,7 @@ fn controller_loop(lp: ControllerLoop) {
                     if !decision.admitted() {
                         recorder.on_shed();
                         let _ = resp.send(LiveResponse {
-                            req,
+                            req: ext,
                             answer: Vec::new(),
                             latency_secs: 0.0,
                             hops: 0,
@@ -428,48 +586,72 @@ fn controller_loop(lp: ControllerLoop) {
                     }
                 }
                 let state = RagState::new(&query);
-                inflight.insert(
-                    req,
-                    InflightReq {
-                        resp,
-                        started: Instant::now(),
-                        deadline: slo,
-                        hops: 0,
-                        current: entry,
-                        features,
-                        next_branch: 0,
-                        joins: HashMap::new(),
-                    },
-                );
+                let req = inflight.insert(InflightReq {
+                    ext_id: ext,
+                    resp,
+                    started: Instant::now(),
+                    deadline: slo,
+                    hops: 0,
+                    current: entry,
+                    features,
+                    next_branch: 0,
+                    joins: Vec::new(),
+                });
                 // A fork at the pipeline entry fans out immediately
                 // (hybrid retrieval: dense ∥ web from the first hop).
+                // Branch states are Arc clones of the trunk — the
+                // fan-out is pointer bumps, not byte copies.
                 if let Some(fg) = fork_map[graph.source.0].as_ref() {
-                    let fl = inflight.get_mut(&req).expect("just inserted");
+                    let fl = inflight.get_mut(req).expect("just inserted");
                     let mut cell = LiveJoin::new(fg);
                     let mut spawned = Vec::with_capacity(fg.targets.len());
                     for &target in &fg.targets {
                         fl.next_branch += 1;
-                        cell.branches.insert(fl.next_branch);
+                        cell.branches.push(fl.next_branch);
                         spawned.push((fl.next_branch, target));
                     }
-                    fl.joins.insert(fg.join, cell);
+                    set_join(&mut fl.joins, fg.join, cell);
                     for (b, target) in spawned {
-                        dispatch(req, target, b, state.clone(), &mut plane, &workers, &done_tx);
+                        dispatch_item(
+                            req,
+                            target,
+                            b,
+                            state.clone(),
+                            &mut plane,
+                            &workers,
+                            &stateful,
+                            &mut scratch,
+                            &done_tx,
+                            &mut ctrl,
+                        );
                     }
                 } else {
-                    dispatch(req, entry, 0, state, &mut plane, &workers, &done_tx);
+                    dispatch_item(
+                        req,
+                        entry,
+                        0,
+                        state,
+                        &mut plane,
+                        &workers,
+                        &stateful,
+                        &mut scratch,
+                        &done_tx,
+                        &mut ctrl,
+                    );
                 }
             }
             Msg::Done(d) => {
-                let Some(fl) = inflight.get_mut(&d.req) else { continue };
+                ctrl.completions += 1;
+                // A stale key (recycled slot, bumped generation) is a
+                // FirstK loser whose request already finished: drop it.
+                let Some(fl) = inflight.get_mut(d.req) else { continue };
                 fl.hops += 1;
-                let node_name = graph.node(d.node).name.clone();
-                recorder.on_execution(&node_name, d.service_secs, d.queue_secs);
+                recorder.on_execution(&node_names[d.node.0], d.service_secs, d.queue_secs);
                 let features = fl.features;
                 if let Some(err) = d.error {
-                    let fl = inflight.remove(&d.req).unwrap();
+                    let fl = inflight.remove(d.req).unwrap();
                     let _ = fl.resp.send(LiveResponse {
-                        req: d.req,
+                        req: fl.ext_id,
                         answer: Vec::new(),
                         latency_secs: fl.started.elapsed().as_secs_f64(),
                         hops: fl.hops,
@@ -486,18 +668,30 @@ fn controller_loop(lp: ControllerLoop) {
                 plane.observe_service(d.node, &features, d.service_secs);
                 // Parallel fan-out: a fork node's completion dispatches
                 // EVERY branch at once, each tagged with its own branch
-                // id and reporting to a fresh join cell.
+                // id and reporting to a fresh join cell. Re-dispatch is
+                // Arc clones — pointer bumps, not byte copies.
                 if let Some(fg) = fork_map[d.node.0].as_ref() {
                     let mut cell = LiveJoin::new(fg);
                     let mut spawned = Vec::with_capacity(fg.targets.len());
                     for &target in &fg.targets {
                         fl.next_branch += 1;
-                        cell.branches.insert(fl.next_branch);
+                        cell.branches.push(fl.next_branch);
                         spawned.push((fl.next_branch, target));
                     }
-                    fl.joins.insert(fg.join, cell);
+                    set_join(&mut fl.joins, fg.join, cell);
                     for (b, target) in spawned {
-                        dispatch(d.req, target, b, d.state.clone(), &mut plane, &workers, &done_tx);
+                        dispatch_item(
+                            d.req,
+                            target,
+                            b,
+                            d.state.clone(),
+                            &mut plane,
+                            &workers,
+                            &stateful,
+                            &mut scratch,
+                            &done_tx,
+                            &mut ctrl,
+                        );
                     }
                     continue;
                 }
@@ -505,7 +699,7 @@ fn controller_loop(lp: ControllerLoop) {
                 // A branch completion bound for a join node reports to
                 // the barrier instead of dispatching the join directly.
                 if next != graph.sink && graph.node(next).join.is_some() {
-                    if let Some(cell) = fl.joins.get_mut(&next) {
+                    if let Some((_, cell)) = fl.joins.iter_mut().find(|(n, _)| *n == next) {
                         if cell.branches.contains(&d.branch) {
                             if cell.fired {
                                 // Late FirstK loser: state dropped; its
@@ -529,9 +723,20 @@ fn controller_loop(lp: ControllerLoop) {
                                 .iter()
                                 .map(|t| release.duration_since(*t).as_secs_f64())
                                 .sum();
-                            recorder.on_join_wait(&graph.node(next).name, stall);
+                            recorder.on_join_wait(&node_names[next.0], stall);
                             fl.current = next;
-                            dispatch(d.req, next, 0, merged, &mut plane, &workers, &done_tx);
+                            dispatch_item(
+                                d.req,
+                                next,
+                                0,
+                                merged,
+                                &mut plane,
+                                &workers,
+                                &stateful,
+                                &mut scratch,
+                                &done_tx,
+                                &mut ctrl,
+                            );
                             continue;
                         }
                         if d.branch != 0 {
@@ -546,13 +751,13 @@ fn controller_loop(lp: ControllerLoop) {
                     }
                 }
                 if next == graph.sink {
-                    let fl = inflight.remove(&d.req).unwrap();
+                    let fl = inflight.remove(d.req).unwrap();
                     let latency = fl.started.elapsed().as_secs_f64();
                     let now = clock.now();
                     recorder.on_completion(now - latency, now, fl.deadline.map(|s| now - latency + s));
                     let _ = fl.resp.send(LiveResponse {
-                        req: d.req,
-                        answer: d.state.answer,
+                        req: fl.ext_id,
+                        answer: d.state.into_answer(),
                         latency_secs: latency,
                         hops: fl.hops,
                         error: None,
@@ -560,7 +765,18 @@ fn controller_loop(lp: ControllerLoop) {
                     plane.release(d.req);
                 } else {
                     fl.current = next;
-                    dispatch(d.req, next, d.branch, d.state, &mut plane, &workers, &done_tx);
+                    dispatch_item(
+                        d.req,
+                        next,
+                        d.branch,
+                        d.state,
+                        &mut plane,
+                        &workers,
+                        &stateful,
+                        &mut scratch,
+                        &done_tx,
+                        &mut ctrl,
+                    );
                 }
             }
             Msg::Report(tx) => {
@@ -573,12 +789,13 @@ fn controller_loop(lp: ControllerLoop) {
                 if plane.cfg.enabled() {
                     recorder.set_sched(plane.counters.snapshot());
                 }
+                recorder.set_ctrl(ctrl);
                 let _ = tx.send(recorder.report());
             }
             Msg::Shutdown => break,
         }
     }
-    for (_, pool) in workers {
+    for pool in workers {
         for w in pool {
             w.shutdown();
         }
@@ -734,5 +951,79 @@ mod tests {
             decide_next(&g, cls, &s, &mut rng),
             g.node_by_name("iter_retriever").unwrap().id
         );
+    }
+
+    fn dummy_req(ext: u64) -> InflightReq {
+        let (tx, _rx) = channel();
+        InflightReq {
+            ext_id: ext,
+            resp: tx,
+            started: Instant::now(),
+            deadline: None,
+            hops: 0,
+            current: NodeId(0),
+            features: RequestFeatures {
+                prompt_len: 4,
+                gen_len: 8,
+                k_docs: 4,
+                complexity: 1,
+            },
+            next_branch: 0,
+            joins: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn slab_recycles_slots_and_rejects_stale_keys() {
+        let mut slab = InflightSlab::new();
+        let k0 = slab.insert(dummy_req(100));
+        let k1 = slab.insert(dummy_req(101));
+        assert_eq!(k0 & 0xffff_ffff, 0, "first insert takes slot 0");
+        assert_eq!(k1 & 0xffff_ffff, 1, "second insert takes slot 1");
+        assert_eq!(slab.get_mut(k0).unwrap().ext_id, 100);
+
+        let removed = slab.remove(k0).unwrap();
+        assert_eq!(removed.ext_id, 100);
+        // Stale key: same slot, retired generation — must miss, exactly
+        // like a late FirstK loser carrying a finished request's key.
+        assert!(slab.get_mut(k0).is_none());
+        assert!(slab.remove(k0).is_none());
+
+        // The slot recycles with a bumped generation: the new key is
+        // distinct from every key the slot handed out before.
+        let k2 = slab.insert(dummy_req(102));
+        assert_eq!(k2 & 0xffff_ffff, 0, "freed slot 0 is reused");
+        assert_ne!(k2, k0, "generation tag disambiguates the recycled slot");
+        assert!(slab.get_mut(k0).is_none(), "old key still misses");
+        assert_eq!(slab.get_mut(k2).unwrap().ext_id, 102);
+        assert_eq!(slab.live, 2);
+    }
+
+    #[test]
+    fn set_join_replaces_cell_for_same_node() {
+        let fg = ForkGroup {
+            fork: NodeId(0),
+            join: NodeId(3),
+            targets: vec![NodeId(1), NodeId(2)],
+            edges: vec![0, 1],
+            policy: crate::spec::graph::JoinPolicy::All,
+            merge: MergePolicy::Union,
+            need: 2,
+        };
+        let mut joins: Vec<(NodeId, LiveJoin)> = Vec::new();
+        let mut first = LiveJoin::new(&fg);
+        first.branches.push(1);
+        first.branches.push(2);
+        set_join(&mut joins, fg.join, first);
+        assert_eq!(joins.len(), 1);
+        // A loop wrapping the fork re-arms the barrier: the fresh cell
+        // REPLACES the stale one (old HashMap::insert semantics), so a
+        // loser from the previous traversal can't satisfy it.
+        let mut second = LiveJoin::new(&fg);
+        second.branches.push(3);
+        second.branches.push(4);
+        set_join(&mut joins, fg.join, second);
+        assert_eq!(joins.len(), 1, "same join node replaces, not appends");
+        assert_eq!(joins[0].1.branches, vec![3, 4]);
     }
 }

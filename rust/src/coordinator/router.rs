@@ -5,6 +5,14 @@
 //! stateful iterations expected to re-enter that instance (capacity that
 //! looks idle but is spoken for). Ray-like dispatch ("idle-worker") is the
 //! baseline policy the paper contrasts (§5 "Comparison with Ray").
+//!
+//! Hot-path representation: stateful bindings live in a small per-request
+//! *arena* (`request → Vec<(node, instance)>`), so a route probe hashes
+//! once on the request id and scans a tiny vector instead of hashing a
+//! composite `(request, node)` key, and releasing a finished request is a
+//! single map removal instead of a full-table retain. Round-robin
+//! counters are a dense `Vec` indexed by `NodeId` (pre-sized via
+//! [`Router::with_nodes`]) — no per-route hash probe keyed by node.
 
 use std::collections::HashMap;
 
@@ -48,14 +56,30 @@ pub enum RoutingPolicy {
 #[derive(Clone, Debug)]
 pub struct Router {
     policy: RoutingPolicy,
-    /// (request, node) → instance index, for stateful components.
-    bindings: HashMap<(u64, NodeId), usize>,
-    rr_counters: HashMap<NodeId, usize>,
+    /// request → its stateful (node, instance) bindings. A request binds
+    /// at most a handful of nodes, so the arena is a linear-scanned Vec.
+    bindings: HashMap<u64, Vec<(NodeId, usize)>>,
+    /// Total bindings across all arenas (kept incrementally so the
+    /// slot-leak audit stays O(1)).
+    n_bindings: usize,
+    /// Dense per-node round-robin cursors (grown on demand for nodes
+    /// beyond the pre-sized range).
+    rr_counters: Vec<usize>,
 }
 
 impl Router {
     pub fn new(policy: RoutingPolicy) -> Self {
-        Router { policy, bindings: HashMap::new(), rr_counters: HashMap::new() }
+        Router::with_nodes(policy, 0)
+    }
+
+    /// Pre-size the dense per-node state for a graph of `n_nodes` nodes.
+    pub fn with_nodes(policy: RoutingPolicy, n_nodes: usize) -> Self {
+        Router {
+            policy,
+            bindings: HashMap::new(),
+            n_bindings: 0,
+            rr_counters: vec![0; n_nodes],
+        }
     }
 
     pub fn policy(&self) -> RoutingPolicy {
@@ -74,9 +98,11 @@ impl Router {
     ) -> usize {
         debug_assert!(!instances.is_empty());
         if stateful {
-            if let Some(&inst) = self.bindings.get(&(request, node)) {
-                if inst < instances.len() && instances[inst].up {
-                    return inst;
+            if let Some(arena) = self.bindings.get(&request) {
+                if let Some(&(_, inst)) = arena.iter().find(|(n, _)| *n == node) {
+                    if inst < instances.len() && instances[inst].up {
+                        return inst;
+                    }
                 }
             }
         }
@@ -86,18 +112,29 @@ impl Router {
             RoutingPolicy::RoundRobin => self.pick_round_robin(node, instances),
         };
         if stateful {
-            self.bindings.insert((request, node), pick);
+            let arena = self.bindings.entry(request).or_default();
+            match arena.iter_mut().find(|(n, _)| *n == node) {
+                // Rebind (stale binding to a down/vanished instance).
+                Some(e) => e.1 = pick,
+                None => {
+                    arena.push((node, pick));
+                    self.n_bindings += 1;
+                }
+            }
         }
         pick
     }
 
-    /// Drop a request's bindings once it completes.
+    /// Drop a request's bindings once it completes (O(1): the whole
+    /// arena goes at once).
     pub fn release(&mut self, request: u64) {
-        self.bindings.retain(|(r, _), _| *r != request);
+        if let Some(arena) = self.bindings.remove(&request) {
+            self.n_bindings -= arena.len();
+        }
     }
 
     pub fn bindings_for(&self, node: NodeId) -> usize {
-        self.bindings.keys().filter(|(_, n)| *n == node).count()
+        self.bindings.values().map(|a| a.iter().filter(|(n, _)| *n == node).count()).sum()
     }
 
     /// Total stateful bindings currently held across all nodes — the
@@ -105,7 +142,7 @@ impl Router {
     /// error, cancelled fork loser) must leave this at 0 once the system
     /// drains.
     pub fn total_bindings(&self) -> usize {
-        self.bindings.len()
+        self.n_bindings
     }
 
     fn pick_load_state_aware(&self, instances: &[InstanceState]) -> usize {
@@ -147,7 +184,10 @@ impl Router {
     }
 
     fn pick_round_robin(&mut self, node: NodeId, instances: &[InstanceState]) -> usize {
-        let c = self.rr_counters.entry(node).or_insert(0);
+        if node.0 >= self.rr_counters.len() {
+            self.rr_counters.resize(node.0 + 1, 0);
+        }
+        let c = &mut self.rr_counters[node.0];
         for _ in 0..instances.len() {
             let i = *c % instances.len();
             *c += 1;
@@ -162,6 +202,7 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     fn inst(active: usize, queued: usize, slots: usize, reent: f64) -> InstanceState {
         InstanceState { active, queued, slots, expected_reentries: reent, up: true }
@@ -208,6 +249,7 @@ mod tests {
         assert_eq!(r.bindings_for(NodeId(3)), 1);
         r.release(7);
         assert_eq!(r.bindings_for(NodeId(3)), 0);
+        assert_eq!(r.total_bindings(), 0);
     }
 
     #[test]
@@ -225,5 +267,136 @@ mod tests {
         let mut instances = vec![inst(0, 0, 4, 0.0), inst(2, 2, 4, 0.0)];
         instances[0].up = false;
         assert_eq!(r.route(1, NodeId(2), false, &instances), 1);
+    }
+
+    // -- arena representation ≡ the retired composite-key table ------------
+
+    /// The pre-arena router: `(request, node) → instance` composite-key
+    /// table with retain-based release. Reproduced verbatim so the
+    /// recorded-sequence property below pins the arena representation to
+    /// identical instance choices.
+    struct FlatRouter {
+        policy: RoutingPolicy,
+        bindings: HashMap<(u64, NodeId), usize>,
+        rr_counters: HashMap<NodeId, usize>,
+    }
+
+    impl FlatRouter {
+        fn new(policy: RoutingPolicy) -> Self {
+            FlatRouter { policy, bindings: HashMap::new(), rr_counters: HashMap::new() }
+        }
+
+        fn route(
+            &mut self,
+            request: u64,
+            node: NodeId,
+            stateful: bool,
+            instances: &[InstanceState],
+        ) -> usize {
+            if stateful {
+                if let Some(&inst) = self.bindings.get(&(request, node)) {
+                    if inst < instances.len() && instances[inst].up {
+                        return inst;
+                    }
+                }
+            }
+            let pick = match self.policy {
+                RoutingPolicy::LoadStateAware => {
+                    let mut best = 0usize;
+                    let mut best_score = f64::INFINITY;
+                    for (i, s) in instances.iter().enumerate() {
+                        if !s.up {
+                            continue;
+                        }
+                        let slots = s.slots.max(1) as f64;
+                        let score =
+                            (s.active as f64 + s.queued as f64 + s.expected_reentries) / slots;
+                        if score < best_score {
+                            best_score = score;
+                            best = i;
+                        }
+                    }
+                    best
+                }
+                RoutingPolicy::IdleFirst => {
+                    let mut pick = None;
+                    for (i, s) in instances.iter().enumerate() {
+                        if s.up && s.idle_slots() > 0 && s.queued == 0 {
+                            pick = Some(i);
+                            break;
+                        }
+                    }
+                    pick.unwrap_or_else(|| {
+                        let mut best = 0;
+                        let mut best_q = usize::MAX;
+                        for (i, s) in instances.iter().enumerate() {
+                            if s.up && s.queued + s.active < best_q {
+                                best_q = s.queued + s.active;
+                                best = i;
+                            }
+                        }
+                        best
+                    })
+                }
+                RoutingPolicy::RoundRobin => {
+                    let c = self.rr_counters.entry(node).or_insert(0);
+                    let mut pick = 0;
+                    for _ in 0..instances.len() {
+                        let i = *c % instances.len();
+                        *c += 1;
+                        if instances[i].up {
+                            pick = i;
+                            break;
+                        }
+                    }
+                    pick
+                }
+            };
+            if stateful {
+                self.bindings.insert((request, node), pick);
+            }
+            pick
+        }
+
+        fn release(&mut self, request: u64) {
+            self.bindings.retain(|(r, _), _| *r != request);
+        }
+    }
+
+    #[test]
+    fn arena_router_matches_flat_router_on_recorded_sequence() {
+        for policy in
+            [RoutingPolicy::LoadStateAware, RoutingPolicy::IdleFirst, RoutingPolicy::RoundRobin]
+        {
+            let mut rng = Rng::new(0xA12E);
+            let mut arena = Router::new(policy);
+            let mut flat = FlatRouter::new(policy);
+            for step in 0..2000u64 {
+                if rng.chance(0.15) {
+                    let req = rng.below(16);
+                    arena.release(req);
+                    flat.release(req);
+                    continue;
+                }
+                let req = rng.below(16);
+                let node = NodeId(rng.index(6));
+                let stateful = rng.chance(0.5);
+                let n = 1 + rng.index(4);
+                let instances: Vec<InstanceState> = (0..n)
+                    .map(|_| InstanceState {
+                        active: rng.index(5),
+                        queued: rng.index(4),
+                        slots: 1 + rng.index(8),
+                        expected_reentries: rng.index(4) as f64,
+                        up: rng.chance(0.85),
+                    })
+                    .collect();
+                assert_eq!(
+                    arena.route(req, node, stateful, &instances),
+                    flat.route(req, node, stateful, &instances),
+                    "policy {policy:?} diverged at step {step}",
+                );
+            }
+        }
     }
 }

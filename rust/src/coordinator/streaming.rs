@@ -110,7 +110,10 @@ impl<T> StreamObject<T> {
     pub fn write(&mut self, item: T) {
         self.buffer.push(item);
         if self.buffer.len() >= self.chunk_len {
-            let chunk = std::mem::take(&mut self.buffer);
+            // Swap in a pre-sized buffer: a steady-state producer never
+            // re-grows its staging Vec from zero capacity per chunk.
+            let chunk =
+                std::mem::replace(&mut self.buffer, Vec::with_capacity(self.chunk_len));
             let _ = self.tx.send(chunk);
         }
     }

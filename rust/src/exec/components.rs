@@ -23,8 +23,26 @@ use crate::workload::Corpus;
 use super::messages::WorkItem;
 use super::worker::{spawn_worker, StageLogic, StepDone, SteppedStage, WorkerHandle};
 
+/// Which execution engine backs the live workers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EngineMode {
+    /// Real XLA artifacts (embedder / generator / classifier loaded from
+    /// `LiveShared::artifacts`).
+    #[default]
+    Artifacts,
+    /// Artifact-free deterministic echo engine: hash-based embeddings
+    /// over the SAME IVF index / caches / scatter-gather path, and
+    /// pure-function generator / verdict / rewriter / classifier stages
+    /// ([`echo_answer`] et al.). Used by `benches/perf_live.rs` and the
+    /// artifact-free regression tests — it exercises the entire
+    /// controller / router / worker / retrieval hot path without XLA.
+    Echo,
+}
+
 /// Shared read-only deployment state handed to every worker.
 pub struct LiveShared {
+    /// Engine backing the workers (XLA artifacts vs the echo engine).
+    pub engine: EngineMode,
     pub corpus: Arc<Corpus>,
     /// Sharded IVF index: retrieval scatter-gathers across corpus shards
     /// (see `retrieval::sharded`).
@@ -81,6 +99,36 @@ impl StageLogic for Box<dyn StageLogic> {
 
 // ---------------------------------------------------------------------------
 
+/// Query embedder behind the retriever: either the real XLA artifact or
+/// the deterministic hash embedding ([`Corpus::hash_embed`]) the echo
+/// engine shares with the pure-Rust sim path. Both feed the same IVF
+/// index and caches, so the echo retriever is the real retriever.
+enum AnyEmbedder {
+    Xla(Embedder),
+    Echo,
+}
+
+/// Embedding dimension for [`EngineMode::Echo`] (index build + queries).
+const ECHO_EMBED_DIM: usize = 64;
+
+impl AnyEmbedder {
+    fn batch(&self) -> usize {
+        match self {
+            AnyEmbedder::Xla(e) => e.batch(),
+            AnyEmbedder::Echo => 8,
+        }
+    }
+
+    fn embed_batch(&self, texts: &[&[u8]]) -> Result<Vec<Vec<f32>>> {
+        match self {
+            AnyEmbedder::Xla(e) => e.embed_batch(texts),
+            AnyEmbedder::Echo => {
+                Ok(texts.iter().map(|t| Corpus::hash_embed(t, ECHO_EMBED_DIM)).collect())
+            }
+        }
+    }
+}
+
 /// Scatter-gather retriever with a request cache in front: each query
 /// first probes the cache's exact tier (normalized text), misses are
 /// embedded in one artifact call, probe the semantic tier with that
@@ -92,7 +140,7 @@ impl StageLogic for Box<dyn StageLogic> {
 /// each request across shards (the cache is shared across replicas, so a
 /// repeat hits no matter which replica served the original).
 struct RetrieverLogic {
-    embedder: Embedder,
+    embedder: AnyEmbedder,
     shared: Arc<LiveShared>,
     /// Degrade knob from the node spec (`ShrinkTopK` on retrieval
     /// stages): under overload the scatter-gather fetches fewer docs.
@@ -121,9 +169,7 @@ fn fill_from_hits(
         // contexts with per-document dedup (`RagState::merge`).
         segs.push(ctx.len() - before);
     }
-    state.context = ctx;
-    state.ctx_segments = segs;
-    state.doc_ids = ids;
+    state.set_context(ctx, ids, segs);
 }
 
 impl StageLogic for RetrieverLogic {
@@ -137,7 +183,7 @@ impl StageLogic for RetrieverLogic {
                     .shared
                     .cache
                     .as_ref()
-                    .and_then(|c| c.lookup_exact(&it.state.query, now));
+                    .and_then(|c| c.lookup_exact(it.state.query(), now));
                 match hit {
                     Some(hits) => fill_from_hits(&self.shared, &mut it.state, &hits),
                     None => miss_idx.push(i),
@@ -148,7 +194,7 @@ impl StageLogic for RetrieverLogic {
             }
             // Embed the misses in one artifact call.
             let texts: Vec<&[u8]> =
-                miss_idx.iter().map(|&i| chunk[i].state.query.as_slice()).collect();
+                miss_idx.iter().map(|&i| chunk[i].state.query()).collect();
             let embs = self.embedder.embed_batch(&texts)?;
             // Tier 2: semantic probe with the just-computed embeddings.
             let mut search_idx: Vec<usize> = Vec::new(); // indexes into miss_idx
@@ -182,7 +228,7 @@ impl StageLogic for RetrieverLogic {
                     std::collections::HashMap::new();
                 for &mi in &search_idx {
                     let key =
-                        crate::cache::normalize_query(&chunk[miss_idx[mi]].state.query);
+                        crate::cache::normalize_query(chunk[miss_idx[mi]].state.query());
                     let next = uniq.len();
                     let slot = *seen.entry(key).or_insert(next);
                     if slot == next {
@@ -222,7 +268,7 @@ impl StageLogic for RetrieverLogic {
                 // full-fidelity results only.
                 match self.shared.cache.as_ref() {
                     Some(c) if uniq[rep_of[j]] == mi && k == self.shared.k_docs => {
-                        c.insert(&it.state.query, &embs[mi], hits, now)
+                        c.insert(it.state.query(), &embs[mi], hits, now)
                     }
                     _ => {}
                 }
@@ -278,12 +324,12 @@ struct PendingGen {
 fn kv_probe(shared: &LiveShared, state: &crate::exec::messages::RagState) -> f64 {
     let Some(kc) = shared.kv_cache.as_ref() else { return 1.0 };
     let now = shared.epoch.elapsed().as_secs_f64();
-    let chain = chain_of(&state.doc_ids, &state.ctx_segments);
+    let chain = chain_of(state.doc_ids(), state.ctx_segments());
     let hit = kc.lookup(&chain, now);
     kc.insert(&chain, now);
     match hit {
-        Some(h) if !state.context.is_empty() => {
-            let frac = (h.bytes as f64 / state.context.len() as f64).min(1.0);
+        Some(h) if !state.context_is_empty() => {
+            let frac = (h.bytes as f64 / state.context_len() as f64).min(1.0);
             1.0 - frac * (1.0 - KV_PREFIX_HIT_COST_FRAC)
         }
         _ => 1.0,
@@ -293,9 +339,11 @@ fn kv_probe(shared: &LiveShared, state: &crate::exec::messages::RagState) -> f64
 fn build_prompt(state: &crate::exec::messages::RagState, max_len: usize) -> Vec<u8> {
     let mut p = Vec::with_capacity(max_len);
     p.extend_from_slice(b"C:");
-    p.extend_from_slice(&state.context);
+    for part in state.context_parts() {
+        p.extend_from_slice(part);
+    }
     p.extend_from_slice(b" Q:");
-    p.extend_from_slice(&state.query);
+    p.extend_from_slice(state.query());
     p.extend_from_slice(b" A:");
     p.truncate(max_len);
     p
@@ -321,7 +369,7 @@ impl StageLogic for GeneratorLogic {
                 let kv = kv_probe(&self.shared, &it.state);
                 it.service_weight =
                     kv * dcm.prefill(r.prompt_tokens) + r.generated_tokens as f64 * dcm.step(b);
-                it.state.answer = r.output;
+                it.state.set_answer(r.output);
             }
         }
         Ok(())
@@ -376,7 +424,7 @@ impl SteppedStage for GeneratorLogic {
         // feeds the reuse counters rather than a weight.
         let kv_chain = self.shared.kv_cache.as_ref().map(|kc| {
             let now = self.shared.epoch.elapsed().as_secs_f64();
-            let chain = chain_of(&item.state.doc_ids, &item.state.ctx_segments);
+            let chain = chain_of(item.state.doc_ids(), item.state.ctx_segments());
             kc.lookup(&chain, now);
             chain
         });
@@ -385,7 +433,7 @@ impl SteppedStage for GeneratorLogic {
             self.shared.max_new_tokens,
         );
         // Tokens stream into the answer as steps decode; start clean.
-        item.state.answer.clear();
+        item.state.clear_answer();
         match self.generator.inflight_admit(batch, &req) {
             Ok(slot) => {
                 if let (Some(kc), Some(chain)) = (self.shared.kv_cache.as_ref(), kv_chain) {
@@ -412,7 +460,7 @@ impl SteppedStage for GeneratorLogic {
             // Streaming: each accepted token lands in the in-flight
             // item's answer the step it decodes.
             if let Some(p) = items[slot].as_mut() {
-                p.item.state.answer.push(byte);
+                p.item.state.answer_mut().push(byte);
             }
         })?;
         Ok(retired
@@ -420,7 +468,7 @@ impl SteppedStage for GeneratorLogic {
             .filter_map(|d| {
                 let p = items[d.slot].take()?;
                 let PendingGen { mut item, queue_secs } = p;
-                item.state.answer = d.result.output;
+                item.state.set_answer(d.result.output);
                 Some(StepDone {
                     item,
                     service_secs: d.service_secs,
@@ -471,23 +519,30 @@ impl StageLogic for VerdictLogic {
             return Ok(());
         }
         for it in items.iter_mut() {
-            let mut text = Vec::new();
-            text.extend_from_slice(if self.judge_answer {
-                b"Is this answer good? ".as_slice()
-            } else {
-                b"Is this context relevant? ".as_slice()
-            });
-            text.extend_from_slice(&it.state.query);
-            text.push(b' ');
-            text.extend_from_slice(if self.judge_answer {
-                &it.state.answer
-            } else {
-                &it.state.context
-            });
+            let text = verdict_text(&it.state, self.judge_answer);
             it.state.verdict = Some(self.generator.verdict(&text)?);
         }
         Ok(())
     }
+}
+
+/// The judged text, shared by the XLA and echo verdict stages: a fixed
+/// prompt prefix, the query, and the answer (critic) or context (grader).
+fn verdict_text(state: &crate::exec::messages::RagState, judge_answer: bool) -> Vec<u8> {
+    let mut text = Vec::new();
+    text.extend_from_slice(if judge_answer {
+        b"Is this answer good? ".as_slice()
+    } else {
+        b"Is this context relevant? ".as_slice()
+    });
+    text.extend_from_slice(state.query());
+    text.push(b' ');
+    if judge_answer {
+        text.extend_from_slice(state.answer());
+    } else {
+        state.append_context_to(&mut text);
+    }
+    text
 }
 
 // ---------------------------------------------------------------------------
@@ -506,7 +561,7 @@ impl StageLogic for RewriterLogic {
         let mut suffixes = Vec::with_capacity(items.len());
         for it in items.iter() {
             let mut prompt = b"Rewrite: ".to_vec();
-            prompt.extend_from_slice(&it.state.query);
+            prompt.extend_from_slice(it.state.query());
             let (res, _) = self
                 .generator
                 .generate_batch(&[GenRequest::greedy(&prompt, 8)], |_, _| {})?;
@@ -514,8 +569,9 @@ impl StageLogic for RewriterLogic {
         }
         for (it, suffix) in items.iter_mut().zip(suffixes) {
             // Rewritten query = original + refinement suffix.
-            it.state.query.push(b' ');
-            it.state.query.extend_from_slice(&suffix);
+            let q = it.state.query_mut();
+            q.push(b' ');
+            q.extend_from_slice(&suffix);
             it.state.iteration += 1;
         }
         Ok(())
@@ -534,7 +590,7 @@ impl StageLogic for WebSearchLogic {
         std::thread::sleep(std::time::Duration::from_millis(15));
         for it in items.iter_mut() {
             // Deterministic "web results": passages keyed by query hash.
-            let h: usize = it.state.query.iter().map(|&b| b as usize).sum();
+            let h: usize = it.state.query().iter().map(|&b| b as usize).sum();
             let n = self.shared.corpus.len();
             let mut ctx = Vec::new();
             for j in 0..self.shared.k_docs {
@@ -543,10 +599,9 @@ impl StageLogic for WebSearchLogic {
                 ctx.extend_from_slice(&p.text[..take]);
                 ctx.push(b' ');
             }
-            it.state.context = ctx;
             // Web results carry no per-doc segmentation: a join merge
             // treats this context as opaque (appended whole).
-            it.state.ctx_segments.clear();
+            it.state.set_unsegmented_context(ctx);
         }
         Ok(())
     }
@@ -565,7 +620,7 @@ struct ClassifierLogic {
 impl StageLogic for ClassifierLogic {
     fn process_batch(&mut self, items: &mut [WorkItem]) -> Result<()> {
         for chunk in items.chunks_mut(8) {
-            let texts: Vec<&[u8]> = chunk.iter().map(|i| i.state.query.as_slice()).collect();
+            let texts: Vec<&[u8]> = chunk.iter().map(|i| i.state.query()).collect();
             let classes = self.classifier.classify_batch(&texts)?;
             for (it, c) in chunk.iter_mut().zip(classes) {
                 it.state.class = Some(c);
@@ -576,6 +631,269 @@ impl StageLogic for ClassifierLogic {
 
     fn max_batch(&self) -> usize {
         8
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Echo engine: pure-function stages for EngineMode::Echo. The retriever
+// and web-search stages above are shared (the retriever via
+// AnyEmbedder::Echo); these replace only the XLA-backed stages with
+// deterministic digests so the full controller path runs artifact-free.
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn fnv1a(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(FNV_PRIME);
+    }
+}
+
+/// The echo generator's pure answer function: a stable digest of the
+/// (context, query) pair over flattened context bytes. Public so tests
+/// can compute a request's expected answer independently of the entire
+/// serving stack (controller, router, workers, state plumbing).
+pub fn echo_answer(context: &[u8], query: &[u8]) -> Vec<u8> {
+    let mut h = FNV_OFFSET;
+    fnv1a(&mut h, context);
+    fnv1a(&mut h, &[0x1f]);
+    fnv1a(&mut h, query);
+    format!("echo:{h:016x}:{}", context.len()).into_bytes()
+}
+
+/// Same digest computed over the state's shared context segments without
+/// flattening them (byte-identical to [`echo_answer`] by construction).
+fn echo_answer_of(state: &crate::exec::messages::RagState) -> Vec<u8> {
+    let mut h = FNV_OFFSET;
+    for part in state.context_parts() {
+        fnv1a(&mut h, part);
+    }
+    fnv1a(&mut h, &[0x1f]);
+    fnv1a(&mut h, state.query());
+    format!("echo:{h:016x}:{}", state.context_len()).into_bytes()
+}
+
+/// Echo LLM stage: answers are [`echo_answer`] digests. In continuous
+/// mode it runs the same stepped loop as the real generator — one
+/// answer byte per decode step into a slotted in-flight batch — so the
+/// bench exercises admission/step/retire scheduling, not just batching.
+struct EchoGeneratorLogic {
+    shared: Arc<LiveShared>,
+    slots: Vec<Option<EchoSlot>>,
+}
+
+struct EchoSlot {
+    item: WorkItem,
+    answer: Vec<u8>,
+    pos: usize,
+    queue_secs: f64,
+    admitted: Instant,
+}
+
+const ECHO_GEN_SLOTS: usize = 8;
+
+impl EchoGeneratorLogic {
+    fn new(shared: Arc<LiveShared>) -> Self {
+        EchoGeneratorLogic { shared, slots: (0..ECHO_GEN_SLOTS).map(|_| None).collect() }
+    }
+}
+
+impl StageLogic for EchoGeneratorLogic {
+    fn process_batch(&mut self, items: &mut [WorkItem]) -> Result<()> {
+        for it in items.iter_mut() {
+            // KV prefix probe keeps the reuse counters and attribution
+            // discount live in echo mode too.
+            let kv = kv_probe(&self.shared, &it.state);
+            it.service_weight = kv * (1.0 + it.state.context_len() as f64 / 64.0);
+            it.state.set_answer(echo_answer_of(&it.state));
+        }
+        Ok(())
+    }
+
+    fn max_batch(&self) -> usize {
+        ECHO_GEN_SLOTS
+    }
+
+    fn stepped(&mut self) -> Option<&mut dyn SteppedStage> {
+        if self.shared.continuous_batching {
+            Some(self)
+        } else {
+            None
+        }
+    }
+}
+
+impl SteppedStage for EchoGeneratorLogic {
+    fn occupancy(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    fn free_slots(&self) -> usize {
+        ECHO_GEN_SLOTS - self.occupancy()
+    }
+
+    fn admit(&mut self, mut item: WorkItem) -> Vec<StepDone> {
+        let queue_secs = item.enqueued_at.elapsed().as_secs_f64();
+        kv_probe(&self.shared, &item.state);
+        let answer = echo_answer_of(&item.state);
+        item.state.clear_answer();
+        match self.slots.iter_mut().find(|s| s.is_none()) {
+            Some(slot) => {
+                *slot =
+                    Some(EchoSlot { item, answer, pos: 0, queue_secs, admitted: Instant::now() });
+                Vec::new()
+            }
+            None => vec![StepDone {
+                item,
+                service_secs: 0.0,
+                queue_secs,
+                error: Some("echo generator admitted past capacity".into()),
+            }],
+        }
+    }
+
+    fn step(&mut self) -> Result<Vec<StepDone>> {
+        let mut retired = Vec::new();
+        for slot in self.slots.iter_mut() {
+            let Some(s) = slot.as_mut() else { continue };
+            // Stream one answer byte per decode step.
+            s.item.state.answer_mut().push(s.answer[s.pos]);
+            s.pos += 1;
+            if s.pos == s.answer.len() {
+                let EchoSlot { mut item, answer, queue_secs, admitted, .. } =
+                    slot.take().expect("slot occupied");
+                item.state.set_answer(answer);
+                retired.push(StepDone {
+                    item,
+                    service_secs: admitted.elapsed().as_secs_f64(),
+                    queue_secs,
+                    error: None,
+                });
+            }
+        }
+        Ok(retired)
+    }
+
+    fn drain(&mut self) -> Vec<WorkItem> {
+        self.slots.iter_mut().filter_map(|s| s.take()).map(|s| s.item).collect()
+    }
+}
+
+/// Echo grader/critic: verdict = byte-sum parity of the same judged
+/// text the XLA stage builds; honors the severe-overload skip knobs.
+struct EchoVerdictLogic {
+    judge_answer: bool,
+    knob: DegradeKnob,
+    degrade: Arc<OverloadCell>,
+    sched_counters: Arc<SchedCounters>,
+}
+
+impl StageLogic for EchoVerdictLogic {
+    fn process_batch(&mut self, items: &mut [WorkItem]) -> Result<()> {
+        let skip = matches!(self.knob, DegradeKnob::SkipHop | DegradeKnob::CapIterations)
+            && self.degrade.level() == OverloadLevel::Severe;
+        if skip {
+            for it in items.iter_mut() {
+                self.sched_counters.on_degraded();
+                it.state.verdict = Some(true);
+            }
+            return Ok(());
+        }
+        for it in items.iter_mut() {
+            let text = verdict_text(&it.state, self.judge_answer);
+            let sum: u64 = text.iter().map(|&b| b as u64).sum();
+            it.state.verdict = Some(sum % 2 == 0);
+        }
+        Ok(())
+    }
+}
+
+/// Echo rewriter: appends a deterministic query-hash suffix and bumps
+/// the iteration counter, same shape as the XLA rewrite.
+struct EchoRewriterLogic;
+
+impl StageLogic for EchoRewriterLogic {
+    fn process_batch(&mut self, items: &mut [WorkItem]) -> Result<()> {
+        for it in items.iter_mut() {
+            let mut h = FNV_OFFSET;
+            fnv1a(&mut h, it.state.query());
+            let suffix = format!("r{:04x}", h & 0xffff);
+            let q = it.state.query_mut();
+            q.push(b' ');
+            q.extend_from_slice(suffix.as_bytes());
+            it.state.iteration += 1;
+        }
+        Ok(())
+    }
+}
+
+/// Echo classifier: query-hash modulo the A-RAG class count.
+struct EchoClassifierLogic;
+
+impl StageLogic for EchoClassifierLogic {
+    fn process_batch(&mut self, items: &mut [WorkItem]) -> Result<()> {
+        for it in items.iter_mut() {
+            let mut h = FNV_OFFSET;
+            fnv1a(&mut h, it.state.query());
+            it.state.class = Some((h % 3) as u8);
+        }
+        Ok(())
+    }
+
+    fn max_batch(&self) -> usize {
+        8
+    }
+}
+
+fn spawn_echo_for_kind(
+    name: String,
+    kind: &ComponentKind,
+    knob: DegradeKnob,
+    shared: Arc<LiveShared>,
+) -> WorkerHandle {
+    match kind {
+        ComponentKind::Retriever => spawn_worker(name, move || {
+            Ok(Box::new(RetrieverLogic { embedder: AnyEmbedder::Echo, shared, knob })
+                as Box<dyn StageLogic>)
+        }),
+        ComponentKind::Generator => spawn_worker(name, move || {
+            Ok(Box::new(EchoGeneratorLogic::new(shared)) as Box<dyn StageLogic>)
+        }),
+        ComponentKind::Grader => spawn_worker(name, move || {
+            Ok(Box::new(EchoVerdictLogic {
+                judge_answer: false,
+                knob,
+                degrade: shared.degrade.clone(),
+                sched_counters: shared.sched_counters.clone(),
+            }) as Box<dyn StageLogic>)
+        }),
+        ComponentKind::Critic => spawn_worker(name, move || {
+            Ok(Box::new(EchoVerdictLogic {
+                judge_answer: true,
+                knob,
+                degrade: shared.degrade.clone(),
+                sched_counters: shared.sched_counters.clone(),
+            }) as Box<dyn StageLogic>)
+        }),
+        ComponentKind::Rewriter => spawn_worker(name, move || {
+            let _keep = shared;
+            Ok(Box::new(EchoRewriterLogic) as Box<dyn StageLogic>)
+        }),
+        ComponentKind::WebSearch => spawn_worker(name, move || {
+            Ok(Box::new(WebSearchLogic { shared }) as Box<dyn StageLogic>)
+        }),
+        ComponentKind::Classifier => spawn_worker(name, move || {
+            let _keep = shared;
+            Ok(Box::new(EchoClassifierLogic) as Box<dyn StageLogic>)
+        }),
+        other => {
+            let kind_name = other.name().to_string();
+            spawn_worker(name, move || -> Result<Box<dyn StageLogic>> {
+                let _keep = shared;
+                anyhow::bail!("no live executor for component kind '{kind_name}'")
+            })
+        }
     }
 }
 
@@ -591,11 +909,17 @@ pub fn spawn_for_kind(
     knob: DegradeKnob,
     shared: Arc<LiveShared>,
 ) -> WorkerHandle {
+    if shared.engine == EngineMode::Echo {
+        return spawn_echo_for_kind(name, kind, knob, shared);
+    }
     let dir = shared.artifacts.clone();
     match kind {
         ComponentKind::Retriever => spawn_worker(name, move || {
-            Ok(Box::new(RetrieverLogic { embedder: Embedder::new(&dir)?, shared, knob })
-                as Box<dyn StageLogic>)
+            Ok(Box::new(RetrieverLogic {
+                embedder: AnyEmbedder::Xla(Embedder::new(&dir)?),
+                shared,
+                knob,
+            }) as Box<dyn StageLogic>)
         }),
         ComponentKind::Generator => spawn_worker(name, move || {
             Ok(Box::new(GeneratorLogic {
@@ -648,7 +972,9 @@ pub fn spawn_for_kind(
 /// partitions searched scatter-gather style, stored f32 or SQ8 per
 /// `quantization`), and stand up the request cache (`cache`: None
 /// disables memoization) plus the generator-side KV prefix cache
-/// (`kv_cache`: None disables prefix tracking).
+/// (`kv_cache`: None disables prefix tracking). With
+/// [`EngineMode::Echo`] the corpus is embedded with the deterministic
+/// hash embedding instead of the XLA artifact — no artifacts touched.
 #[allow(clippy::too_many_arguments)]
 pub fn build_live_shared(
     artifacts: PathBuf,
@@ -659,12 +985,22 @@ pub fn build_live_shared(
     kv_cache: Option<KvCacheConfig>,
     quantization: crate::retrieval::Quantization,
     seed: u64,
+    engine: EngineMode,
 ) -> Result<LiveShared> {
     let corpus = Arc::new(Corpus::generate(corpus_size, n_topics, 64, seed));
-    let embedder = Embedder::new(&artifacts)?;
     let texts: Vec<Vec<u8>> = corpus.passages.iter().map(|p| p.text.clone()).collect();
-    let embs = embedder.embed_all(&texts)?;
-    let dim = embedder.dim();
+    let (embs, dim) = match engine {
+        EngineMode::Artifacts => {
+            let embedder = Embedder::new(&artifacts)?;
+            let dim = embedder.dim();
+            (embedder.embed_all(&texts)?, dim)
+        }
+        EngineMode::Echo => {
+            let embs: Vec<Vec<f32>> =
+                texts.iter().map(|t| Corpus::hash_embed(t, ECHO_EMBED_DIM)).collect();
+            (embs, ECHO_EMBED_DIM)
+        }
+    };
     let mut flat = Vec::with_capacity(embs.len() * dim);
     for e in &embs {
         flat.extend_from_slice(e);
@@ -684,6 +1020,7 @@ pub fn build_live_shared(
         },
     ));
     Ok(LiveShared {
+        engine,
         corpus,
         index,
         cache: cache.map(|cfg| Arc::new(QueryCache::new(cfg))),

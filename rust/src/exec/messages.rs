@@ -1,25 +1,116 @@
 //! Messages between the controller and live workers.
+//!
+//! `RagState` is the per-request payload the controller re-ingests after
+//! every hop. The live hot loop clones it once per dispatch and once per
+//! fork branch, so its representation decides whether fan-out is a
+//! memcpy storm or a pointer bump: every buffer here is an `Arc`'d
+//! immutable segment (`Bytes`), contexts are *lists* of such segments
+//! (`ContextBuf`), and mutation goes through copy-on-write accessors
+//! (`Arc::make_mut`) so only the stages that actually rewrite a field
+//! pay for a copy. Cloning a state is eight pointer/word copies; merging
+//! branch contexts at a join unions segment lists instead of copying
+//! bytes whenever the branches are disjoint.
 
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 
 use crate::spec::graph::{MergePolicy, NodeId};
+
+/// A cheaply-cloneable immutable byte buffer.
+type Bytes = Arc<Vec<u8>>;
+
+/// Retrieved-context bytes as a list of shared immutable parts.
+///
+/// Logically this is one contiguous `Vec<u8>` (`len` is the total byte
+/// length; readers iterate [`ContextBuf::parts`] or flatten with
+/// [`ContextBuf::append_to`]); physically each part is an `Arc` that a
+/// join can adopt from a branch without touching the bytes. Invariant:
+/// no stored part is empty, and `len` equals the sum of part lengths.
+#[derive(Clone, Debug, Default)]
+struct ContextBuf {
+    parts: Arc<Vec<Bytes>>,
+    len: usize,
+}
+
+impl ContextBuf {
+    fn from_vec(v: Vec<u8>) -> ContextBuf {
+        let len = v.len();
+        if len == 0 {
+            return ContextBuf::default();
+        }
+        ContextBuf { parts: Arc::new(vec![Arc::new(v)]), len }
+    }
+
+    fn from_parts(parts: Vec<Bytes>) -> ContextBuf {
+        debug_assert!(parts.iter().all(|p| !p.is_empty()), "no empty parts stored");
+        let len = parts.iter().map(|p| p.len()).sum();
+        ContextBuf { parts: Arc::new(parts), len }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn parts(&self) -> impl Iterator<Item = &[u8]> {
+        self.parts.iter().map(|p| p.as_slice())
+    }
+
+    fn append_to(&self, out: &mut Vec<u8>) {
+        for p in self.parts.iter() {
+            out.extend_from_slice(p);
+        }
+    }
+
+    /// Append the logical byte range `start..end` to `out`, walking the
+    /// part list (ranges may straddle part boundaries after a merge).
+    fn slice_append(&self, out: &mut Vec<u8>, start: usize, end: usize) {
+        let mut off = 0usize;
+        for p in self.parts.iter() {
+            let plen = p.len();
+            let lo = start.max(off);
+            let hi = end.min(off + plen);
+            if lo < hi {
+                out.extend_from_slice(&p[lo - off..hi - off]);
+            }
+            off += plen;
+            if off >= end {
+                break;
+            }
+        }
+    }
+
+    fn to_vec(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.len);
+        self.append_to(&mut out);
+        out
+    }
+}
 
 /// Request-scoped pipeline state threaded through the stages — the live
 /// equivalent of the intermediate values that flow producer→consumer in
 /// the paper's data plane (the controller re-ingests it only to make
 /// control-flow decisions, mirroring §3.3's control/data separation).
+///
+/// Buffers are private behind copy-on-write accessors so clones share
+/// storage; the control-flow scalars (`verdict`, `class`, `iteration`)
+/// stay public — they are `Copy` and the routing logic reads them on
+/// every hop.
 #[derive(Clone, Debug, Default)]
 pub struct RagState {
-    pub query: Vec<u8>,
-    /// Retrieved context (concatenated passages).
-    pub context: Vec<u8>,
-    /// Byte length of each retrieved passage's chunk inside `context`,
+    query: Bytes,
+    /// Retrieved context (concatenated passages) as shared segments.
+    context: ContextBuf,
+    /// Byte length of each retrieved passage's chunk inside the context,
     /// parallel to `doc_ids` when populated by retrieval (other
     /// producers, e.g. web search, leave it empty). Lets a fork/join
     /// barrier union branch contexts with per-document dedup.
-    pub ctx_segments: Vec<usize>,
+    ctx_segments: Arc<Vec<usize>>,
     /// Generated answer so far.
-    pub answer: Vec<u8>,
+    answer: Bytes,
     /// Last grader/critic verdict.
     pub verdict: Option<bool>,
     /// Query-complexity class (A-RAG).
@@ -27,19 +118,106 @@ pub struct RagState {
     /// Recursion depth (rewrite loops).
     pub iteration: u32,
     /// Retrieved passage ids (diagnostics).
-    pub doc_ids: Vec<usize>,
+    doc_ids: Arc<Vec<usize>>,
 }
 
 impl RagState {
     pub fn new(query: &[u8]) -> Self {
-        RagState { query: query.to_vec(), ..Default::default() }
+        RagState { query: Arc::new(query.to_vec()), ..Default::default() }
+    }
+
+    pub fn query(&self) -> &[u8] {
+        &self.query
+    }
+
+    /// Copy-on-write access to the query (rewriter stages).
+    pub fn query_mut(&mut self) -> &mut Vec<u8> {
+        Arc::make_mut(&mut self.query)
+    }
+
+    pub fn answer(&self) -> &[u8] {
+        &self.answer
+    }
+
+    /// Copy-on-write access to the answer (the generator streams decoded
+    /// bytes here).
+    pub fn answer_mut(&mut self) -> &mut Vec<u8> {
+        Arc::make_mut(&mut self.answer)
+    }
+
+    pub fn set_answer(&mut self, answer: Vec<u8>) {
+        self.answer = Arc::new(answer);
+    }
+
+    /// Clear the answer in place when the buffer is unshared (the common
+    /// case on the generator's admit path), else drop to a fresh one.
+    pub fn clear_answer(&mut self) {
+        match Arc::get_mut(&mut self.answer) {
+            Some(a) => a.clear(),
+            None => self.answer = Bytes::default(),
+        }
+    }
+
+    /// Consume the state, yielding the answer without a copy when this
+    /// is the last reference (the controller's response path).
+    pub fn into_answer(self) -> Vec<u8> {
+        Arc::try_unwrap(self.answer).unwrap_or_else(|a| (*a).clone())
+    }
+
+    pub fn doc_ids(&self) -> &[usize] {
+        &self.doc_ids
+    }
+
+    pub fn ctx_segments(&self) -> &[usize] {
+        &self.ctx_segments
+    }
+
+    /// Replace the retrieval triple wholesale (retriever stages).
+    pub fn set_context(&mut self, context: Vec<u8>, doc_ids: Vec<usize>, segments: Vec<usize>) {
+        self.context = ContextBuf::from_vec(context);
+        self.doc_ids = Arc::new(doc_ids);
+        self.ctx_segments = Arc::new(segments);
+    }
+
+    /// Replace the context with an unsegmented blob (web search): the
+    /// segment map is cleared but `doc_ids` are retained as diagnostics
+    /// of the earlier retrieval.
+    pub fn set_unsegmented_context(&mut self, context: Vec<u8>) {
+        self.context = ContextBuf::from_vec(context);
+        self.ctx_segments = Arc::default();
+    }
+
+    pub fn context_len(&self) -> usize {
+        self.context.len()
+    }
+
+    pub fn context_is_empty(&self) -> bool {
+        self.context.is_empty()
+    }
+
+    /// The context's shared segments, in logical order (prompt builders
+    /// and hashers walk these instead of flattening).
+    pub fn context_parts(&self) -> impl Iterator<Item = &[u8]> {
+        self.context.parts()
+    }
+
+    /// Append the flattened context bytes to `out`.
+    pub fn append_context_to(&self, out: &mut Vec<u8>) {
+        self.context.append_to(out);
+    }
+
+    /// Flatten the context into a fresh `Vec` (tests / diagnostics; the
+    /// hot path iterates `context_parts` instead).
+    pub fn context_to_vec(&self) -> Vec<u8> {
+        self.context.to_vec()
     }
 
     /// Merge the states of completed fork branches at a join barrier
     /// (`states` in branch arrival order; must be non-empty).
     ///
     /// * [`MergePolicy::First`] — the first state wins verbatim (the
-    ///   natural pairing for `FirstK(1)` races).
+    ///   natural pairing for `FirstK(1)` races); the winner's buffers
+    ///   move out without a copy.
     /// * [`MergePolicy::Union`] — retrieval results are unioned:
     ///   `doc_ids` deduplicate across branches (first occurrence wins)
     ///   and each branch's context contributes only its unseen documents'
@@ -47,54 +225,114 @@ impl RagState {
     ///   Branches without per-document segmentation (web search) append
     ///   their whole context. Scalars take the first populated value;
     ///   `iteration` takes the max (a rewrite in ANY branch counts
-    ///   toward the loop budget).
+    ///   toward the loop budget). A branch whose documents are all
+    ///   unseen contributes its context *segments by pointer* — bytes
+    ///   are copied only for branches that overlap an earlier one.
     pub fn merge(policy: MergePolicy, mut states: Vec<RagState>) -> RagState {
         debug_assert!(!states.is_empty(), "a join merges at least one branch");
         if states.len() == 1 || policy == MergePolicy::First {
             return states.swap_remove(0);
         }
-        let mut out = RagState::new(&states[0].query);
+        let mut parts: Vec<Bytes> = Vec::new();
+        // Owned accumulator for partially-copied chunks; flushed into
+        // `parts` before any pointer-shared segment to preserve order.
+        let mut pending: Vec<u8> = Vec::new();
+        let mut doc_ids: Vec<usize> = Vec::new();
+        let mut ctx_segments: Vec<usize> = Vec::new();
+        let mut answer: Option<Bytes> = None;
+        let mut verdict = None;
+        let mut class = None;
+        let mut iteration = 0u32;
         let mut seen = std::collections::HashSet::new();
         for s in &states {
             if s.ctx_segments.len() == s.doc_ids.len() && !s.doc_ids.is_empty() {
-                let mut off = 0usize;
-                for (&id, &len) in s.doc_ids.iter().zip(&s.ctx_segments) {
-                    let end = (off + len).min(s.context.len());
-                    if seen.insert(id) {
-                        out.doc_ids.push(id);
-                        out.ctx_segments.push(end - off);
-                        out.context.extend_from_slice(&s.context[off..end]);
+                let clen = s.context.len();
+                // Fast path precheck: every document unseen (including
+                // in-branch duplicates) and the clamped segment walk
+                // covers the whole context — then the branch's segments
+                // can be adopted by pointer, byte-for-byte identical to
+                // the copying walk below.
+                let mut walk_end = 0usize;
+                for &len in s.ctx_segments.iter() {
+                    walk_end = (walk_end + len).min(clen);
+                }
+                let all_unseen = s
+                    .doc_ids
+                    .iter()
+                    .enumerate()
+                    .all(|(i, id)| !seen.contains(id) && !s.doc_ids[..i].contains(id));
+                if all_unseen && walk_end == clen {
+                    if !pending.is_empty() {
+                        parts.push(Arc::new(std::mem::take(&mut pending)));
                     }
-                    off = end;
+                    for p in s.context.parts.iter() {
+                        parts.push(p.clone());
+                    }
+                    let mut off = 0usize;
+                    for (&id, &len) in s.doc_ids.iter().zip(s.ctx_segments.iter()) {
+                        let end = (off + len).min(clen);
+                        seen.insert(id);
+                        doc_ids.push(id);
+                        ctx_segments.push(end - off);
+                        off = end;
+                    }
+                } else {
+                    let mut off = 0usize;
+                    for (&id, &len) in s.doc_ids.iter().zip(s.ctx_segments.iter()) {
+                        let end = (off + len).min(clen);
+                        if seen.insert(id) {
+                            doc_ids.push(id);
+                            ctx_segments.push(end - off);
+                            s.context.slice_append(&mut pending, off, end);
+                        }
+                        off = end;
+                    }
                 }
             } else if !s.context.is_empty() {
                 // Unsegmented producer: no per-doc dedup possible.
-                out.context.extend_from_slice(&s.context);
-                out.ctx_segments.clear(); // segmentation no longer covers doc_ids
-                for &id in &s.doc_ids {
+                if !pending.is_empty() {
+                    parts.push(Arc::new(std::mem::take(&mut pending)));
+                }
+                for p in s.context.parts.iter() {
+                    parts.push(p.clone());
+                }
+                ctx_segments.clear(); // segmentation no longer covers doc_ids
+                for &id in s.doc_ids.iter() {
                     if seen.insert(id) {
-                        out.doc_ids.push(id);
+                        doc_ids.push(id);
                     }
                 }
             }
-            if out.answer.is_empty() && !s.answer.is_empty() {
-                out.answer = s.answer.clone();
+            if answer.is_none() && !s.answer.is_empty() {
+                answer = Some(s.answer.clone());
             }
-            if out.verdict.is_none() {
-                out.verdict = s.verdict;
+            if verdict.is_none() {
+                verdict = s.verdict;
             }
-            if out.class.is_none() {
-                out.class = s.class;
+            if class.is_none() {
+                class = s.class;
             }
-            out.iteration = out.iteration.max(s.iteration);
+            iteration = iteration.max(s.iteration);
+        }
+        if !pending.is_empty() {
+            parts.push(Arc::new(pending));
         }
         // An unsegmented contributor invalidated the segment map above;
         // make that explicit so a later join treats the merged context
         // as opaque instead of mis-slicing it.
-        if out.ctx_segments.len() != out.doc_ids.len() {
-            out.ctx_segments.clear();
+        if ctx_segments.len() != doc_ids.len() {
+            ctx_segments.clear();
         }
-        out
+        RagState {
+            query: states[0].query.clone(),
+            context: ContextBuf::from_parts(parts),
+            ctx_segments: Arc::new(ctx_segments),
+            answer: answer.unwrap_or_default(),
+            verdict,
+            class,
+            iteration,
+            doc_ids: Arc::new(doc_ids),
+        }
     }
 }
 
@@ -114,14 +352,15 @@ pub struct WorkItem {
     /// cost). The worker splits the batch's wall time proportionally;
     /// stages that leave it at the default 1.0 keep the uniform split.
     pub service_weight: f64,
-    /// Reply channel.
-    pub done: Sender<Done>,
+    /// Reply channel, shared by every in-flight item (an `Arc` bump per
+    /// dispatch instead of a channel-handle clone).
+    pub done: Arc<Sender<Done>>,
 }
 
 impl WorkItem {
     /// Build an item with the default (uniform) service weight on the
     /// request trunk.
-    pub fn new(req: u64, node: NodeId, state: RagState, done: Sender<Done>) -> WorkItem {
+    pub fn new(req: u64, node: NodeId, state: RagState, done: Arc<Sender<Done>>) -> WorkItem {
         WorkItem {
             req,
             node,
@@ -139,7 +378,7 @@ impl WorkItem {
         node: NodeId,
         branch: u32,
         state: RagState,
-        done: Sender<Done>,
+        done: Arc<Sender<Done>>,
     ) -> WorkItem {
         WorkItem { branch, ..WorkItem::new(req, node, state, done) }
     }
@@ -164,15 +403,18 @@ pub struct Done {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::{property, Gen};
 
     fn retrieved(query: &[u8], ids: &[usize]) -> RagState {
         let mut s = RagState::new(query);
+        let mut ctx = Vec::new();
+        let mut segs = Vec::new();
         for &id in ids {
             let chunk = format!("doc{id} ");
-            s.context.extend_from_slice(chunk.as_bytes());
-            s.ctx_segments.push(chunk.len());
-            s.doc_ids.push(id);
+            ctx.extend_from_slice(chunk.as_bytes());
+            segs.push(chunk.len());
         }
+        s.set_context(ctx, ids.to_vec(), segs);
         s
     }
 
@@ -182,22 +424,22 @@ mod tests {
         let b = retrieved(b"q", &[1, 4]);
         let m = RagState::merge(MergePolicy::Union, vec![a, b]);
         // First occurrence wins; per-branch score order preserved.
-        assert_eq!(m.doc_ids, vec![3, 1, 2, 4]);
-        assert_eq!(m.context, b"doc3 doc1 doc2 doc4 ".to_vec());
-        assert_eq!(m.ctx_segments.len(), 4);
-        assert_eq!(m.query, b"q".to_vec());
+        assert_eq!(m.doc_ids(), &[3, 1, 2, 4][..]);
+        assert_eq!(m.context_to_vec(), b"doc3 doc1 doc2 doc4 ".to_vec());
+        assert_eq!(m.ctx_segments().len(), 4);
+        assert_eq!(m.query(), b"q".as_slice());
     }
 
     #[test]
     fn union_merge_appends_unsegmented_context_whole() {
         let a = retrieved(b"q", &[7]);
         let mut web = RagState::new(b"q");
-        web.context = b"web results ".to_vec(); // no doc ids / segments
+        web.set_unsegmented_context(b"web results ".to_vec()); // no doc ids / segments
         let m = RagState::merge(MergePolicy::Union, vec![a, web]);
-        assert_eq!(m.doc_ids, vec![7]);
-        assert!(m.context.ends_with(b"web results "));
+        assert_eq!(m.doc_ids(), &[7][..]);
+        assert!(m.context_to_vec().ends_with(b"web results "));
         // Segment map no longer covers the context → cleared.
-        assert!(m.ctx_segments.is_empty());
+        assert!(m.ctx_segments().is_empty());
     }
 
     #[test]
@@ -205,7 +447,7 @@ mod tests {
         let a = retrieved(b"q", &[1]);
         let b = retrieved(b"q", &[2]);
         let m = RagState::merge(MergePolicy::First, vec![a, b]);
-        assert_eq!(m.doc_ids, vec![1]);
+        assert_eq!(m.doc_ids(), &[1][..]);
     }
 
     #[test]
@@ -220,5 +462,249 @@ mod tests {
         assert_eq!(m.verdict, Some(true));
         assert_eq!(m.class, Some(2));
         assert_eq!(m.iteration, 3);
+    }
+
+    #[test]
+    fn union_merge_overlap_copies_only_unseen_chunks() {
+        let a = retrieved(b"q", &[1, 2]);
+        let b = retrieved(b"q", &[2, 3]);
+        let m = RagState::merge(MergePolicy::Union, vec![a, b]);
+        assert_eq!(m.context_to_vec(), b"doc1 doc2 doc3 ".to_vec());
+        assert_eq!(m.doc_ids(), &[1, 2, 3][..]);
+        assert_eq!(m.ctx_segments(), &[5, 5, 5][..]);
+    }
+
+    #[test]
+    fn segmented_after_unsegmented_keeps_parity_check_semantics() {
+        // An unsegmented contributor clears the segment map mid-merge; a
+        // later segmented branch re-populates it, and the final parity
+        // check against doc_ids decides whether it survives.
+        let a = retrieved(b"q", &[1]);
+        let mut web = RagState::new(b"q");
+        web.set_unsegmented_context(b"web ".to_vec());
+        let b = retrieved(b"q", &[2]);
+        let m = RagState::merge(MergePolicy::Union, vec![a, web, b]);
+        assert!(m.ctx_segments().is_empty());
+        assert_eq!(m.doc_ids(), &[1, 2][..]);
+        assert_eq!(m.context_to_vec(), b"doc1 web doc2 ".to_vec());
+    }
+
+    // -- zero-copy representation ------------------------------------------
+
+    #[test]
+    fn clone_shares_buffers_by_pointer() {
+        let mut s = RagState::new(b"query");
+        s.set_context(b"doc1 doc2 ".to_vec(), vec![1, 2], vec![5, 5]);
+        s.set_answer(b"ans".to_vec());
+        let c = s.clone();
+        assert!(Arc::ptr_eq(&s.query, &c.query));
+        assert!(Arc::ptr_eq(&s.answer, &c.answer));
+        assert!(Arc::ptr_eq(&s.context.parts, &c.context.parts));
+        assert!(Arc::ptr_eq(&s.doc_ids, &c.doc_ids));
+        assert!(Arc::ptr_eq(&s.ctx_segments, &c.ctx_segments));
+    }
+
+    #[test]
+    fn first_merge_moves_winner_buffers() {
+        let a = retrieved(b"q", &[1]);
+        let winner_parts = a.context.parts.clone();
+        let m = RagState::merge(MergePolicy::First, vec![a, retrieved(b"q", &[2])]);
+        assert!(Arc::ptr_eq(&m.context.parts, &winner_parts));
+    }
+
+    #[test]
+    fn union_merge_of_disjoint_branches_shares_context_segments() {
+        let a = retrieved(b"q", &[1, 2]);
+        let b = retrieved(b"q", &[3]);
+        let ap = a.context.parts[0].clone();
+        let bp = b.context.parts[0].clone();
+        let m = RagState::merge(MergePolicy::Union, vec![a, b]);
+        // Disjoint branches contribute their segment Arcs, not copies.
+        assert!(m.context.parts.iter().any(|p| Arc::ptr_eq(p, &ap)));
+        assert!(m.context.parts.iter().any(|p| Arc::ptr_eq(p, &bp)));
+        assert_eq!(m.context_to_vec(), b"doc1 doc2 doc3 ".to_vec());
+    }
+
+    #[test]
+    fn cow_write_does_not_disturb_clones() {
+        let mut s = RagState::new(b"q");
+        s.set_answer(b"shared".to_vec());
+        let c = s.clone();
+        s.answer_mut().extend_from_slice(b" more");
+        assert_eq!(s.answer(), b"shared more".as_slice());
+        assert_eq!(c.answer(), b"shared".as_slice());
+        s.query_mut().push(b'!');
+        assert_eq!(c.query(), b"q".as_slice());
+    }
+
+    // -- byte-identity against the retired flat representation -------------
+
+    /// The pre-zero-copy `RagState` (owned flat buffers) with its merge
+    /// reproduced verbatim: the property below pins the Arc'd
+    /// implementation byte-identical to it.
+    #[derive(Clone, Debug, Default)]
+    struct FlatState {
+        query: Vec<u8>,
+        context: Vec<u8>,
+        ctx_segments: Vec<usize>,
+        answer: Vec<u8>,
+        verdict: Option<bool>,
+        class: Option<u8>,
+        iteration: u32,
+        doc_ids: Vec<usize>,
+    }
+
+    fn flat_merge(policy: MergePolicy, mut states: Vec<FlatState>) -> FlatState {
+        if states.len() == 1 || policy == MergePolicy::First {
+            return states.swap_remove(0);
+        }
+        let mut out =
+            FlatState { query: states[0].query.clone(), ..Default::default() };
+        let mut seen = std::collections::HashSet::new();
+        for s in &states {
+            if s.ctx_segments.len() == s.doc_ids.len() && !s.doc_ids.is_empty() {
+                let mut off = 0usize;
+                for (&id, &len) in s.doc_ids.iter().zip(&s.ctx_segments) {
+                    let end = (off + len).min(s.context.len());
+                    if seen.insert(id) {
+                        out.doc_ids.push(id);
+                        out.ctx_segments.push(end - off);
+                        out.context.extend_from_slice(&s.context[off..end]);
+                    }
+                    off = end;
+                }
+            } else if !s.context.is_empty() {
+                out.context.extend_from_slice(&s.context);
+                out.ctx_segments.clear();
+                for &id in &s.doc_ids {
+                    if seen.insert(id) {
+                        out.doc_ids.push(id);
+                    }
+                }
+            }
+            if out.answer.is_empty() && !s.answer.is_empty() {
+                out.answer = s.answer.clone();
+            }
+            if out.verdict.is_none() {
+                out.verdict = s.verdict;
+            }
+            if out.class.is_none() {
+                out.class = s.class;
+            }
+            out.iteration = out.iteration.max(s.iteration);
+        }
+        if out.ctx_segments.len() != out.doc_ids.len() {
+            out.ctx_segments.clear();
+        }
+        out
+    }
+
+    fn to_arc_state(s: &FlatState) -> RagState {
+        let mut n = RagState::new(&s.query);
+        n.set_context(s.context.clone(), s.doc_ids.clone(), s.ctx_segments.clone());
+        n.set_answer(s.answer.clone());
+        n.verdict = s.verdict;
+        n.class = s.class;
+        n.iteration = s.iteration;
+        n
+    }
+
+    fn assert_same(flat: &FlatState, arc: &RagState) {
+        assert_eq!(arc.query(), flat.query.as_slice());
+        assert_eq!(arc.context_to_vec(), flat.context);
+        assert_eq!(arc.ctx_segments(), flat.ctx_segments.as_slice());
+        assert_eq!(arc.answer(), flat.answer.as_slice());
+        assert_eq!(arc.verdict, flat.verdict);
+        assert_eq!(arc.class, flat.class);
+        assert_eq!(arc.iteration, flat.iteration);
+        assert_eq!(arc.doc_ids(), flat.doc_ids.as_slice());
+    }
+
+    fn gen_flat(g: &mut Gen) -> FlatState {
+        let mut s = FlatState { query: b"q".to_vec(), ..Default::default() };
+        match g.usize(0, 3) {
+            0 => {} // empty contributor (scalars only)
+            1 => {
+                // Segmented retrieval; ids may repeat across (and within)
+                // branches, lengths may over-run the context (clamping).
+                let n = g.usize(1, 4);
+                for _ in 0..n {
+                    let id = g.usize(0, 5);
+                    let len = g.usize(0, 6);
+                    let chunk: Vec<u8> =
+                        (0..len).map(|i| b'a' + id as u8 + i as u8).collect();
+                    s.context.extend_from_slice(&chunk);
+                    s.ctx_segments.push(len);
+                    s.doc_ids.push(id);
+                }
+                if g.bool() && !s.ctx_segments.is_empty() {
+                    let i = g.usize(0, s.ctx_segments.len() - 1);
+                    s.ctx_segments[i] += g.usize(1, 4); // exercises clamping
+                }
+                if g.bool() {
+                    let cut = g.usize(0, s.context.len());
+                    s.context.truncate(cut); // short context, long segments
+                }
+            }
+            2 => {
+                // Unsegmented web context, sometimes with retained ids.
+                let len = g.usize(1, 10);
+                s.context = (0..len).map(|i| b'w' + (i % 3) as u8).collect();
+                if g.bool() {
+                    s.doc_ids = vec![g.usize(0, 5), g.usize(0, 5)];
+                }
+            }
+            _ => {
+                // Segment/id length mismatch → treated as unsegmented.
+                s.context = b"xyz".to_vec();
+                s.doc_ids = vec![g.usize(0, 5)];
+            }
+        }
+        if g.bool() {
+            s.answer = format!("a{}", g.usize(0, 9)).into_bytes();
+        }
+        if g.bool() {
+            s.verdict = Some(g.bool());
+        }
+        if g.bool() {
+            s.class = Some(g.usize(0, 3) as u8);
+        }
+        s.iteration = g.usize(0, 3) as u32;
+        s
+    }
+
+    #[test]
+    fn merge_is_byte_identical_to_flat_representation() {
+        property("merge ≡ flat merge", 300, |g| {
+            let policy =
+                if g.bool() { MergePolicy::Union } else { MergePolicy::First };
+            let n = g.usize(1, 4);
+            let flats: Vec<FlatState> = (0..n).map(|_| gen_flat(g)).collect();
+            let arcs: Vec<RagState> = flats.iter().map(to_arc_state).collect();
+            let fm = flat_merge(policy, flats);
+            let am = RagState::merge(policy, arcs);
+            assert_same(&fm, &am);
+        });
+    }
+
+    #[test]
+    fn chained_merges_are_byte_identical_to_flat_representation() {
+        // Second-level joins see multi-part contexts produced by a first
+        // merge — the representation where pointer-sharing actually kicks
+        // in must still flatten identically.
+        property("chained merge ≡ flat", 200, |g| {
+            let a = gen_flat(g);
+            let b = gen_flat(g);
+            let c = gen_flat(g);
+            let f1 = flat_merge(MergePolicy::Union, vec![a.clone(), b.clone()]);
+            let a1 = RagState::merge(
+                MergePolicy::Union,
+                vec![to_arc_state(&a), to_arc_state(&b)],
+            );
+            assert_same(&f1, &a1);
+            let f2 = flat_merge(MergePolicy::Union, vec![f1, c.clone()]);
+            let a2 = RagState::merge(MergePolicy::Union, vec![a1, to_arc_state(&c)]);
+            assert_same(&f2, &a2);
+        });
     }
 }

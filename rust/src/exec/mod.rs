@@ -10,5 +10,6 @@ pub mod components;
 pub mod messages;
 pub mod worker;
 
+pub use components::EngineMode;
 pub use messages::{Done, RagState, WorkItem};
 pub use worker::{spawn_worker, StageLogic, StepDone, SteppedStage, WorkerHandle};

@@ -352,7 +352,8 @@ mod tests {
     impl StageLogic for Upper {
         fn process_batch(&mut self, items: &mut [WorkItem]) -> anyhow::Result<()> {
             for it in items.iter_mut() {
-                it.state.answer = it.state.query.to_ascii_uppercase();
+                let up = it.state.query().to_ascii_uppercase();
+                it.state.set_answer(up);
             }
             Ok(())
         }
@@ -362,7 +363,7 @@ mod tests {
     }
 
     fn item(req: u64, q: &str, done: &Sender<Done>) -> WorkItem {
-        WorkItem::new(req, NodeId(2), RagState::new(q.as_bytes()), done.clone())
+        WorkItem::new(req, NodeId(2), RagState::new(q.as_bytes()), Arc::new(done.clone()))
     }
 
     #[test]
@@ -372,7 +373,7 @@ mod tests {
         w.submit(item(1, "hello", &done_tx)).unwrap();
         let d = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(d.req, 1);
-        assert_eq!(d.state.answer, b"HELLO");
+        assert_eq!(d.state.answer(), b"HELLO".as_slice());
         assert!(d.error.is_none());
         assert!(d.service_secs >= 0.0);
         w.shutdown();
@@ -416,11 +417,11 @@ mod tests {
     struct Poisonable;
     impl StageLogic for Poisonable {
         fn process_batch(&mut self, items: &mut [WorkItem]) -> anyhow::Result<()> {
-            if items.iter().any(|i| i.state.query == b"poison") {
+            if items.iter().any(|i| i.state.query() == b"poison".as_slice()) {
                 anyhow::bail!("engine rejected a request in the batch");
             }
             for it in items.iter_mut() {
-                it.state.answer = b"ok".to_vec();
+                it.state.set_answer(b"ok".to_vec());
             }
             Ok(())
         }
@@ -455,7 +456,7 @@ mod tests {
                     d.req,
                     d.error
                 );
-                assert_eq!(d.state.answer, b"ok");
+                assert_eq!(d.state.answer(), b"ok".as_slice());
                 oks += 1;
             }
         }
@@ -545,7 +546,7 @@ mod tests {
         }
         fn admit(&mut self, item: WorkItem) -> Vec<StepDone> {
             let steps: usize =
-                String::from_utf8_lossy(&item.state.query).parse().unwrap_or(1);
+                String::from_utf8_lossy(item.state.query()).parse().unwrap_or(1);
             let slot = self.slots.iter().position(|s| s.is_none()).unwrap();
             self.slots[slot] = Some((item, steps, 0));
             Vec::new()
@@ -562,7 +563,7 @@ mod tests {
                     *taken += 1;
                     if *remaining == 0 {
                         let (mut item, _, taken) = s.take().unwrap();
-                        item.state.answer = format!("{taken} steps").into_bytes();
+                        item.state.set_answer(format!("{taken} steps").into_bytes());
                         out.push(StepDone {
                             item,
                             service_secs: taken as f64,
@@ -590,7 +591,7 @@ mod tests {
         w.submit(item(1, "2", &done_tx)).unwrap(); // short: 2 steps
         let first = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(first.req, 1, "short item must retire first");
-        assert_eq!(first.state.answer, b"2 steps");
+        assert_eq!(first.state.answer(), b"2 steps".as_slice());
         // The freed slot takes a new admission while the long one decodes.
         w.submit(item(2, "1", &done_tx)).unwrap();
         let second = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();

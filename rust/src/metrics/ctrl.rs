@@ -1,0 +1,73 @@
+//! Controller-loop self-observability: busy/idle/dispatch accounting for
+//! the live serving hot loop.
+//!
+//! The controller is a single thread multiplexing submissions,
+//! completions, and control-plane ticks; at the million-user scale the
+//! ROADMAP targets, *its* per-hop overhead is the serving ceiling no
+//! worker pool can raise. These counters make that overhead a first-class
+//! metric: `benches/perf_live.rs` derives its per-hop dispatch number
+//! from them, and any normal run can do the same via
+//! `RunReport::ctrl`.
+
+/// Aggregate controller-loop counters (attached to `RunReport` by live
+/// runs; absent for DES runs, which have no controller thread).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CtrlStats {
+    /// WorkItems handed to workers (one per hop, including fork fan-out).
+    pub dispatches: u64,
+    /// Seconds spent inside the dispatch path (instance snapshot +
+    /// routing + channel send), summed across dispatches.
+    pub dispatch_secs: f64,
+    /// Completion messages processed.
+    pub completions: u64,
+    /// Seconds the controller thread spent processing messages.
+    pub busy_secs: f64,
+    /// Seconds the controller thread spent blocked on its inbox.
+    pub idle_secs: f64,
+}
+
+impl CtrlStats {
+    /// Mean dispatch-path overhead per hop, in nanoseconds.
+    pub fn dispatch_ns_per_hop(&self) -> f64 {
+        if self.dispatches == 0 {
+            0.0
+        } else {
+            self.dispatch_secs / self.dispatches as f64 * 1e9
+        }
+    }
+
+    /// Fraction of loop wall time spent processing (vs blocked waiting).
+    pub fn busy_frac(&self) -> f64 {
+        let total = self.busy_secs + self.idle_secs;
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.busy_secs / total
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_rates_handle_zero_counts() {
+        let s = CtrlStats::default();
+        assert_eq!(s.dispatch_ns_per_hop(), 0.0);
+        assert_eq!(s.busy_frac(), 0.0);
+    }
+
+    #[test]
+    fn derived_rates_compute() {
+        let s = CtrlStats {
+            dispatches: 1000,
+            dispatch_secs: 0.001,
+            completions: 900,
+            busy_secs: 1.0,
+            idle_secs: 3.0,
+        };
+        assert!((s.dispatch_ns_per_hop() - 1000.0).abs() < 1e-6);
+        assert!((s.busy_frac() - 0.25).abs() < 1e-12);
+    }
+}

@@ -2,9 +2,11 @@
 //! the report types the bench harnesses print.
 
 pub mod cache;
+pub mod ctrl;
 pub mod recorder;
 pub mod sched;
 
 pub use cache::{CacheCounters, CacheSnapshot};
+pub use ctrl::CtrlStats;
 pub use recorder::{ComponentStats, DisaggStats, GenStats, Recorder, RunReport};
 pub use sched::{SchedCounters, SchedSnapshot};

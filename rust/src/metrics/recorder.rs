@@ -4,6 +4,7 @@
 use std::collections::HashMap;
 
 use crate::metrics::cache::CacheSnapshot;
+use crate::metrics::ctrl::CtrlStats;
 use crate::metrics::sched::SchedSnapshot;
 use crate::stats::percentile::percentile;
 
@@ -123,6 +124,8 @@ pub struct Recorder {
     sched: Option<SchedSnapshot>,
     /// Disaggregation counters (None = collocated generator).
     disagg: Option<DisaggStats>,
+    /// Controller-loop counters (None = no live controller, e.g. DES).
+    ctrl: Option<CtrlStats>,
 }
 
 impl Recorder {
@@ -227,6 +230,13 @@ impl Recorder {
         self.disagg = Some(stats);
     }
 
+    /// Attach the controller loop's busy/idle/dispatch counters (live
+    /// runs only; DES runs have no controller thread and leave the
+    /// report section absent).
+    pub fn set_ctrl(&mut self, stats: CtrlStats) {
+        self.ctrl = Some(stats);
+    }
+
     /// Finalize into a report.
     pub fn report(&self) -> RunReport {
         // `total_cmp` sorts: a NaN latency sample (a model bug) lands at
@@ -271,6 +281,7 @@ impl Recorder {
             shed: self.shed,
             sched: self.sched,
             disagg: self.disagg,
+            ctrl: self.ctrl,
         }
     }
 }
@@ -306,6 +317,10 @@ pub struct RunReport {
     /// generator split (`None` for collocated runs — golden traces pin
     /// the absence).
     pub disagg: Option<DisaggStats>,
+    /// Controller-loop busy/idle/dispatch counters (live runs only; the
+    /// per-hop dispatch overhead `benches/perf_live.rs` headlines is
+    /// derivable from any normal run through this).
+    pub ctrl: Option<CtrlStats>,
 }
 
 impl RunReport {
@@ -413,6 +428,25 @@ mod tests {
         assert!(rep.sched.is_none());
         assert!(rep.gen.is_none(), "no decode-step samples → no gen section");
         assert!(rep.disagg.is_none(), "no handoffs → no disaggregation section");
+        assert!(rep.ctrl.is_none(), "no live controller → no ctrl section");
+    }
+
+    #[test]
+    fn ctrl_stats_travel_into_report() {
+        let mut r = Recorder::new();
+        r.on_arrival(0.0);
+        r.on_completion(0.0, 1.0, None);
+        let stats = CtrlStats {
+            dispatches: 10,
+            dispatch_secs: 0.00001,
+            completions: 10,
+            busy_secs: 0.5,
+            idle_secs: 0.5,
+        };
+        r.set_ctrl(stats);
+        let rep = r.report();
+        assert_eq!(rep.ctrl, Some(stats));
+        assert!((rep.ctrl.unwrap().dispatch_ns_per_hop() - 1000.0).abs() < 1e-6);
     }
 
     #[test]

@@ -105,7 +105,9 @@ impl ControlPlane {
         autoscale_interval: f64,
     ) -> ControlPlane {
         ControlPlane {
-            router: Router::new(routing),
+            // Pre-size the router's dense per-node tables so the hot
+            // path never grows them mid-dispatch.
+            router: Router::with_nodes(routing, graph.nodes.len()),
             slack: SlackPredictor::new(graph, prior_mean_service),
             telemetry: Telemetry::new(graph),
             autoscaler: Autoscaler::new(autoscale_interval),

@@ -1,0 +1,246 @@
+//! Artifact-free live-path regression tests: the echo engine
+//! (`ControllerConfig::echo`) deploys real pipelines onto real workers —
+//! genuine retrieval index, fork/join barriers, router, slab — with
+//! deterministic pure-function stages, so the controller's semantics are
+//! pinned **bit-exactly** without XLA artifacts. These run in every CI
+//! job (no artifact gate), which is the point: the zero-copy `RagState`
+//! and dense-table controller refactors must never change a served byte.
+
+use std::path::PathBuf;
+
+use harmonia::coordinator::controller::{deploy, ControllerConfig};
+use harmonia::exec::components::{build_live_shared, echo_answer};
+use harmonia::exec::EngineMode;
+use harmonia::spec::apps;
+use harmonia::spec::{ComponentKind, JoinSpec, PipelineBuilder, ResourceKind};
+
+const SEED: u64 = 7;
+
+fn echo_cfg() -> ControllerConfig {
+    let mut c = ControllerConfig::echo(SEED);
+    // Small corpus keeps index build fast; no request cache so the
+    // oracle below predicts every request (not just cold misses).
+    c.corpus_size = 128;
+    c.n_topics = 4;
+    c.n_shards = 2;
+    c.cache = None;
+    c
+}
+
+/// The deployment's retrieval/context/answer parameters, reproduced
+/// outside the serving stack. Everything flows from `build_live_shared`
+/// with the same knobs the controller uses.
+struct Oracle {
+    shared: harmonia::exec::components::LiveShared,
+}
+
+impl Oracle {
+    fn new(cfg: &ControllerConfig) -> Oracle {
+        let shared = build_live_shared(
+            PathBuf::new(),
+            cfg.corpus_size,
+            cfg.n_topics,
+            cfg.n_shards,
+            None,
+            None,
+            cfg.quantization,
+            cfg.seed,
+            EngineMode::Echo,
+        )
+        .expect("oracle shared state");
+        Oracle { shared }
+    }
+
+    /// Context bytes the echo retriever produces for `query`
+    /// (hash-embed → scatter-gather top-k → `fill_from_hits` layout).
+    fn retrieved_context(&self, query: &[u8]) -> Vec<u8> {
+        // 64 = the echo engine's embedding dim (ECHO_EMBED_DIM).
+        let emb = harmonia::workload::Corpus::hash_embed(query, 64);
+        let hits = self
+            .shared
+            .index
+            .search_batch(&[emb], self.shared.k_docs, self.shared.search_ef)
+            .remove(0);
+        let mut ctx = Vec::new();
+        for h in &hits {
+            let p = &self.shared.corpus.passages[h.id];
+            let take = p.text.len().min(self.shared.ctx_bytes_per_doc);
+            ctx.extend_from_slice(&p.text[..take]);
+            ctx.push(b' ');
+        }
+        ctx
+    }
+
+    /// Context bytes the echo web-search stage produces for `query`
+    /// (deterministic passages keyed by query byte-sum).
+    fn web_context(&self, query: &[u8]) -> Vec<u8> {
+        let h: usize = query.iter().map(|&b| b as usize).sum();
+        let n = self.shared.corpus.len();
+        let mut ctx = Vec::new();
+        for j in 0..self.shared.k_docs {
+            let p = &self.shared.corpus.passages[(h + j * 7919) % n];
+            let take = p.text.len().min(self.shared.ctx_bytes_per_doc);
+            ctx.extend_from_slice(&p.text[..take]);
+            ctx.push(b' ');
+        }
+        ctx
+    }
+}
+
+#[test]
+fn vanilla_echo_answers_match_oracle() {
+    let cfg = echo_cfg();
+    let oracle = Oracle::new(&cfg);
+    let h = deploy(apps::vanilla_rag(), cfg).expect("deploy echo v-rag");
+
+    let n = 24;
+    for i in 0..n {
+        let q = format!("echo oracle query {i} topic {}", i % 5);
+        let r = h.submit(q.as_bytes()).recv().expect("response");
+        assert!(r.error.is_none(), "request {i}: {:?}", r.error);
+        assert_eq!(r.hops, 2, "v-rag is retrieve → generate");
+        let expected = echo_answer(&oracle.retrieved_context(q.as_bytes()), q.as_bytes());
+        assert_eq!(
+            r.answer,
+            expected,
+            "request {i}: served answer diverged from the out-of-stack oracle"
+        );
+    }
+
+    let rep = h.report();
+    assert_eq!(rep.completed, n as u64);
+    assert_eq!(rep.shed, 0);
+    let ctrl = rep.ctrl.expect("live run reports controller stats");
+    assert_eq!(ctrl.dispatches, 2 * n as u64, "one dispatch per hop, no forks");
+    assert_eq!(ctrl.completions, 2 * n as u64);
+    assert!(ctrl.dispatch_secs > 0.0, "timed dispatch path");
+    assert!(
+        ctrl.busy_secs > 0.0 && ctrl.idle_secs >= 0.0,
+        "busy/idle split populated: {ctrl:?}"
+    );
+    h.shutdown();
+}
+
+#[test]
+fn hybrid_echo_union_merges_both_contexts() {
+    let cfg = echo_cfg();
+    let oracle = Oracle::new(&cfg);
+    let h = deploy(apps::hybrid_rag(), cfg).expect("deploy echo hybrid-rag");
+
+    let n = 12;
+    for i in 0..n {
+        let q = format!("hybrid echo query {i}");
+        let r = h.submit(q.as_bytes()).recv().expect("response");
+        assert!(r.error.is_none(), "request {i}: {:?}", r.error);
+        assert_eq!(r.hops, 3, "hybrid-rag is (retriever ∥ websearch) → generator");
+        // The Union merge appends branch contexts in ARRIVAL order and
+        // both orders are legal (the branches genuinely race), so the
+        // served answer must equal one of the two possible digests.
+        let retr = oracle.retrieved_context(q.as_bytes());
+        let web = oracle.web_context(q.as_bytes());
+        let mut retr_first = retr.clone();
+        retr_first.extend_from_slice(&web);
+        let mut web_first = web.clone();
+        web_first.extend_from_slice(&retr);
+        let a = echo_answer(&retr_first, q.as_bytes());
+        let b = echo_answer(&web_first, q.as_bytes());
+        assert!(
+            r.answer == a || r.answer == b,
+            "request {i}: answer {:?} is neither merge order's digest",
+            String::from_utf8_lossy(&r.answer)
+        );
+    }
+
+    let rep = h.report();
+    assert_eq!(rep.completed, n as u64);
+    let gen = rep.components.get("generator").expect("generator stats");
+    assert_eq!(gen.joins, n as u64, "every request crossed the barrier once");
+    let ctrl = rep.ctrl.expect("ctrl stats");
+    // retriever + websearch + generator per request, every one dispatched.
+    assert_eq!(ctrl.dispatches, 3 * n as u64);
+    h.shutdown();
+}
+
+/// FirstK(1) race between the retriever and web search: the barrier
+/// releases on the first arrival and the loser's completion must retire
+/// harmlessly — including across slab slot recycling, where the loser's
+/// `Done` carries a retired generation-tagged key.
+#[test]
+fn first_k_race_drops_loser_and_recycles_slots() {
+    let mut b = PipelineBuilder::new("first-k-race");
+    let res = [(ResourceKind::Cpu, 1.0)];
+    let retr = b.component("retriever", ComponentKind::Retriever).resources(&res).add();
+    let web = b.component("websearch", ComponentKind::WebSearch).resources(&res).add();
+    let gen = b
+        .component("generator", ComponentKind::Generator)
+        .resources(&res)
+        .join(JoinSpec::first_k(1))
+        .add();
+    b.fork(b.source(), &[retr, web]);
+    b.edge(retr, gen, 1.0);
+    b.edge(web, gen, 1.0);
+    b.edge_to_sink(gen, 1.0);
+    let g = b.build().expect("race graph is valid");
+
+    let cfg = echo_cfg();
+    let oracle = Oracle::new(&cfg);
+    let h = deploy(g, cfg).expect("deploy race graph");
+
+    // Sequential requests: each one recycles the single slab slot, so a
+    // straggling loser from request i carries a stale key while request
+    // i+1 owns the slot. Correctness = every request still completes
+    // with a winner's digest.
+    let n = 16;
+    for i in 0..n {
+        let q = format!("race query {i}");
+        let r = h.submit(q.as_bytes()).recv().expect("response");
+        assert!(r.error.is_none(), "request {i}: {:?}", r.error);
+        let winner_retr =
+            echo_answer(&oracle.retrieved_context(q.as_bytes()), q.as_bytes());
+        let winner_web = echo_answer(&oracle.web_context(q.as_bytes()), q.as_bytes());
+        assert!(
+            r.answer == winner_retr || r.answer == winner_web,
+            "request {i}: answer {:?} is neither branch's digest",
+            String::from_utf8_lossy(&r.answer)
+        );
+        // Winner + generator always complete before the response; the
+        // loser may or may not have retired yet.
+        assert!(
+            (2..=3).contains(&r.hops),
+            "request {i}: {} hops outside the race envelope",
+            r.hops
+        );
+    }
+
+    let rep = h.report();
+    assert_eq!(rep.completed, n as u64, "losers never block completion");
+    let gen_stats = rep.components.get("generator").expect("generator stats");
+    assert_eq!(gen_stats.joins, n as u64, "exactly one barrier release per request");
+    assert_eq!(gen_stats.executions, n as u64, "the generator runs once per request");
+    h.shutdown();
+}
+
+/// Two identical deployments serve identical sequential workloads with
+/// bit-identical answers and counters — the determinism contract the
+/// perf bench's regression gate relies on.
+#[test]
+fn echo_runs_are_deterministic_across_deployments() {
+    let serve = || {
+        let h = deploy(apps::vanilla_rag(), echo_cfg()).expect("deploy");
+        let mut answers = Vec::new();
+        for i in 0..10 {
+            let q = format!("determinism probe {i}");
+            let r = h.submit(q.as_bytes()).recv().expect("response");
+            assert!(r.error.is_none());
+            answers.push(r.answer);
+        }
+        let rep = h.report();
+        h.shutdown();
+        (answers, rep.completed, rep.ctrl.map(|c| (c.dispatches, c.completions)))
+    };
+    let (a1, c1, ctrl1) = serve();
+    let (a2, c2, ctrl2) = serve();
+    assert_eq!(a1, a2, "served bytes must not depend on the deployment instance");
+    assert_eq!(c1, c2);
+    assert_eq!(ctrl1, ctrl2, "dispatch/completion counts are workload-determined");
+}
